@@ -1,0 +1,12 @@
+//! HPC placement-policy study in one binary: run every Table III
+//! workload under the paper's §V policy family and print normalized
+//! times + the OLI comparison (Figs 13/15 condensed).
+//!
+//! Run: `cargo run --release --example hpc_interleave`
+
+fn main() -> anyhow::Result<()> {
+    for id in ["table3", "fig13", "fig15a", "fig15b"] {
+        cxlmem::exp::run(id)?.print(cxlmem::report::Format::Text);
+    }
+    Ok(())
+}

@@ -1,0 +1,13 @@
+//! FlexGen-style serving demo: the L3 batcher forms batches from a
+//! request stream, each decode step executes the real L1 Pallas
+//! decode-attention artifact via PJRT, and end-to-end latency/throughput
+//! follow the §IV offloading cost model on simulated system A.
+//!
+//! Run: `make artifacts && cargo run --release --example llm_serve -- --requests 24`
+
+use cxlmem::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    cxlmem::exp::drivers::serve(&args)
+}

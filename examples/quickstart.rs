@@ -1,0 +1,56 @@
+//! Quickstart: probe a simulated CXL system like the paper does with
+//! Intel MLC, then ask the OLI planner where a workload's objects should
+//! live.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use cxlmem::mem::oli;
+use cxlmem::memsim::{topology, MemKind, Pattern};
+use cxlmem::probes::mlc;
+use cxlmem::workloads::npb;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Pick a system (Table I) and measure its tiers.
+    let sys = topology::system_a();
+    println!("system {}: {}", sys.name, sys.description);
+    for kind in [MemKind::Ldram, MemKind::Rdram, MemKind::Cxl] {
+        let node = sys.node_of(0, kind).unwrap();
+        let lat = mlc::idle_latency(&sys, 0, node, Pattern::Sequential, 5000, 1);
+        let sweep = mlc::bw_scaling_sweep(&sys, 0, node, Pattern::Sequential, 32);
+        println!(
+            "  {:<6} idle {:>6.1} ns   peak {:>6.1} GB/s   saturates @ {} threads",
+            kind.label(),
+            lat,
+            mlc::peak_bw(&sweep),
+            mlc::saturation_threads(&sweep, 0.95),
+        );
+    }
+
+    // 2. Ask the object-level interleaving planner about CG.
+    let wl = npb::by_name("CG").unwrap();
+    let plan = oli::plan(&sys, 0, &wl.specs(), &[MemKind::Ldram, MemKind::Cxl]);
+    println!(
+        "\nOLI plan for {} ({} GB):",
+        wl.name,
+        wl.footprint_bytes() / 1_000_000_000
+    );
+    for (i, policy, selected) in &plan.assignments {
+        println!(
+            "  {:<10} -> {}",
+            wl.objects[*i].spec.name,
+            if *selected {
+                format!("{policy:?} (bandwidth-hungry)")
+            } else {
+                "LDRAM preferred (latency-sensitive)".to_string()
+            }
+        );
+    }
+    let (oli_ld, base_ld) = oli::ldram_demand(&wl.specs(), &plan);
+    println!(
+        "  fast-memory demand: {:.0} GB vs {:.0} GB LDRAM-preferred ({:.0}% saved)",
+        oli_ld as f64 / 1e9,
+        base_ld as f64 / 1e9,
+        100.0 * (1.0 - oli_ld as f64 / base_ld as f64)
+    );
+    Ok(())
+}

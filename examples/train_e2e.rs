@@ -1,0 +1,15 @@
+//! End-to-end training driver: proves all three layers compose.
+//!
+//! Loads `artifacts/train_step.hlo.txt` (L2 JAX transformer fwd+bwd +
+//! the L1 Pallas fused-ADAM kernel, AOT-lowered by python/compile/aot.py),
+//! then trains on a synthetic Markov corpus from Rust for a few hundred
+//! steps, logging the loss curve — Python never runs here.
+//!
+//! Run: `make artifacts && cargo run --release --example train_e2e -- --steps 300`
+
+use cxlmem::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    cxlmem::exp::drivers::train(&args)
+}

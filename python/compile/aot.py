@@ -1,0 +1,172 @@
+"""AOT compilation: lower the L2/L1 computations to HLO *text* artifacts.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+≥ 0.5 emits protos with 64-bit instruction ids that xla_extension 0.5.1
+(behind the `xla` crate) rejects; the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts (written to ../artifacts by default):
+- train_step.hlo.txt  — fused fwd+bwd+ADAM over the flat param vector
+- adam.hlo.txt        — standalone Pallas ADAM kernel (ZeRO-Offload demo)
+- decode_attn.hlo.txt — standalone Pallas decode attention (FlexGen demo)
+- manifest.json       — shapes/dtypes/hyperparams contract for Rust
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.adam import adam_update
+from .kernels.attention import decode_attention
+from .model import ModelDims, param_count, train_step
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_train_step(dims: ModelDims):
+    n = param_count(dims)
+    flat = jax.ShapeDtypeStruct((n,), jnp.float32)
+    tokens = jax.ShapeDtypeStruct((dims.batch, dims.seq + 1), jnp.int32)
+    step = jax.ShapeDtypeStruct((1,), jnp.float32)
+
+    def fn(p, m, v, t, s):
+        return train_step(p, m, v, t, dims, s)
+
+    return jax.jit(fn).lower(flat, flat, flat, tokens, step), n
+
+
+def lower_adam(n: int):
+    arr = jax.ShapeDtypeStruct((n,), jnp.float32)
+    step = jax.ShapeDtypeStruct((1,), jnp.float32)
+
+    def fn(p, g, m, v, s):
+        return adam_update(p, g, m, v, s)
+
+    return jax.jit(fn).lower(arr, arr, arr, arr, step)
+
+
+def lower_decode_attn(b: int, h: int, s: int, dh: int):
+    q = jax.ShapeDtypeStruct((b, h, dh), jnp.float32)
+    kv = jax.ShapeDtypeStruct((b, h, s, dh), jnp.float32)
+    return jax.jit(decode_attention).lower(q, kv, kv)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--vocab", type=int, default=4096)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--heads", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--adam-n", type=int, default=1 << 20)
+    ap.add_argument("--attn", default="4,8,1024,64", help="B,H,S,Dh for decode_attn")
+    args = ap.parse_args()
+
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+    dims = ModelDims(
+        vocab=args.vocab,
+        d_model=args.d_model,
+        layers=args.layers,
+        heads=args.heads,
+        seq=args.seq,
+        batch=args.batch,
+    )
+
+    artifacts = []
+
+    lowered, n_params = lower_train_step(dims)
+    path = os.path.join(out_dir, "train_step.hlo.txt")
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text)} chars, {n_params} params)")
+    artifacts.append(
+        {
+            "name": "train_step",
+            "file": "train_step.hlo.txt",
+            "inputs": [
+                {"shape": [n_params], "dtype": "f32"},
+                {"shape": [n_params], "dtype": "f32"},
+                {"shape": [n_params], "dtype": "f32"},
+                {"shape": [dims.batch, dims.seq + 1], "dtype": "i32"},
+                {"shape": [1], "dtype": "f32"},
+            ],
+            "outputs": 4,
+        }
+    )
+
+    lowered = lower_adam(args.adam_n)
+    path = os.path.join(out_dir, "adam.hlo.txt")
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text)} chars)")
+    artifacts.append(
+        {
+            "name": "adam",
+            "file": "adam.hlo.txt",
+            "inputs": [
+                {"shape": [args.adam_n], "dtype": "f32"},
+                {"shape": [args.adam_n], "dtype": "f32"},
+                {"shape": [args.adam_n], "dtype": "f32"},
+                {"shape": [args.adam_n], "dtype": "f32"},
+                {"shape": [1], "dtype": "f32"},
+            ],
+            "outputs": 3,
+        }
+    )
+
+    b, h, s, dh = (int(x) for x in args.attn.split(","))
+    lowered = lower_decode_attn(b, h, s, dh)
+    path = os.path.join(out_dir, "decode_attn.hlo.txt")
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text)} chars)")
+    artifacts.append(
+        {
+            "name": "decode_attn",
+            "file": "decode_attn.hlo.txt",
+            "inputs": [
+                {"shape": [b, h, dh], "dtype": "f32"},
+                {"shape": [b, h, s, dh], "dtype": "f32"},
+                {"shape": [b, h, s, dh], "dtype": "f32"},
+            ],
+            "outputs": 1,
+        }
+    )
+
+    manifest = {
+        "version": 1,
+        "model": {
+            "vocab": dims.vocab,
+            "d_model": dims.d_model,
+            "layers": dims.layers,
+            "heads": dims.heads,
+            "seq": dims.seq,
+            "batch": dims.batch,
+            "params": n_params,
+        },
+        "artifacts": artifacts,
+    }
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

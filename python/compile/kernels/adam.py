@@ -1,0 +1,77 @@
+"""L1 Pallas kernel: fused ADAM optimizer update.
+
+This is the compute the paper's ZeRO-Offload study puts on the CPU (§IV-A):
+the optimizer state update over flat parameter/gradient vectors. The kernel
+is tiled over VMEM-sized blocks with one grid axis walking the flattened
+parameter space — the TPU re-expression of a CUDA elementwise grid (see
+DESIGN.md §Hardware-Adaptation).
+
+Pure VPU work (no MXU): reads p, g, m, v blocks from HBM into VMEM,
+updates, writes back. `interpret=True` everywhere (CPU PJRT cannot run
+Mosaic custom-calls).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block size along the flattened parameter axis. 8192 f32 x 4 arrays
+# (p, g, m, v) x 2 (in+out staging) = 256 KiB of VMEM — comfortably
+# double-bufferable within a 16 MiB VMEM budget on real TPUs.
+BLOCK = 8192
+
+
+def _adam_kernel(step_ref, p_ref, g_ref, m_ref, v_ref, po_ref, mo_ref, vo_ref, *, lr, b1, b2, eps):
+    p = p_ref[...]
+    g = g_ref[...]
+    m = m_ref[...]
+    v = v_ref[...]
+    step = step_ref[0]
+    m_new = b1 * m + (1.0 - b1) * g
+    v_new = b2 * v + (1.0 - b2) * (g * g)
+    m_hat = m_new / (1.0 - b1**step)
+    v_hat = v_new / (1.0 - b2**step)
+    po_ref[...] = p - lr * m_hat / (jnp.sqrt(v_hat) + eps)
+    mo_ref[...] = m_new
+    vo_ref[...] = v_new
+
+
+def adam_update(p, g, m, v, step, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    """Fused ADAM over flat f32 arrays (length must divide by BLOCK or it
+    is padded internally). `step` is a float32 scalar array shaped [1].
+
+    Returns (new_p, new_m, new_v) with the original length.
+    """
+    n = p.shape[0]
+    pad = (-n) % BLOCK
+    if pad:
+        p = jnp.pad(p, (0, pad))
+        g = jnp.pad(g, (0, pad))
+        m = jnp.pad(m, (0, pad))
+        # pad v with ones to keep sqrt well-behaved on the tail
+        v = jnp.pad(v, (0, pad), constant_values=1.0)
+    total = p.shape[0]
+    grid = (total // BLOCK,)
+    spec = pl.BlockSpec((BLOCK,), lambda i: (i,))
+    kernel = functools.partial(_adam_kernel, lr=lr, b1=b1, b2=b2, eps=eps)
+    out_shape = [jax.ShapeDtypeStruct((total,), jnp.float32)] * 3
+    po, mo, vo = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # step scalar broadcast to every block
+            pl.BlockSpec((1,), lambda i: (0,)),
+            spec,
+            spec,
+            spec,
+            spec,
+        ],
+        out_specs=[spec, spec, spec],
+        out_shape=out_shape,
+        interpret=True,
+    )(step, p, g, m, v)
+    if pad:
+        po, mo, vo = po[:n], mo[:n], vo[:n]
+    return po, mo, vo

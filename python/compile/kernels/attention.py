@@ -1,0 +1,90 @@
+"""L1 Pallas kernel: decode attention over a blocked KV cache.
+
+This is the compute FlexGen offloads to the CPU during decode (§IV-B):
+one new query token attends over the whole cached context. On TPU the
+insight maps as (DESIGN.md §Hardware-Adaptation):
+
+- the KV cache is blocked along the sequence axis so each block fits
+  VMEM (the HBM↔VMEM streaming schedule that the paper's CPU version
+  expresses through DRAM-bandwidth-bound scanning);
+- q·Kᵀ and p·V per block are MXU matmuls;
+- a flash-style *online softmax* keeps the running maximum and
+  denominator in VMEM scratch across grid steps, so the full score
+  matrix is never materialized.
+
+`interpret=True` for CPU-PJRT executability.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# KV block along the sequence axis. One block of K + one of V at
+# Dh=128, f32: 2 * 128 * 128 * 4 = 128 KiB of VMEM per (batch, head).
+SEQ_BLOCK = 128
+
+
+def _decode_attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref):
+    """Grid: (B*H, S // SEQ_BLOCK). Online softmax across axis 1."""
+    blk = pl.program_id(1)
+
+    q = q_ref[...]  # [1, Dh]
+    k = k_ref[...]  # [SEQ_BLOCK, Dh]
+    v = v_ref[...]  # [SEQ_BLOCK, Dh]
+
+    @pl.when(blk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    s = (q @ k.T) * scale  # [1, SEQ_BLOCK] — MXU matmul
+
+    m_prev = m_ref[...]  # [1, 1]
+    m_cur = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur)  # [1, SEQ_BLOCK]
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + p @ v  # MXU matmul
+    m_ref[...] = m_cur
+
+    @pl.when(blk == pl.num_programs(1) - 1)
+    def _finalize():
+        o_ref[...] = acc_ref[...] / l_ref[...]
+
+
+def decode_attention(q, k, v):
+    """Decode attention matching `ref.ref_decode_attention`.
+
+    q: [B, H, Dh] f32; k, v: [B, H, S, Dh] f32 with S % SEQ_BLOCK == 0.
+    Returns [B, H, Dh].
+    """
+    b, h, dh = q.shape
+    s = k.shape[2]
+    assert s % SEQ_BLOCK == 0, f"S={s} must divide by {SEQ_BLOCK}"
+    bh = b * h
+    qf = q.reshape(bh, 1, dh)
+    kf = k.reshape(bh, s, dh)
+    vf = v.reshape(bh, s, dh)
+
+    grid = (bh, s // SEQ_BLOCK)
+    out = pl.pallas_call(
+        _decode_attn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, 1, dh), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, SEQ_BLOCK, dh), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, SEQ_BLOCK, dh), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, 1, dh), lambda i, j: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, 1, dh), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((1, dh), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(qf, kf, vf)
+    return out.reshape(b, h, dh)

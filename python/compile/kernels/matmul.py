@@ -1,0 +1,90 @@
+"""L1 Pallas kernel: MXU-tiled matmul.
+
+The paper's GPU GEMMs (cuBLAS on the A10) re-expressed for the TPU: a
+(128, 128) output tile per grid cell — the MXU systolic array's native
+shape — with the K dimension walked by the innermost grid axis and a
+VMEM f32 accumulator (the TPU counterpart of a CUDA threadblock tiling
+into shared memory).
+
+VMEM per grid cell: A tile 128·128·4 + B tile + acc = 192 KiB.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+TILE = 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref):
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(kk == pl.num_programs(2) - 1)
+    def _done():
+        o_ref[...] = acc_ref[...]
+
+
+@jax.custom_vjp
+def matmul(a, b):
+    """`a @ b` for f32 [M, K] x [K, N] with M, N, K multiples of TILE.
+
+    Carries a custom VJP (backward = two more Pallas matmuls) because the
+    interpret-mode `pallas_call` with VMEM scratch has no JVP rule.
+    """
+    return _matmul_impl(a, b)
+
+
+def _matmul_fwd(a, b):
+    return _matmul_impl(a, b), (a, b)
+
+
+def _matmul_bwd(res, dy):
+    a, b = res
+    da = _matmul_impl(dy, b.T)
+    db = _matmul_impl(a.T, dy)
+    return da, db
+
+
+def _matmul_impl(a, b):
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    assert m % TILE == 0 and n % TILE == 0 and k % TILE == 0, (m, k, n)
+    grid = (m // TILE, n // TILE, k // TILE)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE, TILE), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((TILE, TILE), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((TILE, TILE), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((TILE, TILE), jnp.float32)],
+        interpret=True,
+    )(a, b)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def matmul_padded(a, b):
+    """`a @ b` for arbitrary f32 shapes: pads up to TILE multiples."""
+    m, k = a.shape
+    _, n = b.shape
+    pm, pk, pn = (-m) % TILE, (-k) % TILE, (-n) % TILE
+    if pm or pk:
+        a = jnp.pad(a, ((0, pm), (0, pk)))
+    if pk or pn:
+        b = jnp.pad(b, ((0, pk), (0, pn)))
+    out = matmul(a, b)
+    return out[:m, :n]

@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: every kernel in this package must
+match its `ref_*` counterpart to float32 tolerance under pytest (including
+hypothesis shape/dtype sweeps in python/tests/).
+"""
+
+import jax.numpy as jnp
+
+
+def ref_adam(p, g, m, v, step, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    """One fused ADAM update. All arrays share one flat shape.
+
+    Returns (new_p, new_m, new_v).
+    """
+    m_new = b1 * m + (1.0 - b1) * g
+    v_new = b2 * v + (1.0 - b2) * (g * g)
+    m_hat = m_new / (1.0 - b1**step)
+    v_hat = v_new / (1.0 - b2**step)
+    p_new = p - lr * m_hat / (jnp.sqrt(v_hat) + eps)
+    return p_new, m_new, v_new
+
+
+def ref_decode_attention(q, k, v):
+    """Single-token decode attention.
+
+    q: [B, H, Dh]    (the new token's query)
+    k: [B, H, S, Dh] (cached keys)
+    v: [B, H, S, Dh] (cached values)
+    returns [B, H, Dh]
+    """
+    scale = (1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))).astype(q.dtype)
+    scores = jnp.einsum("bhd,bhsd->bhs", q, k) * scale
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhs,bhsd->bhd", probs, v)
+
+
+def ref_matmul(a, b):
+    """Plain matmul oracle, f32 accumulation."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)

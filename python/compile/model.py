@@ -1,0 +1,145 @@
+"""L2: JAX transformer language model — forward, backward, fused train step.
+
+This is the build-time model definition. It is lowered ONCE by `aot.py`
+to HLO text and executed from the Rust coordinator via PJRT; Python never
+runs on the request path.
+
+The MLP matmuls go through the L1 Pallas `matmul` kernel so the kernel
+lowers into the same HLO module; attention during training uses plain
+jnp (full causal attention); the decode path uses the L1
+`decode_attention` kernel. The optimizer is the L1 fused `adam` kernel
+over the flattened parameter vector — the same kernel the ZeRO-Offload
+coordinator charges to the CPU in §IV-A.
+"""
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.adam import adam_update
+from .kernels.matmul import matmul
+
+
+class ModelDims(NamedTuple):
+    vocab: int = 4096
+    d_model: int = 256
+    layers: int = 4
+    heads: int = 8
+    seq: int = 128
+    batch: int = 4
+
+    @property
+    def head_dim(self):
+        return self.d_model // self.heads
+
+    @property
+    def ffn(self):
+        return 4 * self.d_model
+
+
+def param_shapes(dims: ModelDims):
+    """Ordered (name, shape) list — the flattening contract with Rust."""
+    d, l, f = dims.d_model, dims.layers, dims.ffn
+    return [
+        ("emb", (dims.vocab, d)),
+        ("qkvo", (l, 4, d, d)),
+        ("w1", (l, d, f)),
+        ("w2", (l, f, d)),
+        ("ln", (l, 2, d)),
+        ("ln_f", (d,)),
+    ]
+
+
+def param_count(dims: ModelDims) -> int:
+    return sum(int(jnp.prod(jnp.array(s))) for _, s in param_shapes(dims))
+
+
+def init_params(dims: ModelDims, key):
+    """Initialization (used by python tests; Rust inits its own copies
+    with the same scale contract: normal(0, 0.02), ln scales = 1)."""
+    out = []
+    for i, (name, shape) in enumerate(param_shapes(dims)):
+        if name.startswith("ln"):
+            out.append(jnp.ones(shape, jnp.float32))
+        else:
+            k = jax.random.fold_in(key, i)
+            out.append(0.02 * jax.random.normal(k, shape, jnp.float32))
+    return tuple(out)
+
+
+def rms_norm(x, scale):
+    return x * scale * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6)
+
+
+def forward(params, tokens, dims: ModelDims):
+    """Logits for a [B, S] int32 token batch."""
+    emb, qkvo, w1, w2, ln, ln_f = params
+    b, s = tokens.shape
+    d, h = dims.d_model, dims.heads
+    hd = dims.head_dim
+
+    x = emb[tokens]  # [B, S, D]
+    mask = jnp.tril(jnp.ones((s, s), jnp.float32))
+    for li in range(dims.layers):
+        # --- attention block ---
+        xn = rms_norm(x, ln[li, 0])
+        flat = xn.reshape(b * s, d)
+        q = matmul(flat, qkvo[li, 0]).reshape(b, s, h, hd)
+        k = matmul(flat, qkvo[li, 1]).reshape(b, s, h, hd)
+        v = matmul(flat, qkvo[li, 2]).reshape(b, s, h, hd)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(float(hd))
+        scores = jnp.where(mask[None, None, :, :] > 0, scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        attn = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(b * s, d)
+        x = x + matmul(attn, qkvo[li, 3]).reshape(b, s, d)
+        # --- MLP block (Pallas matmul kernels) ---
+        xn = rms_norm(x, ln[li, 1]).reshape(b * s, d)
+        hmid = jax.nn.gelu(matmul(xn, w1[li]))
+        x = x + matmul(hmid, w2[li]).reshape(b, s, d)
+
+    x = rms_norm(x, ln_f)
+    return matmul(x.reshape(b * s, d), emb.T).reshape(b, s, dims.vocab)
+
+
+def loss_fn(params, tokens, dims: ModelDims):
+    """Next-token cross entropy, mean over positions."""
+    logits = forward(params, tokens[:, :-1], dims)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return nll.mean()
+
+
+def flatten_params(params):
+    return jnp.concatenate([p.reshape(-1) for p in params])
+
+
+def unflatten_params(flat, dims: ModelDims):
+    out = []
+    ofs = 0
+    for _, shape in param_shapes(dims):
+        n = 1
+        for s in shape:
+            n *= s
+        out.append(flat[ofs : ofs + n].reshape(shape))
+        ofs += n
+    return tuple(out)
+
+
+@functools.partial(jax.jit, static_argnums=(4,))
+def train_step(flat_params, m, v, tokens, dims: ModelDims, step, lr=3e-4):
+    """One fused train step over the *flattened* parameter vector.
+
+    Args: flat f32 params [N], ADAM moments m, v [N], tokens [B, S+1]
+    int32, step f32 [1]. Returns (loss, new_flat, new_m, new_v).
+
+    The exported artifact executes fwd + bwd + the Pallas ADAM kernel in
+    one PJRT call from Rust.
+    """
+    params = unflatten_params(flat_params, dims)
+    loss, grads = jax.value_and_grad(loss_fn)(params, tokens, dims)
+    g = flatten_params(grads)
+    new_flat, new_m, new_v = adam_update(flat_params, g, m, v, step, lr=lr)
+    return loss, new_flat, new_m, new_v

@@ -1,0 +1,129 @@
+"""Kernel-vs-reference correctness: the core L1 signal.
+
+Hypothesis sweeps shapes (and the adam hyperparameters/steps); every
+Pallas kernel must match its pure-jnp oracle.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.adam import BLOCK, adam_update
+from compile.kernels.attention import SEQ_BLOCK, decode_attention
+from compile.kernels.matmul import TILE, matmul, matmul_padded
+
+settings.register_profile("ci", max_examples=12, deadline=None)
+settings.load_profile("ci")
+
+
+def rand(key, shape, positive=False):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+    return jnp.abs(x) if positive else x
+
+
+# ---------------------------------------------------------------- adam
+@given(
+    n=st.integers(min_value=1, max_value=3 * BLOCK + 17),
+    step=st.integers(min_value=1, max_value=50),
+    lr=st.sampled_from([1e-4, 1e-3, 1e-2]),
+)
+def test_adam_matches_ref(n, step, lr):
+    p, g, m = rand(1, (n,)), rand(2, (n,)), rand(3, (n,))
+    v = rand(4, (n,), positive=True)
+    sf = jnp.array([float(step)], jnp.float32)
+    po, mo, vo = adam_update(p, g, m, v, sf, lr=lr)
+    pr, mr, vr = ref.ref_adam(p, g, m, v, float(step), lr=lr)
+    np.testing.assert_allclose(po, pr, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(mo, mr, rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(vo, vr, rtol=1e-5, atol=1e-7)
+
+
+def test_adam_preserves_length_on_padding():
+    n = BLOCK + 5  # forces internal padding
+    p, g, m = rand(1, (n,)), rand(2, (n,)), rand(3, (n,))
+    v = rand(4, (n,), positive=True)
+    po, mo, vo = adam_update(p, g, m, v, jnp.array([2.0]))
+    assert po.shape == (n,) and mo.shape == (n,) and vo.shape == (n,)
+
+
+def test_adam_zero_grad_is_near_noop():
+    n = 256
+    p = rand(1, (n,))
+    z = jnp.zeros((n,))
+    po, mo, vo = adam_update(p, z, z, z, jnp.array([1.0]))
+    np.testing.assert_allclose(po, p, atol=1e-6)
+    np.testing.assert_allclose(mo, z, atol=0)
+
+
+# ----------------------------------------------------------- attention
+@given(
+    b=st.integers(min_value=1, max_value=3),
+    h=st.integers(min_value=1, max_value=4),
+    nblk=st.integers(min_value=1, max_value=4),
+    dh=st.sampled_from([32, 64, 128]),
+)
+def test_decode_attention_matches_ref(b, h, nblk, dh):
+    s = nblk * SEQ_BLOCK
+    q = rand(11, (b, h, dh))
+    k = rand(12, (b, h, s, dh))
+    v = rand(13, (b, h, s, dh))
+    out = decode_attention(q, k, v)
+    expect = ref.ref_decode_attention(q, k, v)
+    np.testing.assert_allclose(out, expect, rtol=2e-4, atol=2e-5)
+
+
+def test_decode_attention_rejects_ragged_seq():
+    q = rand(1, (1, 1, 32))
+    k = rand(2, (1, 1, SEQ_BLOCK + 1, 32))
+    with pytest.raises(AssertionError):
+        decode_attention(q, k, k)
+
+
+def test_decode_attention_uniform_v():
+    # V constant ⇒ output equals that constant regardless of scores.
+    q = rand(1, (2, 2, 64))
+    k = rand(2, (2, 2, SEQ_BLOCK, 64))
+    v = jnp.full((2, 2, SEQ_BLOCK, 64), 3.25, jnp.float32)
+    out = decode_attention(q, k, v)
+    np.testing.assert_allclose(out, 3.25 * jnp.ones_like(out), rtol=1e-5)
+
+
+# -------------------------------------------------------------- matmul
+@given(
+    mi=st.integers(min_value=1, max_value=3),
+    ki=st.integers(min_value=1, max_value=3),
+    ni=st.integers(min_value=1, max_value=3),
+)
+def test_matmul_tile_multiples(mi, ki, ni):
+    a = rand(21, (mi * TILE, ki * TILE))
+    b = rand(22, (ki * TILE, ni * TILE))
+    np.testing.assert_allclose(
+        matmul(a, b), ref.ref_matmul(a, b), rtol=1e-4, atol=1e-3
+    )
+
+
+@given(
+    m=st.integers(min_value=1, max_value=300),
+    k=st.integers(min_value=1, max_value=300),
+    n=st.integers(min_value=1, max_value=300),
+)
+@settings(max_examples=8, deadline=None)
+def test_matmul_padded_arbitrary(m, k, n):
+    a = rand(23, (m, k))
+    b = rand(24, (k, n))
+    np.testing.assert_allclose(
+        matmul_padded(a, b), ref.ref_matmul(a, b), rtol=1e-4, atol=1e-3
+    )
+
+
+def test_matmul_gradient_matches_jnp():
+    # The custom VJP must agree with jnp's.
+    a = rand(31, (TILE, TILE))
+    b = rand(32, (TILE, TILE))
+    g1 = jax.grad(lambda a, b: matmul(a, b).sum(), argnums=(0, 1))(a, b)
+    g2 = jax.grad(lambda a, b: (a @ b).sum(), argnums=(0, 1))(a, b)
+    np.testing.assert_allclose(g1[0], g2[0], rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(g1[1], g2[1], rtol=1e-4, atol=1e-3)

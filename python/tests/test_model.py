@@ -1,0 +1,72 @@
+"""L2 model tests: shapes, loss sanity, train-step learning signal, and
+the flatten/unflatten contract the Rust runtime relies on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.model import (
+    ModelDims,
+    flatten_params,
+    forward,
+    init_params,
+    loss_fn,
+    param_count,
+    param_shapes,
+    train_step,
+    unflatten_params,
+)
+
+# b*seq and all matmul dims must be TILE (=128) multiples for the L1 kernel.
+DIMS = ModelDims(vocab=512, d_model=128, layers=2, heads=4, seq=64, batch=2)
+
+
+def test_param_count_consistent():
+    params = init_params(DIMS, jax.random.PRNGKey(0))
+    flat = flatten_params(params)
+    assert flat.shape[0] == param_count(DIMS)
+
+
+def test_flatten_roundtrip():
+    params = init_params(DIMS, jax.random.PRNGKey(0))
+    back = unflatten_params(flatten_params(params), DIMS)
+    for a, b in zip(params, back):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_forward_shape_and_finite():
+    params = init_params(DIMS, jax.random.PRNGKey(1))
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (2, 64), 0, DIMS.vocab)
+    logits = forward(params, tokens, DIMS)
+    assert logits.shape == (2, 64, DIMS.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_initial_loss_near_uniform():
+    params = init_params(DIMS, jax.random.PRNGKey(1))
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (2, 65), 0, DIMS.vocab)
+    loss = loss_fn(params, tokens, DIMS)
+    assert abs(float(loss) - np.log(DIMS.vocab)) < 0.5
+
+
+def test_train_step_reduces_loss_on_fixed_batch():
+    params = init_params(DIMS, jax.random.PRNGKey(3))
+    flat = flatten_params(params)
+    m = jnp.zeros_like(flat)
+    v = jnp.zeros_like(flat)
+    tokens = jax.random.randint(jax.random.PRNGKey(4), (2, 65), 0, DIMS.vocab)
+    first = None
+    loss = None
+    for step in range(1, 21):
+        loss, flat, m, v = train_step(
+            flat, m, v, tokens, DIMS, jnp.array([float(step)])
+        )
+        if first is None:
+            first = float(loss)
+    assert float(loss) < first - 0.5, (first, float(loss))
+
+
+def test_param_shapes_order_stable():
+    # The Rust side depends on this exact order.
+    names = [n for n, _ in param_shapes(DIMS)]
+    assert names == ["emb", "qkvo", "w1", "w2", "ln", "ln_f"]

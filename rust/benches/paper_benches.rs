@@ -1,0 +1,29 @@
+//! Paper-figure benchmark harness (`cargo bench --bench paper_benches`).
+//!
+//! One bench per table/figure: times the regeneration of each artifact
+//! through the experiment registry (no `criterion` offline; the timing
+//! harness is `cxlmem::util::timer`). The rendered tables themselves are
+//! what `cxlmem exp all` prints; here we verify every driver runs and
+//! report its cost, so regressions in the simulator's hot paths surface.
+
+use std::hint::black_box;
+
+use cxlmem::exp;
+use cxlmem::util::timer::Bencher;
+
+fn main() {
+    println!("== paper figure/table regeneration benches ==");
+    let mut b = Bencher::quick();
+    for id in exp::ALL {
+        b.bench(&format!("exp/{id}"), || {
+            let r = exp::run(id).expect("driver failed");
+            black_box(r.tables.len());
+        });
+    }
+    let total_ns: f64 = b.results().iter().map(|r| r.mean_ns).sum();
+    println!(
+        "\nfull suite mean cost: {:.2} s across {} experiments",
+        total_ns / 1e9,
+        exp::ALL.len()
+    );
+}

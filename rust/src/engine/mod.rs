@@ -1,0 +1,287 @@
+//! Workload execution engine: turns (workload model × page placement ×
+//! system) into execution time with a per-component breakdown.
+//!
+//! Model. A workload iteration scans its data objects with `threads`
+//! worker threads. Placement gives each object a per-node page
+//! distribution. Traffic decomposes into:
+//!
+//! - **streaming** (sequential) traffic: decoupled per node — node `i`
+//!   serves its share at `min(cap_i, threads·rate_i·share_i)`; the scan
+//!   finishes when the slowest node finishes (`max_i bytes_i / bw_i`).
+//!   This is the additive-bandwidth behaviour behind HPC observation 2
+//!   ("interleave all" achieves the highest bandwidth for MG).
+//! - **random throughput** traffic: like streaming but with the
+//!   MSHR-bound random per-thread bandwidth.
+//! - **dependent** accesses (`dep_frac` of an object's random traffic):
+//!   serialized pointer-chase-style; time `count · latency / (threads ·
+//!   DEP_MLP)`, where latency reflects load and the paper's
+//!   concentrated-access bonus (HPC observation 3: CG on CXL).
+//! - **compute**: `compute_ns_per_byte · total_bytes / threads`,
+//!   overlapped with memory traffic (`max(compute, memory)`).
+
+use crate::memsim::{NodeId, Pattern, System};
+
+/// Overlap factor for dependent access chains (a thread keeps a few
+/// dependent loads in flight via speculation).
+pub const DEP_MLP: f64 = 3.0;
+
+/// One object's traffic description, placement-resolved.
+#[derive(Clone, Debug)]
+pub struct ObjectTraffic {
+    pub name: String,
+    /// Bytes of traffic this object receives per iteration.
+    pub traffic_bytes: f64,
+    /// Access pattern for the bulk of the traffic.
+    pub pattern: Pattern,
+    /// Fraction of traffic that is dependent (serialized) accesses.
+    pub dep_frac: f64,
+    /// Page distribution over nodes: (node, fraction), summing to 1.
+    pub node_weights: Vec<(NodeId, f64)>,
+}
+
+/// Execution-time breakdown for one iteration (seconds).
+#[derive(Clone, Debug, Default)]
+pub struct RunResult {
+    pub total_s: f64,
+    pub compute_s: f64,
+    pub stream_s: f64,
+    pub dep_s: f64,
+    /// Per-node utilization during the memory phase.
+    pub node_rho: Vec<f64>,
+}
+
+/// Engine configuration for one run.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub socket: usize,
+    pub threads: usize,
+    /// ns of CPU work per byte of traffic (workload compute intensity).
+    pub compute_ns_per_byte: f64,
+}
+
+/// Execute one iteration of the workload model.
+pub fn run(sys: &System, cfg: &RunConfig, objects: &[ObjectTraffic]) -> RunResult {
+    let nn = sys.nodes.len();
+    let threads = cfg.threads as f64;
+
+    // ---- aggregate per-node traffic ----
+    let mut seq_bytes = vec![0.0f64; nn];
+    let mut rnd_bytes = vec![0.0f64; nn];
+    let mut total_bytes = 0.0f64;
+    for o in objects {
+        total_bytes += o.traffic_bytes;
+        for &(node, w) in &o.node_weights {
+            match o.pattern {
+                Pattern::Sequential => seq_bytes[node] += o.traffic_bytes * w,
+                Pattern::Random => {
+                    rnd_bytes[node] += o.traffic_bytes * w * (1.0 - o.dep_frac)
+                }
+            }
+        }
+    }
+    if total_bytes <= 0.0 {
+        return RunResult::default();
+    }
+
+    // ---- per-node bandwidths ----
+    // Threads divide their issue capacity in proportion to traffic share;
+    // each node also caps at its effective peak.
+    let mut node_bw = vec![0.0f64; nn];
+    let mut rho = vec![0.0f64; nn];
+    for i in 0..nn {
+        let bytes_i = seq_bytes[i] + rnd_bytes[i];
+        if bytes_i <= 0.0 {
+            continue;
+        }
+        let share = bytes_i / total_bytes;
+        let dev = &sys.nodes[i].device;
+        let hop = sys.path(cfg.socket, i).latency_ns();
+        // Blend the streaming and random per-thread rates by traffic mix.
+        let seq_rate = dev.stream_rate_gbs * dev.idle.seq_ns / (dev.idle.seq_ns + hop);
+        let rnd_rate = dev.mlp_rand * crate::memsim::LINE / (dev.idle.rand_ns + hop);
+        let mix = seq_bytes[i] / bytes_i;
+        let per_thread = mix * seq_rate + (1.0 - mix) * rnd_rate;
+        let cap = sys.eff_peak_bw(cfg.socket, i);
+        let bw = (threads * per_thread * share).min(cap);
+        node_bw[i] = bw;
+        rho[i] = (bw / cap).min(1.0);
+    }
+
+    // ---- phase times ----
+    // Streaming + random-throughput traffic finishes when the slowest
+    // node finishes (decoupled scan).
+    let mut mem_s = 0.0f64;
+    for i in 0..nn {
+        let bytes_i = seq_bytes[i] + rnd_bytes[i];
+        if bytes_i > 0.0 && node_bw[i] > 0.0 {
+            mem_s = mem_s.max(bytes_i / node_bw[i] / 1e9);
+        }
+    }
+
+    // Dependent accesses: serialized chains at loaded latency.
+    let mut dep_s = 0.0f64;
+    for o in objects {
+        if o.dep_frac <= 0.0 || o.pattern != Pattern::Random {
+            continue;
+        }
+        let concentrated = o.node_weights.iter().filter(|&&(_, w)| w > 1e-9).count() <= 1;
+        let mut lat = 0.0;
+        for &(node, w) in &o.node_weights {
+            let dev = &sys.nodes[node].device;
+            let mut l = dev.latency_at(Pattern::Random, rho[node]);
+            if concentrated {
+                l *= dev.concentrated_rand_factor;
+            }
+            lat += w * (l + sys.path(cfg.socket, node).latency_ns());
+        }
+        let count = o.traffic_bytes * o.dep_frac / crate::memsim::LINE;
+        dep_s += count * lat / (threads * DEP_MLP) / 1e9;
+    }
+
+    let compute_s = cfg.compute_ns_per_byte * total_bytes / threads / 1e9;
+    let stream_s = mem_s;
+    let total_s = compute_s.max(stream_s + dep_s);
+
+    RunResult {
+        total_s,
+        compute_s,
+        stream_s,
+        dep_s,
+        node_rho: rho,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memsim::topology::system_a;
+    use crate::memsim::MemKind;
+
+    fn one_obj(node_weights: Vec<(NodeId, f64)>, pattern: Pattern, dep: f64) -> ObjectTraffic {
+        ObjectTraffic {
+            name: "o".into(),
+            traffic_bytes: 100e9,
+            pattern,
+            dep_frac: dep,
+            node_weights,
+        }
+    }
+
+    fn cfg(threads: usize) -> RunConfig {
+        RunConfig {
+            socket: 0,
+            threads,
+            compute_ns_per_byte: 0.0,
+        }
+    }
+
+    #[test]
+    fn ldram_faster_than_cxl_for_streams() {
+        let sys = system_a();
+        let ld = sys.node_of(0, MemKind::Ldram).unwrap();
+        let cxl = sys.node_of(0, MemKind::Cxl).unwrap();
+        let t_ld = run(&sys, &cfg(32), &[one_obj(vec![(ld, 1.0)], Pattern::Sequential, 0.0)]);
+        let t_cxl = run(&sys, &cfg(32), &[one_obj(vec![(cxl, 1.0)], Pattern::Sequential, 0.0)]);
+        assert!(t_cxl.total_s > 3.0 * t_ld.total_s);
+    }
+
+    #[test]
+    fn interleave_bottleneck_is_cxl_share() {
+        // 1:1 LDRAM+CXL: time ≈ (bytes/2) / cxl_bw — not the mean.
+        let sys = system_a();
+        let ld = sys.node_of(0, MemKind::Ldram).unwrap();
+        let cxl = sys.node_of(0, MemKind::Cxl).unwrap();
+        let r = run(
+            &sys,
+            &cfg(32),
+            &[one_obj(vec![(ld, 0.5), (cxl, 0.5)], Pattern::Sequential, 0.0)],
+        );
+        let expected = 50e9 / (sys.nodes[cxl].device.peak_bw_gbs * 1e9);
+        assert!((r.total_s - expected).abs() / expected < 0.1, "{}", r.total_s);
+    }
+
+    #[test]
+    fn interleave_all_beats_cxl_only_at_high_threads() {
+        // HPC observation 2 (MG-style): more nodes = more bandwidth.
+        let sys = system_a();
+        let ld = sys.node_of(0, MemKind::Ldram).unwrap();
+        let rd = sys.node_of(0, MemKind::Rdram).unwrap();
+        let cxl = sys.node_of(0, MemKind::Cxl).unwrap();
+        let third = 1.0 / 3.0;
+        let all = run(
+            &sys,
+            &cfg(32),
+            &[one_obj(
+                vec![(ld, third), (rd, third), (cxl, third)],
+                Pattern::Sequential,
+                0.0,
+            )],
+        );
+        let cxl_only =
+            run(&sys, &cfg(32), &[one_obj(vec![(cxl, 1.0)], Pattern::Sequential, 0.0)]);
+        assert!(cxl_only.total_s > 2.0 * all.total_s);
+    }
+
+    #[test]
+    fn concentrated_random_beats_spread_for_dep_chains() {
+        // HPC observation 3 (CG-style): concentrating dependent random
+        // accesses on CXL is competitive with spreading them.
+        let sys = system_a();
+        let ld = sys.node_of(0, MemKind::Ldram).unwrap();
+        let rd = sys.node_of(0, MemKind::Rdram).unwrap();
+        let cxl = sys.node_of(0, MemKind::Cxl).unwrap();
+        let t = 8; // low thread count: latency-dominated
+        let conc = run(&sys, &cfg(t), &[one_obj(vec![(cxl, 1.0)], Pattern::Random, 0.9)]);
+        let spread = run(
+            &sys,
+            &cfg(t),
+            &[one_obj(
+                vec![(ld, 1.0 / 3.0), (rd, 1.0 / 3.0), (cxl, 1.0 / 3.0)],
+                Pattern::Random,
+                0.9,
+            )],
+        );
+        assert!(
+            conc.dep_s < spread.dep_s * 1.15,
+            "conc={} spread={}",
+            conc.dep_s,
+            spread.dep_s
+        );
+    }
+
+    #[test]
+    fn compute_bound_workload_insensitive_to_placement() {
+        // BT-style tolerance: with high compute intensity, CXL placement
+        // costs little.
+        let sys = system_a();
+        let ld = sys.node_of(0, MemKind::Ldram).unwrap();
+        let cxl = sys.node_of(0, MemKind::Cxl).unwrap();
+        let mut c = cfg(32);
+        c.compute_ns_per_byte = 3.0; // strongly compute-bound
+        let t_ld = run(&sys, &c, &[one_obj(vec![(ld, 1.0)], Pattern::Sequential, 0.0)]);
+        let t_cxl = run(&sys, &c, &[one_obj(vec![(cxl, 1.0)], Pattern::Sequential, 0.0)]);
+        let loss = t_cxl.total_s / t_ld.total_s - 1.0;
+        assert!(loss < 0.60, "loss {loss}");
+        assert_eq!(t_ld.total_s, t_ld.compute_s);
+    }
+
+    #[test]
+    fn more_threads_never_slower() {
+        let sys = system_a();
+        let cxl = sys.node_of(0, MemKind::Cxl).unwrap();
+        let obj = one_obj(vec![(cxl, 1.0)], Pattern::Sequential, 0.0);
+        let mut prev = f64::INFINITY;
+        for t in [1, 2, 4, 8, 16, 32] {
+            let r = run(&sys, &cfg(t), &[obj.clone()]);
+            assert!(r.total_s <= prev * 1.0001, "t={t}");
+            prev = r.total_s;
+        }
+    }
+
+    #[test]
+    fn empty_workload_is_zero() {
+        let sys = system_a();
+        let r = run(&sys, &cfg(32), &[]);
+        assert_eq!(r.total_s, 0.0);
+    }
+}

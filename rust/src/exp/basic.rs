@@ -1,0 +1,234 @@
+//! Experiment drivers for §III: Table I and Figs 2–4 + the §III thread
+//! assignment study.
+
+use crate::memsim::{topology, MemKind, Pattern, System};
+use crate::probes::{self, mlc};
+use crate::report::Report;
+use crate::util::table::{f1, Table};
+
+const TIERS: [MemKind; 3] = [MemKind::Ldram, MemKind::Rdram, MemKind::Cxl];
+
+/// Table I: the three systems.
+pub fn table1() -> Report {
+    let mut t = Table::new(
+        "Table I — three systems with CXL devices",
+        &["Sys", "Description", "DDR spec GB/s", "CXL spec GB/s", "CXL cap"],
+    );
+    for sys in topology::all_systems() {
+        let cxl = sys.node_of(0, MemKind::Cxl).unwrap();
+        t.row(vec![
+            sys.name.clone(),
+            sys.description.clone(),
+            f1(sys.nodes[0].device.spec_bw_gbs),
+            f1(sys.nodes[cxl].device.spec_bw_gbs),
+            format!("{} GB", sys.nodes[cxl].device.capacity >> 30),
+        ]);
+    }
+    let mut r = Report::new();
+    r.add(t);
+    r
+}
+
+/// Fig 2: idle load latency, random + sequential, per system and tier.
+pub fn fig2() -> Report {
+    let mut r = Report::new();
+    let mut t = Table::new(
+        "Fig 2 — load latency (ns) for random/sequential access",
+        &["Sys", "Tier", "sequential", "random"],
+    );
+    for sys in topology::all_systems() {
+        // Measure from the socket nearest the CXL card (paper's setup).
+        let socket = sys.nodes[sys.node_of(0, MemKind::Cxl).unwrap()].socket;
+        for kind in TIERS {
+            let node = sys.node_of(socket, kind).unwrap();
+            let seq = mlc::idle_latency(&sys, socket, node, Pattern::Sequential, 5000, 42);
+            let rnd = mlc::idle_latency(&sys, socket, node, Pattern::Random, 5000, 43);
+            t.row(vec![
+                sys.name.clone(),
+                kind.label().into(),
+                f1(seq),
+                f1(rnd),
+            ]);
+        }
+    }
+    r.add(t);
+    r
+}
+
+/// Fig 3: bandwidth scaling vs thread count, per system.
+pub fn fig3() -> Report {
+    let mut r = Report::new();
+    for sys in topology::all_systems() {
+        let socket = 0;
+        let max_t = sys.cores_per_socket;
+        let mut t = Table::new(
+            &format!("Fig 3 — bandwidth (GB/s) vs threads, system {}", sys.name),
+            &["threads", "LDRAM", "RDRAM", "CXL"],
+        );
+        let sweeps: Vec<Vec<mlc::BwPoint>> = TIERS
+            .iter()
+            .map(|&k| {
+                let node = sys.node_of(socket, k).unwrap();
+                mlc::bw_scaling_sweep(&sys, socket, node, Pattern::Sequential, max_t)
+            })
+            .collect();
+        for ti in [1, 2, 4, 6, 8, 12, 16, 20, 24, 28, 32, 40, 48, 52] {
+            if ti > max_t {
+                break;
+            }
+            t.row(vec![
+                ti.to_string(),
+                f1(sweeps[0][ti - 1].bw_gbs),
+                f1(sweeps[1][ti - 1].bw_gbs),
+                f1(sweeps[2][ti - 1].bw_gbs),
+            ]);
+        }
+        // Saturation summary row (the paper's headline observation).
+        let sat: Vec<String> = sweeps
+            .iter()
+            .map(|s| format!("sat@{}", mlc::saturation_threads(s, 0.95)))
+            .collect();
+        t.row(vec!["(95% sat)".into(), sat[0].clone(), sat[1].clone(), sat[2].clone()]);
+        r.add(t);
+    }
+    r
+}
+
+/// Fig 4: latency/bandwidth under varying injected load.
+pub fn fig4() -> Report {
+    let mut r = Report::new();
+    for sys in topology::all_systems() {
+        let socket = 0;
+        let mut t = Table::new(
+            &format!(
+                "Fig 4 — loaded latency, system {} (32 threads, delay sweep)",
+                sys.name
+            ),
+            &[
+                "delay ns", "LDRAM ns", "LDRAM GB/s", "RDRAM ns", "RDRAM GB/s", "CXL ns",
+                "CXL GB/s",
+            ],
+        );
+        let grid = mlc::mlc_delay_grid();
+        let sweeps: Vec<Vec<mlc::LoadPoint>> = TIERS
+            .iter()
+            .map(|&k| {
+                let node = sys.node_of(socket, k).unwrap();
+                mlc::loaded_latency_sweep(&sys, socket, node, Pattern::Sequential, 32, &grid)
+            })
+            .collect();
+        for i in 0..grid.len() {
+            t.row(vec![
+                format!("{:.0}", sweeps[0][i].delay_ns),
+                f1(sweeps[0][i].latency_ns),
+                f1(sweeps[0][i].bw_gbs),
+                f1(sweeps[1][i].latency_ns),
+                f1(sweeps[1][i].bw_gbs),
+                f1(sweeps[2][i].latency_ns),
+                f1(sweeps[2][i].bw_gbs),
+            ]);
+        }
+        r.add(t);
+    }
+    r
+}
+
+/// §III thread-assignment study (system B: 6/23/23 → ~420 GB/s).
+pub fn assign() -> Report {
+    let sys = topology::system_b();
+    let socket = 0;
+    let best = probes::best_assignment(&sys, socket, sys.cores_per_socket);
+    let mut t = Table::new(
+        "§III — bandwidth-aware thread assignment (system B)",
+        &["assignment", "LDRAM t", "RDRAM t", "CXL t", "total GB/s"],
+    );
+    let names: Vec<MemKind> = best
+        .split
+        .iter()
+        .map(|&(n, _)| sys.kind_from(socket, n))
+        .collect();
+    let get = |k: MemKind| -> usize {
+        best.split
+            .iter()
+            .zip(&names)
+            .find(|&(_, &kk)| kk == k)
+            .map(|(&(_, t), _)| t)
+            .unwrap_or(0)
+    };
+    t.row(vec![
+        "bandwidth-aware (searched)".into(),
+        get(MemKind::Ldram).to_string(),
+        get(MemKind::Rdram).to_string(),
+        get(MemKind::Cxl).to_string(),
+        f1(best.total_bw_gbs),
+    ]);
+    // Baselines: all threads on LDRAM; uniform split.
+    let ld = sys.node_of(socket, MemKind::Ldram).unwrap();
+    let rd = sys.node_of(socket, MemKind::Rdram).unwrap();
+    let cxl = sys.node_of(socket, MemKind::Cxl).unwrap();
+    let n = sys.cores_per_socket;
+    let all_ld = mlc::combined_bw(&sys, socket, &[(ld, n)]);
+    t.row(vec![
+        "all threads LDRAM".into(),
+        n.to_string(),
+        "0".into(),
+        "0".into(),
+        f1(all_ld),
+    ]);
+    let third = n / 3;
+    let uni = mlc::combined_bw(&sys, socket, &[(ld, third), (rd, third), (cxl, third)]);
+    t.row(vec![
+        "uniform thirds".into(),
+        third.to_string(),
+        third.to_string(),
+        third.to_string(),
+        f1(uni),
+    ]);
+    let mut r = Report::new();
+    r.add(t);
+    r
+}
+
+/// Convenience used by tests: the systems the drivers run on.
+pub fn systems() -> Vec<System> {
+    topology::all_systems()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_ordering_holds_in_report() {
+        let r = fig2();
+        let t = &r.tables[0];
+        // For each system: CXL > RDRAM > LDRAM in both columns.
+        for chunk in t.rows.chunks(3) {
+            let seq: Vec<f64> = chunk.iter().map(|r| r[2].parse().unwrap()).collect();
+            assert!(seq[0] < seq[1] && seq[1] < seq[2], "{seq:?}");
+        }
+    }
+
+    #[test]
+    fn fig3_has_saturation_row() {
+        let r = fig3();
+        for t in &r.tables {
+            assert!(t.rows.last().unwrap()[1].starts_with("sat@"));
+        }
+    }
+
+    #[test]
+    fn assign_beats_baselines() {
+        let r = assign();
+        let t = &r.tables[0];
+        let best: f64 = t.rows[0][4].parse().unwrap();
+        let all_ld: f64 = t.rows[1][4].parse().unwrap();
+        let uniform: f64 = t.rows[2][4].parse().unwrap();
+        assert!(best > all_ld && best >= uniform);
+    }
+
+    #[test]
+    fn table1_lists_three_systems() {
+        assert_eq!(table1().tables[0].rows.len(), 3);
+    }
+}

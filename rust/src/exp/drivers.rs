@@ -1,0 +1,211 @@
+//! End-to-end drivers: `cxlmem train` (ZeRO-Offload-coordinated training
+//! through the real PJRT `train_step` artifact) and `cxlmem serve`
+//! (FlexGen-style batched serving with the real decode-attention kernel).
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::gpu::Gpu;
+use crate::llm::batcher::{Batcher, Request};
+use crate::llm::flexgen::{self, InferCfg};
+use crate::llm::model_cfg::llama_65b;
+use crate::memsim::{topology, MemKind};
+use crate::runtime::{Arg, Runtime};
+use crate::util::cli::Args;
+use crate::util::rng::Rng;
+
+/// Markov-chain synthetic corpus: each token has 4 likely successors,
+/// so a trained model can reach ≈ ln(4) ≈ 1.39 nats; an untrained one
+/// sits at ≈ ln(vocab).
+pub struct Corpus {
+    vocab: usize,
+    successors: Vec<[u32; 4]>,
+    rng: Rng,
+}
+
+impl Corpus {
+    pub fn new(vocab: usize, seed: u64) -> Self {
+        let mut rng = Rng::seeded(seed);
+        let successors = (0..vocab)
+            .map(|_| {
+                [
+                    rng.below(vocab as u64) as u32,
+                    rng.below(vocab as u64) as u32,
+                    rng.below(vocab as u64) as u32,
+                    rng.below(vocab as u64) as u32,
+                ]
+            })
+            .collect();
+        Self {
+            vocab,
+            successors,
+            rng,
+        }
+    }
+
+    /// Sample a [batch, seq_plus_one] token block.
+    pub fn batch(&mut self, batch: usize, seq_plus_one: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(batch * seq_plus_one);
+        for _ in 0..batch {
+            let mut tok = self.rng.below(self.vocab as u64) as u32;
+            for _ in 0..seq_plus_one {
+                out.push(tok as i32);
+                // 90% chain transition, 10% noise.
+                tok = if self.rng.chance(0.9) {
+                    self.successors[tok as usize][self.rng.index(4)]
+                } else {
+                    self.rng.below(self.vocab as u64) as u32
+                };
+            }
+        }
+        out
+    }
+}
+
+/// `cxlmem train`: run N steps of the AOT `train_step` artifact, logging
+/// the loss curve, with ZeRO-Offload-style memory accounting against the
+/// simulated system A.
+pub fn train(args: &Args) -> Result<()> {
+    let steps = args.get_usize("steps", 300);
+    let seed = args.get_u64("seed", 42);
+    let log_every = args.get_usize("log-every", 10);
+
+    let mut rt = Runtime::discover()
+        .map_err(|e| anyhow!("artifacts missing ({e}); run `make artifacts`"))?;
+    let meta = rt.manifest.model.clone();
+    println!(
+        "model: {} params, vocab {}, d_model {}, layers {}, batch {}, seq {}",
+        meta.params, meta.vocab, meta.d_model, meta.layers, meta.batch, meta.seq
+    );
+
+    // Parameter init: normal(0, 0.02); ln scales live at the tail of the
+    // flat vector but ones-init vs normal-init only changes early steps.
+    let mut rng = Rng::seeded(seed);
+    let mut params: Vec<f32> = (0..meta.params)
+        .map(|_| 0.02 * rng.normal() as f32)
+        .collect();
+    let mut m = vec![0.0f32; meta.params];
+    let mut v = vec![0.0f32; meta.params];
+    let mut corpus = Corpus::new(meta.vocab, seed ^ 0xC0FFEE);
+
+    // ZeRO-Offload memory accounting on simulated system A.
+    let sys = topology::system_a();
+    let ld = sys.node_of(0, MemKind::Ldram).unwrap();
+    let placement = vec![(ld, 1.0)];
+    let gpu = Gpu::a10();
+
+    let exe = rt.load("train_step")?;
+    let t0 = Instant::now();
+    let mut first_loss = None;
+    let mut last_loss = 0.0f32;
+    let mut sim_xfer_s = 0.0f64;
+    for step in 1..=steps {
+        let tokens = corpus.batch(meta.batch, meta.seq + 1);
+        let step_f = [step as f32];
+        let out = exe.run(&[
+            Arg::F32(&params),
+            Arg::F32(&m),
+            Arg::F32(&v),
+            Arg::I32(&tokens),
+            Arg::F32(&step_f),
+        ])?;
+        last_loss = out[0][0];
+        params = out[1].clone();
+        m = out[2].clone();
+        v = out[3].clone();
+        first_loss.get_or_insert(last_loss);
+        // Simulated tensor-offload traffic: grads down + params up.
+        sim_xfer_s += gpu.transfer_time_s(&sys, &placement, 2.0 * meta.params as f64) * 2.0;
+        if step % log_every == 0 || step == 1 {
+            println!(
+                "step {step:>4}  loss {last_loss:.4}  ({:.2} s elapsed)",
+                t0.elapsed().as_secs_f64()
+            );
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "\ntrained {steps} steps in {wall:.1} s ({:.2} s/step); loss {:.4} -> {:.4}",
+        wall / steps as f64,
+        first_loss.unwrap_or(0.0),
+        last_loss
+    );
+    println!(
+        "simulated ZeRO-Offload transfer time (system A, LDRAM): {sim_xfer_s:.2} s for {steps} steps"
+    );
+    if last_loss >= first_loss.unwrap_or(f32::MAX) {
+        return Err(anyhow!("loss did not decrease — training is broken"));
+    }
+    Ok(())
+}
+
+/// `cxlmem serve`: batched FlexGen-style serving; each decode step runs
+/// the real Pallas decode-attention artifact, throughput/latency follow
+/// the simulated offloading cost model.
+pub fn serve(args: &Args) -> Result<()> {
+    let n_requests = args.get_usize("requests", 24);
+    let mut rt = Runtime::discover()
+        .map_err(|e| anyhow!("artifacts missing ({e}); run `make artifacts`"))?;
+    let exe = rt.load("decode_attn")?;
+    let q_n = exe.spec.inputs[0].elements();
+    let kv_n = exe.spec.inputs[1].elements();
+
+    let sys = topology::system_a();
+    let gpu = Gpu::a10();
+    let cfg = InferCfg::paper(llama_65b());
+    let tiers = flexgen::tiers_of(
+        &sys,
+        &[(MemKind::Ldram, 196e9), (MemKind::Cxl, 128e9)],
+    );
+    let pol = flexgen::search_policy(&gpu, &cfg, &tiers);
+    let th = flexgen::throughput(&sys, &gpu, &cfg, &pol);
+    println!(
+        "offload policy: batch {}, {:.0}% of KV on GPU, decode {:.2} tok/s (simulated)",
+        pol.batch,
+        100.0 * pol.kv_gpu_frac,
+        th.decode_tok_s
+    );
+
+    let mut rng = Rng::seeded(7);
+    let mut batcher = Batcher::new(pol.batch);
+    for i in 0..n_requests {
+        batcher.submit(Request {
+            id: i as u64,
+            arrival_s: i as f64 * 0.2,
+            prompt_len: cfg.prompt,
+            gen_len: cfg.gen,
+        });
+    }
+
+    let q: Vec<f32> = (0..q_n).map(|_| rng.normal() as f32 * 0.1).collect();
+    let k: Vec<f32> = (0..kv_n).map(|_| rng.normal() as f32 * 0.1).collect();
+    let v: Vec<f32> = (0..kv_n).map(|_| rng.normal() as f32 * 0.1).collect();
+
+    let t0 = Instant::now();
+    let mut kernel_calls = 0u64;
+    while batcher.pending() > 0 {
+        let batch = batcher.next_batch();
+        if batch.is_empty() {
+            continue;
+        }
+        // One real decode-attention kernel call stands in for the
+        // per-step CPU attention of this batch.
+        let out = exe.run(&[Arg::F32(&q), Arg::F32(&k), Arg::F32(&v)])?;
+        assert!(out[0].iter().all(|x| x.is_finite()));
+        kernel_calls += 1;
+        // Simulated batch time: prefill + full decode for this batch.
+        let batch_time = cfg.gen as f64 * batch.len() as f64 / th.decode_tok_s.max(1e-9)
+            + cfg.prompt as f64 * batch.len() as f64 / th.prefill_tok_s.max(1e-9);
+        batcher.complete(batch, batch_time);
+    }
+    let (mean_lat, p95, tput) = batcher.metrics();
+    println!(
+        "served {n_requests} requests; simulated mean latency {mean_lat:.1} s, p95 {p95:.1} s, throughput {tput:.2} tok/s"
+    );
+    println!(
+        "real decode-attention kernel calls: {kernel_calls} ({:.1} ms wall)",
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    Ok(())
+}

@@ -1,0 +1,334 @@
+//! Experiment drivers for §IV: Figs 5, 6, 8, 9, 11, 12 and Table II.
+
+use crate::gpu::Gpu;
+use crate::llm::flexgen::{self, InferCfg};
+use crate::llm::model_cfg::{bert, gpt2, llama_65b, opt_66b, ModelCfg};
+use crate::llm::zero_offload::{self, TrainCfg};
+use crate::memsim::{topology, MemKind, NodeId, System};
+use crate::report::Report;
+use crate::util::table::{f1, f2, Table};
+
+const GB: f64 = 1e9;
+
+fn sys_a() -> (System, Gpu) {
+    (topology::system_a(), Gpu::a10())
+}
+
+/// The four CPU-side placements of Fig 8 (from the GPU's socket 1 the
+/// "local" DDR is node 1's pool; we keep the paper's socket-0 naming).
+fn placements(sys: &System) -> Vec<(&'static str, Vec<(NodeId, f64)>)> {
+    let ld = sys.node_of(0, MemKind::Ldram).unwrap();
+    let rd = sys.node_of(0, MemKind::Rdram).unwrap();
+    let cxl = sys.node_of(0, MemKind::Cxl).unwrap();
+    vec![
+        ("LDRAM only", vec![(ld, 1.0)]),
+        ("LDRAM+CXL", vec![(ld, 0.5), (cxl, 0.5)]),
+        ("LDRAM+RDRAM", vec![(ld, 0.5), (rd, 0.5)]),
+        (
+            "interleave all",
+            vec![(ld, 1.0 / 3.0), (rd, 1.0 / 3.0), (cxl, 1.0 / 3.0)],
+        ),
+    ]
+}
+
+/// Fig 5: GPU↔CPU copy bandwidth vs block size × memory policy.
+pub fn fig5() -> Report {
+    let (sys, gpu) = sys_a();
+    let mut t = Table::new(
+        "Fig 5 — GPU<->CPU transfer bandwidth (GB/s) vs block size",
+        &["block", "LDRAM", "LDRAM+CXL", "LDRAM+RDRAM", "interleave all", "CXL only"],
+    );
+    let cxl = sys.node_of(0, MemKind::Cxl).unwrap();
+    let mut pols = placements(&sys);
+    pols.push(("CXL only", vec![(cxl, 1.0)]));
+    for exp in [7usize, 12, 16, 20, 24, 28, 30, 32] {
+        let bytes = (1u64 << exp) as f64;
+        let mut row = vec![if exp < 20 {
+            format!("{} B", 1u64 << exp)
+        } else if exp < 30 {
+            format!("{} MB", 1u64 << (exp - 20))
+        } else {
+            format!("{} GB", 1u64 << (exp - 30))
+        }];
+        for (_, p) in &pols {
+            row.push(f2(gpu.observed_bw(&sys, p, bytes)));
+        }
+        t.row(row);
+    }
+    let mut r = Report::new();
+    r.add(t);
+    r
+}
+
+/// Fig 6: 64-byte transfer latency GPU↔each memory node.
+pub fn fig6() -> Report {
+    let (sys, gpu) = sys_a();
+    let mut t = Table::new(
+        "Fig 6 — 64B GPU<->CPU transfer latency (ns)",
+        &["target memory", "latency ns", "delta vs LDRAM"],
+    );
+    let ld = sys.node_of(1, MemKind::Ldram).unwrap();
+    let base = gpu.transfer_latency_ns(&sys, ld);
+    for kind in [MemKind::Ldram, MemKind::Rdram, MemKind::Cxl] {
+        let node = sys.node_of(1, kind).unwrap();
+        let lat = gpu.transfer_latency_ns(&sys, node);
+        t.row(vec![kind.label().into(), f1(lat), f1(lat - base)]);
+    }
+    let mut r = Report::new();
+    r.add(t);
+    r
+}
+
+fn train_models() -> Vec<(ModelCfg, usize)> {
+    let gpu = Gpu::a10();
+    let mut out = Vec::new();
+    for m in [bert("110M"), bert("340M"), bert("4B")] {
+        let bs = zero_offload::max_batch(&gpu, &m, 512);
+        out.push((m, bs));
+    }
+    for m in [gpt2("4B"), gpt2("6B"), gpt2("8B")] {
+        let bs = zero_offload::max_batch(&gpu, &m, 1024);
+        out.push((m, bs));
+    }
+    out
+}
+
+/// Fig 8: ZeRO-Offload training throughput × policy × model size.
+pub fn fig8() -> Report {
+    let (sys, gpu) = sys_a();
+    let mut t = Table::new(
+        "Fig 8 — ZeRO-Offload samples/s (bs=max batch @ model)",
+        &["model", "bs", "LDRAM only", "LDRAM+CXL", "LDRAM+RDRAM", "interleave all"],
+    );
+    for (model, bs) in train_models() {
+        let cfg = TrainCfg {
+            model: model.clone(),
+            batch: bs,
+            seq: if model.name.starts_with("BERT") { 512 } else { 1024 },
+            threads: 32,
+        };
+        let mut row = vec![model.name.clone(), bs.to_string()];
+        for (_, p) in placements(&sys) {
+            row.push(f2(zero_offload::throughput(&sys, &gpu, &cfg, &p)));
+        }
+        t.row(row);
+    }
+    let mut r = Report::new();
+    r.add(t);
+    r
+}
+
+/// Fig 9: optimizer + exposed-data-movement breakdown (% of step).
+pub fn fig9() -> Report {
+    let (sys, gpu) = sys_a();
+    let mut t = Table::new(
+        "Fig 9 — step breakdown (optimizer% / data-move% of total)",
+        &["model", "policy", "optimizer s", "opt %", "data-move s", "dm %"],
+    );
+    for (model, bs) in train_models() {
+        let cfg = TrainCfg {
+            model: model.clone(),
+            batch: bs,
+            seq: if model.name.starts_with("BERT") { 512 } else { 1024 },
+            threads: 32,
+        };
+        for (name, p) in placements(&sys) {
+            let b = zero_offload::step(&sys, &gpu, &cfg, &p);
+            t.row(vec![
+                format!("bs={}@{}", bs, model.name),
+                name.into(),
+                f2(b.optimizer_s),
+                format!("{:.0}%", 100.0 * b.optimizer_share()),
+                f2(b.data_move_exposed_s),
+                format!("{:.1}%", 100.0 * b.data_move_share()),
+            ]);
+        }
+    }
+    let mut r = Report::new();
+    r.add(t);
+    r
+}
+
+/// The Fig 11 equal-capacity (324 GB) configurations.
+fn configs_324() -> Vec<(&'static str, Vec<(MemKind, f64)>)> {
+    vec![
+        (
+            "LDRAM+CXL",
+            vec![(MemKind::Ldram, 196.0 * GB), (MemKind::Cxl, 128.0 * GB)],
+        ),
+        (
+            "LDRAM+RDRAM",
+            vec![(MemKind::Ldram, 196.0 * GB), (MemKind::Rdram, 128.0 * GB)],
+        ),
+        (
+            "LDRAM+NVMe",
+            vec![(MemKind::Ldram, 196.0 * GB), (MemKind::Nvme, 128.0 * GB)],
+        ),
+    ]
+}
+
+/// Fig 11: FlexGen throughput across 324 GB memory systems.
+pub fn fig11() -> Report {
+    let (sys, gpu) = sys_a();
+    let mut t = Table::new(
+        "Fig 11 — LLM inference throughput, 324 GB configs (tok/s)",
+        &["model", "config", "batch", "prefill", "decode", "total"],
+    );
+    for model in [llama_65b(), opt_66b()] {
+        let cfg = InferCfg::paper(model);
+        for (name, kinds) in configs_324() {
+            let tiers = flexgen::tiers_of(&sys, &kinds);
+            let pol = flexgen::search_policy(&gpu, &cfg, &tiers);
+            let th = flexgen::throughput(&sys, &gpu, &cfg, &pol);
+            t.row(vec![
+                cfg.model.name.clone(),
+                name.into(),
+                pol.batch.to_string(),
+                f1(th.prefill_tok_s),
+                f2(th.decode_tok_s),
+                f2(th.total_tok_s),
+            ]);
+        }
+    }
+    let mut r = Report::new();
+    r.add(t);
+    r
+}
+
+/// The Fig 12 / Table II capacity ladder.
+fn capacity_ladder() -> Vec<(&'static str, Vec<(MemKind, f64)>)> {
+    vec![
+        ("LDRAM only (196GB)", vec![(MemKind::Ldram, 196.0 * GB)]),
+        (
+            "LDRAM+CXL (324GB)",
+            vec![(MemKind::Ldram, 196.0 * GB), (MemKind::Cxl, 128.0 * GB)],
+        ),
+        (
+            "LDRAM+RDRAM (392GB)",
+            vec![(MemKind::Ldram, 196.0 * GB), (MemKind::Rdram, 196.0 * GB)],
+        ),
+        (
+            "interleave all (520GB)",
+            vec![
+                (MemKind::Ldram, 196.0 * GB),
+                (MemKind::Rdram, 196.0 * GB),
+                (MemKind::Cxl, 128.0 * GB),
+            ],
+        ),
+    ]
+}
+
+/// Table II: offload-policy search results.
+pub fn table2() -> Report {
+    let (sys, gpu) = sys_a();
+    let mut t = Table::new(
+        "Table II — FlexGen offload policy per memory hierarchy",
+        &["LLM", "hierarchy", "BS", "c on GPU", "c on CPU", "footprint"],
+    );
+    for model in [llama_65b(), opt_66b()] {
+        let cfg = InferCfg::paper(model);
+        for (name, kinds) in capacity_ladder() {
+            let tiers = flexgen::tiers_of(&sys, &kinds);
+            let pol = flexgen::search_policy(&gpu, &cfg, &tiers);
+            t.row(vec![
+                cfg.model.name.clone(),
+                name.into(),
+                pol.batch.to_string(),
+                format!("{:.0}%", 100.0 * pol.kv_gpu_frac),
+                format!("{:.0}%", 100.0 * (1.0 - pol.kv_gpu_frac)),
+                format!("{:.0} GB", pol.footprint / GB),
+            ]);
+        }
+    }
+    let mut r = Report::new();
+    r.add(t);
+    r
+}
+
+/// Fig 12: throughput vs memory capacity (batch-size scaling).
+pub fn fig12() -> Report {
+    let (sys, gpu) = sys_a();
+    let mut t = Table::new(
+        "Fig 12 — inference throughput vs capacity (tok/s)",
+        &["model", "config", "batch", "prefill", "decode", "total", "vs LDRAM only"],
+    );
+    for model in [llama_65b(), opt_66b()] {
+        let cfg = InferCfg::paper(model);
+        let mut base_total = 0.0;
+        for (i, (name, kinds)) in capacity_ladder().into_iter().enumerate() {
+            let tiers = flexgen::tiers_of(&sys, &kinds);
+            let pol = flexgen::search_policy(&gpu, &cfg, &tiers);
+            let th = flexgen::throughput(&sys, &gpu, &cfg, &pol);
+            if i == 0 {
+                base_total = th.total_tok_s;
+            }
+            t.row(vec![
+                cfg.model.name.clone(),
+                name.into(),
+                pol.batch.to_string(),
+                f1(th.prefill_tok_s),
+                f2(th.decode_tok_s),
+                f2(th.total_tok_s),
+                format!("{:+.0}%", 100.0 * (th.total_tok_s / base_total - 1.0)),
+            ]);
+        }
+    }
+    let mut r = Report::new();
+    r.add(t);
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_policies_within_3pct_at_4gb() {
+        let r = fig5();
+        let last = r.tables[0].rows.iter().rev().nth(0).unwrap();
+        let bws: Vec<f64> = last[1..5].iter().map(|c| c.parse().unwrap()).collect();
+        let max = bws.iter().cloned().fold(0.0f64, f64::max);
+        let min = bws.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!((max - min) / max < 0.03, "{bws:?}");
+    }
+
+    #[test]
+    fn fig6_cxl_has_largest_delta() {
+        let r = fig6();
+        let rows = &r.tables[0].rows;
+        let deltas: Vec<f64> = rows.iter().map(|r| r[2].parse().unwrap()).collect();
+        assert!(deltas[2] > deltas[1] && deltas[1] > deltas[0]);
+        assert!(deltas[2] > 100.0);
+    }
+
+    #[test]
+    fn fig8_cxl_never_best() {
+        // LLM training observation 1.
+        let r = fig8();
+        for row in &r.tables[0].rows {
+            let ld: f64 = row[2].parse().unwrap();
+            let ldcxl: f64 = row[3].parse().unwrap();
+            assert!(ldcxl <= ld * 1.02, "{row:?}");
+        }
+    }
+
+    #[test]
+    fn table2_batches_scale_with_capacity() {
+        let r = table2();
+        for model_rows in r.tables[0].rows.chunks(4) {
+            let bs: Vec<usize> = model_rows.iter().map(|r| r[2].parse().unwrap()).collect();
+            assert!(bs[0] < bs[2] && bs[2] <= bs[3], "{bs:?}");
+        }
+    }
+
+    #[test]
+    fn fig12_relative_column_positive() {
+        let r = fig12();
+        for row in r.tables[0].rows.iter().skip(1) {
+            if row[1].contains("LDRAM only") {
+                continue;
+            }
+            assert!(row[6].starts_with('+'), "{row:?}");
+        }
+    }
+}

@@ -1,0 +1,69 @@
+//! Experiment registry: one driver per paper table/figure.
+//!
+//! `cxlmem exp <id>` regenerates the corresponding artifact as a text
+//! table (or CSV/JSON via `--csv` / `--json`). `cxlmem exp all` runs the
+//! whole suite. See DESIGN.md §4 for the experiment index.
+
+pub mod basic;
+pub mod drivers;
+pub mod hpc;
+pub mod llm;
+pub mod tiering_exp;
+
+use anyhow::{anyhow, Result};
+
+use crate::report::Report;
+
+/// All experiment ids, in paper order.
+pub const ALL: &[&str] = &[
+    "table1", "fig2", "fig3", "fig4", "assign", "fig5", "fig6", "fig8", "fig9", "fig11",
+    "table2", "fig12", "table3", "fig13", "fig14", "fig15a", "fig15b", "fig16", "fig17",
+];
+
+/// Run one experiment by id.
+pub fn run(id: &str) -> Result<Report> {
+    Ok(match id {
+        "table1" => basic::table1(),
+        "fig2" => basic::fig2(),
+        "fig3" => basic::fig3(),
+        "fig4" => basic::fig4(),
+        "assign" => basic::assign(),
+        "fig5" => llm::fig5(),
+        "fig6" => llm::fig6(),
+        "fig8" => llm::fig8(),
+        "fig9" => llm::fig9(),
+        "fig11" => llm::fig11(),
+        "table2" => llm::table2(),
+        "fig12" => llm::fig12(),
+        "table3" => hpc::table3(),
+        "fig13" => hpc::fig13(),
+        "fig14" => hpc::fig14(),
+        "fig15a" => hpc::fig15a(),
+        "fig15b" => hpc::fig15b(),
+        "fig16" => tiering_exp::fig16(),
+        "fig17" => tiering_exp::fig17(),
+        other => return Err(anyhow!("unknown experiment '{other}'; try one of {ALL:?}")),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_all_ids() {
+        for id in ALL {
+            let r = run(id).unwrap();
+            assert!(!r.tables.is_empty(), "{id} produced no tables");
+            assert!(
+                r.tables.iter().all(|t| !t.rows.is_empty()),
+                "{id} has an empty table"
+            );
+        }
+    }
+
+    #[test]
+    fn unknown_id_errors() {
+        assert!(run("fig99").is_err());
+    }
+}

@@ -1,0 +1,296 @@
+//! Experiment drivers for §VI: Figs 16–17 (page migration × placement).
+
+use crate::mem::oli;
+use crate::memsim::{topology, MemKind, Pattern, System};
+use crate::report::Report;
+use crate::tiering::{
+    self, initial_state, AutoNuma, NoBalance, PageState, SimConfig, Tiering08, TieringPolicy, Tpp,
+};
+use crate::util::table::{f1, Table};
+use crate::workloads::npb::all_hpc_workloads;
+use crate::workloads::tiering_apps::{all_apps, AppModel, TraceGen};
+
+const EPOCHS: usize = 10;
+
+fn fresh_policies() -> Vec<Box<dyn TieringPolicy>> {
+    vec![
+        Box::new(NoBalance),
+        Box::new(AutoNuma::default()),
+        Box::new(Tiering08::default()),
+        Box::new(Tpp::default()),
+    ]
+}
+
+fn app_sim(
+    sys: &System,
+    app: &AppModel,
+    interleave: bool,
+    policy: &mut dyn TieringPolicy,
+    seed: u64,
+) -> tiering::TieringRun {
+    let socket = 0;
+    let ld = sys.node_of(socket, MemKind::Ldram).unwrap();
+    let cxl = sys.node_of(socket, MemKind::Cxl).unwrap();
+    // §VI-A: LDRAM limited to 50 GB (~25k 2MB regions) of a 130 GB WSS.
+    let fast_cap = (50u64 << 30) / crate::mem::PAGE_BYTES;
+    let mut state = initial_state(app.pages, ld, cxl, fast_cap as usize, interleave);
+    let mut gen = TraceGen::new(app.clone(), seed);
+    let cfg = SimConfig {
+        socket,
+        threads: 64,
+        compute_ns_per_byte: app.compute_ns_per_access / 64.0,
+        epochs: EPOCHS,
+        seed,
+    };
+    let dep = 0.55;
+    let mut run = tiering::simulate(
+        sys,
+        &cfg,
+        &mut state,
+        policy,
+        |_| {
+            let c = gen.epoch_counts();
+            gen.drift();
+            c
+        },
+        move |_| (Pattern::Random, dep),
+    );
+    run.placement = if interleave { "interleave" } else { "first-touch" }.into();
+    run
+}
+
+/// Fig 16: execution time for BTree/PageRank/Graph500/Silo under
+/// {NoBalance, AutoNUMA, Tiering-0.8, TPP} × {first touch, interleave},
+/// plus the PMO hint-fault/migration counters.
+pub fn fig16() -> Report {
+    let sys = topology::system_a();
+    let mut t = Table::new(
+        "Fig 16 — tiering x placement (seconds; lower is better)",
+        &["app", "policy", "placement", "time s", "hint faults", "migrated 4K pages"],
+    );
+    for app in all_apps() {
+        for interleave in [false, true] {
+            for mut pol in fresh_policies() {
+                let run = app_sim(&sys, &app, interleave, pol.as_mut(), 7);
+                t.row(vec![
+                    app.name.into(),
+                    run.policy.clone(),
+                    run.placement.clone(),
+                    f1(run.total_s),
+                    run.stats.hint_faults.to_string(),
+                    run.stats.migrated_pages.to_string(),
+                ]);
+            }
+        }
+    }
+    let mut r = Report::new();
+    r.add(t);
+    r
+}
+
+/// Fig 17: tiering × {first touch, uniform interleave, OLI} for the HPC
+/// workloads (§VI-B; 32 threads, socket 1).
+pub fn fig17() -> Report {
+    let sys = topology::system_a();
+    let socket = 1;
+    let ld = sys.node_of(socket, MemKind::Ldram).unwrap();
+    let cxl = sys.node_of(socket, MemKind::Cxl).unwrap();
+    let mut t = Table::new(
+        "Fig 17 — tiering x placement for HPC (seconds; lower is better)",
+        &["wl", "placement", "NoBalance", "AutoNUMA", "Tiering-0.8", "TPP"],
+    );
+    for wl in all_hpc_workloads() {
+        // §VI-B capacities: 40 GB (FT), 100 GB (MG), 50 GB otherwise.
+        let cap_gb: u64 = match wl.name {
+            "FT" => 40,
+            "MG" => 100,
+            _ => 50,
+        };
+        let fast_cap = ((cap_gb << 30) / crate::mem::PAGE_BYTES) as usize;
+        let pages_per_obj: Vec<usize> = wl
+            .objects
+            .iter()
+            .map(|o| (o.spec.bytes / crate::mem::PAGE_BYTES) as usize)
+            .collect();
+        let total_pages: usize = pages_per_obj.iter().sum();
+        let plan = oli::plan(&sys, socket, &wl.specs(), &[MemKind::Ldram, MemKind::Cxl]);
+
+        for placement in ["first-touch", "uniform", "OLI"] {
+            let mut row = vec![wl.name.to_string(), placement.into()];
+            for mut pol in fresh_policies() {
+                // Build page state per (placement, policy) run.
+                let mut state = match placement {
+                    "first-touch" => initial_state(total_pages, ld, cxl, fast_cap, false),
+                    "uniform" => initial_state(total_pages, ld, cxl, fast_cap, true),
+                    _ => oli_state(&plan, &pages_per_obj, ld, cxl, fast_cap),
+                };
+                // object ids per page
+                let mut obj_of = Vec::with_capacity(total_pages);
+                for (oi, &n) in pages_per_obj.iter().enumerate() {
+                    obj_of.extend(std::iter::repeat(oi as u32).take(n));
+                }
+                state.object = obj_of;
+
+                // per-epoch counts: uniform scan of each object scaled by
+                // its traffic (accesses in cache lines / page).
+                let counts: Vec<u32> = wl
+                    .objects
+                    .iter()
+                    .zip(&pages_per_obj)
+                    .flat_map(|(o, &n)| {
+                        let per_page =
+                            (o.traffic_bytes() / 64.0 / n.max(1) as f64 / EPOCHS as f64) as u32;
+                        std::iter::repeat(per_page).take(n)
+                    })
+                    .collect();
+                let cfg = SimConfig {
+                    socket,
+                    threads: 32,
+                    compute_ns_per_byte: wl.compute_ns_per_byte,
+                    epochs: EPOCHS,
+                    seed: 11,
+                };
+                let patterns: Vec<(Pattern, f64)> = wl
+                    .objects
+                    .iter()
+                    .map(|o| (o.pattern, o.spec.dep_frac))
+                    .collect();
+                let run = tiering::simulate(
+                    &sys,
+                    &cfg,
+                    &mut state,
+                    pol.as_mut(),
+                    |_| counts.clone(),
+                    move |oi| patterns[oi as usize],
+                );
+                row.push(f1(run.total_s));
+            }
+            t.row(row);
+        }
+    }
+    let mut r = Report::new();
+    r.add(t);
+    r
+}
+
+/// Build the OLI page state: interleaved objects alternate LDRAM/CXL and
+/// are unmigratable; preferred objects fill LDRAM first (migratable).
+fn oli_state(
+    plan: &oli::OliPlan,
+    pages_per_obj: &[usize],
+    ld: usize,
+    cxl: usize,
+    fast_cap: usize,
+) -> PageState {
+    let total: usize = pages_per_obj.iter().sum();
+    let mut node = Vec::with_capacity(total);
+    let mut migratable = Vec::with_capacity(total);
+    let mut fast_used = 0usize;
+    for (oi, &n) in pages_per_obj.iter().enumerate() {
+        let interleaved = plan.assignments[oi].2;
+        for p in 0..n {
+            if interleaved {
+                let target = if p % 2 == 0 && fast_used < fast_cap { ld } else { cxl };
+                if target == ld {
+                    fast_used += 1;
+                }
+                node.push(target);
+                migratable.push(false);
+            } else {
+                let target = if fast_used < fast_cap { ld } else { cxl };
+                if target == ld {
+                    fast_used += 1;
+                }
+                node.push(target);
+                migratable.push(true);
+            }
+        }
+    }
+    PageState {
+        node,
+        migratable,
+        object: vec![0; total],
+        fast_node: ld,
+        fast_capacity: fast_cap,
+        slow_node: cxl,
+        last_counts: vec![0; total],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn get(t: &Table, app: &str, pol: &str, place: &str) -> f64 {
+        t.rows
+            .iter()
+            .find(|r| r[0] == app && r[1] == pol && r[2] == place)
+            .unwrap()[3]
+            .parse()
+            .unwrap()
+    }
+
+    #[test]
+    fn fig16_pagerank_first_touch_no_migration_wins() {
+        // PMO 1: PageRank's small stable hot set favors plain first touch.
+        let r = fig16();
+        let t = &r.tables[0];
+        let ft_nb = get(t, "PageRank", "NoBalance", "first-touch");
+        for pol in ["NoBalance", "AutoNUMA", "Tiering-0.8", "TPP"] {
+            let inter = get(t, "PageRank", pol, "interleave");
+            assert!(ft_nb < inter, "{pol}: {ft_nb} vs {inter}");
+        }
+    }
+
+    #[test]
+    fn fig16_btree_insensitive() {
+        // PMO 1: BTree varies little across solutions.
+        let r = fig16();
+        let t = &r.tables[0];
+        let vals: Vec<f64> = t
+            .rows
+            .iter()
+            .filter(|r| r[0] == "BTree")
+            .map(|r| r[3].parse().unwrap())
+            .collect();
+        let max = vals.iter().cloned().fold(0.0f64, f64::max);
+        let min = vals.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!((max - min) / min < 0.25, "{vals:?}");
+    }
+
+    #[test]
+    fn fig16_interleave_suppresses_hint_faults() {
+        // PMO 3.
+        let r = fig16();
+        let t = &r.tables[0];
+        for row in &t.rows {
+            if row[2] == "interleave" {
+                assert_eq!(row[4], "0", "{row:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn fig16_tiering08_fewer_faults_than_tpp() {
+        // PMO 2 (paper: 59× fewer).
+        let r = fig16();
+        let t = &r.tables[0];
+        for app in ["BTree", "PageRank", "Graph500", "Silo"] {
+            let t08: f64 = t
+                .rows
+                .iter()
+                .find(|r| r[0] == app && r[1] == "Tiering-0.8" && r[2] == "first-touch")
+                .unwrap()[4]
+                .parse()
+                .unwrap();
+            let tpp: f64 = t
+                .rows
+                .iter()
+                .find(|r| r[0] == app && r[1] == "TPP" && r[2] == "first-touch")
+                .unwrap()[4]
+                .parse()
+                .unwrap();
+            assert!(tpp > 8.0 * t08.max(1.0), "{app}: tpp {tpp} vs t08 {t08}");
+        }
+    }
+}

@@ -1,0 +1,172 @@
+//! GPU ↔ CPU-memory-hierarchy data-path model (§IV, Figs 5–6).
+//!
+//! Under CXL 1.1 there is no peer-to-peer access: the GPU reaches the CXL
+//! memory via `GPU –PCIe– CPU –PCIe– CXL`, so
+//! - bandwidth is clamped by the *GPU's own* PCIe link (Fig 5: < 3%
+//!   difference across memory policies), and
+//! - latency grows by the extra path (Fig 6: ~+500 ns to CXL vs CPU DRAM,
+//!   larger than the CPU-side +120 ns difference).
+
+use crate::memsim::{MemKind, NodeId, System};
+
+/// Fixed software overhead of one `cudaMemcpy` call (driver + launch),
+/// nanoseconds. Dominates small transfers.
+pub const CUDAMEMCPY_OVERHEAD_NS: f64 = 1_800.0;
+
+/// DMA streaming efficiency per memory kind: the DMA engine sustains
+/// near-spec rates from DRAM, but CXL's longer round trip stalls the
+/// pipeline slightly (the Fig 9 "data movement suffers from CXL latency"
+/// effect).
+pub fn dma_efficiency(kind: MemKind) -> f64 {
+    match kind {
+        MemKind::Ldram => 1.0,
+        MemKind::Rdram => 0.95,
+        MemKind::Cxl => 0.82,
+        MemKind::Nvme => 1.0, // already bandwidth-limited far below PCIe
+    }
+}
+
+/// A GPU attached to one socket via a PCIe link (system A's A10).
+#[derive(Clone, Debug)]
+pub struct Gpu {
+    pub socket: usize,
+    pub mem_bytes: u64,
+    /// Peak dense fp16 throughput (FLOP/s) and achievable efficiency.
+    pub peak_flops: f64,
+    pub efficiency: f64,
+}
+
+impl Gpu {
+    /// NVIDIA A10: 24 GB, PCIe 4.0 x16, ~125 TFLOP/s fp16 tensor peak.
+    pub fn a10() -> Self {
+        Self {
+            socket: 1,
+            mem_bytes: 24 << 30,
+            peak_flops: 125e12,
+            efficiency: 0.38,
+        }
+    }
+
+    pub fn flops_effective(&self) -> f64 {
+        self.peak_flops * self.efficiency
+    }
+
+    /// One-way transfer latency (ns) for a small (cache-block) copy
+    /// between GPU memory and CPU-side memory on `node` (Fig 6).
+    pub fn transfer_latency_ns(&self, sys: &System, node: NodeId) -> f64 {
+        let gpu_link = sys.gpu_link.expect("system has no GPU");
+        // GPU -PCIe-> CPU (root complex on gpu.socket), then the CPU side
+        // walks to the memory node like a local access. CXL's own PCIe
+        // traversal is inside the device's calibrated idle latency;
+        // crossing sockets adds the fabric hop via `idle_latency`.
+        let cpu_side = sys.idle_latency(self.socket, node, crate::memsim::Pattern::Random);
+        CUDAMEMCPY_OVERHEAD_NS + gpu_link.hop_ns + cpu_side
+    }
+
+    /// Achievable large-transfer bandwidth (GB/s) for a copy whose CPU
+    /// side is spread over `node_weights` (a membind/interleave choice).
+    pub fn transfer_bw_gbs(&self, sys: &System, node_weights: &[(NodeId, f64)]) -> f64 {
+        let gpu_link = sys.gpu_link.expect("system has no GPU");
+        // Memory-side rate: weighted harmonic mean of per-node DMA rates
+        // (the DMA engine walks pages in address order).
+        let mut t_per_byte = 0.0;
+        for &(node, w) in node_weights {
+            let dev = &sys.nodes[node].device;
+            let kind = dev.kind;
+            // DMA sustains device spec bandwidth scaled by efficiency;
+            // the fabric clamps cross-socket paths.
+            let mut rate = dev.spec_bw_gbs * dma_efficiency(kind);
+            if sys.nodes[node].socket != self.socket {
+                rate = rate.min(sys.fabric.bw_gbs);
+            }
+            if kind == MemKind::Nvme {
+                rate = dev.peak_bw_gbs;
+            }
+            t_per_byte += w / rate;
+        }
+        let mem_side = 1.0 / t_per_byte;
+        gpu_link.bw_gbs.min(mem_side)
+    }
+
+    /// Time (seconds) to move `bytes` between GPU and the CPU hierarchy.
+    pub fn transfer_time_s(&self, sys: &System, node_weights: &[(NodeId, f64)], bytes: f64) -> f64 {
+        // Small-copy latency + streaming portion.
+        let lat: f64 = node_weights
+            .iter()
+            .map(|&(n, w)| w * self.transfer_latency_ns(sys, n))
+            .sum();
+        let bw = self.transfer_bw_gbs(sys, node_weights);
+        lat / 1e9 + bytes / (bw * 1e9)
+    }
+
+    /// Observed bandwidth (GB/s) for a block-size sweep point (Fig 5).
+    pub fn observed_bw(&self, sys: &System, node_weights: &[(NodeId, f64)], bytes: f64) -> f64 {
+        bytes / self.transfer_time_s(sys, node_weights, bytes) / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memsim::topology::system_a;
+
+    fn setup() -> (crate::memsim::System, Gpu) {
+        (system_a(), Gpu::a10())
+    }
+
+    #[test]
+    fn peak_bw_is_pcie_limited_for_all_policies() {
+        // Fig 5: <3% spread across memory policies at large block sizes.
+        let (sys, gpu) = setup();
+        let ld = sys.node_of(1, MemKind::Ldram).unwrap();
+        let rd = sys.node_of(1, MemKind::Rdram).unwrap();
+        let cxl = sys.node_of(1, MemKind::Cxl).unwrap();
+        let policies: Vec<Vec<(NodeId, f64)>> = vec![
+            vec![(ld, 1.0)],
+            vec![(ld, 0.5), (cxl, 0.5)],
+            vec![(ld, 1.0 / 3.0), (rd, 1.0 / 3.0), (cxl, 1.0 / 3.0)],
+        ];
+        let bws: Vec<f64> = policies
+            .iter()
+            .map(|p| gpu.observed_bw(&sys, p, 4e9))
+            .collect();
+        let max = bws.iter().cloned().fold(0.0f64, f64::max);
+        let min = bws.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!((max - min) / max < 0.03, "spread {bws:?}");
+        assert!(max <= sys.gpu_link.unwrap().bw_gbs * 1.001);
+    }
+
+    #[test]
+    fn small_transfers_dominated_by_overhead() {
+        let (sys, gpu) = setup();
+        let ld = sys.node_of(1, MemKind::Ldram).unwrap();
+        let bw_small = gpu.observed_bw(&sys, &[(ld, 1.0)], 128.0);
+        let bw_big = gpu.observed_bw(&sys, &[(ld, 1.0)], 1e9);
+        assert!(bw_small < 0.1);
+        assert!(bw_big > 20.0);
+    }
+
+    #[test]
+    fn gpu_to_cxl_latency_penalty_exceeds_cpu_side_penalty() {
+        // Fig 6 vs Fig 2: the GPU-side CXL latency penalty (longer path)
+        // is at least the CPU-side penalty, and substantial.
+        let (sys, gpu) = setup();
+        let ld = sys.node_of(1, MemKind::Ldram).unwrap();
+        let cxl = sys.node_of(1, MemKind::Cxl).unwrap();
+        let gpu_pen = gpu.transfer_latency_ns(&sys, cxl) - gpu.transfer_latency_ns(&sys, ld);
+        let cpu_pen = sys.idle_latency(1, cxl, crate::memsim::Pattern::Random)
+            - sys.idle_latency(1, ld, crate::memsim::Pattern::Random);
+        assert!(gpu_pen >= cpu_pen, "gpu {gpu_pen} vs cpu {cpu_pen}");
+        assert!(gpu_pen > 100.0);
+    }
+
+    #[test]
+    fn nvme_transfers_far_slower() {
+        let (sys, gpu) = setup();
+        let nv = sys.node_of(1, MemKind::Nvme).unwrap();
+        let ld = sys.node_of(1, MemKind::Ldram).unwrap();
+        let t_nv = gpu.transfer_time_s(&sys, &[(nv, 1.0)], 1e9);
+        let t_ld = gpu.transfer_time_s(&sys, &[(ld, 1.0)], 1e9);
+        assert!(t_nv > 4.0 * t_ld);
+    }
+}

@@ -1,0 +1,31 @@
+//! # cxlmem — Exploring and Evaluating Real-world CXL, reproduced
+//!
+//! A three-layer (Rust + JAX + Pallas, AOT via PJRT) reproduction of
+//! *"Exploring and Evaluating Real-world CXL: Use Cases and System
+//! Adoption"* (IPDPS 2025). The physical CXL testbeds are replaced by a
+//! calibrated memory-system simulator ([`memsim`]); the LLM compute that
+//! the paper offloads to the CPU runs for real through AOT-compiled
+//! JAX/Pallas artifacts ([`runtime`]).
+//!
+//! Layer map:
+//! - L3 (this crate): memory simulator, page placement policies, the
+//!   paper's object-level interleaving, memory-tiering engines, HPC
+//!   workload models, the ZeRO-Offload / FlexGen coordinators, and the
+//!   experiment drivers that regenerate every figure and table.
+//! - L2 (`python/compile/model.py`): JAX transformer fwd/bwd/train-step.
+//! - L1 (`python/compile/kernels/`): Pallas kernels (fused ADAM, decode
+//!   attention, tiled matmul), lowered with `interpret=True`.
+
+pub mod engine;
+pub mod exp;
+pub mod gpu;
+pub mod llm;
+pub mod mem;
+pub mod memsim;
+pub mod probes;
+pub mod report;
+pub mod runtime;
+pub mod testkit;
+pub mod tiering;
+pub mod util;
+pub mod workloads;

@@ -1,0 +1,183 @@
+//! Request batcher for the serving example: groups incoming inference
+//! requests into FlexGen-sized batches and tracks latency/throughput.
+//!
+//! This is the L3 "coordinator" face of the inference stack: requests
+//! arrive on a queue, the batcher forms batches up to the offload
+//! policy's batch size, and each batch is charged prefill+decode time
+//! from the FlexGen model (with the real decode-attention kernel running
+//! through the PJRT runtime in the examples).
+
+use std::collections::VecDeque;
+
+/// One inference request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub arrival_s: f64,
+    pub prompt_len: usize,
+    pub gen_len: usize,
+}
+
+/// A completed request with timing.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub id: u64,
+    pub arrival_s: f64,
+    pub finish_s: f64,
+    pub tokens: usize,
+}
+
+impl Completion {
+    pub fn latency_s(&self) -> f64 {
+        self.finish_s - self.arrival_s
+    }
+}
+
+/// FIFO batcher with a maximum batch size.
+#[derive(Debug)]
+pub struct Batcher {
+    pub max_batch: usize,
+    queue: VecDeque<Request>,
+    pub completions: Vec<Completion>,
+    /// Simulated wall clock (seconds).
+    pub now_s: f64,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize) -> Self {
+        assert!(max_batch > 0);
+        Self {
+            max_batch,
+            queue: VecDeque::new(),
+            completions: Vec::new(),
+            now_s: 0.0,
+        }
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        self.queue.push_back(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Form the next batch (up to `max_batch` requests whose arrival time
+    /// is ≤ now). Returns an empty vec if nothing is ready.
+    pub fn next_batch(&mut self) -> Vec<Request> {
+        let mut batch = Vec::new();
+        while batch.len() < self.max_batch {
+            match self.queue.front() {
+                Some(r) if r.arrival_s <= self.now_s => {
+                    batch.push(self.queue.pop_front().unwrap())
+                }
+                _ => break,
+            }
+        }
+        if batch.is_empty() {
+            // Advance the clock to the next arrival, if any.
+            if let Some(r) = self.queue.front() {
+                self.now_s = self.now_s.max(r.arrival_s);
+            }
+        }
+        batch
+    }
+
+    /// Record a processed batch that took `batch_time_s`.
+    pub fn complete(&mut self, batch: Vec<Request>, batch_time_s: f64) {
+        self.now_s += batch_time_s;
+        for r in batch {
+            self.completions.push(Completion {
+                id: r.id,
+                arrival_s: r.arrival_s,
+                finish_s: self.now_s,
+                tokens: r.gen_len,
+            });
+        }
+    }
+
+    /// Serving metrics over all completions.
+    pub fn metrics(&self) -> (f64, f64, f64) {
+        if self.completions.is_empty() {
+            return (0.0, 0.0, 0.0);
+        }
+        let lats: Vec<f64> = self.completions.iter().map(|c| c.latency_s()).collect();
+        let mean_lat = crate::util::stats::mean(&lats);
+        let p95 = crate::util::stats::percentile(&lats, 95.0);
+        let tokens: usize = self.completions.iter().map(|c| c.tokens).sum();
+        let span = self
+            .completions
+            .iter()
+            .map(|c| c.finish_s)
+            .fold(0.0f64, f64::max);
+        let tput = tokens as f64 / span.max(1e-9);
+        (mean_lat, p95, tput)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, t: f64) -> Request {
+        Request {
+            id,
+            arrival_s: t,
+            prompt_len: 2048,
+            gen_len: 256,
+        }
+    }
+
+    #[test]
+    fn batches_respect_max_size() {
+        let mut b = Batcher::new(2);
+        for i in 0..5 {
+            b.submit(req(i, 0.0));
+        }
+        let batch = b.next_batch();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(b.pending(), 3);
+    }
+
+    #[test]
+    fn only_arrived_requests_batch() {
+        let mut b = Batcher::new(8);
+        b.submit(req(0, 0.0));
+        b.submit(req(1, 100.0)); // far future
+        let batch = b.next_batch();
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn clock_advances_to_next_arrival_when_idle() {
+        let mut b = Batcher::new(8);
+        b.submit(req(0, 5.0));
+        let batch = b.next_batch();
+        assert!(batch.is_empty());
+        assert_eq!(b.now_s, 5.0);
+        assert_eq!(b.next_batch().len(), 1);
+    }
+
+    #[test]
+    fn metrics_track_latency_and_throughput() {
+        let mut b = Batcher::new(4);
+        for i in 0..4 {
+            b.submit(req(i, 0.0));
+        }
+        let batch = b.next_batch();
+        b.complete(batch, 10.0);
+        let (mean, p95, tput) = b.metrics();
+        assert_eq!(mean, 10.0);
+        assert_eq!(p95, 10.0);
+        assert!((tput - 4.0 * 256.0 / 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut b = Batcher::new(1);
+        b.submit(req(7, 0.0));
+        b.submit(req(8, 0.0));
+        assert_eq!(b.next_batch()[0].id, 7);
+        assert_eq!(b.next_batch()[0].id, 8);
+    }
+}

@@ -1,0 +1,11 @@
+//! LLM tensor-offloading stack (§IV): model size calculators, the
+//! ZeRO-Offload training coordinator, the FlexGen inference coordinator,
+//! and a request batcher for serving.
+
+pub mod batcher;
+pub mod flexgen;
+pub mod model_cfg;
+pub mod zero_offload;
+
+pub use batcher::{Batcher, Completion, Request};
+pub use model_cfg::ModelCfg;

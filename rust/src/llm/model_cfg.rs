@@ -1,0 +1,155 @@
+//! LLM size calculators for the models the paper evaluates:
+//! BERT (110 M / 340 M / 4 B), GPT-2 (4 B / 6 B / 8 B),
+//! LLaMA-65B and OPT-66B.
+//!
+//! The paper's figures depend on tensor *sizes* (transfer volume, memory
+//! footprint, KV-cache growth), which these derive exactly from the
+//! architecture parameters.
+
+/// Transformer architecture description.
+#[derive(Clone, Debug)]
+pub struct ModelCfg {
+    pub name: String,
+    pub layers: usize,
+    pub d_model: usize,
+    pub heads: usize,
+    pub vocab: usize,
+    pub ffn_mult: usize,
+}
+
+impl ModelCfg {
+    pub fn new(name: &str, layers: usize, d_model: usize, heads: usize, vocab: usize) -> Self {
+        Self {
+            name: name.to_string(),
+            layers,
+            d_model,
+            heads,
+            vocab,
+            ffn_mult: 4,
+        }
+    }
+
+    /// Parameter count: embeddings + per-layer (attention 4·d² +
+    /// FFN 2·4·d²) + LN weights (negligible but included).
+    pub fn params(&self) -> u64 {
+        let d = self.d_model as u64;
+        let per_layer = 4 * d * d + 2 * self.ffn_mult as u64 * d * d + 9 * d;
+        self.vocab as u64 * d + self.layers as u64 * per_layer
+    }
+
+    /// Bytes of fp16 weights (the GPU/transfer representation).
+    pub fn weight_bytes_fp16(&self) -> u64 {
+        2 * self.params()
+    }
+
+    /// CPU-side bytes under ZeRO-Offload: fp32 master params + fp32
+    /// momentum + fp32 variance + fp16 gradient staging
+    /// (4+4+4+2 = 14 bytes/param) + fp16 param staging (2) = 16 B/param.
+    pub fn zero_offload_cpu_bytes(&self) -> u64 {
+        16 * self.params()
+    }
+
+    /// KV-cache bytes per sequence position per batch element (fp16):
+    /// 2 (K and V) · layers · d_model · 2 bytes.
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        2 * self.layers as u64 * self.d_model as u64 * 2
+    }
+
+    /// Activation bytes per token held during decode (fp16, one layer's
+    /// worth kept resident per FlexGen's schedule).
+    pub fn act_bytes_per_token(&self) -> u64 {
+        2 * self.d_model as u64 * 8
+    }
+
+    /// Forward+backward FLOPs per token (the standard 6·P estimate).
+    pub fn train_flops_per_token(&self) -> f64 {
+        6.0 * self.params() as f64
+    }
+
+    /// Forward FLOPs per token (2·P).
+    pub fn infer_flops_per_token(&self) -> f64 {
+        2.0 * self.params() as f64
+    }
+}
+
+/// BERT variants (the paper's 110 M "base", 340 M "medium", 4 B "large").
+pub fn bert(params_label: &str) -> ModelCfg {
+    match params_label {
+        "110M" => ModelCfg::new("BERT-110M", 12, 768, 12, 30522),
+        "340M" => ModelCfg::new("BERT-340M", 24, 1024, 16, 30522),
+        "4B" => ModelCfg::new("BERT-4B", 48, 2560, 32, 30522),
+        other => panic!("unknown BERT size {other}"),
+    }
+}
+
+/// GPT-2 scaled variants (4 B / 6 B / 8 B as evaluated in Fig 8).
+pub fn gpt2(params_label: &str) -> ModelCfg {
+    match params_label {
+        "4B" => ModelCfg::new("GPT2-4B", 48, 2560, 32, 50257),
+        "6B" => ModelCfg::new("GPT2-6B", 40, 3584, 28, 50257),
+        "8B" => ModelCfg::new("GPT2-8B", 48, 3712, 32, 50257),
+        other => panic!("unknown GPT2 size {other}"),
+    }
+}
+
+/// LLaMA-65B (Fig 11–12, Table II).
+pub fn llama_65b() -> ModelCfg {
+    // SwiGLU FFN: 3 matrices of d x 2.6875d ≈ 8d² ≡ ffn_mult 4 here.
+    ModelCfg::new("LLaMA-65B", 80, 8192, 64, 32000)
+}
+
+/// OPT-66B.
+pub fn opt_66b() -> ModelCfg {
+    ModelCfg::new("OPT-66B", 64, 9216, 72, 50272)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bert_base_is_about_110m() {
+        let p = bert("110M").params() as f64;
+        assert!((p - 110e6).abs() / 110e6 < 0.15, "params {p}");
+    }
+
+    #[test]
+    fn bert_medium_is_about_340m() {
+        let p = bert("340M").params() as f64;
+        assert!((p - 340e6).abs() / 340e6 < 0.15, "params {p}");
+    }
+
+    #[test]
+    fn gpt2_sizes_scale() {
+        let p4 = gpt2("4B").params() as f64;
+        let p6 = gpt2("6B").params() as f64;
+        let p8 = gpt2("8B").params() as f64;
+        assert!((p4 - 4e9).abs() / 4e9 < 0.15, "4B: {p4}");
+        assert!((p6 - 6e9).abs() / 6e9 < 0.15, "6B: {p6}");
+        assert!((p8 - 8e9).abs() / 8e9 < 0.15, "8B: {p8}");
+    }
+
+    #[test]
+    fn llama_and_opt_in_range() {
+        let l = llama_65b().params() as f64;
+        let o = opt_66b().params() as f64;
+        assert!((l - 65e9).abs() / 65e9 < 0.12, "llama {l}");
+        assert!((o - 66e9).abs() / 66e9 < 0.12, "opt {o}");
+    }
+
+    #[test]
+    fn zero_offload_cpu_footprint() {
+        // 8B params → 128 GB CPU-side state.
+        let m = gpt2("8B");
+        let gb = m.zero_offload_cpu_bytes() as f64 / 1e9;
+        assert!((gb - 16.0 * m.params() as f64 / 1e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn kv_cache_growth_llama() {
+        // LLaMA-65B: 2·80·8192·2 = 2.62 MB per token position.
+        let m = llama_65b();
+        let kb = m.kv_bytes_per_token() as f64 / 1e6;
+        assert!((kb - 2.62).abs() < 0.05, "kv {kb} MB");
+    }
+}

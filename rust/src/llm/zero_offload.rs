@@ -1,0 +1,243 @@
+//! ZeRO-Offload training-step coordinator (§IV-A, Figs 7–9).
+//!
+//! Workflow per training step (Fig 7):
+//! 1–2. forward + backward on the GPU;
+//! 3.   gradients offloaded to CPU memory (overlapped with backward);
+//! 4.   ADAM optimizer runs **on the CPU** over fp32 states — this is the
+//!      latency/bandwidth-sensitive phase the paper dissects;
+//! 5.   updated fp16 parameters uploaded to the GPU (partially
+//!      overlapped with the next forward).
+//!
+//! In this reproduction the ADAM step is *real*: the runtime executes the
+//! AOT-compiled Pallas `adam` kernel (see `runtime::artifacts`); the
+//! simulator charges the memory-system time for the tensor traffic.
+
+use crate::gpu::Gpu;
+use crate::llm::model_cfg::ModelCfg;
+use crate::memsim::{MemKind, NodeId, Pattern, System};
+
+/// Bytes of CPU memory traffic per parameter for one ADAM step:
+/// read p32+m+v+g16 (14), write p32+m+v+p16 (14) ≈ 28, minus cache reuse.
+pub const ADAM_TRAFFIC_PER_PARAM: f64 = 20.0;
+/// Per-thread ADAM streaming rate against LDRAM (GB/s): SIMD ADAM is
+/// memory-bound at roughly this per-core rate.
+pub const ADAM_RATE_GBS: f64 = 1.66;
+/// Latency sensitivity exponent: the effective per-thread rate scales as
+/// `(lat_ldram / lat_node)^ALPHA` (software pipelining hides part of the
+/// extra latency; the rest shows — the paper's "optimizer is sensitive to
+/// memory latency").
+pub const ADAM_LAT_ALPHA: f64 = 0.15;
+
+/// Fractions of the gradient-offload / parameter-upload transfers exposed
+/// on the critical path (the rest overlaps with backward / next forward).
+pub const GRAD_EXPOSED: f64 = 0.15;
+pub const PARAM_EXPOSED: f64 = 0.25;
+
+/// Training-step configuration.
+#[derive(Clone, Debug)]
+pub struct TrainCfg {
+    pub model: ModelCfg,
+    pub batch: usize,
+    pub seq: usize,
+    /// CPU threads running the ADAM kernel.
+    pub threads: usize,
+}
+
+/// Where the CPU-side tensors live: (node, fraction) — the membind /
+/// interleave choice of Fig 8.
+pub type CpuPlacement = Vec<(NodeId, f64)>;
+
+/// Step-time breakdown (seconds), Fig 9's decomposition.
+#[derive(Clone, Debug)]
+pub struct StepBreakdown {
+    pub gpu_s: f64,
+    pub optimizer_s: f64,
+    pub data_move_exposed_s: f64,
+    pub total_s: f64,
+}
+
+impl StepBreakdown {
+    pub fn optimizer_share(&self) -> f64 {
+        self.optimizer_s / self.total_s
+    }
+
+    pub fn data_move_share(&self) -> f64 {
+        self.data_move_exposed_s / self.total_s
+    }
+}
+
+/// Maximum batch size that fits the GPU for training (the paper picks
+/// the max batch without OOM per model size).
+pub fn max_batch(gpu: &Gpu, model: &ModelCfg, seq: usize) -> usize {
+    let budget = gpu.mem_bytes as f64 * 0.92
+        - model.weight_bytes_fp16() as f64
+        - 1e9; // workspace
+    // Activation bytes per sequence with checkpointing every layer.
+    let per_seq = (seq * model.d_model * model.layers) as f64 * 2.0 * 4.5;
+    (budget / per_seq).floor().max(1.0) as usize
+}
+
+/// ADAM optimizer time on the CPU for the given tensor placement.
+pub fn optimizer_time_s(
+    sys: &System,
+    cfg: &TrainCfg,
+    placement: &CpuPlacement,
+) -> f64 {
+    let traffic = ADAM_TRAFFIC_PER_PARAM * cfg.model.params() as f64;
+    let ld = sys
+        .node_of(0, MemKind::Ldram)
+        .expect("no LDRAM node");
+    let lat_ld = sys.idle_latency(0, ld, Pattern::Sequential);
+    let mut t = 0.0f64;
+    for &(node, w) in placement {
+        if w <= 0.0 {
+            continue;
+        }
+        let lat = sys.idle_latency(0, node, Pattern::Sequential);
+        let rate = ADAM_RATE_GBS * (lat_ld / lat).powf(ADAM_LAT_ALPHA);
+        let cap = sys.eff_peak_bw(0, node);
+        let bw = (cfg.threads as f64 * rate * w).min(cap);
+        // Decoupled scan: slowest tier bounds the step.
+        t = t.max(traffic * w / (bw * 1e9));
+    }
+    t
+}
+
+/// One full training step under `placement` for the CPU-side tensors.
+pub fn step(sys: &System, gpu: &Gpu, cfg: &TrainCfg, placement: &CpuPlacement) -> StepBreakdown {
+    let tokens = (cfg.batch * cfg.seq) as f64;
+    let gpu_s = cfg.model.train_flops_per_token() * tokens / gpu.flops_effective();
+
+    let optimizer_s = optimizer_time_s(sys, cfg, placement);
+
+    let grad_bytes = 2.0 * cfg.model.params() as f64;
+    let param_bytes = 2.0 * cfg.model.params() as f64;
+    let grad_s = gpu.transfer_time_s(sys, placement, grad_bytes);
+    let param_s = gpu.transfer_time_s(sys, placement, param_bytes);
+    let data_move_exposed_s = GRAD_EXPOSED * grad_s + PARAM_EXPOSED * param_s;
+
+    StepBreakdown {
+        gpu_s,
+        optimizer_s,
+        data_move_exposed_s,
+        total_s: gpu_s + optimizer_s + data_move_exposed_s,
+    }
+}
+
+/// Training throughput (samples/s).
+pub fn throughput(sys: &System, gpu: &Gpu, cfg: &TrainCfg, placement: &CpuPlacement) -> f64 {
+    cfg.batch as f64 / step(sys, gpu, cfg, placement).total_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::llm::model_cfg::gpt2;
+    use crate::memsim::topology::system_a;
+
+    fn fixture() -> (System, Gpu, TrainCfg) {
+        let sys = system_a();
+        let gpu = Gpu::a10();
+        let cfg = TrainCfg {
+            model: gpt2("8B"),
+            batch: 3,
+            seq: 1024,
+            threads: 32,
+        };
+        (sys, gpu, cfg)
+    }
+
+    fn placement(sys: &System, kinds: &[MemKind]) -> CpuPlacement {
+        let w = 1.0 / kinds.len() as f64;
+        kinds
+            .iter()
+            .map(|&k| (sys.node_of(0, k).unwrap(), w))
+            .collect()
+    }
+
+    #[test]
+    fn max_batch_matches_paper_bs3_at_8b() {
+        let gpu = Gpu::a10();
+        let bs = max_batch(&gpu, &gpt2("8B"), 1024);
+        assert!((2..=4).contains(&bs), "bs={bs}");
+        // Smaller models fit bigger batches.
+        assert!(max_batch(&gpu, &gpt2("4B"), 1024) > bs);
+    }
+
+    #[test]
+    fn optimizer_slower_on_cxl_but_bounded() {
+        // Fig 9: interleaving CXL slows the optimizer by 2–18%.
+        let (sys, _gpu, cfg) = fixture();
+        let t_ld = optimizer_time_s(&sys, &cfg, &placement(&sys, &[MemKind::Ldram]));
+        let t_ldcxl = optimizer_time_s(
+            &sys,
+            &cfg,
+            &placement(&sys, &[MemKind::Ldram, MemKind::Cxl]),
+        );
+        let pen = t_ldcxl / t_ld - 1.0;
+        assert!(pen > 0.01, "penalty {pen}");
+        assert!(pen < 0.45, "penalty {pen}");
+    }
+
+    #[test]
+    fn data_movement_under_ten_percent() {
+        // Fig 9: data movement is a small share of step time (<5% for
+        // GPT2 in the paper; we accept <10%).
+        let (sys, gpu, cfg) = fixture();
+        let b = step(&sys, &gpu, &cfg, &placement(&sys, &[MemKind::Ldram]));
+        assert!(b.data_move_share() < 0.10, "{}", b.data_move_share());
+    }
+
+    #[test]
+    fn optimizer_share_grows_as_batch_shrinks() {
+        // §IV-A: with small batch the optimizer dominates (≈31% at bs=3).
+        let (sys, gpu, mut cfg) = fixture();
+        let p = placement(&sys, &[MemKind::Ldram]);
+        let small = step(&sys, &gpu, &cfg, &p).optimizer_share();
+        cfg.batch = 16;
+        let big = step(&sys, &gpu, &cfg, &p).optimizer_share();
+        assert!(small > big);
+        assert!((0.2..=0.55).contains(&small), "share {small}");
+    }
+
+    #[test]
+    fn cxl_brings_no_throughput_win() {
+        // LLM training observation 1: adding CXL does not help.
+        let (sys, gpu, cfg) = fixture();
+        let ld = throughput(&sys, &gpu, &cfg, &placement(&sys, &[MemKind::Ldram]));
+        let ldcxl = throughput(
+            &sys,
+            &gpu,
+            &cfg,
+            &placement(&sys, &[MemKind::Ldram, MemKind::Cxl]),
+        );
+        let all = throughput(
+            &sys,
+            &gpu,
+            &cfg,
+            &placement(&sys, &[MemKind::Ldram, MemKind::Rdram, MemKind::Cxl]),
+        );
+        assert!(ldcxl <= ld * 1.001);
+        assert!(all <= ld * 1.001);
+    }
+
+    #[test]
+    fn ldram_rdram_beats_ldram_cxl() {
+        // Fig 8 (8B): LDRAM+RDRAM outperforms LDRAM+CXL (paper: 16%).
+        let (sys, gpu, cfg) = fixture();
+        let ldrd = throughput(
+            &sys,
+            &gpu,
+            &cfg,
+            &placement(&sys, &[MemKind::Ldram, MemKind::Rdram]),
+        );
+        let ldcxl = throughput(
+            &sys,
+            &gpu,
+            &cfg,
+            &placement(&sys, &[MemKind::Ldram, MemKind::Cxl]),
+        );
+        let adv = ldrd / ldcxl - 1.0;
+        assert!((0.02..=0.35).contains(&adv), "advantage {adv}");
+    }
+}

@@ -1,0 +1,93 @@
+//! cxlmem CLI — leader entrypoint.
+//!
+//! ```text
+//! cxlmem exp <id|all> [--csv|--json] [--out FILE]   regenerate a paper figure/table
+//! cxlmem train [--steps N] [--seed S]               E2E training through the PJRT artifact
+//! cxlmem serve [--requests N]                       FlexGen-style serving demo
+//! cxlmem info                                       platform + artifact status
+//! ```
+
+use anyhow::Result;
+
+use cxlmem::report::Format;
+use cxlmem::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "exp" => cmd_exp(&args),
+        "train" => cxlmem::exp::drivers::train(&args),
+        "serve" => cxlmem::exp::drivers::serve(&args),
+        "info" => cmd_info(),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let fmt = if args.flag("json") {
+        Format::Json
+    } else if args.flag("csv") {
+        Format::Csv
+    } else {
+        Format::Text
+    };
+    let ids: Vec<&str> = if id == "all" {
+        cxlmem::exp::ALL.to_vec()
+    } else {
+        vec![id]
+    };
+    for id in ids {
+        let report = cxlmem::exp::run(id)?;
+        if let Some(path) = args.get("out") {
+            report.save(std::path::Path::new(path), fmt)?;
+            println!("wrote {path}");
+        } else {
+            report.print(fmt);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    match cxlmem::runtime::Runtime::discover() {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            println!(
+                "artifacts: {} in {} (model: {} params, vocab {}, d_model {}, {} layers)",
+                rt.manifest.artifacts.len(),
+                rt.manifest.dir.display(),
+                rt.manifest.model.params,
+                rt.manifest.model.vocab,
+                rt.manifest.model.d_model,
+                rt.manifest.model.layers,
+            );
+        }
+        Err(e) => println!("artifacts not built ({e}); run `make artifacts`"),
+    }
+    println!("systems: A, B, C (see `cxlmem exp table1`)");
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "cxlmem — 'Exploring and Evaluating Real-world CXL' reproduction\n\
+         \n\
+         USAGE:\n\
+         \x20 cxlmem exp <id|all> [--csv|--json] [--out FILE]\n\
+         \x20 cxlmem train [--steps N] [--seed S] [--log-every K]\n\
+         \x20 cxlmem serve [--requests N]\n\
+         \x20 cxlmem info\n\
+         \n\
+         experiment ids: {}",
+        cxlmem::exp::ALL.join(", ")
+    );
+}

@@ -1,0 +1,13 @@
+//! Virtual-memory substrate: page frames + zones, placement policies
+//! (first-touch / preferred / membind / interleave), and the paper's
+//! object-level interleaving (OLI) planner.
+
+pub mod oli;
+pub mod page;
+pub mod policy;
+pub mod vmm;
+
+pub use oli::{plan as oli_plan, ObjectSpec, OliPlan};
+pub use page::{pages_of, PhysMem, Zone, PAGE_BYTES};
+pub use policy::Policy;
+pub use vmm::{AddressSpace, DataObject, ObjectId};

@@ -1,0 +1,214 @@
+//! Object-level interleaving (OLI) — the paper's §V-B contribution.
+//!
+//! Instead of interleaving every page of the application uniformly, OLI
+//! decides *per data object* whether to interleave its pages across
+//! DRAM+CXL (bandwidth-hungry objects) or allocate them "LDRAM preferred"
+//! (latency-sensitive objects). Selection criteria from the paper:
+//!
+//! 1. footprint: the object takes ≥ 10% of total memory consumption;
+//! 2. intensity: among those, the objects with the largest number of
+//!    memory accesses (several may qualify).
+//!
+//! Selected objects get `numa_alloc_interleaved_subset`-style placement;
+//! everything else is LDRAM-preferred.
+
+use super::policy::Policy;
+use crate::memsim::{MemKind, NodeId, System};
+
+/// Workload-provided description of one data object, before placement.
+#[derive(Clone, Debug)]
+pub struct ObjectSpec {
+    pub name: String,
+    pub bytes: u64,
+    /// Relative number of memory accesses this object receives
+    /// (arbitrary units; only ratios matter).
+    pub accesses: f64,
+    /// Fraction of this object's accesses that are dependent /
+    /// latency-bound rather than streaming.
+    pub dep_frac: f64,
+}
+
+impl ObjectSpec {
+    pub fn new(name: &str, bytes: u64, accesses: f64, dep_frac: f64) -> Self {
+        Self {
+            name: name.to_string(),
+            bytes,
+            accesses,
+            dep_frac,
+        }
+    }
+}
+
+/// Footprint threshold: ≥ 10% of total memory consumption.
+pub const FOOTPRINT_FRAC: f64 = 0.10;
+/// Intensity threshold: within this factor of the most-accessed
+/// qualifying object ("objects with the largest number of accesses").
+pub const INTENSITY_FRAC: f64 = 0.5;
+
+/// Apply the paper's two criteria; returns selection flags per object.
+pub fn select_bw_hungry(objects: &[ObjectSpec]) -> Vec<bool> {
+    let total: u64 = objects.iter().map(|o| o.bytes).sum();
+    if total == 0 {
+        return vec![false; objects.len()];
+    }
+    // Criterion 1: large footprint.
+    let big: Vec<bool> = objects
+        .iter()
+        .map(|o| o.bytes as f64 >= FOOTPRINT_FRAC * total as f64)
+        .collect();
+    // Criterion 2: most-accessed among the big ones.
+    let max_acc = objects
+        .iter()
+        .zip(&big)
+        .filter(|&(_, &b)| b)
+        .map(|(o, _)| o.accesses)
+        .fold(0.0f64, f64::max);
+    objects
+        .iter()
+        .zip(&big)
+        .map(|(o, &b)| b && max_acc > 0.0 && o.accesses >= INTENSITY_FRAC * max_acc)
+        .collect()
+}
+
+/// The per-object policy assignment OLI produces.
+#[derive(Clone, Debug)]
+pub struct OliPlan {
+    /// (object index, policy, selected-for-interleave?)
+    pub assignments: Vec<(usize, Policy, bool)>,
+    pub interleave_nodes: Vec<NodeId>,
+    pub preferred_node: NodeId,
+}
+
+/// Build the OLI placement plan: bandwidth-hungry objects interleave over
+/// `interleave_kinds` (paper: LDRAM+CXL); the rest are LDRAM-preferred.
+pub fn plan(
+    sys: &System,
+    socket: usize,
+    objects: &[ObjectSpec],
+    interleave_kinds: &[MemKind],
+) -> OliPlan {
+    let selected = select_bw_hungry(objects);
+    let inter_nodes: Vec<NodeId> = interleave_kinds
+        .iter()
+        .map(|&k| sys.node_of(socket, k).expect("missing node kind"))
+        .collect();
+    let preferred = sys.node_of(socket, MemKind::Ldram).unwrap();
+    let assignments = objects
+        .iter()
+        .enumerate()
+        .map(|(i, _)| {
+            if selected[i] {
+                (i, Policy::Interleave(inter_nodes.clone()), true)
+            } else {
+                (i, Policy::Preferred(preferred), false)
+            }
+        })
+        .collect();
+    OliPlan {
+        assignments,
+        interleave_nodes: inter_nodes,
+        preferred_node: preferred,
+    }
+}
+
+/// Fast-memory (LDRAM) bytes OLI needs vs. an LDRAM-preferred baseline:
+/// interleaved objects only keep `1/len(interleave_set)` of their pages
+/// in LDRAM. Returns (oli_ldram_bytes, baseline_ldram_bytes).
+pub fn ldram_demand(objects: &[ObjectSpec], plan: &OliPlan) -> (u64, u64) {
+    let baseline: u64 = objects.iter().map(|o| o.bytes).sum();
+    let mut oli = 0u64;
+    let has_ldram = plan.interleave_nodes.contains(&plan.preferred_node);
+    let share = if plan.interleave_nodes.is_empty() {
+        0.0
+    } else if has_ldram {
+        1.0 / plan.interleave_nodes.len() as f64
+    } else {
+        0.0
+    };
+    for &(i, _, selected) in &plan.assignments {
+        if selected {
+            oli += (objects[i].bytes as f64 * share) as u64;
+        } else {
+            oli += objects[i].bytes;
+        }
+    }
+    (oli, baseline)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memsim::topology::system_a;
+
+    fn gb(x: u64) -> u64 {
+        x << 30
+    }
+
+    #[test]
+    fn small_objects_never_selected() {
+        let objs = vec![
+            ObjectSpec::new("big", gb(90), 100.0, 0.1),
+            ObjectSpec::new("tiny", gb(1), 1e9, 0.1), // hot but tiny
+        ];
+        let sel = select_bw_hungry(&objs);
+        assert_eq!(sel, vec![true, false]);
+    }
+
+    #[test]
+    fn cold_big_objects_not_selected() {
+        let objs = vec![
+            ObjectSpec::new("hot", gb(50), 100.0, 0.1),
+            ObjectSpec::new("coldbig", gb(50), 1.0, 0.1),
+        ];
+        let sel = select_bw_hungry(&objs);
+        assert_eq!(sel, vec![true, false]);
+    }
+
+    #[test]
+    fn multiple_objects_can_qualify() {
+        // BT-style: u, rsh, forcing all large and similarly hot.
+        let objs = vec![
+            ObjectSpec::new("u", gb(40), 90.0, 0.1),
+            ObjectSpec::new("rsh", gb(40), 100.0, 0.1),
+            ObjectSpec::new("forcing", gb(40), 80.0, 0.1),
+            ObjectSpec::new("rest", gb(46), 5.0, 0.3),
+        ];
+        let sel = select_bw_hungry(&objs);
+        assert_eq!(sel, vec![true, true, true, false]);
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(select_bw_hungry(&[]).is_empty());
+    }
+
+    #[test]
+    fn plan_assigns_policies() {
+        let sys = system_a();
+        let objs = vec![
+            ObjectSpec::new("a", gb(60), 100.0, 0.05),
+            ObjectSpec::new("b", gb(40), 2.0, 0.6),
+        ];
+        let p = plan(&sys, 0, &objs, &[MemKind::Ldram, MemKind::Cxl]);
+        assert!(matches!(p.assignments[0].1, Policy::Interleave(_)));
+        assert!(matches!(p.assignments[1].1, Policy::Preferred(_)));
+        assert!(p.assignments[0].2 && !p.assignments[1].2);
+    }
+
+    #[test]
+    fn ldram_savings_computed() {
+        let sys = system_a();
+        // One 100 GB bandwidth-hungry object + 20 GB of everything else:
+        // OLI keeps 50 GB + 20 GB in LDRAM vs 120 GB baseline → 42% saved.
+        let objs = vec![
+            ObjectSpec::new("a", gb(100), 100.0, 0.05),
+            ObjectSpec::new("b", gb(20), 2.0, 0.6),
+        ];
+        let p = plan(&sys, 0, &objs, &[MemKind::Ldram, MemKind::Cxl]);
+        let (oli, base) = ldram_demand(&objs, &p);
+        assert_eq!(base, gb(120));
+        assert_eq!(oli, gb(70));
+        let saved = 1.0 - oli as f64 / base as f64;
+        assert!((saved - 0.4167).abs() < 0.01);
+    }
+}

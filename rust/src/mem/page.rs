@@ -1,0 +1,165 @@
+//! Physical page frames and per-node zones.
+//!
+//! Pages are tracked at 2 MB granularity (huge-page-sized regions): the
+//! paper's workloads touch 80–450 GB, and 2 MB frames keep the page-level
+//! structures (placement maps, tiering hotness counters) tractable while
+//! preserving every placement/migration behaviour the paper studies.
+//! Zone capacities model the paper's GRUB `mmap`/`memmap` fast-memory
+//! limiting (e.g. "LDRAM limited to 64 GB").
+
+use crate::memsim::{NodeId, System};
+
+/// Page size in bytes (2 MB regions).
+pub const PAGE_BYTES: u64 = 2 << 20;
+
+/// Convert a byte size to pages, rounding up.
+pub fn pages_of(bytes: u64) -> u64 {
+    bytes.div_ceil(PAGE_BYTES)
+}
+
+/// One node's physical memory zone.
+#[derive(Clone, Debug)]
+pub struct Zone {
+    pub node: NodeId,
+    pub capacity_pages: u64,
+    pub used_pages: u64,
+}
+
+impl Zone {
+    pub fn free_pages(&self) -> u64 {
+        self.capacity_pages - self.used_pages
+    }
+}
+
+/// Physical memory across all NUMA nodes, with optional capacity limits.
+#[derive(Clone, Debug)]
+pub struct PhysMem {
+    pub zones: Vec<Zone>,
+}
+
+impl PhysMem {
+    /// Build from a system, using full device capacities.
+    pub fn of_system(sys: &System) -> Self {
+        Self {
+            zones: sys
+                .nodes
+                .iter()
+                .enumerate()
+                .map(|(i, n)| Zone {
+                    node: i,
+                    capacity_pages: n.device.capacity / PAGE_BYTES,
+                    used_pages: 0,
+                })
+                .collect(),
+        }
+    }
+
+    /// Limit one node's capacity (GRUB mmap emulation). `bytes` becomes
+    /// the new capacity; usage must not already exceed it.
+    pub fn limit_node(&mut self, node: NodeId, bytes: u64) {
+        let z = &mut self.zones[node];
+        let pages = pages_of(bytes);
+        assert!(
+            z.used_pages <= pages,
+            "cannot shrink node {node} below its current usage"
+        );
+        z.capacity_pages = pages;
+    }
+
+    pub fn free_on(&self, node: NodeId) -> u64 {
+        self.zones[node].free_pages()
+    }
+
+    /// Try to allocate one page on `node`. Returns false if full.
+    pub fn try_alloc(&mut self, node: NodeId) -> bool {
+        let z = &mut self.zones[node];
+        if z.used_pages < z.capacity_pages {
+            z.used_pages += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Free one page on `node`.
+    pub fn free(&mut self, node: NodeId) {
+        let z = &mut self.zones[node];
+        assert!(z.used_pages > 0, "double free on node {node}");
+        z.used_pages -= 1;
+    }
+
+    /// Move one page `from` → `to`. Returns false (and changes nothing)
+    /// if `to` is full.
+    pub fn migrate(&mut self, from: NodeId, to: NodeId) -> bool {
+        if from == to {
+            return true;
+        }
+        if self.zones[to].used_pages >= self.zones[to].capacity_pages {
+            return false;
+        }
+        self.free(from);
+        assert!(self.try_alloc(to));
+        true
+    }
+
+    pub fn total_used(&self) -> u64 {
+        self.zones.iter().map(|z| z.used_pages).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memsim::topology::system_a;
+
+    #[test]
+    fn pages_round_up() {
+        assert_eq!(pages_of(1), 1);
+        assert_eq!(pages_of(PAGE_BYTES), 1);
+        assert_eq!(pages_of(PAGE_BYTES + 1), 2);
+        assert_eq!(pages_of(0), 0);
+    }
+
+    #[test]
+    fn capacities_from_system() {
+        let pm = PhysMem::of_system(&system_a());
+        assert_eq!(pm.zones[0].capacity_pages, (768 << 30) / PAGE_BYTES);
+        assert_eq!(pm.total_used(), 0);
+    }
+
+    #[test]
+    fn alloc_until_full_then_fail() {
+        let mut pm = PhysMem::of_system(&system_a());
+        pm.limit_node(0, 4 * PAGE_BYTES);
+        for _ in 0..4 {
+            assert!(pm.try_alloc(0));
+        }
+        assert!(!pm.try_alloc(0));
+        assert_eq!(pm.free_on(0), 0);
+        pm.free(0);
+        assert!(pm.try_alloc(0));
+    }
+
+    #[test]
+    fn migrate_respects_target_capacity() {
+        let mut pm = PhysMem::of_system(&system_a());
+        pm.limit_node(1, PAGE_BYTES);
+        assert!(pm.try_alloc(0));
+        assert!(pm.try_alloc(1));
+        // node 1 full: migration 0→1 must fail and leave state intact.
+        let used0 = pm.zones[0].used_pages;
+        assert!(!pm.migrate(0, 1));
+        assert_eq!(pm.zones[0].used_pages, used0);
+        // but 1→0 works
+        assert!(pm.migrate(1, 0));
+        assert_eq!(pm.zones[1].used_pages, 0);
+        assert_eq!(pm.zones[0].used_pages, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut pm = PhysMem::of_system(&system_a());
+        pm.free(0);
+    }
+}

@@ -1,0 +1,128 @@
+//! NUMA memory placement policies, with `numa(3)`/`numactl` semantics.
+//!
+//! These are the static placement policies the paper evaluates:
+//! first touch (Linux default), preferred, membind, uniform interleave,
+//! and subset interleave (`numa_alloc_interleaved_subset`, the primitive
+//! under the paper's object-level interleaving).
+
+use crate::memsim::{MemKind, NodeId, System};
+
+/// A page placement policy for a VMA / data object.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Policy {
+    /// Allocate on the faulting thread's local node; fall back by NUMA
+    /// distance when full (Linux default behaviour).
+    FirstTouch,
+    /// Prefer `0`-th entry; when full, fall back to the next-closest
+    /// node (the paper's "preferred" policy).
+    Preferred(NodeId),
+    /// Strict bind to the node set: round-robin inside the set; OOM when
+    /// all are full (numactl --membind).
+    Membind(Vec<NodeId>),
+    /// Round-robin page interleave across the node set
+    /// (numactl --interleave / numa_alloc_interleaved_subset).
+    Interleave(Vec<NodeId>),
+    /// Weighted interleave (Linux weighted interleave, e.g. 2:1 ratios).
+    WeightedInterleave(Vec<(NodeId, u32)>),
+}
+
+impl Policy {
+    /// Human-readable label matching the paper's figure legends.
+    pub fn label(&self, sys: &System, socket: usize) -> String {
+        let name = |&n: &NodeId| sys.kind_from(socket, n).label().to_string();
+        match self {
+            Policy::FirstTouch => "first-touch".into(),
+            Policy::Preferred(n) => format!("{} preferred", name(n)),
+            Policy::Membind(ns) => format!(
+                "bind({})",
+                ns.iter().map(|n| name(n)).collect::<Vec<_>>().join("+")
+            ),
+            Policy::Interleave(ns) => {
+                let labels: Vec<String> = ns.iter().map(|n| name(n)).collect();
+                if ns.len() == sys.nodes.iter().filter(|n| n.device.kind.is_dram_like()).count()
+                {
+                    "interleave all".into()
+                } else {
+                    format!("interleave {}", labels.join("+"))
+                }
+            }
+            Policy::WeightedInterleave(ws) => format!(
+                "winterleave({})",
+                ws.iter()
+                    .map(|(n, w)| format!("{}:{}", name(n), w))
+                    .collect::<Vec<_>>()
+                    .join(",")
+            ),
+        }
+    }
+}
+
+/// Fallback order for a socket: nodes sorted by idle latency (NUMA
+/// distance), nearest first. NVMe never appears (not a page target).
+pub fn fallback_order(sys: &System, socket: usize) -> Vec<NodeId> {
+    let mut order: Vec<NodeId> = (0..sys.nodes.len())
+        .filter(|&n| sys.nodes[n].device.kind.is_dram_like())
+        .collect();
+    order.sort_by(|&a, &b| {
+        let la = sys.idle_latency(socket, a, crate::memsim::Pattern::Sequential);
+        let lb = sys.idle_latency(socket, b, crate::memsim::Pattern::Sequential);
+        la.partial_cmp(&lb).unwrap()
+    });
+    order
+}
+
+/// Convenience constructors for the paper's standard policy set.
+pub fn ldram_preferred(sys: &System, socket: usize) -> Policy {
+    Policy::Preferred(sys.node_of(socket, MemKind::Ldram).unwrap())
+}
+
+pub fn cxl_preferred(sys: &System, socket: usize) -> Policy {
+    Policy::Preferred(sys.node_of(socket, MemKind::Cxl).unwrap())
+}
+
+pub fn interleave_kinds(sys: &System, socket: usize, kinds: &[MemKind]) -> Policy {
+    Policy::Interleave(
+        kinds
+            .iter()
+            .map(|&k| sys.node_of(socket, k).expect("node kind missing"))
+            .collect(),
+    )
+}
+
+/// "interleave all": LDRAM + RDRAM + CXL.
+pub fn interleave_all(sys: &System, socket: usize) -> Policy {
+    interleave_kinds(sys, socket, &[MemKind::Ldram, MemKind::Rdram, MemKind::Cxl])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memsim::topology::system_a;
+
+    #[test]
+    fn fallback_is_ldram_rdram_cxl() {
+        let sys = system_a();
+        let order = fallback_order(&sys, 0);
+        let kinds: Vec<MemKind> = order.iter().map(|&n| sys.kind_from(0, n)).collect();
+        assert_eq!(kinds, vec![MemKind::Ldram, MemKind::Rdram, MemKind::Cxl]);
+    }
+
+    #[test]
+    fn fallback_excludes_nvme() {
+        let sys = system_a();
+        for &n in &fallback_order(&sys, 0) {
+            assert!(sys.nodes[n].device.kind.is_dram_like());
+        }
+    }
+
+    #[test]
+    fn labels_match_paper_legends() {
+        let sys = system_a();
+        assert_eq!(ldram_preferred(&sys, 0).label(&sys, 0), "LDRAM preferred");
+        assert_eq!(
+            interleave_kinds(&sys, 0, &[MemKind::Ldram, MemKind::Cxl]).label(&sys, 0),
+            "interleave LDRAM+CXL"
+        );
+        assert_eq!(interleave_all(&sys, 0).label(&sys, 0), "interleave all");
+    }
+}

@@ -1,0 +1,358 @@
+//! Virtual memory: data objects (VMAs), fault-driven page placement, and
+//! placement queries used by the execution engine and tiering layers.
+
+use anyhow::{bail, Result};
+
+use super::page::{pages_of, PhysMem};
+use super::policy::{fallback_order, Policy};
+use crate::memsim::{NodeId, System};
+
+/// Handle to an allocated data object.
+pub type ObjectId = usize;
+
+/// A data object: one VMA-like region with a placement policy and a
+/// per-page node map.
+#[derive(Clone, Debug)]
+pub struct DataObject {
+    pub name: String,
+    pub bytes: u64,
+    pub policy: Policy,
+    /// Page → node placement, in fault order.
+    pub placement: Vec<NodeId>,
+    /// Whether the kernel may migrate these pages. Linux AutoNUMA skips
+    /// VMAs carrying an explicit mempolicy — the mechanism behind the
+    /// paper's PMO 3 ("interleaving places pages in unmigratable
+    /// regions").
+    pub migratable: bool,
+}
+
+impl DataObject {
+    pub fn pages(&self) -> u64 {
+        self.placement.len() as u64
+    }
+
+    /// Fraction of this object's pages on each node (access weights for a
+    /// uniform scan of the object).
+    pub fn node_weights(&self) -> Vec<(NodeId, f64)> {
+        if self.placement.is_empty() {
+            return Vec::new();
+        }
+        let max_node = *self.placement.iter().max().unwrap();
+        let mut counts = vec![0u64; max_node + 1];
+        for &n in &self.placement {
+            counts[n] += 1;
+        }
+        let total = self.placement.len() as f64;
+        counts
+            .into_iter()
+            .enumerate()
+            .filter(|&(_, c)| c > 0)
+            .map(|(n, c)| (n, c as f64 / total))
+            .collect()
+    }
+
+    pub fn pages_on(&self, node: NodeId) -> u64 {
+        self.placement.iter().filter(|&&n| n == node).count() as u64
+    }
+}
+
+/// An application's address space: the set of its data objects.
+#[derive(Clone, Debug, Default)]
+pub struct AddressSpace {
+    pub objects: Vec<DataObject>,
+}
+
+impl AddressSpace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Allocate (fault in) an object of `bytes` under `policy`, with the
+    /// faulting threads on `socket`. Pages are placed one by one exactly
+    /// as Linux would: policy target first, then distance-ordered
+    /// fallback; strict membind OOMs instead of falling back.
+    pub fn alloc(
+        &mut self,
+        sys: &System,
+        phys: &mut PhysMem,
+        socket: usize,
+        name: &str,
+        bytes: u64,
+        policy: Policy,
+    ) -> Result<ObjectId> {
+        let npages = pages_of(bytes);
+        let order = fallback_order(sys, socket);
+        let mut placement = Vec::with_capacity(npages as usize);
+        let mut rr = 0usize; // round-robin cursor for interleaves
+
+        for page_idx in 0..npages {
+            let node = match &policy {
+                Policy::FirstTouch => alloc_with_fallback(phys, &order, order[0]),
+                Policy::Preferred(n) => alloc_with_fallback(phys, &order, *n),
+                Policy::Membind(set) => {
+                    // Strict: only nodes in the set, round-robin, skip
+                    // full ones; OOM when the whole set is full.
+                    let mut placed = None;
+                    for k in 0..set.len() {
+                        let cand = set[(rr + k) % set.len()];
+                        if phys.try_alloc(cand) {
+                            placed = Some(cand);
+                            rr = (rr + k + 1) % set.len();
+                            break;
+                        }
+                    }
+                    match placed {
+                        Some(n) => Some(n),
+                        None => {
+                            bail!(
+                                "membind OOM for object '{name}' at page {page_idx}/{npages}"
+                            )
+                        }
+                    }
+                }
+                Policy::Interleave(set) => {
+                    // Round-robin; a full node is skipped (Linux falls
+                    // through to the next interleave target). If the
+                    // whole set is full, fall back by distance.
+                    let mut placed = None;
+                    for k in 0..set.len() {
+                        let cand = set[(rr + k) % set.len()];
+                        if phys.try_alloc(cand) {
+                            placed = Some(cand);
+                            rr = (rr + k + 1) % set.len();
+                            break;
+                        }
+                    }
+                    placed.or_else(|| alloc_with_fallback(phys, &order, order[0]))
+                }
+                Policy::WeightedInterleave(weights) => {
+                    // Expand weights into a repeating schedule.
+                    let total: u32 = weights.iter().map(|&(_, w)| w).sum();
+                    let mut placed = None;
+                    for k in 0..total {
+                        let slot = (rr as u32 + k) % total;
+                        let mut acc = 0u32;
+                        let mut cand = weights[0].0;
+                        for &(n, w) in weights {
+                            acc += w;
+                            if slot < acc {
+                                cand = n;
+                                break;
+                            }
+                        }
+                        if phys.try_alloc(cand) {
+                            placed = Some(cand);
+                            rr = ((rr as u32 + k + 1) % total) as usize;
+                            break;
+                        }
+                    }
+                    placed.or_else(|| alloc_with_fallback(phys, &order, order[0]))
+                }
+            };
+            match node {
+                Some(n) => placement.push(n),
+                None => bail!("OOM: no node can hold page {page_idx} of '{name}'"),
+            }
+        }
+
+        let migratable = matches!(policy, Policy::FirstTouch | Policy::Preferred(_));
+        self.objects.push(DataObject {
+            name: name.to_string(),
+            bytes,
+            policy,
+            placement,
+            migratable,
+        });
+        Ok(self.objects.len() - 1)
+    }
+
+    /// Free an object's pages back to the zones.
+    pub fn free(&mut self, phys: &mut PhysMem, id: ObjectId) {
+        for &n in &self.objects[id].placement {
+            phys.free(n);
+        }
+        self.objects[id].placement.clear();
+    }
+
+    pub fn object(&self, id: ObjectId) -> &DataObject {
+        &self.objects[id]
+    }
+
+    pub fn total_pages_on(&self, node: NodeId) -> u64 {
+        self.objects.iter().map(|o| o.pages_on(node)).sum()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.objects.iter().map(|o| o.bytes).sum()
+    }
+}
+
+/// Try `preferred` first, then the distance-ordered fallback chain.
+fn alloc_with_fallback(phys: &mut PhysMem, order: &[NodeId], preferred: NodeId) -> Option<NodeId> {
+    if phys.try_alloc(preferred) {
+        return Some(preferred);
+    }
+    for &n in order {
+        if n != preferred && phys.try_alloc(n) {
+            return Some(n);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::page::PAGE_BYTES;
+    use crate::mem::policy;
+    use crate::memsim::topology::system_a;
+    use crate::memsim::MemKind;
+
+    fn setup() -> (crate::memsim::System, PhysMem, AddressSpace) {
+        let sys = system_a();
+        let phys = PhysMem::of_system(&sys);
+        (sys, phys, AddressSpace::new())
+    }
+
+    #[test]
+    fn preferred_lands_on_target_until_full() {
+        let (sys, mut phys, mut asp) = setup();
+        let ld = sys.node_of(0, MemKind::Ldram).unwrap();
+        phys.limit_node(ld, 10 * PAGE_BYTES);
+        let id = asp
+            .alloc(
+                &sys,
+                &mut phys,
+                0,
+                "u",
+                20 * PAGE_BYTES,
+                Policy::Preferred(ld),
+            )
+            .unwrap();
+        let obj = asp.object(id);
+        assert_eq!(obj.pages_on(ld), 10);
+        // Overflow goes to the next-closest node (RDRAM).
+        let rd = sys.node_of(0, MemKind::Rdram).unwrap();
+        assert_eq!(obj.pages_on(rd), 10);
+    }
+
+    #[test]
+    fn interleave_round_robins_evenly() {
+        let (sys, mut phys, mut asp) = setup();
+        let ld = sys.node_of(0, MemKind::Ldram).unwrap();
+        let cxl = sys.node_of(0, MemKind::Cxl).unwrap();
+        let id = asp
+            .alloc(
+                &sys,
+                &mut phys,
+                0,
+                "v",
+                100 * PAGE_BYTES,
+                Policy::Interleave(vec![ld, cxl]),
+            )
+            .unwrap();
+        let obj = asp.object(id);
+        assert_eq!(obj.pages_on(ld), 50);
+        assert_eq!(obj.pages_on(cxl), 50);
+        assert!(!obj.migratable, "interleaved VMA must be unmigratable (PMO 3)");
+    }
+
+    #[test]
+    fn interleave_skips_full_node() {
+        let (sys, mut phys, mut asp) = setup();
+        let ld = sys.node_of(0, MemKind::Ldram).unwrap();
+        let cxl = sys.node_of(0, MemKind::Cxl).unwrap();
+        phys.limit_node(cxl, 5 * PAGE_BYTES);
+        let id = asp
+            .alloc(
+                &sys,
+                &mut phys,
+                0,
+                "w",
+                40 * PAGE_BYTES,
+                Policy::Interleave(vec![ld, cxl]),
+            )
+            .unwrap();
+        let obj = asp.object(id);
+        assert_eq!(obj.pages_on(cxl), 5);
+        assert_eq!(obj.pages_on(ld), 35);
+    }
+
+    #[test]
+    fn membind_ooms_when_set_full() {
+        let (sys, mut phys, mut asp) = setup();
+        let cxl = sys.node_of(0, MemKind::Cxl).unwrap();
+        phys.limit_node(cxl, 2 * PAGE_BYTES);
+        let err = asp.alloc(
+            &sys,
+            &mut phys,
+            0,
+            "x",
+            4 * PAGE_BYTES,
+            Policy::Membind(vec![cxl]),
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn weighted_interleave_ratio() {
+        let (sys, mut phys, mut asp) = setup();
+        let ld = sys.node_of(0, MemKind::Ldram).unwrap();
+        let cxl = sys.node_of(0, MemKind::Cxl).unwrap();
+        let id = asp
+            .alloc(
+                &sys,
+                &mut phys,
+                0,
+                "y",
+                90 * PAGE_BYTES,
+                Policy::WeightedInterleave(vec![(ld, 2), (cxl, 1)]),
+            )
+            .unwrap();
+        let obj = asp.object(id);
+        assert_eq!(obj.pages_on(ld), 60);
+        assert_eq!(obj.pages_on(cxl), 30);
+    }
+
+    #[test]
+    fn node_weights_sum_to_one() {
+        let (sys, mut phys, mut asp) = setup();
+        let id = asp
+            .alloc(
+                &sys,
+                &mut phys,
+                0,
+                "z",
+                64 * PAGE_BYTES,
+                policy::interleave_all(&sys, 0),
+            )
+            .unwrap();
+        let w: f64 = asp.object(id).node_weights().iter().map(|&(_, w)| w).sum();
+        assert!((w - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn first_touch_local_then_spill() {
+        let (sys, mut phys, mut asp) = setup();
+        let ld = sys.node_of(1, MemKind::Ldram).unwrap();
+        phys.limit_node(ld, 3 * PAGE_BYTES);
+        let id = asp
+            .alloc(&sys, &mut phys, 1, "ft", 5 * PAGE_BYTES, Policy::FirstTouch)
+            .unwrap();
+        let obj = asp.object(id);
+        assert_eq!(obj.pages_on(ld), 3);
+        assert!(obj.migratable);
+    }
+
+    #[test]
+    fn free_returns_pages() {
+        let (sys, mut phys, mut asp) = setup();
+        let before = phys.total_used();
+        let id = asp
+            .alloc(&sys, &mut phys, 0, "f", 8 * PAGE_BYTES, Policy::FirstTouch)
+            .unwrap();
+        assert_eq!(phys.total_used(), before + 8);
+        asp.free(&mut phys, id);
+        assert_eq!(phys.total_used(), before);
+    }
+}

@@ -1,0 +1,189 @@
+//! Memory device models.
+//!
+//! A `MemDevice` is one attach point of physical memory: a local DDR5 pool,
+//! the remote socket's DDR5 pool (reached over the inter-socket link), a
+//! CXL type-3 expansion card (reached over PCIe 5.0 + CXL controller), or
+//! an NVMe SSD (FlexGen's coldest tier).
+//!
+//! The paper's systems A/B/C (Table I) are three calibrations of these
+//! models; see `memsim::topology`. Parameters are *measured-behaviour*
+//! parameters (idle latency, achievable peak bandwidth), not datasheet
+//! numbers — Table I datasheet values are kept separately for reporting.
+
+/// Access pattern, as driven by Intel MLC: dependent pointer-chasing
+/// ("random") vs hardware-prefetchable streaming ("sequential").
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Pattern {
+    Sequential,
+    Random,
+}
+
+/// Kind of memory attach point.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MemKind {
+    /// DDR channels on the socket running the workload.
+    Ldram,
+    /// DDR channels on the other socket (one NUMA hop: xGMI / UPI).
+    Rdram,
+    /// CXL 1.1 type-3 expansion card (PCIe 5.0 + CXL controller + HA).
+    Cxl,
+    /// NVMe SSD exposed via mmap (FlexGen's lowest tier).
+    Nvme,
+}
+
+impl MemKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            MemKind::Ldram => "LDRAM",
+            MemKind::Rdram => "RDRAM",
+            MemKind::Cxl => "CXL",
+            MemKind::Nvme => "NVMe",
+        }
+    }
+
+    /// True for byte-addressable load/store tiers.
+    pub fn is_dram_like(&self) -> bool {
+        !matches!(self, MemKind::Nvme)
+    }
+}
+
+/// Idle (unloaded) latency, split by access pattern. Nanoseconds.
+#[derive(Clone, Copy, Debug)]
+pub struct IdleLatency {
+    pub seq_ns: f64,
+    pub rand_ns: f64,
+}
+
+impl IdleLatency {
+    pub fn get(&self, p: Pattern) -> f64 {
+        match p {
+            Pattern::Sequential => self.seq_ns,
+            Pattern::Random => self.rand_ns,
+        }
+    }
+}
+
+/// One memory device (= one NUMA node's backing store).
+#[derive(Clone, Debug)]
+pub struct MemDevice {
+    pub kind: MemKind,
+    /// Unloaded access latency from the *near* socket.
+    pub idle: IdleLatency,
+    /// Achievable peak bandwidth (GB/s) — the measured plateau of Fig 3,
+    /// not the datasheet number.
+    pub peak_bw_gbs: f64,
+    /// Datasheet max bandwidth (GB/s) for Table I reporting.
+    pub spec_bw_gbs: f64,
+    /// Capacity in bytes.
+    pub capacity: u64,
+    /// Memory-controller queueing factor `Q` in
+    /// `lat(ρ) = idle + min(Q·ρ/(1−ρ), queue_cap_ns)`; larger = sharper
+    /// latency knee.
+    pub queue_ns: f64,
+    /// Upper bound on the queueing delay (ns): finite MC/device queues
+    /// exert backpressure instead of growing without bound, so loaded
+    /// latency plateaus (Fig 4's right edge) rather than diverging.
+    pub queue_cap_ns: f64,
+    /// Per-thread streaming (sequential) bandwidth against this device
+    /// from the near socket, GB/s. Streaming cores are *issue-rate*-bound
+    /// (HW prefetchers hide latency), so this is a rate, not an MLP count;
+    /// it fixes each tier's saturation thread count: `sat ≈ peak / rate`.
+    pub stream_rate_gbs: f64,
+    /// Per-thread outstanding cache lines for *dependent/random* access
+    /// (MSHR-bound); random throughput is `mlp_rand · 64B / latency`.
+    pub mlp_rand: f64,
+    /// Device-side access optimization factor for *concentrated* random
+    /// access streams (<1.0 = faster). Models the CXL controller/HA
+    /// caching the paper invokes for HPC-observation 3 (CG on CXL).
+    pub concentrated_rand_factor: f64,
+}
+
+/// Cache line size used throughout (bytes).
+pub const LINE: f64 = 64.0;
+/// Utilization cap: queues are modeled as stable up to this occupancy.
+pub const RHO_MAX: f64 = 0.98;
+
+impl MemDevice {
+    /// Loaded latency at utilization `rho` (0..1) for the given pattern,
+    /// before any topology hop adders. The queueing term is capped by
+    /// `queue_cap_ns` (finite queues + backpressure).
+    pub fn latency_at(&self, p: Pattern, rho: f64) -> f64 {
+        let rho = rho.clamp(0.0, RHO_MAX);
+        let q = (self.queue_ns * rho / (1.0 - rho)).min(self.queue_cap_ns);
+        self.idle.get(p) + q
+    }
+
+    /// Single-thread unloaded bandwidth (GB/s). Sequential: the issue
+    /// rate. Random: `mlp · 64B / idle latency` (bytes/ns == GB/s).
+    pub fn thread_bw(&self, p: Pattern) -> f64 {
+        match p {
+            Pattern::Sequential => self.stream_rate_gbs,
+            Pattern::Random => self.mlp_rand * LINE / self.idle.get(p),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dev() -> MemDevice {
+        MemDevice {
+            kind: MemKind::Cxl,
+            idle: IdleLatency {
+                seq_ns: 250.0,
+                rand_ns: 380.0,
+            },
+            peak_bw_gbs: 22.0,
+            spec_bw_gbs: 38.4,
+            capacity: 128 << 30,
+            queue_ns: 60.0,
+            queue_cap_ns: 300.0,
+            stream_rate_gbs: 5.6,
+            mlp_rand: 10.0,
+            concentrated_rand_factor: 0.8,
+        }
+    }
+
+    #[test]
+    fn latency_monotone_in_load() {
+        let d = dev();
+        let l0 = d.latency_at(Pattern::Sequential, 0.0);
+        let l5 = d.latency_at(Pattern::Sequential, 0.5);
+        let l9 = d.latency_at(Pattern::Sequential, 0.9);
+        assert_eq!(l0, 250.0);
+        assert!(l0 < l5 && l5 < l9);
+    }
+
+    #[test]
+    fn latency_capped_at_rho_max() {
+        let d = dev();
+        let a = d.latency_at(Pattern::Random, 0.999);
+        let b = d.latency_at(Pattern::Random, 2.0);
+        assert_eq!(a, b); // both clamp to RHO_MAX
+        assert!(a.is_finite());
+        // queue term is bounded by queue_cap_ns
+        assert!(a <= d.idle.rand_ns + d.queue_cap_ns);
+    }
+
+    #[test]
+    fn random_slower_than_sequential_idle() {
+        let d = dev();
+        assert!(d.idle.get(Pattern::Random) > d.idle.get(Pattern::Sequential));
+    }
+
+    #[test]
+    fn thread_bw_sane() {
+        let d = dev();
+        assert_eq!(d.thread_bw(Pattern::Sequential), 5.6);
+        // 10 lines * 64B / 380ns = 1.684 GB/s
+        assert!((d.thread_bw(Pattern::Random) - 10.0 * 64.0 / 380.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kind_labels() {
+        assert_eq!(MemKind::Cxl.label(), "CXL");
+        assert!(MemKind::Ldram.is_dram_like());
+        assert!(!MemKind::Nvme.is_dram_like());
+    }
+}

@@ -1,0 +1,103 @@
+//! Interconnect link models: inter-socket fabric (xGMI / UPI) and PCIe.
+//!
+//! A link adds a fixed hop latency and clamps bandwidth. Data paths are
+//! chains of links ending at a `MemDevice`; the paper's key LLM finding
+//! (Fig 5/6) is exactly a path-composition effect: under CXL 1.1 the GPU
+//! reaches CXL memory via `GPU –PCIe– CPU –PCIe– CXL`, so the GPU-visible
+//! bandwidth is min over both PCIe hops and the latency is the sum.
+
+/// A point-to-point interconnect hop.
+#[derive(Clone, Copy, Debug)]
+pub struct Link {
+    /// One-way latency added per access (ns).
+    pub hop_ns: f64,
+    /// Peak payload bandwidth (GB/s).
+    pub bw_gbs: f64,
+}
+
+impl Link {
+    pub fn new(hop_ns: f64, bw_gbs: f64) -> Self {
+        Self { hop_ns, bw_gbs }
+    }
+
+    /// Inter-socket fabric: AMD xGMI (Genoa) — measured effective numbers.
+    pub fn xgmi() -> Self {
+        Link::new(80.0, 130.0)
+    }
+
+    /// Inter-socket fabric: Intel UPI (SPR).
+    pub fn upi() -> Self {
+        Link::new(75.0, 110.0)
+    }
+
+    /// PCIe 5.0 x16: 32 GT/s · 16 lanes ≈ 63 GB/s raw, ~55 GB/s payload.
+    pub fn pcie5_x16() -> Self {
+        Link::new(110.0, 55.0)
+    }
+
+    /// PCIe 4.0 x16 (the A10 GPU in the paper's system A): 32 GB/s raw,
+    /// ~26 GB/s achievable with cudaMemcpy over pinned buffers.
+    pub fn pcie4_x16() -> Self {
+        Link::new(140.0, 26.0)
+    }
+}
+
+/// A data path: an ordered chain of links. Bandwidth is the min across
+/// hops; latency is the sum of hop latencies.
+#[derive(Clone, Debug, Default)]
+pub struct Path {
+    pub links: Vec<Link>,
+}
+
+impl Path {
+    pub fn new(links: Vec<Link>) -> Self {
+        Self { links }
+    }
+
+    pub fn direct() -> Self {
+        Self { links: Vec::new() }
+    }
+
+    pub fn latency_ns(&self) -> f64 {
+        self.links.iter().map(|l| l.hop_ns).sum()
+    }
+
+    pub fn bw_gbs(&self) -> f64 {
+        self.links
+            .iter()
+            .map(|l| l.bw_gbs)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn then(mut self, link: Link) -> Self {
+        self.links.push(link);
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn path_composes_latency_and_bottleneck_bw() {
+        // GPU -PCIe4- CPU -PCIe5- CXL: min bandwidth is the GPU link,
+        // latency is the sum — the Fig 5/6 mechanism.
+        let p = Path::direct().then(Link::pcie4_x16()).then(Link::pcie5_x16());
+        assert_eq!(p.latency_ns(), 140.0 + 110.0);
+        assert_eq!(p.bw_gbs(), 26.0);
+    }
+
+    #[test]
+    fn empty_path_is_free() {
+        let p = Path::direct();
+        assert_eq!(p.latency_ns(), 0.0);
+        assert_eq!(p.bw_gbs(), f64::INFINITY);
+    }
+
+    #[test]
+    fn fabric_links_are_distinct() {
+        assert!(Link::xgmi().bw_gbs > Link::upi().bw_gbs);
+        assert!(Link::pcie4_x16().bw_gbs < Link::pcie5_x16().bw_gbs);
+    }
+}

@@ -1,0 +1,17 @@
+//! Memory-system simulator: the substrate standing in for the paper's
+//! three CXL testbeds (Table I).
+//!
+//! Structure:
+//! - [`device`] — per-device latency/bandwidth/queueing models
+//! - [`link`]   — interconnect hops (xGMI/UPI/PCIe) and data paths
+//! - [`system`] — NUMA topology + the closed-loop traffic solver
+//! - [`topology`] — calibrated presets for systems A, B, C
+
+pub mod device;
+pub mod link;
+pub mod system;
+pub mod topology;
+
+pub use device::{IdleLatency, MemDevice, MemKind, Pattern, LINE};
+pub use link::{Link, Path};
+pub use system::{Node, NodeId, Stream, StreamResult, System, TrafficSolution};

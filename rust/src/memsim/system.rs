@@ -1,0 +1,473 @@
+//! System model: sockets, NUMA nodes, interconnects, and the closed-loop
+//! traffic solver that turns "n threads accessing these nodes with this
+//! pattern" into achieved bandwidth + observed latency.
+//!
+//! The solver is the analytical heart of the reproduction: every figure in
+//! §III (Figs 2–4), the HPC engine (§V) and the LLM transfer model (§IV)
+//! are built on `solve_traffic`.
+
+use super::device::{MemDevice, MemKind, Pattern, LINE, RHO_MAX};
+use super::link::{Link, Path};
+
+/// Index of a NUMA node within a `System`.
+pub type NodeId = usize;
+
+/// One NUMA node: a memory device attached at some socket.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub device: MemDevice,
+    /// Socket the device is attached to (LDRAM/RDRAM: their socket;
+    /// CXL: socket holding the card's PCIe root port).
+    pub socket: usize,
+}
+
+/// A whole evaluation platform (one of the paper's systems A/B/C).
+#[derive(Clone, Debug)]
+pub struct System {
+    pub name: String,
+    pub description: String,
+    pub sockets: usize,
+    pub cores_per_socket: usize,
+    /// NUMA nodes; by convention node `s` is socket `s`'s DDR pool and
+    /// CXL/NVMe nodes follow.
+    pub nodes: Vec<Node>,
+    /// Inter-socket fabric (xGMI / UPI).
+    pub fabric: Link,
+    /// PCIe link between CPU root port and the CXL card.
+    pub cxl_link: Link,
+    /// PCIe link to the GPU, if the platform has one (system A's A10).
+    pub gpu_link: Option<Link>,
+}
+
+/// One traffic stream presented to the solver.
+#[derive(Clone, Debug)]
+pub struct Stream {
+    /// Socket whose cores issue the accesses.
+    pub socket: usize,
+    /// Distribution of accesses over nodes; weights must sum to ~1.
+    pub node_weights: Vec<(NodeId, f64)>,
+    pub pattern: Pattern,
+    /// Number of threads driving this stream.
+    pub threads: f64,
+    /// Additional per-access injection delay (ns) — MLC's load knob;
+    /// 0 = as fast as possible.
+    pub delay_ns: f64,
+}
+
+/// Solver output for one stream.
+#[derive(Clone, Debug)]
+pub struct StreamResult {
+    /// Achieved bandwidth (GB/s).
+    pub bw_gbs: f64,
+    /// Average observed access latency (ns), including queueing and hops.
+    pub latency_ns: f64,
+}
+
+/// Solver output.
+#[derive(Clone, Debug)]
+pub struct TrafficSolution {
+    pub streams: Vec<StreamResult>,
+    /// Per-node utilization (0..1) and per-node achieved bandwidth.
+    pub node_rho: Vec<f64>,
+    pub node_bw_gbs: Vec<f64>,
+}
+
+impl System {
+    /// Nodes of a given kind visible from `socket` (e.g. "the LDRAM node").
+    pub fn node_of(&self, socket: usize, kind: MemKind) -> Option<NodeId> {
+        match kind {
+            MemKind::Ldram => self
+                .nodes
+                .iter()
+                .position(|n| n.device.kind == MemKind::Ldram && n.socket == socket),
+            MemKind::Rdram => self
+                .nodes
+                .iter()
+                .position(|n| n.device.kind == MemKind::Ldram && n.socket != socket),
+            other => self.nodes.iter().position(|n| n.device.kind == other),
+        }
+    }
+
+    /// Kind of `node` as seen from `socket` (the other socket's DDR pool
+    /// is RDRAM from here).
+    pub fn kind_from(&self, socket: usize, node: NodeId) -> MemKind {
+        let n = &self.nodes[node];
+        match n.device.kind {
+            MemKind::Ldram if n.socket != socket => MemKind::Rdram,
+            k => k,
+        }
+    }
+
+    /// Interconnect path from a core on `socket` to `node`.
+    /// DDR on same socket: direct. DDR on other socket: fabric.
+    /// CXL: fabric first if the card hangs off the other socket.
+    /// (The CXL PCIe+controller latency itself is part of the device's
+    /// calibrated idle latency, since Fig 2 measures it from the near
+    /// socket.)
+    pub fn path(&self, socket: usize, node: NodeId) -> Path {
+        let n = &self.nodes[node];
+        let mut p = Path::direct();
+        if n.socket != socket {
+            p = p.then(self.fabric);
+        }
+        p
+    }
+
+    /// Unloaded latency from `socket` to `node` (Fig 2's quantity).
+    pub fn idle_latency(&self, socket: usize, node: NodeId, pattern: Pattern) -> f64 {
+        self.nodes[node].device.idle.get(pattern) + self.path(socket, node).latency_ns()
+    }
+
+    /// Peak bandwidth reachable from `socket` to `node`: device plateau
+    /// clamped by any interconnect on the path.
+    pub fn eff_peak_bw(&self, socket: usize, node: NodeId) -> f64 {
+        self.nodes[node]
+            .device
+            .peak_bw_gbs
+            .min(self.path(socket, node).bw_gbs())
+    }
+
+    /// Closed-loop fixed point: each stream's threads keep `mlp` lines
+    /// outstanding; achieved per-stream bandwidth, per-node queueing
+    /// latency, and per-node capacity are mutually consistent.
+    ///
+    /// Per iteration:
+    /// 1. *demand*  D_s = threads_s · mlp_s · LINE / (delay_s + lat_s)
+    /// 2. node demand D_i = Σ_s D_s · w_si ; ρ_i = D_i / cap_i
+    /// 3. saturated nodes (ρ_i > RHO_MAX) throttle every stream that
+    ///    touches them proportionally (backpressure), so served node
+    ///    bandwidth never exceeds RHO_MAX · cap_i *inside* the loop —
+    ///    which keeps the solution monotone in thread count.
+    /// 4. lat_s from ρ via each device's bounded-queue latency model.
+    pub fn solve_traffic(&self, streams: &[Stream]) -> TrafficSolution {
+        let nn = self.nodes.len();
+        let caps: Vec<f64> = (0..nn).map(|i| self.node_cap(i, streams)).collect();
+        let mut rho = vec![0.0f64; nn];
+        let mut stream_bw = vec![0.0f64; streams.len()];
+        let mut lat_out = vec![0.0f64; streams.len()];
+        let mut node_bw = vec![0.0f64; nn];
+
+        for iter in 0..400 {
+            // 1. unthrottled demand under current utilization estimate
+            let mut demand: Vec<f64> = Vec::with_capacity(streams.len());
+            for (si, s) in streams.iter().enumerate() {
+                let lat = self.stream_latency(s, &rho);
+                lat_out[si] = lat;
+                demand.push(self.stream_offered(s, lat));
+            }
+            // 2. node demand
+            let mut d_i = vec![0.0f64; nn];
+            for (s, &d) in streams.iter().zip(demand.iter()) {
+                for &(node, w) in &s.node_weights {
+                    d_i[node] += d * w;
+                }
+            }
+            // 3. backpressure throttle: a stream runs at the rate of its
+            //    most-congested node.
+            let mut served: Vec<f64> = demand.clone();
+            for (si, s) in streams.iter().enumerate() {
+                let mut scale: f64 = 1.0;
+                for &(node, w) in &s.node_weights {
+                    if w > 0.0 && d_i[node] > caps[node] * RHO_MAX && d_i[node] > 0.0 {
+                        scale = scale.min(caps[node] * RHO_MAX / d_i[node]);
+                    }
+                }
+                served[si] = demand[si] * scale;
+            }
+            // served node bandwidth + new utilization estimate
+            let mut b_i = vec![0.0f64; nn];
+            for (s, &b) in streams.iter().zip(served.iter()) {
+                for &(node, w) in &s.node_weights {
+                    b_i[node] += b * w;
+                }
+            }
+            // Utilization for the *latency* model uses demand (queues fill
+            // when demand exceeds service), clamped into [0, 1].
+            let mut max_delta = 0.0f64;
+            for i in 0..nn {
+                let target = if caps[i] > 0.0 {
+                    (d_i[i] / caps[i]).min(1.0)
+                } else {
+                    0.0
+                };
+                let new = 0.35 * target + 0.65 * rho[i]; // damped update
+                max_delta = max_delta.max((new - rho[i]).abs());
+                rho[i] = new;
+            }
+            stream_bw = served;
+            node_bw = b_i;
+            if max_delta < 1e-7 && iter > 10 {
+                break;
+            }
+        }
+
+        TrafficSolution {
+            streams: streams
+                .iter()
+                .enumerate()
+                .map(|(si, _)| StreamResult {
+                    bw_gbs: stream_bw[si],
+                    latency_ns: lat_out[si],
+                })
+                .collect(),
+            node_rho: rho,
+            node_bw_gbs: node_bw,
+        }
+    }
+
+    /// Effective node bandwidth cap given the sockets driving traffic at
+    /// it (interconnect clamp uses the weakest path among participants —
+    /// conservative and adequate for the paper's single-socket runs).
+    fn node_cap(&self, node: NodeId, streams: &[Stream]) -> f64 {
+        let mut cap = self.nodes[node].device.peak_bw_gbs;
+        for s in streams {
+            if s.node_weights.iter().any(|&(n, w)| n == node && w > 0.0) {
+                cap = cap.min(self.path(s.socket, node).bw_gbs());
+            }
+        }
+        cap
+    }
+
+    /// Average access latency for a stream under node utilizations `rho`.
+    fn stream_latency(&self, s: &Stream, rho: &[f64]) -> f64 {
+        let concentrated = s
+            .node_weights
+            .iter()
+            .filter(|&&(_, w)| w > 1e-9)
+            .count()
+            <= 1;
+        let mut lat = 0.0;
+        for &(node, w) in &s.node_weights {
+            if w <= 0.0 {
+                continue;
+            }
+            let dev = &self.nodes[node].device;
+            let mut l = dev.latency_at(s.pattern, rho[node]);
+            // HPC observation 3: a *concentrated* random stream on one
+            // node benefits from row-buffer locality / device caching;
+            // spreading the same stream across nodes forfeits it.
+            if s.pattern == Pattern::Random && concentrated {
+                l *= dev.concentrated_rand_factor;
+            }
+            lat += w * (l + self.path(s.socket, node).latency_ns());
+        }
+        lat
+    }
+
+    /// Offered (unthrottled) bandwidth of a stream given its observed
+    /// access latency.
+    ///
+    /// Sequential streams are issue-rate-bound: each thread sustains the
+    /// device's `stream_rate_gbs` (degraded by fabric hops), independent
+    /// of latency — HW prefetchers hide it. Injection delay (MLC's load
+    /// knob) stretches the per-line cycle.
+    ///
+    /// Random streams are latency-bound: `mlp_rand` outstanding lines per
+    /// thread against the observed latency.
+    fn stream_offered(&self, s: &Stream, lat: f64) -> f64 {
+        match s.pattern {
+            Pattern::Sequential => {
+                // Average per-line issue time across the node mix.
+                let mut t_line = s.delay_ns;
+                for &(node, w) in &s.node_weights {
+                    if w <= 0.0 {
+                        continue;
+                    }
+                    let dev = &self.nodes[node].device;
+                    let hop = self.path(s.socket, node).latency_ns();
+                    // Fabric hops lower the effective issue rate in
+                    // proportion to the lengthened round trip.
+                    let rate = dev.stream_rate_gbs * dev.idle.seq_ns / (dev.idle.seq_ns + hop);
+                    t_line += w * LINE / rate;
+                }
+                s.threads * LINE / t_line
+            }
+            Pattern::Random => {
+                let mut mlp = 0.0;
+                for &(node, w) in &s.node_weights {
+                    mlp += w * self.nodes[node].device.mlp_rand;
+                }
+                s.threads * mlp * LINE / (s.delay_ns + lat)
+            }
+        }
+    }
+
+    /// Convenience: single stream of `threads` threads from `socket`
+    /// hammering one node. Returns (bandwidth GB/s, latency ns).
+    pub fn drive(
+        &self,
+        socket: usize,
+        node: NodeId,
+        pattern: Pattern,
+        threads: f64,
+        delay_ns: f64,
+    ) -> (f64, f64) {
+        let sol = self.solve_traffic(&[Stream {
+            socket,
+            node_weights: vec![(node, 1.0)],
+            pattern,
+            threads,
+            delay_ns,
+        }]);
+        (sol.streams[0].bw_gbs, sol.streams[0].latency_ns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memsim::topology::{system_a, system_b, system_c};
+
+    #[test]
+    fn node_lookup_roles() {
+        let sys = system_a();
+        let l0 = sys.node_of(0, MemKind::Ldram).unwrap();
+        let r0 = sys.node_of(0, MemKind::Rdram).unwrap();
+        let cxl = sys.node_of(0, MemKind::Cxl).unwrap();
+        assert_ne!(l0, r0);
+        // From socket 1 the roles swap.
+        assert_eq!(sys.node_of(1, MemKind::Ldram).unwrap(), r0);
+        assert_eq!(sys.node_of(1, MemKind::Rdram).unwrap(), l0);
+        assert_eq!(sys.kind_from(0, cxl), MemKind::Cxl);
+        assert_eq!(sys.kind_from(0, r0), MemKind::Rdram);
+    }
+
+    #[test]
+    fn idle_latency_ordering_ldram_rdram_cxl() {
+        // Fig 2: LDRAM < RDRAM < CXL on every system, both patterns.
+        for sys in [system_a(), system_b(), system_c()] {
+            for p in [Pattern::Sequential, Pattern::Random] {
+                let s = 0;
+                let l = sys.idle_latency(s, sys.node_of(s, MemKind::Ldram).unwrap(), p);
+                let r = sys.idle_latency(s, sys.node_of(s, MemKind::Rdram).unwrap(), p);
+                let c = sys.idle_latency(s, sys.node_of(s, MemKind::Cxl).unwrap(), p);
+                assert!(l < r && r < c, "{} {:?}: {l} {r} {c}", sys.name, p);
+            }
+        }
+    }
+
+    #[test]
+    fn cxl_like_two_hop_numa() {
+        // §III: CXL latency ≈ two hops of NUMA distance.
+        let sys = system_a();
+        let s = 1; // socket the CXL card hangs off
+        let p = Pattern::Sequential;
+        let l = sys.idle_latency(s, sys.node_of(s, MemKind::Ldram).unwrap(), p);
+        let r = sys.idle_latency(s, sys.node_of(s, MemKind::Rdram).unwrap(), p);
+        let c = sys.idle_latency(s, sys.node_of(s, MemKind::Cxl).unwrap(), p);
+        let hop = r - l;
+        let hops = (c - l) / hop;
+        assert!(
+            (1.5..=3.0).contains(&hops),
+            "CXL distance should be ~2 NUMA hops, got {hops:.2}"
+        );
+    }
+
+    #[test]
+    fn bandwidth_saturates_with_threads() {
+        let sys = system_b();
+        let s = 0;
+        let cxl = sys.node_of(s, MemKind::Cxl).unwrap();
+        let (bw4, _) = sys.drive(s, cxl, Pattern::Sequential, 4.0, 0.0);
+        let (bw8, _) = sys.drive(s, cxl, Pattern::Sequential, 8.0, 0.0);
+        let (bw32, _) = sys.drive(s, cxl, Pattern::Sequential, 32.0, 0.0);
+        assert!(bw8 <= sys.nodes[cxl].device.peak_bw_gbs * 1.01);
+        // CXL saturates early: 8→32 threads gains <10%.
+        assert!(bw32 < bw8 * 1.10, "bw8={bw8} bw32={bw32}");
+        assert!(bw4 < bw8 * 1.05 || bw8 > 0.8 * sys.nodes[cxl].device.peak_bw_gbs);
+    }
+
+    #[test]
+    fn ldram_scales_further_than_cxl() {
+        let sys = system_b();
+        let s = 0;
+        let ld = sys.node_of(s, MemKind::Ldram).unwrap();
+        let cxl = sys.node_of(s, MemKind::Cxl).unwrap();
+        // Thread count where the node first reaches 95% of its plateau.
+        let sat = |node| {
+            let peak = (1..=52)
+                .map(|t| sys.drive(s, node, Pattern::Sequential, t as f64, 0.0).0)
+                .fold(0.0f64, f64::max);
+            (1..=52)
+                .find(|&t| {
+                    sys.drive(s, node, Pattern::Sequential, t as f64, 0.0).0 >= 0.95 * peak
+                })
+                .unwrap_or(52)
+        };
+        let sat_cxl = sat(cxl);
+        let sat_ld = sat(ld);
+        assert!(
+            sat_cxl <= 8 && sat_ld >= 2 * sat_cxl,
+            "sat_cxl={sat_cxl} sat_ld={sat_ld}"
+        );
+    }
+
+    #[test]
+    fn loaded_latency_grows_with_injection() {
+        let sys = system_c();
+        let s = 0;
+        let ld = sys.node_of(s, MemKind::Ldram).unwrap();
+        let (_bw_hi, lat_hi) = sys.drive(s, ld, Pattern::Sequential, 32.0, 0.0);
+        let (_bw_lo, lat_lo) = sys.drive(s, ld, Pattern::Sequential, 32.0, 80_000.0);
+        assert!(lat_hi > 1.5 * lat_lo, "lat_hi={lat_hi} lat_lo={lat_lo}");
+        // At 80µs injection delay latency is near idle.
+        let idle = sys.idle_latency(s, ld, Pattern::Sequential);
+        assert!((lat_lo - idle).abs() / idle < 0.15);
+    }
+
+    #[test]
+    fn under_load_dram_latency_approaches_cxl() {
+        // §III "performance under load": near peak bandwidth, LDRAM and
+        // RDRAM latencies reach the CXL-under-load band.
+        let sys = system_c();
+        let s = 0;
+        let ld = sys.node_of(s, MemKind::Ldram).unwrap();
+        let cxl = sys.node_of(s, MemKind::Cxl).unwrap();
+        let (_, lat_ld_loaded) = sys.drive(s, ld, Pattern::Sequential, 64.0, 0.0);
+        let lat_cxl_idle = sys.idle_latency(s, cxl, Pattern::Sequential);
+        assert!(
+            lat_ld_loaded > lat_cxl_idle,
+            "loaded LDRAM {lat_ld_loaded} should exceed idle CXL {lat_cxl_idle}"
+        );
+    }
+
+    #[test]
+    fn interleave_bottlenecked_by_slowest_node() {
+        // A 50/50 LDRAM+CXL interleaved stream cannot exceed 2× the CXL
+        // plateau no matter how many threads drive it.
+        let sys = system_a();
+        let s = 0;
+        let ld = sys.node_of(s, MemKind::Ldram).unwrap();
+        let cxl = sys.node_of(s, MemKind::Cxl).unwrap();
+        let sol = sys.solve_traffic(&[Stream {
+            socket: s,
+            node_weights: vec![(ld, 0.5), (cxl, 0.5)],
+            pattern: Pattern::Sequential,
+            threads: 32.0,
+            delay_ns: 0.0,
+        }]);
+        let cxl_peak = sys.nodes[cxl].device.peak_bw_gbs;
+        assert!(sol.streams[0].bw_gbs <= 2.0 * cxl_peak * 1.02);
+        assert!(sol.node_rho[cxl] > 0.9);
+    }
+
+    #[test]
+    fn two_streams_share_a_node() {
+        let sys = system_b();
+        let ld = sys.node_of(0, MemKind::Ldram).unwrap();
+        let mk = |threads: f64| Stream {
+            socket: 0,
+            node_weights: vec![(ld, 1.0)],
+            pattern: Pattern::Sequential,
+            threads,
+            delay_ns: 0.0,
+        };
+        let alone = sys.solve_traffic(&[mk(26.0)]).streams[0].bw_gbs;
+        let shared = sys.solve_traffic(&[mk(26.0), mk(26.0)]);
+        let each = shared.streams[0].bw_gbs;
+        // Sharing halves per-stream bandwidth near saturation (±25%).
+        assert!(each < alone, "each={each} alone={alone}");
+        let total = shared.streams[0].bw_gbs + shared.streams[1].bw_gbs;
+        assert!(total <= sys.nodes[ld].device.peak_bw_gbs * 1.02);
+    }
+}

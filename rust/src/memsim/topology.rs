@@ -1,0 +1,263 @@
+//! The paper's three evaluation platforms (Table I), as calibrated model
+//! instances.
+//!
+//! Calibration sources, per system:
+//! - Idle latencies: Fig 2 (e.g. CXL A adds ~153 ns over LDRAM sequential,
+//!   CXL B adds ~211 ns; CXL ≈ a two-hop NUMA node).
+//! - Peak bandwidths: Fig 3 plateaus and §III text (CXL A = 17.1% of
+//!   RDRAM A, CXL B = 46.4% of RDRAM B, CXL C close to RDRAM C;
+//!   intro: CXL peak spans 9.8%–80.3% of LDRAM peak across vendors).
+//! - Queueing knees: Fig 4 (loaded LDRAM/RDRAM latencies on C reach
+//!   ~543/600 ns, i.e. the CXL band, near peak bandwidth).
+//! - Saturation thread counts: Fig 3 (CXL saturates by ~4–8 threads;
+//!   LDRAM/RDRAM at ~28/20 on system B).
+//!
+//! Spec numbers (DDR5 channel counts, GT/s, GB capacities) come straight
+//! from Table I and are reported by `exp table1`.
+
+use super::device::{IdleLatency, MemDevice, MemKind};
+use super::link::Link;
+use super::system::{Node, System};
+
+const GB: u64 = 1 << 30;
+
+fn ddr(idle_seq: f64, idle_rand: f64, peak: f64, spec: f64, rate: f64, cap_gb: u64) -> MemDevice {
+    MemDevice {
+        kind: MemKind::Ldram,
+        idle: IdleLatency {
+            seq_ns: idle_seq,
+            rand_ns: idle_rand,
+        },
+        peak_bw_gbs: peak,
+        spec_bw_gbs: spec,
+        capacity: cap_gb * GB,
+        queue_ns: 9.0,
+        queue_cap_ns: 430.0,
+        stream_rate_gbs: rate,
+        mlp_rand: 12.0,
+        concentrated_rand_factor: 0.88,
+    }
+}
+
+fn cxl(idle_seq: f64, idle_rand: f64, peak: f64, spec: f64, rate: f64, cap_gb: u64) -> MemDevice {
+    MemDevice {
+        kind: MemKind::Cxl,
+        idle: IdleLatency {
+            seq_ns: idle_seq,
+            rand_ns: idle_rand,
+        },
+        peak_bw_gbs: peak,
+        spec_bw_gbs: spec,
+        capacity: cap_gb * GB,
+        queue_ns: 6.0,
+        queue_cap_ns: 230.0,
+        stream_rate_gbs: rate,
+        mlp_rand: 10.0,
+        // HPC observation 3: the CXL controller optimizes concentrated
+        // random streams (row-buffer locality / device-side caching).
+        concentrated_rand_factor: 0.55,
+    }
+}
+
+/// NVMe SSD tier (system A's FlexGen runs). Modeled as a very-high-latency,
+/// low-bandwidth "device"; reads go through the page cache via mmap.
+fn nvme(cap_gb: u64) -> MemDevice {
+    MemDevice {
+        kind: MemKind::Nvme,
+        idle: IdleLatency {
+            seq_ns: 25_000.0,
+            rand_ns: 80_000.0,
+        },
+        peak_bw_gbs: 4.0,
+        spec_bw_gbs: 7.0,
+        capacity: cap_gb * GB,
+        queue_ns: 15_000.0,
+        queue_cap_ns: 400_000.0,
+        stream_rate_gbs: 1.5,
+        mlp_rand: 32.0,
+        concentrated_rand_factor: 1.0,
+    }
+}
+
+/// System A — 2× AMD EPYC 9354 (Genoa, 32c), 12× DDR5-4800 per socket,
+/// CXL A: single-channel DDR5-4800 128 GB card on socket 1, PCIe 5.0 x16.
+/// NVIDIA A10 (24 GB) on PCIe 4.0 hangs off socket 1 as well.
+pub fn system_a() -> System {
+    System {
+        name: "A".into(),
+        description: "2x AMD EPYC 9354 (Genoa) + CXL A (1ch DDR5-4800, 128GB) + A10 GPU".into(),
+        sockets: 2,
+        cores_per_socket: 32,
+        nodes: vec![
+            Node {
+                device: ddr(98.0, 112.0, 230.0, 460.8, 8.2, 768),
+                socket: 0,
+            },
+            Node {
+                device: ddr(98.0, 112.0, 230.0, 460.8, 8.2, 768),
+                socket: 1,
+            },
+            Node {
+                // Fig 2: +153 ns over LDRAM (seq); rand ≈ 2.1× LDRAM (§V).
+                device: cxl(251.0, 235.0, 22.5, 38.4, 7.4, 128),
+                socket: 1,
+            },
+            Node {
+                device: nvme(128),
+                socket: 1,
+            },
+        ],
+        fabric: Link::xgmi(),
+        cxl_link: Link::pcie5_x16(),
+        gpu_link: Some(Link::pcie4_x16()),
+    }
+}
+
+/// System B — 2× Intel Xeon Platinum 8470 (SPR, 52c), 8× DDR5-4800 per
+/// socket, CXL B: single-channel DDR5-8000 64 GB card on socket 1.
+pub fn system_b() -> System {
+    System {
+        name: "B".into(),
+        description: "2x Intel Xeon Platinum 8470 (SPR) + CXL B (1ch DDR5-8000, 64GB)".into(),
+        sockets: 2,
+        cores_per_socket: 52,
+        nodes: vec![
+            Node {
+                device: ddr(112.0, 127.0, 260.0, 307.2, 9.3, 1024),
+                socket: 0,
+            },
+            Node {
+                device: ddr(112.0, 127.0, 260.0, 307.2, 9.3, 1024),
+                socket: 1,
+            },
+            Node {
+                // Fig 2: +211 ns over LDRAM (seq). 46.4% of RDRAM peak.
+                device: cxl(323.0, 310.0, 51.0, 64.0, 7.9, 64),
+                socket: 1,
+            },
+        ],
+        fabric: Link::upi(),
+        cxl_link: Link::pcie5_x16(),
+        gpu_link: None,
+    }
+}
+
+/// System C — 2× Intel Xeon Gold 6438V (SPR, 32c), 8× DDR5-4800 per
+/// socket, CXL C: dual-channel DDR5-6200 128 GB card on socket 0.
+pub fn system_c() -> System {
+    System {
+        name: "C".into(),
+        description: "2x Intel Xeon Gold 6438V+ (SPR) + CXL C (2ch DDR5-6200, 128GB)".into(),
+        sockets: 2,
+        cores_per_socket: 32,
+        nodes: vec![
+            Node {
+                device: ddr(110.0, 125.0, 110.0, 307.2, 9.0, 512),
+                socket: 0,
+            },
+            Node {
+                device: ddr(110.0, 125.0, 110.0, 307.2, 9.0, 512),
+                socket: 1,
+            },
+            Node {
+                // Dual-channel card: bandwidth close to RDRAM (Fig 3),
+                // loaded latency band 400–550 ns (Fig 4c).
+                device: cxl(295.0, 280.0, 80.0, 96.8, 7.8, 128),
+                socket: 0,
+            },
+        ],
+        fabric: Link::upi(),
+        cxl_link: Link::pcie5_x16(),
+        gpu_link: None,
+    }
+}
+
+/// All three systems, for sweeps.
+pub fn all_systems() -> Vec<System> {
+    vec![system_a(), system_b(), system_c()]
+}
+
+/// Look a system up by its paper letter.
+pub fn by_name(name: &str) -> Option<System> {
+    match name.to_ascii_uppercase().as_str() {
+        "A" => Some(system_a()),
+        "B" => Some(system_b()),
+        "C" => Some(system_c()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memsim::device::Pattern;
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(by_name("a").unwrap().name, "A");
+        assert_eq!(by_name("B").unwrap().name, "B");
+        assert!(by_name("X").is_none());
+    }
+
+    #[test]
+    fn cxl_latency_adders_match_fig2() {
+        // CXL A ≈ +153 ns over LDRAM, CXL B ≈ +211 ns (sequential).
+        let a = system_a();
+        let add_a = a.idle_latency(1, a.node_of(1, MemKind::Cxl).unwrap(), Pattern::Sequential)
+            - a.idle_latency(1, a.node_of(1, MemKind::Ldram).unwrap(), Pattern::Sequential);
+        assert!((add_a - 153.0).abs() < 10.0, "A adder {add_a}");
+        let b = system_b();
+        let add_b = b.idle_latency(1, b.node_of(1, MemKind::Cxl).unwrap(), Pattern::Sequential)
+            - b.idle_latency(1, b.node_of(1, MemKind::Ldram).unwrap(), Pattern::Sequential);
+        assert!((add_b - 211.0).abs() < 10.0, "B adder {add_b}");
+    }
+
+    #[test]
+    fn cxl_to_rdram_bw_ratios_match_text() {
+        // §III: CXL/RDRAM peak bandwidth = 17.1% (A) and 46.4% (B);
+        // on C the two are close.
+        let a = system_a();
+        let ra = a.nodes[a.node_of(0, MemKind::Cxl).unwrap()].device.peak_bw_gbs
+            / a.eff_peak_bw(0, a.node_of(0, MemKind::Rdram).unwrap());
+        assert!((ra - 0.171).abs() < 0.02, "A ratio {ra}");
+        let b = system_b();
+        let rb = b.nodes[b.node_of(0, MemKind::Cxl).unwrap()].device.peak_bw_gbs
+            / b.eff_peak_bw(0, b.node_of(0, MemKind::Rdram).unwrap());
+        assert!((rb - 0.464).abs() < 0.05, "B ratio {rb}");
+        let c = system_c();
+        let rc = c.nodes[c.node_of(0, MemKind::Cxl).unwrap()].device.peak_bw_gbs
+            / c.eff_peak_bw(0, c.node_of(0, MemKind::Rdram).unwrap());
+        assert!(rc > 0.7, "C ratio {rc} should be close to RDRAM");
+    }
+
+    #[test]
+    fn capacities_match_table1() {
+        let a = system_a();
+        assert_eq!(a.nodes[0].device.capacity, 768 << 30);
+        assert_eq!(
+            a.nodes[a.node_of(0, MemKind::Cxl).unwrap()].device.capacity,
+            128 << 30
+        );
+        let b = system_b();
+        assert_eq!(
+            b.nodes[b.node_of(0, MemKind::Cxl).unwrap()].device.capacity,
+            64 << 30
+        );
+    }
+
+    #[test]
+    fn only_system_a_has_gpu() {
+        assert!(system_a().gpu_link.is_some());
+        assert!(system_b().gpu_link.is_none());
+        assert!(system_c().gpu_link.is_none());
+    }
+
+    #[test]
+    fn cxl_attach_socket_matches_paper() {
+        // A and B: CXL on socket 1; C: socket 0.
+        let a = system_a();
+        assert_eq!(a.nodes[a.node_of(0, MemKind::Cxl).unwrap()].socket, 1);
+        let c = system_c();
+        assert_eq!(c.nodes[c.node_of(0, MemKind::Cxl).unwrap()].socket, 0);
+    }
+}

@@ -1,0 +1,209 @@
+//! MLC-equivalent probes: idle latency, bandwidth scaling, loaded latency.
+
+use crate::memsim::{NodeId, Pattern, Stream, System};
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// One point of a bandwidth-vs-threads sweep (Fig 3).
+#[derive(Clone, Debug)]
+pub struct BwPoint {
+    pub threads: usize,
+    pub bw_gbs: f64,
+    pub latency_ns: f64,
+}
+
+/// One point of a loaded-latency sweep (Fig 4).
+#[derive(Clone, Debug)]
+pub struct LoadPoint {
+    pub delay_ns: f64,
+    pub bw_gbs: f64,
+    pub latency_ns: f64,
+}
+
+/// Idle latency via pointer chasing: repeat the probe `reps` times with
+/// small measurement noise (OS jitter, TLB misses) and report the
+/// outlier-excluded mean — the paper's §III methodology. Deterministic
+/// for a given seed.
+pub fn idle_latency(
+    sys: &System,
+    socket: usize,
+    node: NodeId,
+    pattern: Pattern,
+    reps: usize,
+    seed: u64,
+) -> f64 {
+    let base = sys.idle_latency(socket, node, pattern);
+    let mut rng = Rng::seeded(seed ^ (node as u64) << 8 ^ socket as u64);
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        // 2% gaussian measurement noise + occasional outlier spikes from
+        // "operating system services and random TLB misses".
+        let mut v = base * (1.0 + 0.02 * rng.normal());
+        if rng.chance(0.01) {
+            v += base * rng.range_f64(1.0, 8.0);
+        }
+        samples.push(v);
+    }
+    stats::mean_excluding_outliers(&samples, 3.0)
+}
+
+/// Bandwidth scaling: drive `node` with 1..=max_threads (Fig 3).
+pub fn bw_scaling_sweep(
+    sys: &System,
+    socket: usize,
+    node: NodeId,
+    pattern: Pattern,
+    max_threads: usize,
+) -> Vec<BwPoint> {
+    (1..=max_threads)
+        .map(|t| {
+            let (bw, lat) = sys.drive(socket, node, pattern, t as f64, 0.0);
+            BwPoint {
+                threads: t,
+                bw_gbs: bw,
+                latency_ns: lat,
+            }
+        })
+        .collect()
+}
+
+/// Loaded latency: fixed thread count, sweep the inter-access injection
+/// delay from high (idle) to zero (saturated) — Fig 4. Returns points in
+/// descending-delay order, matching the figure's left-to-right axis.
+pub fn loaded_latency_sweep(
+    sys: &System,
+    socket: usize,
+    node: NodeId,
+    pattern: Pattern,
+    threads: usize,
+    delays_ns: &[f64],
+) -> Vec<LoadPoint> {
+    let mut pts: Vec<LoadPoint> = delays_ns
+        .iter()
+        .map(|&d| {
+            let (bw, lat) = sys.drive(socket, node, pattern, threads as f64, d);
+            LoadPoint {
+                delay_ns: d,
+                bw_gbs: bw,
+                latency_ns: lat,
+            }
+        })
+        .collect();
+    pts.sort_by(|a, b| b.delay_ns.partial_cmp(&a.delay_ns).unwrap());
+    pts
+}
+
+/// The delay grid used by the paper (0 → 80 µs).
+pub fn mlc_delay_grid() -> Vec<f64> {
+    vec![
+        80_000.0, 40_000.0, 20_000.0, 10_000.0, 5_000.0, 2_500.0, 1_250.0, 600.0, 300.0, 150.0,
+        80.0, 40.0, 20.0, 10.0, 5.0, 2.0, 1.0, 0.0,
+    ]
+}
+
+/// Saturation point: smallest thread count achieving `frac` of the
+/// sweep's plateau bandwidth.
+pub fn saturation_threads(points: &[BwPoint], frac: f64) -> usize {
+    let peak = points.iter().map(|p| p.bw_gbs).fold(0.0f64, f64::max);
+    points
+        .iter()
+        .find(|p| p.bw_gbs >= frac * peak)
+        .map(|p| p.threads)
+        .unwrap_or(points.len())
+}
+
+/// Peak bandwidth of a sweep.
+pub fn peak_bw(points: &[BwPoint]) -> f64 {
+    points.iter().map(|p| p.bw_gbs).fold(0.0f64, f64::max)
+}
+
+/// Drive several node groups simultaneously with a given thread split and
+/// report the combined bandwidth (the §III thread-assignment experiment).
+pub fn combined_bw(sys: &System, socket: usize, split: &[(NodeId, usize)]) -> f64 {
+    let streams: Vec<Stream> = split
+        .iter()
+        .filter(|&&(_, t)| t > 0)
+        .map(|&(node, t)| Stream {
+            socket,
+            node_weights: vec![(node, 1.0)],
+            pattern: Pattern::Sequential,
+            threads: t as f64,
+            delay_ns: 0.0,
+        })
+        .collect();
+    if streams.is_empty() {
+        return 0.0;
+    }
+    sys.solve_traffic(&streams)
+        .streams
+        .iter()
+        .map(|s| s.bw_gbs)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memsim::topology::{system_a, system_b};
+    use crate::memsim::MemKind;
+
+    #[test]
+    fn idle_latency_close_to_model_and_deterministic() {
+        let sys = system_a();
+        let node = sys.node_of(0, MemKind::Cxl).unwrap();
+        let a = idle_latency(&sys, 0, node, Pattern::Random, 5000, 1);
+        let b = idle_latency(&sys, 0, node, Pattern::Random, 5000, 1);
+        assert_eq!(a, b);
+        let base = sys.idle_latency(0, node, Pattern::Random);
+        assert!((a - base).abs() / base < 0.05, "a={a} base={base}");
+    }
+
+    #[test]
+    fn sweep_monotone_until_plateau() {
+        let sys = system_b();
+        let node = sys.node_of(0, MemKind::Ldram).unwrap();
+        let pts = bw_scaling_sweep(&sys, 0, node, Pattern::Sequential, 52);
+        for w in pts.windows(2) {
+            assert!(w[1].bw_gbs >= w[0].bw_gbs * 0.999);
+        }
+        assert!(peak_bw(&pts) <= sys.nodes[node].device.peak_bw_gbs * 1.01);
+    }
+
+    #[test]
+    fn cxl_saturates_before_dram_system_b() {
+        let sys = system_b();
+        let cxl = sys.node_of(0, MemKind::Cxl).unwrap();
+        let ld = sys.node_of(0, MemKind::Ldram).unwrap();
+        let rd = sys.node_of(0, MemKind::Rdram).unwrap();
+        let s_cxl = saturation_threads(&bw_scaling_sweep(&sys, 0, cxl, Pattern::Sequential, 52), 0.95);
+        let s_ld = saturation_threads(&bw_scaling_sweep(&sys, 0, ld, Pattern::Sequential, 52), 0.95);
+        let s_rd = saturation_threads(&bw_scaling_sweep(&sys, 0, rd, Pattern::Sequential, 52), 0.95);
+        assert!(s_cxl <= 10, "cxl sat {s_cxl}");
+        assert!(s_ld > 2 * s_cxl, "ldram sat {s_ld}");
+        assert!(s_rd > s_cxl, "rdram sat {s_rd}");
+    }
+
+    #[test]
+    fn loaded_latency_knee() {
+        let sys = system_a();
+        let ld = sys.node_of(0, MemKind::Ldram).unwrap();
+        let pts = loaded_latency_sweep(&sys, 0, ld, Pattern::Sequential, 32, &mlc_delay_grid());
+        // Left of the figure (high delay): near idle latency. Right
+        // (delay 0): latency skyrockets, bandwidth near peak.
+        let first = pts.first().unwrap();
+        let last = pts.last().unwrap();
+        assert!(first.latency_ns < 1.3 * sys.idle_latency(0, ld, Pattern::Sequential));
+        assert!(last.latency_ns > 2.0 * first.latency_ns);
+        assert!(last.bw_gbs > 0.9 * sys.nodes[ld].device.peak_bw_gbs);
+    }
+
+    #[test]
+    fn combined_bw_adds_tiers() {
+        let sys = system_b();
+        let ld = sys.node_of(0, MemKind::Ldram).unwrap();
+        let cxl = sys.node_of(0, MemKind::Cxl).unwrap();
+        let only_ld = combined_bw(&sys, 0, &[(ld, 26)]);
+        let both = combined_bw(&sys, 0, &[(ld, 26), (cxl, 6)]);
+        assert!(both > only_ld * 1.05, "both={both} only={only_ld}");
+    }
+}

@@ -1,0 +1,13 @@
+//! Intel-MLC-style measurement probes over the simulator.
+//!
+//! These implement the paper's §III methodology: pointer-chase idle
+//! latency (5,000 reps, outlier-excluded mean), multi-threaded
+//! sequential/random bandwidth sweeps (2,000 reps), the loaded-latency
+//! delay sweep (Fig 4), and the bandwidth-aware thread-assignment search
+//! the paper derives from Fig 3(d).
+
+pub mod assign;
+pub mod mlc;
+
+pub use assign::{best_assignment, Assignment};
+pub use mlc::{bw_scaling_sweep, idle_latency, loaded_latency_sweep, BwPoint, LoadPoint};

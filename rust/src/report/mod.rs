@@ -1,0 +1,115 @@
+//! Report sink: experiment drivers print paper-format tables and can
+//! also emit CSV / JSON for downstream plotting.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+/// Output format selection for the experiment CLI.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Format {
+    Text,
+    Csv,
+    Json,
+}
+
+/// Collects the tables of one experiment run.
+#[derive(Default)]
+pub struct Report {
+    pub tables: Vec<Table>,
+}
+
+impl Report {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, t: Table) -> &mut Self {
+        self.tables.push(t);
+        self
+    }
+
+    pub fn render(&self, fmt: Format) -> String {
+        match fmt {
+            Format::Text => self
+                .tables
+                .iter()
+                .map(|t| t.render())
+                .collect::<Vec<_>>()
+                .join("\n"),
+            Format::Csv => self
+                .tables
+                .iter()
+                .map(|t| format!("# {}\n{}", t.title, t.to_csv()))
+                .collect::<Vec<_>>()
+                .join("\n"),
+            Format::Json => {
+                let tables: Vec<Json> = self
+                    .tables
+                    .iter()
+                    .map(|t| {
+                        Json::obj(vec![
+                            ("title", t.title.as_str().into()),
+                            (
+                                "headers",
+                                Json::arr(t.headers.iter().map(|h| Json::from(h.as_str()))),
+                            ),
+                            (
+                                "rows",
+                                Json::arr(t.rows.iter().map(|r| {
+                                    Json::arr(r.iter().map(|c| Json::from(c.as_str())))
+                                })),
+                            ),
+                        ])
+                    })
+                    .collect();
+                Json::obj(vec![("tables", Json::Arr(tables))]).to_string()
+            }
+        }
+    }
+
+    pub fn print(&self, fmt: Format) {
+        println!("{}", self.render(fmt));
+    }
+
+    pub fn save(&self, path: &Path, fmt: Format) -> Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.render(fmt).as_bytes())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Report {
+        let mut r = Report::new();
+        let mut t = Table::new("fig", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        r.add(t);
+        r
+    }
+
+    #[test]
+    fn renders_all_formats() {
+        let r = sample();
+        assert!(r.render(Format::Text).contains("== fig =="));
+        assert!(r.render(Format::Csv).contains("a,b"));
+        let j = Json::parse(&r.render(Format::Json)).unwrap();
+        assert!(j.get("tables").is_some());
+    }
+
+    #[test]
+    fn saves_to_file() {
+        let r = sample();
+        let path = std::env::temp_dir().join("cxlmem_report_test.csv");
+        r.save(&path, Format::Csv).unwrap();
+        assert!(std::fs::read_to_string(&path).unwrap().contains("1,2"));
+        let _ = std::fs::remove_file(path);
+    }
+}

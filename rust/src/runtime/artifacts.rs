@@ -1,0 +1,191 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime (shapes, dtypes, model hyperparameters).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Input dtype of an artifact argument.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+/// One input spec of an artifact.
+#[derive(Clone, Debug)]
+pub struct InputSpec {
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl InputSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled computation.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<InputSpec>,
+    pub outputs: usize,
+}
+
+/// Model hyperparameters baked into `train_step`.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub params: usize,
+}
+
+/// Parsed manifest.json.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelMeta,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {}", dir.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    /// Locate the artifacts directory: $CXLMEM_ARTIFACTS or ./artifacts.
+    pub fn discover() -> Result<Self> {
+        let dir = std::env::var("CXLMEM_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::load(Path::new(&dir))
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let m = j.get("model").ok_or_else(|| anyhow!("manifest: no model"))?;
+        let get = |k: &str| -> Result<usize> {
+            m.get(k)
+                .and_then(|v| v.as_u64())
+                .map(|v| v as usize)
+                .ok_or_else(|| anyhow!("manifest: model.{k} missing"))
+        };
+        let model = ModelMeta {
+            vocab: get("vocab")?,
+            d_model: get("d_model")?,
+            layers: get("layers")?,
+            heads: get("heads")?,
+            seq: get("seq")?,
+            batch: get("batch")?,
+            params: get("params")?,
+        };
+        let mut artifacts = Vec::new();
+        for a in j
+            .get("artifacts")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("manifest: no artifacts"))?
+        {
+            let name = a
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("artifact name"))?
+                .to_string();
+            let file = dir.join(
+                a.get("file")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("artifact file"))?,
+            );
+            let mut inputs = Vec::new();
+            for i in a
+                .get("inputs")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow!("artifact inputs"))?
+            {
+                let shape: Vec<usize> = i
+                    .get("shape")
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| anyhow!("input shape"))?
+                    .iter()
+                    .map(|d| d.as_u64().unwrap_or(0) as usize)
+                    .collect();
+                let dtype = match i.get("dtype").and_then(|v| v.as_str()) {
+                    Some("f32") => Dtype::F32,
+                    Some("i32") => Dtype::I32,
+                    other => return Err(anyhow!("unsupported dtype {other:?}")),
+                };
+                inputs.push(InputSpec { shape, dtype });
+            }
+            let outputs = a.get("outputs").and_then(|v| v.as_u64()).unwrap_or(1) as usize;
+            artifacts.push(ArtifactSpec {
+                name,
+                file,
+                inputs,
+                outputs,
+            });
+        }
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            model,
+            artifacts,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "version": 1,
+        "model": {"vocab": 4096, "d_model": 256, "layers": 4, "heads": 8,
+                  "seq": 128, "batch": 4, "params": 4196608},
+        "artifacts": [
+            {"name": "adam", "file": "adam.hlo.txt", "outputs": 3,
+             "inputs": [{"shape": [1048576], "dtype": "f32"},
+                        {"shape": [1048576], "dtype": "f32"},
+                        {"shape": [1048576], "dtype": "f32"},
+                        {"shape": [1048576], "dtype": "f32"},
+                        {"shape": [1], "dtype": "f32"}]}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.model.params, 4196608);
+        let a = m.artifact("adam").unwrap();
+        assert_eq!(a.inputs.len(), 5);
+        assert_eq!(a.inputs[0].elements(), 1048576);
+        assert_eq!(a.inputs[0].dtype, Dtype::F32);
+        assert_eq!(a.outputs, 3);
+        assert!(a.file.ends_with("adam.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_dtype() {
+        let bad = SAMPLE.replace("\"f32\"", "\"f8\"");
+        assert!(Manifest::parse(Path::new("/tmp/a"), &bad).is_err());
+    }
+}

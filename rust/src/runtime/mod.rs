@@ -1,0 +1,227 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them from the
+//! Rust hot path. Python never runs at request time — `make artifacts`
+//! produces `artifacts/*.hlo.txt` once, this module does the rest.
+//!
+//! Pattern (from /opt/xla-example): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `executable.execute`.
+
+pub mod artifacts;
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+pub use artifacts::{ArtifactSpec, Dtype, InputSpec, Manifest, ModelMeta};
+
+/// A typed input value for an artifact call.
+pub enum Arg<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with shape/dtype validation against the manifest spec.
+    /// Returns the flattened f32 outputs (loss scalars come back as
+    /// single-element vectors).
+    pub fn run(&self, args: &[Arg]) -> Result<Vec<Vec<f32>>> {
+        if args.len() != self.spec.inputs.len() {
+            return Err(anyhow!(
+                "artifact '{}' expects {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                args.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        for (i, (arg, spec)) in args.iter().zip(&self.spec.inputs).enumerate() {
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            let lit = match (arg, spec.dtype) {
+                (Arg::F32(v), Dtype::F32) => {
+                    if v.len() != spec.elements() {
+                        return Err(anyhow!(
+                            "input {i} of '{}': {} elements, expected {}",
+                            self.spec.name,
+                            v.len(),
+                            spec.elements()
+                        ));
+                    }
+                    xla::Literal::vec1(v).reshape(&dims)?
+                }
+                (Arg::I32(v), Dtype::I32) => {
+                    if v.len() != spec.elements() {
+                        return Err(anyhow!(
+                            "input {i} of '{}': {} elements, expected {}",
+                            self.spec.name,
+                            v.len(),
+                            spec.elements()
+                        ));
+                    }
+                    xla::Literal::vec1(v).reshape(&dims)?
+                }
+                _ => {
+                    return Err(anyhow!(
+                        "input {i} of '{}': dtype mismatch",
+                        self.spec.name
+                    ))
+                }
+            };
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True.
+        let items = result.to_tuple()?;
+        if items.len() != self.spec.outputs {
+            return Err(anyhow!(
+                "artifact '{}' returned {} outputs, manifest says {}",
+                self.spec.name,
+                items.len(),
+                self.spec.outputs
+            ));
+        }
+        items
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(Into::into))
+            .collect()
+    }
+}
+
+/// PJRT client + compiled executable cache.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: HashMap<String, Executable>,
+}
+
+impl Runtime {
+    /// Load the manifest from `dir` and create the CPU PJRT client.
+    pub fn new(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self {
+            manifest,
+            client,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Discover artifacts via $CXLMEM_ARTIFACTS / ./artifacts.
+    pub fn discover() -> Result<Self> {
+        let dir = std::env::var("CXLMEM_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::new(Path::new(&dir))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    pub fn load(&mut self, name: &str) -> Result<&Executable> {
+        if !self.cache.contains_key(name) {
+            let spec = self.manifest.artifact(name)?.clone();
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.file
+                    .to_str()
+                    .ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("loading HLO text {}", spec.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.cache.insert(spec.name.clone(), Executable { spec, exe });
+        }
+        Ok(&self.cache[name])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_ready() -> bool {
+        Path::new("artifacts/manifest.json").exists()
+    }
+
+    #[test]
+    fn adam_artifact_matches_scalar_reference() {
+        if !artifacts_ready() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut rt = Runtime::new(Path::new("artifacts")).unwrap();
+        let exe = rt.load("adam").unwrap();
+        let n = exe.spec.inputs[0].elements();
+        let p = vec![1.0f32; n];
+        let g = vec![0.5f32; n];
+        let m = vec![0.0f32; n];
+        let v = vec![0.0f32; n];
+        let step = [1.0f32];
+        let out = exe
+            .run(&[
+                Arg::F32(&p),
+                Arg::F32(&g),
+                Arg::F32(&m),
+                Arg::F32(&v),
+                Arg::F32(&step),
+            ])
+            .unwrap();
+        assert_eq!(out.len(), 3);
+        // Scalar ADAM at step 1: m̂ = g, v̂ = g², p' = p - lr·g/(|g|+eps)
+        let expect_p = 1.0 - 1e-3 * 0.5 / (0.5 + 1e-8);
+        assert!((out[0][0] - expect_p).abs() < 1e-5, "{}", out[0][0]);
+        let expect_m = 0.1 * 0.5;
+        assert!((out[1][0] - expect_m).abs() < 1e-6);
+    }
+
+    #[test]
+    fn run_rejects_wrong_arity_and_shape() {
+        if !artifacts_ready() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut rt = Runtime::new(Path::new("artifacts")).unwrap();
+        let exe = rt.load("adam").unwrap();
+        assert!(exe.run(&[]).is_err());
+        let tiny = [0.0f32; 3];
+        let step = [1.0f32];
+        assert!(exe
+            .run(&[
+                Arg::F32(&tiny),
+                Arg::F32(&tiny),
+                Arg::F32(&tiny),
+                Arg::F32(&tiny),
+                Arg::F32(&step),
+            ])
+            .is_err());
+    }
+
+    #[test]
+    fn decode_attn_artifact_uniform_values() {
+        if !artifacts_ready() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut rt = Runtime::new(Path::new("artifacts")).unwrap();
+        let exe = rt.load("decode_attn").unwrap();
+        let q_n = exe.spec.inputs[0].elements();
+        let kv_n = exe.spec.inputs[1].elements();
+        // V = all ones → attention output must be exactly 1 everywhere.
+        let q = vec![0.3f32; q_n];
+        let k = vec![0.1f32; kv_n];
+        let v = vec![1.0f32; kv_n];
+        let out = exe
+            .run(&[Arg::F32(&q), Arg::F32(&k), Arg::F32(&v)])
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        for &x in out[0].iter().take(16) {
+            assert!((x - 1.0).abs() < 1e-5, "{x}");
+        }
+    }
+}

@@ -1,0 +1,56 @@
+//! Mini property-testing harness (no `proptest` in the offline vendor
+//! set): seeded random generators + a check loop that reports the
+//! failing seed/case for reproduction.
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property by default.
+pub const DEFAULT_CASES: usize = 64;
+
+/// Run `prop` against `cases` generated inputs. On failure, panics with
+/// the case index, seed, and a debug rendering of the failing input.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    for case in 0..cases {
+        let mut rng = Rng::seeded(seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed}):\n  input = {input:?}"
+            );
+        }
+    }
+}
+
+/// Generator helpers.
+pub fn vec_f64(rng: &mut Rng, len_max: usize, lo: f64, hi: f64) -> Vec<f64> {
+    let n = rng.index(len_max.max(1)) + 1;
+    (0..n).map(|_| rng.range_f64(lo, hi)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            "sum-nonneg",
+            1,
+            32,
+            |r| vec_f64(r, 16, 0.0, 10.0),
+            |v| v.iter().sum::<f64>() >= 0.0,
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed")]
+    fn failing_property_reports() {
+        check("always-false", 2, 4, |r| r.below(10), |_| false);
+    }
+}

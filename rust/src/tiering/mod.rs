@@ -1,0 +1,378 @@
+//! Memory tiering based on page migration (§VI).
+//!
+//! An epoch-based page-granular simulator: each epoch the application
+//! produces per-page access counts (from `workloads::tiering_apps` traces
+//! or from HPC object traffic); the tiering policy samples accesses
+//! through NUMA *hint faults* and promotes/demotes pages between the
+//! fast tier (LDRAM) and the slow tier (CXL); epoch execution time comes
+//! from the same engine cost model as §V plus fault/migration overheads.
+//!
+//! The paper's key mechanisms are modeled faithfully:
+//! - hint faults only fire on *migratable* VMAs — pages under an explicit
+//!   interleave policy never fault (PMO 3: interleaving + migration do
+//!   not compose);
+//! - Tiering-0.8 samples lazily and throttles promotion with an adaptive
+//!   threshold (59× fewer faults than TPP, PMO 2);
+//! - TPP scans the slow tier aggressively and promotes on LRU presence;
+//! - AutoNUMA promotes any faulted slow page.
+
+pub mod policies;
+pub mod stats;
+
+use crate::engine::{self, ObjectTraffic, RunConfig};
+use crate::memsim::{NodeId, Pattern, System};
+use crate::util::rng::Rng;
+
+pub use policies::{AutoNuma, NoBalance, Tiering08, TieringPolicy, Tpp};
+pub use stats::VmStats;
+
+/// Cost of one hint fault (ns): trap + PTE walk + bookkeeping.
+pub const HINT_FAULT_NS: f64 = 1_500.0;
+/// Cost of migrating one 2 MB region (ns): ~2 MB over ~1.6 GB/s effective
+/// migration bandwidth, incl. unmap/copy/remap.
+pub const MIGRATE_REGION_NS: f64 = 1_250_000.0;
+/// 4 KB pages per 2 MB region (for vmstat-style counters).
+pub const SMALL_PER_REGION: u64 = 512;
+
+/// Page-granular placement state shared with the policies.
+#[derive(Clone, Debug)]
+pub struct PageState {
+    /// Current node of each page.
+    pub node: Vec<NodeId>,
+    /// Whether the kernel may migrate each page (false under explicit
+    /// interleave/membind policies).
+    pub migratable: Vec<bool>,
+    /// Object index of each page (for multi-object HPC runs).
+    pub object: Vec<u32>,
+    /// Fast tier node and its capacity in pages.
+    pub fast_node: NodeId,
+    pub fast_capacity: usize,
+    /// Slow tier node (demotion target).
+    pub slow_node: NodeId,
+    /// Last-epoch access count per page (policy LRU/recency signal).
+    pub last_counts: Vec<u32>,
+}
+
+impl PageState {
+    pub fn fast_used(&self) -> usize {
+        self.node.iter().filter(|&&n| n == self.fast_node).count()
+    }
+
+    /// Promote `page` to the fast tier, demoting the coldest fast page if
+    /// the tier is full. Returns number of regions moved (1 or 2).
+    /// O(pages) per call — use [`PageState::promote_batch`] for epoch-sized
+    /// promotion sets.
+    pub fn promote(&mut self, page: usize) -> u64 {
+        let (p, d) = self.promote_batch(&[page]);
+        p + d
+    }
+
+    /// Promote a batch of pages, demoting the coldest migratable
+    /// fast-tier pages as needed — one O(n log n) pass for the whole
+    /// epoch instead of O(n) per promotion. Returns
+    /// (promoted_regions, demoted_regions).
+    pub fn promote_batch(&mut self, pages: &[usize]) -> (u64, u64) {
+        let want: Vec<usize> = pages
+            .iter()
+            .copied()
+            .filter(|&p| self.node[p] != self.fast_node)
+            .collect();
+        if want.is_empty() {
+            return (0, 0);
+        }
+        let free = self.fast_capacity.saturating_sub(self.fast_used());
+        let need_demote = want.len().saturating_sub(free);
+        // Victim selection: coldest migratable fast pages.
+        let mut demoted = 0u64;
+        if need_demote > 0 {
+            let mut victims: Vec<usize> = (0..self.node.len())
+                .filter(|&p| self.node[p] == self.fast_node && self.migratable[p])
+                .collect();
+            victims.sort_by_key(|&p| self.last_counts[p]);
+            victims.truncate(need_demote);
+            for v in &victims {
+                self.node[*v] = self.slow_node;
+            }
+            demoted = victims.len() as u64;
+        }
+        // Promote as many as now fit.
+        let capacity_now = self.fast_capacity.saturating_sub(self.fast_used());
+        let mut promoted = 0u64;
+        for &p in want.iter().take(capacity_now) {
+            self.node[p] = self.fast_node;
+            promoted += 1;
+        }
+        (promoted, demoted)
+    }
+}
+
+/// Result of one simulated run.
+#[derive(Clone, Debug)]
+pub struct TieringRun {
+    pub policy: String,
+    pub placement: String,
+    pub total_s: f64,
+    pub app_s: f64,
+    pub overhead_s: f64,
+    pub stats: VmStats,
+}
+
+/// Per-epoch workload view handed to the simulator.
+pub struct EpochWorkload<'a> {
+    /// Per-page access counts this epoch.
+    pub counts: &'a [u32],
+    /// Pattern and dependent fraction per object index.
+    pub pattern: &'a dyn Fn(u32) -> (Pattern, f64),
+}
+
+/// Simulator configuration.
+pub struct SimConfig {
+    pub socket: usize,
+    pub threads: usize,
+    pub compute_ns_per_byte: f64,
+    pub epochs: usize,
+    pub seed: u64,
+}
+
+/// Hint-fault sampling: the policy asks for a scan fraction; faults fire
+/// for scanned+accessed+migratable pages. Returns faulted page indices.
+pub fn sample_hint_faults(
+    state: &PageState,
+    counts: &[u32],
+    scan_frac: f64,
+    slow_tier_only: bool,
+    rng: &mut Rng,
+) -> Vec<usize> {
+    let mut faults = Vec::new();
+    for p in 0..counts.len() {
+        if counts[p] == 0 || !state.migratable[p] {
+            continue;
+        }
+        if slow_tier_only && state.node[p] == state.fast_node {
+            continue;
+        }
+        if rng.f64() < scan_frac {
+            faults.push(p);
+        }
+    }
+    faults
+}
+
+/// Execute one epoch's application time given current placement.
+pub fn epoch_app_time(
+    sys: &System,
+    cfg: &SimConfig,
+    state: &PageState,
+    wl: &EpochWorkload,
+) -> f64 {
+    // Aggregate per (object, node) access counts.
+    let n_obj = state.object.iter().map(|&o| o as usize + 1).max().unwrap_or(1);
+    let nn = sys.nodes.len();
+    let mut per = vec![vec![0.0f64; nn]; n_obj];
+    for p in 0..wl.counts.len() {
+        per[state.object[p] as usize][state.node[p]] += wl.counts[p] as f64;
+    }
+    let mut objects = Vec::new();
+    for (oi, nodes) in per.iter().enumerate() {
+        let total: f64 = nodes.iter().sum();
+        if total <= 0.0 {
+            continue;
+        }
+        let (pattern, dep) = (wl.pattern)(oi as u32);
+        objects.push(ObjectTraffic {
+            name: format!("obj{oi}"),
+            traffic_bytes: total * crate::memsim::LINE,
+            pattern,
+            dep_frac: dep,
+            node_weights: nodes
+                .iter()
+                .enumerate()
+                .filter(|&(_, &c)| c > 0.0)
+                .map(|(n, &c)| (n, c / total))
+                .collect(),
+        });
+    }
+    let rcfg = RunConfig {
+        socket: cfg.socket,
+        threads: cfg.threads,
+        compute_ns_per_byte: cfg.compute_ns_per_byte,
+    };
+    engine::run(sys, &rcfg, &objects).total_s
+}
+
+/// Run the full tiering simulation: `epochs` epochs of (trace → faults →
+/// policy decision → migration → app time).
+pub fn simulate(
+    sys: &System,
+    cfg: &SimConfig,
+    state: &mut PageState,
+    policy: &mut dyn TieringPolicy,
+    mut next_epoch: impl FnMut(usize) -> Vec<u32>,
+    pattern: impl Fn(u32) -> (Pattern, f64),
+) -> TieringRun {
+    let mut rng = Rng::seeded(cfg.seed);
+    let mut stats = VmStats::default();
+    let mut app_s = 0.0;
+    let mut overhead_s = 0.0;
+
+    for e in 0..cfg.epochs {
+        let counts = next_epoch(e);
+        // 1. policy observes + migrates
+        let scan = policy.scan_request(state, &stats);
+        let faults = sample_hint_faults(state, &counts, scan.frac, scan.slow_tier_only, &mut rng);
+        stats.hint_faults += faults.len() as u64;
+        let moved_regions = policy.epoch(state, &counts, &faults, &mut stats);
+        stats.migrated_pages += moved_regions * SMALL_PER_REGION;
+        // 2. overheads (parallelized across threads)
+        overhead_s += (faults.len() as f64 * HINT_FAULT_NS
+            + moved_regions as f64 * MIGRATE_REGION_NS)
+            / cfg.threads as f64
+            / 1e9;
+        // 3. application time under the (new) placement
+        let wl = EpochWorkload {
+            counts: &counts,
+            pattern: &pattern,
+        };
+        app_s += epoch_app_time(sys, cfg, state, &wl);
+        // 4. recency state for next epoch
+        state.last_counts.copy_from_slice(&counts);
+    }
+
+    TieringRun {
+        policy: policy.name().to_string(),
+        placement: String::new(),
+        total_s: app_s + overhead_s,
+        app_s,
+        overhead_s,
+        stats,
+    }
+}
+
+/// Build initial page state from a placement policy over one flat object.
+/// `ldram_frac_interleave`: if `Some(k)`, pages are round-robined over
+/// {fast, slow} every k-th to fast (uniform interleave, unmigratable);
+/// if `None`, first touch fills fast then spills (migratable).
+pub fn initial_state(
+    pages: usize,
+    fast_node: NodeId,
+    slow_node: NodeId,
+    fast_capacity: usize,
+    interleave: bool,
+) -> PageState {
+    let mut node = Vec::with_capacity(pages);
+    let mut fast_used = 0usize;
+    for p in 0..pages {
+        let target = if interleave {
+            if p % 2 == 0 && fast_used < fast_capacity {
+                fast_node
+            } else {
+                slow_node
+            }
+        } else if fast_used < fast_capacity {
+            fast_node
+        } else {
+            slow_node
+        };
+        if target == fast_node {
+            fast_used += 1;
+        }
+        node.push(target);
+    }
+    PageState {
+        node,
+        migratable: vec![!interleave; pages],
+        object: vec![0; pages],
+        fast_node,
+        fast_capacity,
+        slow_node,
+        last_counts: vec![0; pages],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memsim::topology::system_a;
+    use crate::memsim::MemKind;
+
+    fn mini_state(interleave: bool) -> PageState {
+        initial_state(100, 0, 2, 40, interleave)
+    }
+
+    #[test]
+    fn first_touch_fills_fast_then_spills() {
+        let s = mini_state(false);
+        assert_eq!(s.fast_used(), 40);
+        assert_eq!(s.node[0], 0);
+        assert_eq!(s.node[99], 2);
+        assert!(s.migratable.iter().all(|&m| m));
+    }
+
+    #[test]
+    fn interleave_alternates_and_is_unmigratable() {
+        let s = mini_state(true);
+        assert_eq!(s.node[0], 0);
+        assert_eq!(s.node[1], 2);
+        assert!(s.migratable.iter().all(|&m| !m));
+    }
+
+    #[test]
+    fn promote_respects_capacity_with_demotion() {
+        let mut s = mini_state(false);
+        s.last_counts[5] = 0; // cold fast page
+        for p in 0..40 {
+            s.last_counts[p] = 10;
+        }
+        s.last_counts[7] = 0; // coldest
+        let moved = s.promote(80);
+        assert_eq!(moved, 2); // one demotion + one promotion
+        assert_eq!(s.node[80], s.fast_node);
+        assert_eq!(s.fast_used(), 40);
+    }
+
+    #[test]
+    fn promote_noop_if_already_fast() {
+        let mut s = mini_state(false);
+        assert_eq!(s.promote(0), 0);
+    }
+
+    #[test]
+    fn hint_faults_skip_unmigratable(){
+        let s = mini_state(true);
+        let counts = vec![5u32; 100];
+        let mut rng = Rng::seeded(1);
+        let faults = sample_hint_faults(&s, &counts, 1.0, false, &mut rng);
+        assert!(faults.is_empty(), "PMO 3: interleaved pages never fault");
+    }
+
+    #[test]
+    fn hint_faults_skip_unaccessed() {
+        let s = mini_state(false);
+        let mut counts = vec![0u32; 100];
+        counts[3] = 1;
+        let mut rng = Rng::seeded(1);
+        let faults = sample_hint_faults(&s, &counts, 1.0, false, &mut rng);
+        assert_eq!(faults, vec![3]);
+    }
+
+    #[test]
+    fn epoch_time_positive_and_fast_placement_faster() {
+        let sys = system_a();
+        let ld = sys.node_of(0, MemKind::Ldram).unwrap();
+        let cxl = sys.node_of(0, MemKind::Cxl).unwrap();
+        let cfg = SimConfig {
+            socket: 0,
+            threads: 64,
+            compute_ns_per_byte: 0.0,
+            epochs: 1,
+            seed: 1,
+        };
+        let counts = vec![1000u32; 1000];
+        let pat = |_: u32| (Pattern::Random, 0.5);
+        let all_fast = initial_state(1000, ld, cxl, 1000, false);
+        let all_slow = initial_state(1000, ld, cxl, 0, false);
+        let tf = epoch_app_time(&sys, &cfg, &all_fast, &EpochWorkload { counts: &counts, pattern: &pat });
+        let ts = epoch_app_time(&sys, &cfg, &all_slow, &EpochWorkload { counts: &counts, pattern: &pat });
+        assert!(tf > 0.0 && ts > tf, "fast {tf} slow {ts}");
+    }
+}

@@ -1,0 +1,341 @@
+//! The three tiering policies the paper evaluates (§VI) + No-Balance.
+//!
+//! All three consume NUMA hint faults; they differ in scan aggressiveness
+//! and promotion criteria — exactly the axes the paper identifies:
+//!
+//! | policy      | scan                   | promotion criterion          |
+//! |-------------|------------------------|------------------------------|
+//! | AutoNUMA    | steady fraction        | any faulted slow page        |
+//! | Tiering-0.8 | lazy (adaptive)        | re-fault hotness ≥ adaptive  |
+//! |             |                        | threshold + traffic throttle |
+//! | TPP         | aggressive, slow tier  | faulted + on active LRU      |
+
+use super::stats::VmStats;
+use super::PageState;
+
+/// What a policy wants scanned this epoch.
+#[derive(Clone, Copy, Debug)]
+pub struct ScanRequest {
+    /// Fraction of candidate pages to mark for hint faults.
+    pub frac: f64,
+    /// Restrict scanning to slow-tier pages (TPP-style).
+    pub slow_tier_only: bool,
+}
+
+/// A page-migration policy driven by hint faults.
+pub trait TieringPolicy {
+    fn name(&self) -> &'static str;
+
+    /// How much to scan this epoch.
+    fn scan_request(&self, state: &PageState, stats: &VmStats) -> ScanRequest;
+
+    /// Process this epoch's faults; perform promotions/demotions on
+    /// `state`; return the number of 2 MB regions moved.
+    fn epoch(
+        &mut self,
+        state: &mut PageState,
+        counts: &[u32],
+        faults: &[usize],
+        stats: &mut VmStats,
+    ) -> u64;
+}
+
+/// Static placement: no balancing, no migration (the paper's "No
+/// Balance" baseline).
+#[derive(Default)]
+pub struct NoBalance;
+
+impl TieringPolicy for NoBalance {
+    fn name(&self) -> &'static str {
+        "NoBalance"
+    }
+
+    fn scan_request(&self, _state: &PageState, _stats: &VmStats) -> ScanRequest {
+        ScanRequest {
+            frac: 0.0,
+            slow_tier_only: false,
+        }
+    }
+
+    fn epoch(
+        &mut self,
+        _state: &mut PageState,
+        _counts: &[u32],
+        _faults: &[usize],
+        _stats: &mut VmStats,
+    ) -> u64 {
+        0
+    }
+}
+
+/// AutoNUMA (`numa_balancing = 1`): steady scanning; every faulted page
+/// that lives on the slow tier is promoted toward the accessing node.
+pub struct AutoNuma {
+    pub scan_frac: f64,
+    /// Kernel migration rate limit (regions per epoch) — AutoNUMA
+    /// throttles via `numa_balancing_rate_limit_mbps`.
+    pub migrate_cap: usize,
+}
+
+impl Default for AutoNuma {
+    fn default() -> Self {
+        Self {
+            scan_frac: 0.22,
+            migrate_cap: 1200,
+        }
+    }
+}
+
+impl TieringPolicy for AutoNuma {
+    fn name(&self) -> &'static str {
+        "AutoNUMA"
+    }
+
+    fn scan_request(&self, _state: &PageState, _stats: &VmStats) -> ScanRequest {
+        ScanRequest {
+            frac: self.scan_frac,
+            slow_tier_only: false,
+        }
+    }
+
+    fn epoch(
+        &mut self,
+        state: &mut PageState,
+        _counts: &[u32],
+        faults: &[usize],
+        stats: &mut VmStats,
+    ) -> u64 {
+        let mut cands: Vec<usize> = faults
+            .iter()
+            .copied()
+            .filter(|&p| state.node[p] != state.fast_node)
+            .collect();
+        cands.truncate(self.migrate_cap);
+        let (promoted, demoted) = state.promote_batch(&cands);
+        stats.promoted_regions += promoted;
+        stats.demoted_regions += demoted;
+        promoted + demoted
+    }
+}
+
+/// Tiering-0.8 (Linux AutoNUMA tiering patch, `numa_balancing = 2`):
+/// lazy scanning (much fewer hint faults), hotness from re-fault
+/// interval (approximated by the page's access count vs an adaptive
+/// threshold), and promotion-rate throttling that adapts the threshold.
+pub struct Tiering08 {
+    pub scan_frac: f64,
+    /// Current promotion hotness threshold (accesses/epoch).
+    pub threshold: f64,
+    /// Target promotions per epoch (migration-traffic budget).
+    pub promote_budget: u64,
+}
+
+impl Default for Tiering08 {
+    fn default() -> Self {
+        Self {
+            scan_frac: 0.02, // PMO 2: ~59× fewer hint faults than TPP
+            threshold: 8.0,
+            promote_budget: 600,
+        }
+    }
+}
+
+impl TieringPolicy for Tiering08 {
+    fn name(&self) -> &'static str {
+        "Tiering-0.8"
+    }
+
+    fn scan_request(&self, _state: &PageState, _stats: &VmStats) -> ScanRequest {
+        ScanRequest {
+            frac: self.scan_frac,
+            slow_tier_only: false,
+        }
+    }
+
+    fn epoch(
+        &mut self,
+        state: &mut PageState,
+        counts: &[u32],
+        faults: &[usize],
+        stats: &mut VmStats,
+    ) -> u64 {
+        // Candidates: faulted slow pages whose hotness clears the
+        // threshold ("re-faulted recently enough").
+        let mut cands: Vec<usize> = faults
+            .iter()
+            .copied()
+            .filter(|&p| state.node[p] != state.fast_node && counts[p] as f64 >= self.threshold)
+            .collect();
+        let n_cands = cands.len();
+        // Hottest first; respect the promotion budget.
+        cands.sort_by_key(|&p| std::cmp::Reverse(counts[p]));
+        if cands.len() as u64 > self.promote_budget {
+            stats.throttled += cands.len() as u64 - self.promote_budget;
+            cands.truncate(self.promote_budget as usize);
+        }
+        let (promoted, demoted) = state.promote_batch(&cands);
+        stats.promoted_regions += promoted;
+        stats.demoted_regions += demoted;
+        let moved = promoted + demoted;
+        // Adaptive threshold: promote rate above budget → raise the bar;
+        // far below → lower it (down to 1 access).
+        let promoted_f = n_cands.min(self.promote_budget as usize) as f64;
+        if n_cands as u64 > self.promote_budget {
+            self.threshold *= 1.5;
+        } else if promoted_f < 0.25 * self.promote_budget as f64 {
+            self.threshold = (self.threshold * 0.7).max(1.0);
+        }
+        moved
+    }
+}
+
+/// TPP: aggressive slow-tier scanning; promote every faulted slow page
+/// that sits on the (approximated) active LRU — i.e. was accessed in the
+/// previous epoch too. High hint-fault volume is TPP's documented cost.
+pub struct Tpp {
+    pub scan_frac: f64,
+    /// Demotion-watermark-driven migration budget (regions per epoch).
+    pub migrate_cap: usize,
+}
+
+impl Default for Tpp {
+    fn default() -> Self {
+        Self {
+            scan_frac: 1.0,
+            migrate_cap: 2500,
+        }
+    }
+}
+
+impl TieringPolicy for Tpp {
+    fn name(&self) -> &'static str {
+        "TPP"
+    }
+
+    fn scan_request(&self, _state: &PageState, _stats: &VmStats) -> ScanRequest {
+        ScanRequest {
+            frac: self.scan_frac,
+            slow_tier_only: true,
+        }
+    }
+
+    fn epoch(
+        &mut self,
+        state: &mut PageState,
+        _counts: &[u32],
+        faults: &[usize],
+        stats: &mut VmStats,
+    ) -> u64 {
+        // Active-LRU check: accessed last epoch as well.
+        let mut cands: Vec<usize> = faults
+            .iter()
+            .copied()
+            .filter(|&p| state.node[p] != state.fast_node && state.last_counts[p] > 0)
+            .collect();
+        cands.truncate(self.migrate_cap);
+        let (promoted, demoted) = state.promote_batch(&cands);
+        stats.promoted_regions += promoted;
+        stats.demoted_regions += demoted;
+        promoted + demoted
+    }
+}
+
+/// All evaluated policies, paper order, fresh instances.
+pub fn all_policies() -> Vec<Box<dyn TieringPolicy>> {
+    vec![
+        Box::new(NoBalance),
+        Box::new(AutoNuma::default()),
+        Box::new(Tiering08::default()),
+        Box::new(Tpp::default()),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tiering::initial_state;
+
+    fn state() -> PageState {
+        let mut s = initial_state(1000, 0, 2, 300, false);
+        s.last_counts = vec![1; 1000];
+        s
+    }
+
+    #[test]
+    fn nobalance_never_moves() {
+        let mut s = state();
+        let mut st = VmStats::default();
+        let faults: Vec<usize> = (300..400).collect();
+        let moved = NoBalance.epoch(&mut s, &vec![10; 1000], &faults, &mut st);
+        assert_eq!(moved, 0);
+        assert_eq!(st, VmStats::default());
+    }
+
+    #[test]
+    fn autonuma_promotes_faulted_slow_pages() {
+        let mut s = state();
+        let mut st = VmStats::default();
+        let faults = vec![500, 600];
+        let moved = AutoNuma::default().epoch(&mut s, &vec![1; 1000], &faults, &mut st);
+        assert!(moved >= 2);
+        assert_eq!(s.node[500], s.fast_node);
+        assert_eq!(s.node[600], s.fast_node);
+        assert_eq!(st.promoted_regions, 2);
+    }
+
+    #[test]
+    fn tiering08_threshold_filters_cold_pages() {
+        let mut s = state();
+        let mut st = VmStats::default();
+        let mut counts = vec![1u32; 1000]; // all below threshold 8
+        counts[700] = 50; // one hot page
+        let mut pol = Tiering08::default();
+        let moved = pol.epoch(&mut s, &counts, &[500, 700], &mut st);
+        assert_eq!(st.promoted_regions, 1);
+        assert_eq!(s.node[700], s.fast_node);
+        assert_ne!(s.node[500], s.fast_node);
+        assert!(moved >= 1);
+    }
+
+    #[test]
+    fn tiering08_throttles_and_adapts() {
+        let mut s = initial_state(5000, 0, 2, 1000, false);
+        s.last_counts = vec![1; 5000];
+        let mut st = VmStats::default();
+        let counts = vec![100u32; 5000];
+        let faults: Vec<usize> = (2000..5000).collect(); // 3000 hot candidates
+        let mut pol = Tiering08 {
+            promote_budget: 100,
+            ..Default::default()
+        };
+        let t0 = pol.threshold;
+        pol.epoch(&mut s, &counts, &faults, &mut st);
+        assert_eq!(st.promoted_regions, 100);
+        assert!(st.throttled > 0);
+        assert!(pol.threshold > t0, "threshold must rise under pressure");
+    }
+
+    #[test]
+    fn tpp_requires_lru_presence() {
+        let mut s = state();
+        s.last_counts = vec![0; 1000]; // nothing on active LRU
+        s.last_counts[800] = 5;
+        let mut st = VmStats::default();
+        let moved = Tpp::default().epoch(&mut s, &vec![10; 1000], &[700, 800], &mut st);
+        assert_eq!(st.promoted_regions, 1);
+        assert!(moved >= 1);
+        assert_eq!(s.node[800], s.fast_node);
+        assert_ne!(s.node[700], s.fast_node);
+    }
+
+    #[test]
+    fn scan_aggressiveness_ordering() {
+        // PMO 2 mechanism: t08 scans ≪ autonuma ≤ tpp.
+        let s = state();
+        let st = VmStats::default();
+        let t08 = Tiering08::default().scan_request(&s, &st).frac;
+        let an = AutoNuma::default().scan_request(&s, &st).frac;
+        let tpp = Tpp::default().scan_request(&s, &st).frac;
+        assert!(t08 < an && an <= tpp);
+    }
+}

@@ -1,0 +1,38 @@
+//! `/proc/vmstat`-style counters the paper collects for PMO 1–3.
+
+/// Migration statistics for one run (counts in 4 KB page units where the
+/// paper reports page counts).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct VmStats {
+    /// NUMA hint faults taken.
+    pub hint_faults: u64,
+    /// Pages migrated (4 KB units, like `pgmigrate_success`).
+    pub migrated_pages: u64,
+    /// Promotions (2 MB regions moved to the fast tier).
+    pub promoted_regions: u64,
+    /// Demotions (2 MB regions moved to the slow tier).
+    pub demoted_regions: u64,
+    /// Promotions skipped by throttling / threshold (Tiering-0.8).
+    pub throttled: u64,
+}
+
+impl VmStats {
+    pub fn migrations_total(&self) -> u64 {
+        self.promoted_regions + self.demoted_regions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals() {
+        let s = VmStats {
+            promoted_regions: 3,
+            demoted_regions: 2,
+            ..Default::default()
+        };
+        assert_eq!(s.migrations_total(), 5);
+    }
+}

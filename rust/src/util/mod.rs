@@ -1,0 +1,9 @@
+//! Hand-rolled utility substrates (no external crates available offline):
+//! PRNG, statistics, table rendering, JSON, CLI parsing, and a bench timer.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod timer;

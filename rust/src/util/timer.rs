@@ -1,0 +1,155 @@
+//! Micro-benchmark timing harness (no `criterion` in the offline vendor
+//! set). Used by `rust/benches/*` (built with `harness = false`).
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+/// Result of benchmarking one target.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub stddev_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> Duration {
+        Duration::from_nanos(self.mean_ns as u64)
+    }
+
+    /// criterion-style one-line report.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} time: [{:>12} median {:>12} p95 {:>12}]  ({} iters)",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p95_ns),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Bench harness: warms up, then samples `f` until `budget` is consumed
+/// (at least `min_samples` samples). `f` should perform ONE unit of work;
+/// use `std::hint::black_box` inside to defeat DCE.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub min_samples: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            min_samples: 10,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(50),
+            budget: Duration::from_millis(500),
+            min_samples: 5,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup + estimate per-iteration cost.
+        let warm_start = Instant::now();
+        let mut warm_iters = 0u64;
+        while warm_start.elapsed() < self.warmup {
+            f();
+            warm_iters += 1;
+        }
+        let per_iter = warm_start.elapsed().as_secs_f64() / warm_iters.max(1) as f64;
+        // Aim for ~100 samples in the budget; batch iterations if fast.
+        let target_sample_s = (self.budget.as_secs_f64() / 100.0).max(1e-6);
+        let batch = ((target_sample_s / per_iter.max(1e-9)) as u64).max(1);
+
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        let mut total_iters = 0u64;
+        while start.elapsed() < self.budget || samples_ns.len() < self.min_samples {
+            let t = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples_ns.push(t.elapsed().as_nanos() as f64 / batch as f64);
+            total_iters += batch;
+            if samples_ns.len() > 10_000 {
+                break;
+            }
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: total_iters,
+            mean_ns: stats::mean(&samples_ns),
+            median_ns: stats::median(&samples_ns),
+            p95_ns: stats::percentile(&samples_ns, 95.0),
+            stddev_ns: stats::stddev(&samples_ns),
+        };
+        println!("{}", res.report());
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_sleepless_work() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(5),
+            budget: Duration::from_millis(30),
+            min_samples: 3,
+            results: Vec::new(),
+        };
+        let r = b
+            .bench("sum", || {
+                let s: u64 = std::hint::black_box((0..1000u64).sum());
+                std::hint::black_box(s);
+            })
+            .clone();
+        assert!(r.mean_ns > 0.0);
+        assert!(r.iters > 0);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5_000.0).ends_with("µs"));
+        assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with(" s"));
+    }
+}

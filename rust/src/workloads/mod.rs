@@ -1,0 +1,185 @@
+//! Workload models.
+//!
+//! [`npb`]/[`xsbench`] carry the seven HPC workloads of Table III as
+//! access-signature models; [`tiering_apps`] carries the four
+//! memory-intensive applications of §VI (BTree, PageRank, Graph500,
+//! Silo) as page-granular trace generators for the tiering study.
+
+pub mod npb;
+pub mod tiering_apps;
+pub mod xsbench;
+
+use anyhow::Result;
+
+use crate::engine::{self, ObjectTraffic, RunConfig, RunResult};
+use crate::mem::{oli::ObjectSpec, AddressSpace, PhysMem, Policy};
+use crate::memsim::{Pattern, System};
+
+/// One modeled data object of an HPC workload.
+#[derive(Clone, Debug)]
+pub struct WlObject {
+    pub spec: ObjectSpec,
+    pub pattern: Pattern,
+    /// Object traffic per timed iteration, as a multiple of its size
+    /// (how many times the object is effectively scanned).
+    pub scans: f64,
+}
+
+impl WlObject {
+    pub fn new(
+        name: &str,
+        gbytes: f64,
+        pattern: Pattern,
+        scans: f64,
+        dep_frac: f64,
+    ) -> Self {
+        let bytes = (gbytes * 1e9) as u64;
+        Self {
+            // `accesses` drives OLI's intensity criterion: total traffic.
+            spec: ObjectSpec::new(name, bytes, gbytes * scans, dep_frac),
+            pattern,
+            scans,
+        }
+    }
+
+    pub fn traffic_bytes(&self) -> f64 {
+        self.spec.bytes as f64 * self.scans
+    }
+}
+
+/// An HPC workload model (one row of Table III).
+#[derive(Clone, Debug)]
+pub struct HpcWorkload {
+    pub name: &'static str,
+    pub dwarf: &'static str,
+    pub characterization: &'static str,
+    pub input: &'static str,
+    pub objects: Vec<WlObject>,
+    pub compute_ns_per_byte: f64,
+}
+
+impl HpcWorkload {
+    pub fn footprint_bytes(&self) -> u64 {
+        self.objects.iter().map(|o| o.spec.bytes).sum()
+    }
+
+    pub fn specs(&self) -> Vec<ObjectSpec> {
+        self.objects.iter().map(|o| o.spec.clone()).collect()
+    }
+
+    /// Allocate all objects with per-object policies and run one timed
+    /// iteration. `policy_for(i, spec)` supplies each object's policy.
+    pub fn run_with(
+        &self,
+        sys: &System,
+        socket: usize,
+        threads: usize,
+        phys: &mut PhysMem,
+        policy_for: &dyn Fn(usize, &ObjectSpec) -> Policy,
+    ) -> Result<RunResult> {
+        let mut asp = AddressSpace::new();
+        let mut traffic = Vec::with_capacity(self.objects.len());
+        for (i, o) in self.objects.iter().enumerate() {
+            let policy = policy_for(i, &o.spec);
+            let id = asp.alloc(sys, phys, socket, &o.spec.name, o.spec.bytes, policy)?;
+            traffic.push(ObjectTraffic {
+                name: o.spec.name.clone(),
+                traffic_bytes: o.traffic_bytes(),
+                pattern: o.pattern,
+                dep_frac: o.spec.dep_frac,
+                node_weights: asp.object(id).node_weights(),
+            });
+        }
+        let cfg = RunConfig {
+            socket,
+            threads,
+            compute_ns_per_byte: self.compute_ns_per_byte,
+        };
+        let result = engine::run(sys, &cfg, &traffic);
+        // Release pages so the caller can reuse `phys` for the next policy.
+        for id in 0..asp.objects.len() {
+            asp.free(phys, id);
+        }
+        Ok(result)
+    }
+
+    /// Run with a single uniform policy for every object.
+    pub fn run_uniform(
+        &self,
+        sys: &System,
+        socket: usize,
+        threads: usize,
+        phys: &mut PhysMem,
+        policy: &Policy,
+    ) -> Result<RunResult> {
+        self.run_with(sys, socket, threads, phys, &|_, _| policy.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::npb::all_hpc_workloads;
+    use super::*;
+    use crate::mem::policy;
+    use crate::memsim::topology::system_a;
+
+    #[test]
+    fn footprints_match_table3() {
+        // Table III memory footprints (GB): BT 166, LU 134, CG 134,
+        // MG 210, SP 174, FT 80, XSBench 116.
+        let expect = [
+            ("BT", 166.0),
+            ("LU", 134.0),
+            ("CG", 134.0),
+            ("MG", 210.0),
+            ("SP", 174.0),
+            ("FT", 80.0),
+            ("XSBench", 116.0),
+        ];
+        for (wl, (name, gb)) in all_hpc_workloads().iter().zip(expect) {
+            assert_eq!(wl.name, name);
+            let fp = wl.footprint_bytes() as f64 / 1e9;
+            assert!((fp - gb).abs() < 2.0, "{name}: {fp} vs {gb}");
+        }
+    }
+
+    #[test]
+    fn run_uniform_produces_time() {
+        let sys = system_a();
+        let mut phys = PhysMem::of_system(&sys);
+        let wl = &all_hpc_workloads()[0];
+        let r = wl
+            .run_uniform(&sys, 0, 32, &mut phys, &policy::ldram_preferred(&sys, 0))
+            .unwrap();
+        assert!(r.total_s > 0.0);
+        // pages were freed
+        assert_eq!(phys.total_used(), 0);
+    }
+
+    #[test]
+    fn bw_hungry_objects_match_table3() {
+        // Table III last column: the objects OLI selects.
+        use crate::mem::oli::select_bw_hungry;
+        let expect: &[(&str, &[&str])] = &[
+            ("BT", &["u", "rsh", "forcing"]),
+            ("LU", &["u", "rsd"]),
+            ("CG", &["a"]),
+            ("MG", &["v", "r"]),
+            ("SP", &["u", "rsh", "forcing"]),
+            ("FT", &["u0", "u1"]),
+            ("XSBench", &["nuclide_grids"]),
+        ];
+        for (wl, (name, objs)) in all_hpc_workloads().iter().zip(expect) {
+            assert_eq!(&wl.name, name);
+            let sel = select_bw_hungry(&wl.specs());
+            let picked: Vec<&str> = wl
+                .objects
+                .iter()
+                .zip(&sel)
+                .filter(|&(_, &s)| s)
+                .map(|(o, _)| o.spec.name.as_str())
+                .collect();
+            assert_eq!(&picked, objs, "{name}");
+        }
+    }
+}

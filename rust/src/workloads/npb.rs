@@ -1,0 +1,178 @@
+//! NAS Parallel Benchmarks access-signature models (Table III).
+//!
+//! Each workload is modeled by its data objects (sizes from Table III's
+//! "BW-hungry objects" column plus a residual), its dominant access
+//! pattern, per-object traffic intensity, and a compute intensity.
+//! Calibration targets are the paper's §V figures:
+//! - Fig 13: CXL-involving interleaves are CXL-dominated (RDRAM+CXL ≈
+//!   LDRAM+CXL within 9.2%).
+//! - Fig 14: MG (bandwidth-hungry) favors "interleave all" by 10–85%;
+//!   CG (latency-sensitive) favors CXL-preferred.
+//! - Fig 15: OLI ≈ LDRAM-preferred with sufficient LDRAM, 65% over
+//!   uniform interleave; 1.42× over LDRAM-preferred with 64 GB LDRAM.
+
+use super::{HpcWorkload, WlObject};
+use crate::memsim::Pattern::{Random, Sequential};
+
+/// BT — dense linear algebra; unit-strided accesses; compute-rich
+/// (tolerates CXL: <3.2% loss at moderate scale).
+pub fn bt() -> HpcWorkload {
+    HpcWorkload {
+        name: "BT",
+        dwarf: "Dense linear algebra",
+        characterization: "Unit-strided memory accesses from dense matrices",
+        input: "Class E",
+        objects: vec![
+            WlObject::new("u", 39.6, Sequential, 3.0, 0.02),
+            WlObject::new("rsh", 39.6, Sequential, 3.0, 0.02),
+            WlObject::new("forcing", 39.6, Sequential, 2.5, 0.02),
+            WlObject::new("ws_rest", 47.2, Sequential, 0.4, 0.05),
+        ],
+        compute_ns_per_byte: 1.60,
+    }
+}
+
+/// LU — sparse linear algebra; indexed loads/stores.
+pub fn lu() -> HpcWorkload {
+    HpcWorkload {
+        name: "LU",
+        dwarf: "Sparse linear algebra",
+        characterization: "Indexed loads and stores from compressed matrices",
+        input: "Class E",
+        objects: vec![
+            WlObject::new("u", 39.6, Sequential, 2.6, 0.05),
+            WlObject::new("rsd", 39.6, Random, 2.6, 0.25),
+            WlObject::new("ws_rest", 54.8, Sequential, 0.35, 0.05),
+        ],
+        compute_ns_per_byte: 0.95,
+    }
+}
+
+/// CG — irregular, indirect-indexed accesses; latency-sensitive.
+pub fn cg() -> HpcWorkload {
+    HpcWorkload {
+        name: "CG",
+        dwarf: "Sparse linear algebra",
+        characterization: "Irregular memory accesses based on indirect indexing",
+        input: "Class E",
+        objects: vec![
+            // The sparse matrix is scanned (CSR walk) — bandwidth-hungry
+            // and the object Table III lists for OLI...
+            WlObject::new("a", 48.9, Sequential, 0.35, 0.05),
+            // ...while the gather into x/p/q is the latency-critical
+            // indirect part (small, hot, pointer-chasing).
+            WlObject::new("vecs", 12.0, Random, 5.0, 0.85),
+            WlObject::new("ws_rest", 73.1, Sequential, 0.1, 0.05),
+        ],
+        compute_ns_per_byte: 0.30,
+    }
+}
+
+/// MG — structured grids; the paper's bandwidth-hungry exemplar.
+pub fn mg() -> HpcWorkload {
+    HpcWorkload {
+        name: "MG",
+        dwarf: "Structured grids",
+        characterization: "Dynamic updates based on subdivided regular grids",
+        input: "Class E",
+        objects: vec![
+            WlObject::new("v", 64.2, Sequential, 3.2, 0.02),
+            WlObject::new("r", 73.4, Sequential, 3.2, 0.02),
+            WlObject::new("ws_rest", 72.4, Sequential, 0.3, 0.05),
+        ],
+        compute_ns_per_byte: 0.80,
+    }
+}
+
+/// SP — structured grids; floating-point intensive.
+pub fn sp() -> HpcWorkload {
+    HpcWorkload {
+        name: "SP",
+        dwarf: "Structured grids",
+        characterization: "Intense floating-point computations for linear equations",
+        input: "Class E",
+        objects: vec![
+            WlObject::new("u", 39.6, Sequential, 2.8, 0.02),
+            WlObject::new("rsh", 39.6, Sequential, 2.8, 0.02),
+            WlObject::new("forcing", 39.6, Sequential, 2.2, 0.02),
+            WlObject::new("ws_rest", 55.2, Sequential, 0.35, 0.05),
+        ],
+        compute_ns_per_byte: 1.35,
+    }
+}
+
+/// FT — spectral method; bandwidth-consuming transpose.
+pub fn ft() -> HpcWorkload {
+    HpcWorkload {
+        name: "FT",
+        dwarf: "Spectral method",
+        characterization: "Bandwidth-consuming matrix transpose",
+        input: "Class D",
+        objects: vec![
+            WlObject::new("u0", 32.0, Sequential, 4.5, 0.02),
+            WlObject::new("u1", 32.0, Sequential, 4.5, 0.02),
+            WlObject::new("ws_rest", 16.0, Sequential, 0.5, 0.05),
+        ],
+        compute_ns_per_byte: 0.55,
+    }
+}
+
+/// All seven HPC workloads (NPB six + XSBench), Table III order.
+pub fn all_hpc_workloads() -> Vec<HpcWorkload> {
+    vec![
+        bt(),
+        lu(),
+        cg(),
+        mg(),
+        sp(),
+        ft(),
+        super::xsbench::xsbench(),
+    ]
+}
+
+/// Look up a workload by name (case-insensitive).
+pub fn by_name(name: &str) -> Option<HpcWorkload> {
+    all_hpc_workloads()
+        .into_iter()
+        .find(|w| w.name.eq_ignore_ascii_case(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup() {
+        assert_eq!(by_name("cg").unwrap().name, "CG");
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn seven_workloads() {
+        assert_eq!(all_hpc_workloads().len(), 7);
+    }
+
+    #[test]
+    fn cg_is_latency_dominated() {
+        let w = cg();
+        let dep_traffic: f64 = w
+            .objects
+            .iter()
+            .map(|o| o.traffic_bytes() * o.spec.dep_frac)
+            .sum();
+        let total: f64 = w.objects.iter().map(|o| o.traffic_bytes()).sum();
+        assert!(dep_traffic / total > 0.4, "{}", dep_traffic / total);
+    }
+
+    #[test]
+    fn mg_is_bandwidth_dominated() {
+        let w = mg();
+        let dep_traffic: f64 = w
+            .objects
+            .iter()
+            .map(|o| o.traffic_bytes() * o.spec.dep_frac)
+            .sum();
+        let total: f64 = w.objects.iter().map(|o| o.traffic_bytes()).sum();
+        assert!(dep_traffic / total < 0.05);
+    }
+}

@@ -1,0 +1,246 @@
+//! Page-access trace generators for the memory-tiering study (§VI-A):
+//! BTree, PageRank, Graph500, Silo.
+//!
+//! Each application is modeled by the *shape* of its page-hotness
+//! distribution — the property the paper identifies as deciding which
+//! tiering solution wins:
+//! - BTree: irregular accesses, effectively uniform over the working set
+//!   (no solution helps; variance < 3%).
+//! - PageRank: small and *stable* hot page set → first-touch without
+//!   migration wins (hot pages land in LDRAM early and stay hot).
+//! - Graph500: hot pages scattered and drifting across the working set →
+//!   hotness tracking must adapt; interleaving helps.
+//! - Silo: B-tree-like index gathers hot records into few pages →
+//!   small concentrated hot set, mild drift; first touch effective.
+
+use crate::util::rng::Rng;
+
+/// A tiering-study application model.
+#[derive(Clone, Debug)]
+pub struct AppModel {
+    pub name: &'static str,
+    /// Working-set size in pages (2 MB regions).
+    pub pages: usize,
+    /// Fraction of pages forming the hot set.
+    pub hot_frac: f64,
+    /// Share of accesses that hit the hot set.
+    pub hot_share: f64,
+    /// Fraction of the hot set replaced each epoch (0 = perfectly stable).
+    pub drift: f64,
+    /// Whether hot pages are scattered across the address space (true)
+    /// or clustered at low addresses / allocation order (false).
+    pub scattered: bool,
+    /// Whether accesses within the hot set are skewed (zipf-like) or
+    /// flat (BTree's irregular lookups).
+    pub hot_skewed: bool,
+    /// Page accesses per epoch (drives absolute epoch time).
+    pub accesses_per_epoch: u64,
+    /// CPU ns per access (compute between memory touches).
+    pub compute_ns_per_access: f64,
+}
+
+/// 130 GB working set in 2 MB pages (the paper's §VI configuration).
+pub const WSS_PAGES: usize = 65_000;
+
+pub fn btree() -> AppModel {
+    AppModel {
+        name: "BTree",
+        pages: WSS_PAGES,
+        hot_frac: 0.85, // effectively the whole set is lukewarm
+        hot_share: 0.90,
+        drift: 0.30,
+        scattered: true,
+        hot_skewed: false,
+        accesses_per_epoch: 220_000_000,
+        compute_ns_per_access: 55.0,
+    }
+}
+
+pub fn pagerank() -> AppModel {
+    AppModel {
+        name: "PageRank",
+        pages: WSS_PAGES,
+        hot_frac: 0.10, // small...
+        hot_share: 0.85,
+        drift: 0.0, // ...and perfectly stable hot set
+        scattered: false,
+        hot_skewed: true,
+        accesses_per_epoch: 260_000_000,
+        compute_ns_per_access: 30.0,
+    }
+}
+
+pub fn graph500() -> AppModel {
+    AppModel {
+        name: "Graph500",
+        pages: WSS_PAGES,
+        hot_frac: 0.25,
+        hot_share: 0.75,
+        drift: 0.35, // hot pages wander (BFS frontier)
+        scattered: true,
+        hot_skewed: true,
+        accesses_per_epoch: 240_000_000,
+        compute_ns_per_access: 35.0,
+    }
+}
+
+pub fn silo() -> AppModel {
+    AppModel {
+        name: "Silo",
+        pages: WSS_PAGES,
+        hot_frac: 0.06, // index gathers hot records into few pages
+        hot_share: 0.80,
+        drift: 0.08,
+        scattered: false,
+        hot_skewed: true,
+        accesses_per_epoch: 200_000_000,
+        compute_ns_per_access: 70.0,
+    }
+}
+
+pub fn all_apps() -> Vec<AppModel> {
+    vec![btree(), pagerank(), graph500(), silo()]
+}
+
+/// Evolving hot-set state + per-epoch access histogram generation.
+pub struct TraceGen {
+    pub model: AppModel,
+    hot_set: Vec<u32>,
+    rng: Rng,
+}
+
+impl TraceGen {
+    pub fn new(model: AppModel, seed: u64) -> Self {
+        let mut rng = Rng::seeded(seed);
+        let hot_n = ((model.pages as f64) * model.hot_frac).round() as usize;
+        let hot_set = if model.scattered {
+            // Hot pages uniformly scattered over the address space.
+            let mut all: Vec<u32> = (0..model.pages as u32).collect();
+            rng.shuffle(&mut all);
+            all.truncate(hot_n);
+            all
+        } else {
+            // Allocation-order clustering: the first-allocated pages are
+            // the hot ones (graph/index structures built first).
+            (0..hot_n as u32).collect()
+        };
+        Self {
+            model,
+            hot_set,
+            rng,
+        }
+    }
+
+    pub fn hot_set(&self) -> &[u32] {
+        &self.hot_set
+    }
+
+    /// Advance the hot set by one epoch of drift.
+    pub fn drift(&mut self) {
+        let n_replace = (self.hot_set.len() as f64 * self.model.drift).round() as usize;
+        for _ in 0..n_replace {
+            let idx = self.rng.index(self.hot_set.len());
+            self.hot_set[idx] = self.rng.below(self.model.pages as u64) as u32;
+        }
+    }
+
+    /// Per-page access counts for one epoch. Hot pages share
+    /// `hot_share` of accesses (zipf-skewed within the hot set); the
+    /// rest spread uniformly.
+    pub fn epoch_counts(&mut self) -> Vec<u32> {
+        let m = &self.model;
+        let mut counts = vec![0u32; m.pages];
+        // Use expected-value assignment rather than per-access sampling:
+        // deterministic and fast at 10^8 accesses per epoch.
+        let hot_total = (m.accesses_per_epoch as f64 * m.hot_share) as u64;
+        let cold_total = m.accesses_per_epoch - hot_total;
+        // zipf-ish weights within the hot set
+        let hn = self.hot_set.len();
+        if hn > 0 {
+            if m.hot_skewed {
+                let norm: f64 = (1..=hn).map(|r| 1.0 / (r as f64).sqrt()).sum();
+                for (rank, &p) in self.hot_set.iter().enumerate() {
+                    let w = (1.0 / ((rank + 1) as f64).sqrt()) / norm;
+                    counts[p as usize] += (hot_total as f64 * w) as u32;
+                }
+            } else {
+                let per = (hot_total as f64 / hn as f64) as u32;
+                for &p in &self.hot_set {
+                    counts[p as usize] += per;
+                }
+            }
+        }
+        let per_cold = (cold_total as f64 / m.pages as f64).round() as u32;
+        for c in counts.iter_mut() {
+            *c += per_cold;
+        }
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn four_apps() {
+        let names: Vec<&str> = all_apps().iter().map(|a| a.name).collect();
+        assert_eq!(names, vec!["BTree", "PageRank", "Graph500", "Silo"]);
+    }
+
+    #[test]
+    fn pagerank_hot_set_is_stable() {
+        let mut g = TraceGen::new(pagerank(), 1);
+        let before = g.hot_set().to_vec();
+        g.drift();
+        assert_eq!(g.hot_set(), &before[..]);
+    }
+
+    #[test]
+    fn graph500_hot_set_drifts() {
+        let mut g = TraceGen::new(graph500(), 1);
+        let before = g.hot_set().to_vec();
+        g.drift();
+        let moved = g
+            .hot_set()
+            .iter()
+            .zip(&before)
+            .filter(|(a, b)| a != b)
+            .count();
+        assert!(moved > before.len() / 10);
+    }
+
+    #[test]
+    fn clustered_apps_have_low_hot_pages() {
+        let g = TraceGen::new(silo(), 2);
+        let max = *g.hot_set().iter().max().unwrap() as usize;
+        assert!(max < WSS_PAGES / 10); // clustered at allocation order
+    }
+
+    #[test]
+    fn epoch_counts_conserve_accesses_roughly() {
+        let mut g = TraceGen::new(silo(), 3);
+        let counts = g.epoch_counts();
+        let total: u64 = counts.iter().map(|&c| c as u64).sum();
+        let expect = g.model.accesses_per_epoch as f64;
+        assert!((total as f64 - expect).abs() / expect < 0.05);
+    }
+
+    #[test]
+    fn hot_pages_hotter_than_cold() {
+        let mut g = TraceGen::new(pagerank(), 4);
+        let counts = g.epoch_counts();
+        let hot0 = g.hot_set()[0] as usize;
+        let cold = WSS_PAGES - 1; // clustered model: last page is cold
+        assert!(counts[hot0] > 20 * counts[cold].max(1));
+    }
+
+    #[test]
+    fn btree_is_near_uniform() {
+        let mut g = TraceGen::new(btree(), 5);
+        let counts = g.epoch_counts();
+        let mean = counts.iter().map(|&c| c as f64).sum::<f64>() / counts.len() as f64;
+        let hottest = *counts.iter().max().unwrap() as f64;
+        assert!(hottest < 40.0 * mean, "hottest={hottest} mean={mean}");
+    }
+}

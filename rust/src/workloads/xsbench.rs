@@ -1,0 +1,53 @@
+//! XSBench — Monte Carlo neutron-transport macroscopic cross-section
+//! lookup kernel (Table III row 7).
+//!
+//! Signature: repeated random trials; most accesses concentrate in a
+//! small, latency-sensitive index structure, while the large nuclide
+//! grids receive scattered random reads. This is why the paper finds
+//! LDRAM-preferred beats both uniform and object-level interleaving for
+//! XSBench (§V-B, OLI observation 2 discussion).
+
+use super::{HpcWorkload, WlObject};
+use crate::memsim::Pattern::{Random, Sequential};
+
+pub fn xsbench() -> HpcWorkload {
+    HpcWorkload {
+        name: "XSBench",
+        dwarf: "Monte Carlo",
+        characterization: "Computation based on repeated random trials",
+        input: "Extra large",
+        objects: vec![
+            // The big grids: large + most total accesses → OLI selects
+            // them (Table III's "nuclide grids")...
+            WlObject::new("nuclide_grids", 60.0, Random, 2.0, 0.45),
+            // ...but the hot set is a small latency-critical index
+            // (< 10% footprint, so OLI correctly does NOT interleave it —
+            // yet interleaving the grids still hurts the lookups).
+            WlObject::new("unionized_index", 9.0, Random, 6.0, 0.85),
+            WlObject::new("ws_rest", 47.0, Sequential, 0.2, 0.05),
+        ],
+        compute_ns_per_byte: 0.55,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::oli::select_bw_hungry;
+
+    #[test]
+    fn oli_selects_only_the_grids() {
+        let w = xsbench();
+        let specs: Vec<_> = w.objects.iter().map(|o| o.spec.clone()).collect();
+        let sel = select_bw_hungry(&specs);
+        assert_eq!(sel, vec![true, false, false]);
+    }
+
+    #[test]
+    fn hot_index_is_latency_critical() {
+        let w = xsbench();
+        let idx = &w.objects[1];
+        assert!(idx.spec.dep_frac > 0.8);
+        assert!((idx.spec.bytes as f64) < 0.1 * w.footprint_bytes() as f64);
+    }
+}
