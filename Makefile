@@ -1,0 +1,31 @@
+# cxlmem build/verify entry points.
+#
+# `make ci` is the PR gate: release build, tests (including the
+# golden-parity suite), a smoke run of the hot-path benchmarks, and a
+# formatting check. Mirrors .github/workflows/ci.yml.
+
+.PHONY: ci build test bench-smoke bench fmt-check exp-all
+
+ci: build test bench-smoke fmt-check
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+# Quick benchmark pass: verifies the suite runs and reports the
+# reference-vs-optimized trajectory without the full sampling budget.
+bench-smoke:
+	cargo bench --bench hotpath -- --smoke
+
+# Full benchmark pass; `cxlmem bench` additionally writes BENCH_hotpath.json.
+bench:
+	cargo bench --bench hotpath
+
+fmt-check:
+	cargo fmt --check
+
+# Regenerate every paper figure/table, in parallel.
+exp-all: build
+	./target/release/cxlmem exp all

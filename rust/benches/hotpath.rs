@@ -1,108 +1,42 @@
-//! Hot-path micro-benchmarks (`cargo bench --bench hotpath`) — the §Perf
-//! targets in EXPERIMENTS.md:
+//! Hot-path micro-benchmarks (`cargo bench --bench hotpath`, or the
+//! quick CI variant `cargo bench --bench hotpath -- --smoke`).
+//!
+//! The measurements live in `cxlmem::bench` (also exposed as the
+//! `cxlmem bench` subcommand, which writes `BENCH_hotpath.json`). Each
+//! hot path is timed through both the seed-semantics reference
+//! implementation and the optimized production path, so a single run
+//! shows the perf trajectory:
 //!
 //! - memsim traffic solver (every figure and the HPC engine sit on it)
 //! - engine::run (HPC workload evaluation)
 //! - tiering epoch (page-granular migration loop)
 //! - FlexGen policy search + throughput (serving control plane)
-//! - PJRT decode-attention call (the real L1 kernel on the request path)
+//! - full `exp all` wall clock, sequential reference vs parallel optimized
+//! - PJRT decode-attention / ADAM calls when artifacts are present
 
 use std::hint::black_box;
 use std::path::Path;
 
-use cxlmem::engine::{self, ObjectTraffic, RunConfig};
-use cxlmem::memsim::{topology, MemKind, Pattern, Stream};
-use cxlmem::tiering::{self, initial_state, SimConfig, Tiering08};
-use cxlmem::util::timer::Bencher;
-use cxlmem::workloads::npb;
-use cxlmem::workloads::tiering_apps::{pagerank, TraceGen};
+use cxlmem::bench::{run_suite, BenchOpts};
 
 fn main() {
-    let mut b = Bencher::default();
-    let sys = topology::system_a();
-    let ld = sys.node_of(0, MemKind::Ldram).unwrap();
-    let cxl = sys.node_of(0, MemKind::Cxl).unwrap();
-
-    // --- memsim solver ---
-    let streams = vec![
-        Stream {
-            socket: 0,
-            node_weights: vec![(ld, 0.5), (cxl, 0.5)],
-            pattern: Pattern::Sequential,
-            threads: 32.0,
-            delay_ns: 0.0,
-        },
-        Stream {
-            socket: 0,
-            node_weights: vec![(ld, 1.0)],
-            pattern: Pattern::Random,
-            threads: 16.0,
-            delay_ns: 0.0,
-        },
-    ];
-    b.bench("memsim/solve_traffic(2 streams)", || {
-        black_box(sys.solve_traffic(black_box(&streams)));
-    });
-
-    // --- engine ---
-    let wl = npb::by_name("MG").unwrap();
-    let objects: Vec<ObjectTraffic> = wl
-        .objects
-        .iter()
-        .map(|o| ObjectTraffic {
-            name: o.spec.name.clone(),
-            traffic_bytes: o.traffic_bytes(),
-            pattern: o.pattern,
-            dep_frac: o.spec.dep_frac,
-            node_weights: vec![(ld, 0.5), (cxl, 0.5)],
-        })
-        .collect();
-    let cfg = RunConfig {
-        socket: 0,
-        threads: 32,
-        compute_ns_per_byte: wl.compute_ns_per_byte,
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let opts = BenchOpts {
+        smoke,
+        ..BenchOpts::default()
     };
-    b.bench("engine/run(MG, 2-tier)", || {
-        black_box(engine::run(&sys, &cfg, black_box(&objects)));
-    });
-
-    // --- tiering epoch ---
-    b.bench("tiering/epoch(PageRank, t08, 65k pages)", || {
-        let mut state = initial_state(65_000, ld, cxl, 25_000, false);
-        let mut gen = TraceGen::new(pagerank(), 3);
-        let mut pol = Tiering08::default();
-        let cfg = SimConfig {
-            socket: 0,
-            threads: 64,
-            compute_ns_per_byte: 0.5,
-            epochs: 1,
-            seed: 3,
-        };
-        let run = tiering::simulate(
-            &sys,
-            &cfg,
-            &mut state,
-            &mut pol,
-            |_| gen.epoch_counts(),
-            |_| (Pattern::Random, 0.5),
-        );
-        black_box(run.total_s);
-    });
-
-    // --- FlexGen control plane ---
-    let gpu = cxlmem::gpu::Gpu::a10();
-    let icfg = cxlmem::llm::flexgen::InferCfg::paper(cxlmem::llm::model_cfg::llama_65b());
-    b.bench("flexgen/search+throughput", || {
-        let tiers = cxlmem::llm::flexgen::tiers_of(
-            &sys,
-            &[(MemKind::Ldram, 196e9), (MemKind::Cxl, 128e9)],
-        );
-        let pol = cxlmem::llm::flexgen::search_policy(&gpu, &icfg, &tiers);
-        black_box(cxlmem::llm::flexgen::throughput(&sys, &gpu, &icfg, &pol));
-    });
+    let report = run_suite(&opts);
+    println!();
+    print!("{}", report.summary());
 
     // --- PJRT request path (needs artifacts) ---
     if Path::new("artifacts/manifest.json").exists() {
+        let mut b = if smoke {
+            cxlmem::util::timer::Bencher::quick()
+        } else {
+            cxlmem::util::timer::Bencher::default()
+        };
         let mut rt = cxlmem::runtime::Runtime::new(Path::new("artifacts")).unwrap();
         let exe = rt.load("decode_attn").unwrap();
         let q = vec![0.1f32; exe.spec.inputs[0].elements()];

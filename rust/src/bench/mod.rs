@@ -1,0 +1,411 @@
+//! Hot-path benchmark suite behind `cxlmem bench` and
+//! `cargo bench --bench hotpath`.
+//!
+//! Each hot path is measured twice in the same process — once through
+//! the seed-semantics reference implementations
+//! ([`crate::perf::with_reference`]) and once through the optimized
+//! production paths — so every run records its own before/after
+//! trajectory. Results land in `BENCH_hotpath.json`:
+//!
+//! ```json
+//! {
+//!   "schema": "cxlmem-bench-v1",
+//!   "jobs": 8,
+//!   "smoke": false,
+//!   "hotpaths": [
+//!     {"name": "memsim/solve_traffic(2 streams)", "mode": "reference",
+//!      "median_ns": 0.0, "mean_ns": 0.0, "p95_ns": 0.0, "iters": 0}
+//!   ],
+//!   "wall": {"exp_all_reference_s": 0.0, "exp_all_optimized_s": 0.0},
+//!   "speedup": {"exp/all": 0.0, "tiering/epoch(PageRank, t08, 65k pages)": 0.0}
+//! }
+//! ```
+//!
+//! `hotpaths[*].mode` is `reference` (seed semantics, sequential),
+//! `optimized` (production path, memo cache off for the raw solver), or
+//! `memoized` (production path with the solve cache warm — the sweep
+//! case). `speedup` maps each hot path to reference/optimized median
+//! ratio; `exp/all` is the wall-clock ratio of the full 19-experiment
+//! suite, sequential reference vs `--jobs`-parallel optimized.
+//!
+//! One caveat on the tiering baseline: both modes share the
+//! geometric-skip fault sampler (required for decision parity), so the
+//! reference measurement *understates* the seed's true cost — the seed
+//! drew one RNG value per candidate page. Reported tiering speedups are
+//! therefore conservative.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::engine::{self, ObjectTraffic, RunConfig};
+use crate::exp;
+use crate::memsim::{topology, MemKind, Pattern, Stream, System};
+use crate::perf;
+use crate::tiering::{self, initial_state, SimConfig, Tiering08};
+use crate::util::json::Json;
+use crate::util::timer::{BenchResult, Bencher};
+use crate::workloads::npb;
+use crate::workloads::tiering_apps::{pagerank, TraceGen};
+
+/// Benchmark configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchOpts {
+    /// Short budgets for CI (`--smoke`).
+    pub smoke: bool,
+    /// Worker threads for the optimized `exp all` wall measurement.
+    pub jobs: usize,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        Self {
+            smoke: false,
+            jobs: perf::default_jobs(),
+        }
+    }
+}
+
+/// One measured hot path.
+#[derive(Clone, Debug)]
+pub struct HotpathResult {
+    pub result: BenchResult,
+    /// "reference" | "optimized" | "memoized"
+    pub mode: &'static str,
+}
+
+/// Everything one suite run measured.
+#[derive(Clone, Debug)]
+pub struct BenchReport {
+    pub hotpaths: Vec<HotpathResult>,
+    pub exp_all_reference_s: f64,
+    pub exp_all_optimized_s: f64,
+    pub speedups: Vec<(String, f64)>,
+    pub jobs: usize,
+    pub smoke: bool,
+}
+
+fn bencher(opts: &BenchOpts) -> Bencher {
+    if opts.smoke {
+        Bencher::quick()
+    } else {
+        Bencher::default()
+    }
+}
+
+const SOLVER_NAME: &str = "memsim/solve_traffic(2 streams)";
+const ENGINE_NAME: &str = "engine/run(MG, 2-tier)";
+const TIERING_NAME: &str = "tiering/epoch(PageRank, t08, 65k pages)";
+const FLEXGEN_NAME: &str = "flexgen/search+throughput";
+const EXP_ALL_NAME: &str = "exp/all";
+
+/// Run the full suite. Prints one line per measurement as it completes.
+pub fn run_suite(opts: &BenchOpts) -> BenchReport {
+    let prev_jobs = perf::current_jobs();
+    perf::set_jobs(1); // measurements themselves are single-threaded
+    let mut hotpaths = Vec::new();
+    let mut speedups = Vec::new();
+
+    let sys = topology::system_a();
+    let ld = sys.node_of(0, MemKind::Ldram).unwrap();
+    let cxl = sys.node_of(0, MemKind::Cxl).unwrap();
+
+    // --- memsim solver ---
+    let streams = vec![
+        Stream {
+            socket: 0,
+            node_weights: vec![(ld, 0.5), (cxl, 0.5)],
+            pattern: Pattern::Sequential,
+            threads: 32.0,
+            delay_ns: 0.0,
+        },
+        Stream {
+            socket: 0,
+            node_weights: vec![(ld, 1.0)],
+            pattern: Pattern::Random,
+            threads: 16.0,
+            delay_ns: 0.0,
+        },
+    ];
+    {
+        let mut b = bencher(opts);
+        perf::with_reference(|| {
+            b.bench(&format!("{SOLVER_NAME} [reference]"), || {
+                std::hint::black_box(sys.solve_traffic(std::hint::black_box(&streams)));
+            });
+        });
+        perf::without_memo(|| {
+            b.bench(&format!("{SOLVER_NAME} [optimized]"), || {
+                std::hint::black_box(sys.solve_traffic(std::hint::black_box(&streams)));
+            });
+        });
+        System::clear_solver_cache();
+        b.bench(&format!("{SOLVER_NAME} [memoized]"), || {
+            std::hint::black_box(sys.solve_traffic(std::hint::black_box(&streams)));
+        });
+        let rs = b.results();
+        speedups.push((SOLVER_NAME.to_string(), ratio(&rs[0], &rs[1])));
+        push_modes(&mut hotpaths, rs, &["reference", "optimized", "memoized"]);
+    }
+
+    // --- engine (no reference variant: the engine was already closed-form) ---
+    {
+        let wl = npb::by_name("MG").unwrap();
+        let objects: Vec<ObjectTraffic> = wl
+            .objects
+            .iter()
+            .map(|o| ObjectTraffic {
+                name: o.spec.name.clone(),
+                traffic_bytes: o.traffic_bytes(),
+                pattern: o.pattern,
+                dep_frac: o.spec.dep_frac,
+                node_weights: vec![(ld, 0.5), (cxl, 0.5)],
+            })
+            .collect();
+        let cfg = RunConfig {
+            socket: 0,
+            threads: 32,
+            compute_ns_per_byte: wl.compute_ns_per_byte,
+        };
+        let mut b = bencher(opts);
+        b.bench(&format!("{ENGINE_NAME} [optimized]"), || {
+            std::hint::black_box(engine::run(&sys, &cfg, std::hint::black_box(&objects)));
+        });
+        push_modes(&mut hotpaths, b.results(), &["optimized"]);
+    }
+
+    // --- tiering epoch ---
+    {
+        // Pre-generate the trace so the measurement is the epoch cost
+        // given the histogram, not the histogram generator.
+        let pages = if opts.smoke { 16_000 } else { 65_000 };
+        let fast_cap = if opts.smoke { 6_000 } else { 25_000 };
+        let mut app = pagerank();
+        app.pages = pages;
+        let mut gen = TraceGen::new(app, 3);
+        let epochs: Vec<Vec<u32>> = (0..4)
+            .map(|_| {
+                let c = gen.epoch_counts();
+                gen.drift();
+                c
+            })
+            .collect();
+        let cfg = SimConfig {
+            socket: 0,
+            threads: 64,
+            compute_ns_per_byte: 0.5,
+            epochs: 1,
+            seed: 3,
+        };
+        let mut b = bencher(opts);
+        let mut measure = |b: &mut Bencher, label: String| {
+            // Fresh state + policy per iteration (as the seed bench did):
+            // every timed epoch exercises the migration-heavy first-epoch
+            // path — budget-limited promotion with victim selection over
+            // the full fast tier — not a settled steady state.
+            let mut e = 0usize;
+            b.bench(&label, || {
+                let mut state = initial_state(pages, ld, cxl, fast_cap, false);
+                let mut pol = Tiering08::default();
+                let c = &epochs[e % epochs.len()];
+                e += 1;
+                let run = tiering::simulate(
+                    &sys,
+                    &cfg,
+                    &mut state,
+                    &mut pol,
+                    |_| c.clone(),
+                    |_| (Pattern::Random, 0.5),
+                );
+                std::hint::black_box(run.total_s);
+            });
+        };
+        let name = if opts.smoke {
+            "tiering/epoch(PageRank, t08, 16k pages)".to_string()
+        } else {
+            TIERING_NAME.to_string()
+        };
+        perf::with_reference(|| measure(&mut b, format!("{name} [reference]")));
+        measure(&mut b, format!("{name} [optimized]"));
+        let rs = b.results();
+        speedups.push((name, ratio(&rs[0], &rs[1])));
+        push_modes(&mut hotpaths, rs, &["reference", "optimized"]);
+    }
+
+    // --- FlexGen control plane (policy search over the solver) ---
+    {
+        let gpu = crate::gpu::Gpu::a10();
+        let icfg = crate::llm::flexgen::InferCfg::paper(crate::llm::model_cfg::llama_65b());
+        let mut b = bencher(opts);
+        let mut measure = |b: &mut Bencher, label: &str| {
+            b.bench(label, || {
+                let tiers = crate::llm::flexgen::tiers_of(
+                    &sys,
+                    &[(MemKind::Ldram, 196e9), (MemKind::Cxl, 128e9)],
+                );
+                let pol = crate::llm::flexgen::search_policy(&gpu, &icfg, &tiers);
+                std::hint::black_box(crate::llm::flexgen::throughput(&sys, &gpu, &icfg, &pol));
+            });
+        };
+        perf::with_reference(|| measure(&mut b, &format!("{FLEXGEN_NAME} [reference]")));
+        // Memo off: "optimized" means the raw production path, matching
+        // the schema doc — repeated identical searches would otherwise
+        // reduce to cache lookups.
+        perf::without_memo(|| measure(&mut b, &format!("{FLEXGEN_NAME} [optimized]")));
+        let rs = b.results();
+        speedups.push((FLEXGEN_NAME.to_string(), ratio(&rs[0], &rs[1])));
+        push_modes(&mut hotpaths, rs, &["reference", "optimized"]);
+    }
+
+    // --- exp all wall clock: sequential reference vs parallel optimized ---
+    let t0 = Instant::now();
+    perf::with_reference(|| {
+        exp::run_all(exp::ALL, 1).expect("exp all (reference) failed");
+    });
+    let exp_all_reference_s = t0.elapsed().as_secs_f64();
+    println!("exp/all [reference, jobs=1]: {exp_all_reference_s:.2} s");
+
+    System::clear_solver_cache();
+    let t0 = Instant::now();
+    exp::run_all(exp::ALL, opts.jobs).expect("exp all (optimized) failed");
+    let exp_all_optimized_s = t0.elapsed().as_secs_f64();
+    println!(
+        "exp/all [optimized, jobs={}]: {exp_all_optimized_s:.2} s",
+        opts.jobs
+    );
+    speedups.push((
+        EXP_ALL_NAME.to_string(),
+        exp_all_reference_s / exp_all_optimized_s.max(1e-12),
+    ));
+
+    perf::set_jobs(prev_jobs);
+    BenchReport {
+        hotpaths,
+        exp_all_reference_s,
+        exp_all_optimized_s,
+        speedups,
+        jobs: opts.jobs,
+        smoke: opts.smoke,
+    }
+}
+
+fn ratio(reference: &BenchResult, optimized: &BenchResult) -> f64 {
+    reference.median_ns / optimized.median_ns.max(1e-9)
+}
+
+fn push_modes(out: &mut Vec<HotpathResult>, results: &[BenchResult], modes: &[&'static str]) {
+    let start = results.len() - modes.len();
+    for (r, &mode) in results[start..].iter().zip(modes) {
+        out.push(HotpathResult {
+            result: r.clone(),
+            mode,
+        });
+    }
+}
+
+impl BenchReport {
+    /// Render as the `BENCH_hotpath.json` document.
+    pub fn to_json(&self) -> Json {
+        let hotpaths = Json::arr(self.hotpaths.iter().map(|h| {
+            Json::obj(vec![
+                ("name", strip_mode_suffix(&h.result.name).into()),
+                ("mode", h.mode.into()),
+                ("median_ns", h.result.median_ns.into()),
+                ("mean_ns", h.result.mean_ns.into()),
+                ("p95_ns", h.result.p95_ns.into()),
+                ("iters", h.result.iters.into()),
+            ])
+        }));
+        let speedup = Json::Obj(
+            self.speedups
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                .collect(),
+        );
+        Json::obj(vec![
+            ("schema", "cxlmem-bench-v1".into()),
+            ("jobs", self.jobs.into()),
+            ("smoke", self.smoke.into()),
+            ("hotpaths", hotpaths),
+            (
+                "wall",
+                Json::obj(vec![
+                    ("exp_all_reference_s", self.exp_all_reference_s.into()),
+                    ("exp_all_optimized_s", self.exp_all_optimized_s.into()),
+                ]),
+            ),
+            ("speedup", speedup),
+        ])
+    }
+
+    /// Write `BENCH_hotpath.json`.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    /// Human summary of the speedup column.
+    pub fn summary(&self) -> String {
+        let mut out = String::new();
+        for (name, s) in &self.speedups {
+            out.push_str(&format!("{name:<44} speedup {s:>7.2}x\n"));
+        }
+        out
+    }
+}
+
+fn strip_mode_suffix(name: &str) -> String {
+    match name.rfind(" [") {
+        Some(i) => name[..i].to_string(),
+        None => name.to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_schema_shape() {
+        let report = BenchReport {
+            hotpaths: vec![HotpathResult {
+                result: BenchResult {
+                    name: format!("{SOLVER_NAME} [optimized]"),
+                    iters: 10,
+                    mean_ns: 2.0,
+                    median_ns: 1.5,
+                    p95_ns: 3.0,
+                    stddev_ns: 0.1,
+                },
+                mode: "optimized",
+            }],
+            exp_all_reference_s: 4.0,
+            exp_all_optimized_s: 1.0,
+            speedups: vec![(EXP_ALL_NAME.to_string(), 4.0)],
+            jobs: 2,
+            smoke: true,
+        };
+        let j = report.to_json();
+        assert_eq!(j.get("schema").unwrap().as_str(), Some("cxlmem-bench-v1"));
+        assert_eq!(j.get("jobs").unwrap().as_u64(), Some(2));
+        let hp = j.get("hotpaths").unwrap().as_arr().unwrap();
+        assert_eq!(hp[0].get("name").unwrap().as_str(), Some(SOLVER_NAME));
+        assert_eq!(hp[0].get("mode").unwrap().as_str(), Some("optimized"));
+        let wall = j.get("wall").unwrap();
+        assert_eq!(wall.get("exp_all_reference_s").unwrap().as_f64(), Some(4.0));
+        assert_eq!(
+            j.get("speedup").unwrap().get(EXP_ALL_NAME).unwrap().as_f64(),
+            Some(4.0)
+        );
+        // Round-trips through the parser.
+        let text = j.to_string();
+        assert_eq!(Json::parse(&text).unwrap(), j);
+    }
+
+    #[test]
+    fn strip_suffix() {
+        assert_eq!(strip_mode_suffix("a/b [reference]"), "a/b");
+        assert_eq!(strip_mode_suffix("plain"), "plain");
+    }
+}

@@ -65,13 +65,12 @@ pub fn fig3() -> Report {
             &format!("Fig 3 — bandwidth (GB/s) vs threads, system {}", sys.name),
             &["threads", "LDRAM", "RDRAM", "CXL"],
         );
-        let sweeps: Vec<Vec<mlc::BwPoint>> = TIERS
-            .iter()
-            .map(|&k| {
+        // Independent per-tier scans: fan out when --jobs allows.
+        let sweeps: Vec<Vec<mlc::BwPoint>> =
+            crate::util::par::par_map_auto(&TIERS[..], |&k| {
                 let node = sys.node_of(socket, k).unwrap();
                 mlc::bw_scaling_sweep(&sys, socket, node, Pattern::Sequential, max_t)
-            })
-            .collect();
+            });
         for ti in [1, 2, 4, 6, 8, 12, 16, 20, 24, 28, 32, 40, 48, 52] {
             if ti > max_t {
                 break;
@@ -110,13 +109,11 @@ pub fn fig4() -> Report {
             ],
         );
         let grid = mlc::mlc_delay_grid();
-        let sweeps: Vec<Vec<mlc::LoadPoint>> = TIERS
-            .iter()
-            .map(|&k| {
+        let sweeps: Vec<Vec<mlc::LoadPoint>> =
+            crate::util::par::par_map_auto(&TIERS[..], |&k| {
                 let node = sys.node_of(socket, k).unwrap();
                 mlc::loaded_latency_sweep(&sys, socket, node, Pattern::Sequential, 32, &grid)
-            })
-            .collect();
+            });
         for i in 0..grid.len() {
             t.row(vec![
                 format!("{:.0}", sweeps[0][i].delay_ns),

@@ -13,6 +13,7 @@ pub mod tiering_exp;
 use anyhow::{anyhow, Result};
 
 use crate::report::Report;
+use crate::util::par::par_map;
 
 /// All experiment ids, in paper order.
 pub const ALL: &[&str] = &[
@@ -46,6 +47,21 @@ pub fn run(id: &str) -> Result<Report> {
     })
 }
 
+/// Run a set of experiments concurrently on up to `jobs` OS threads
+/// (scoped; no work survives the call). Reports come back in input
+/// order. Experiment drivers only share thread-local state (solver
+/// scratch + memo cache), so each worker is fully independent; every
+/// table is identical to a sequential run. Worker-internal sweeps run
+/// with inner parallelism pinned to 1 — outer × inner oversubscription
+/// never happens.
+pub fn run_all(ids: &[&str], jobs: usize) -> Result<Vec<(String, Report)>> {
+    let results = par_map(ids, jobs, |&id| (id.to_string(), run(id)));
+    results
+        .into_iter()
+        .map(|(id, r)| r.map(|rep| (id, rep)))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -65,5 +81,30 @@ mod tests {
     #[test]
     fn unknown_id_errors() {
         assert!(run("fig99").is_err());
+    }
+
+    #[test]
+    fn run_all_parallel_matches_sequential() {
+        // A cheap subset: parallel execution must reproduce the exact
+        // tables a sequential run produces, in input order.
+        let ids = ["table1", "fig2", "fig6"];
+        let par = run_all(&ids, 3).unwrap();
+        for (id, report) in &par {
+            let seq = run(id).unwrap();
+            assert_eq!(report.tables.len(), seq.tables.len(), "{id}");
+            for (a, b) in report.tables.iter().zip(&seq.tables) {
+                assert_eq!(a.title, b.title);
+                assert_eq!(a.rows, b.rows, "{id}");
+            }
+        }
+        assert_eq!(
+            par.iter().map(|(id, _)| id.as_str()).collect::<Vec<_>>(),
+            ids.to_vec()
+        );
+    }
+
+    #[test]
+    fn run_all_surfaces_errors() {
+        assert!(run_all(&["table1", "fig99"], 2).is_err());
     }
 }

@@ -129,7 +129,7 @@ pub fn fig17() -> Report {
                 for (oi, &n) in pages_per_obj.iter().enumerate() {
                     obj_of.extend(std::iter::repeat(oi as u32).take(n));
                 }
-                state.object = obj_of;
+                state.set_objects(obj_of);
 
                 // per-epoch counts: uniform scan of each object scaled by
                 // its traffic (accesses in cache lines / page).
@@ -206,15 +206,7 @@ fn oli_state(
             }
         }
     }
-    PageState {
-        node,
-        migratable,
-        object: vec![0; total],
-        fast_node: ld,
-        fast_capacity: fast_cap,
-        slow_node: cxl,
-        last_counts: vec![0; total],
-    }
+    PageState::new(node, migratable, vec![0; total], ld, fast_cap, cxl)
 }
 
 #[cfg(test)]

@@ -16,12 +16,14 @@
 //! - L1 (`python/compile/kernels/`): Pallas kernels (fused ADAM, decode
 //!   attention, tiled matmul), lowered with `interpret=True`.
 
+pub mod bench;
 pub mod engine;
 pub mod exp;
 pub mod gpu;
 pub mod llm;
 pub mod mem;
 pub mod memsim;
+pub mod perf;
 pub mod probes;
 pub mod report;
 pub mod runtime;

@@ -1,10 +1,11 @@
 //! cxlmem CLI — leader entrypoint.
 //!
 //! ```text
-//! cxlmem exp <id|all> [--csv|--json] [--out FILE]   regenerate a paper figure/table
-//! cxlmem train [--steps N] [--seed S]               E2E training through the PJRT artifact
-//! cxlmem serve [--requests N]                       FlexGen-style serving demo
-//! cxlmem info                                       platform + artifact status
+//! cxlmem exp <id|all> [--csv|--json] [--out FILE] [--jobs N]  regenerate a paper figure/table
+//! cxlmem bench [--smoke] [--jobs N] [--out FILE]              hot-path benchmarks → BENCH_hotpath.json
+//! cxlmem train [--steps N] [--seed S]                         E2E training through the PJRT artifact
+//! cxlmem serve [--requests N]                                 FlexGen-style serving demo
+//! cxlmem info                                                 platform + artifact status
 //! ```
 
 use anyhow::Result;
@@ -17,6 +18,7 @@ fn main() -> Result<()> {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "exp" => cmd_exp(&args),
+        "bench" => cmd_bench(&args),
         "train" => cxlmem::exp::drivers::train(&args),
         "serve" => cxlmem::exp::drivers::serve(&args),
         "info" => cmd_info(),
@@ -40,20 +42,53 @@ fn cmd_exp(args: &Args) -> Result<()> {
     } else {
         Format::Text
     };
-    let ids: Vec<&str> = if id == "all" {
-        cxlmem::exp::ALL.to_vec()
-    } else {
-        vec![id]
-    };
-    for id in ids {
-        let report = cxlmem::exp::run(id)?;
+    // `exp all` fans the 19 experiments out over --jobs threads (default:
+    // all cores); a single experiment instead uses --jobs for its inner
+    // sweeps (default: 1, fully deterministic timing either way — the
+    // tables are identical to a sequential run).
+    if id == "all" {
+        let jobs = args.get_usize("jobs", cxlmem::perf::default_jobs());
+        let reports = cxlmem::exp::run_all(cxlmem::exp::ALL, jobs)?;
         if let Some(path) = args.get("out") {
-            report.save(std::path::Path::new(path), fmt)?;
+            let body: Vec<String> = reports.iter().map(|(_, r)| r.render(fmt)).collect();
+            // Text/CSV concatenate; JSON documents must be wrapped in an
+            // array to stay parseable as one file.
+            let doc = if fmt == Format::Json {
+                format!("[{}]", body.join(","))
+            } else {
+                body.join("\n")
+            };
+            std::fs::write(path, doc)?;
             println!("wrote {path}");
         } else {
-            report.print(fmt);
+            for (_, report) in &reports {
+                report.print(fmt);
+            }
         }
+        return Ok(());
     }
+    let jobs = args.get_usize("jobs", 1);
+    cxlmem::perf::set_jobs(jobs);
+    let report = cxlmem::exp::run(id)?;
+    if let Some(path) = args.get("out") {
+        report.save(std::path::Path::new(path), fmt)?;
+        println!("wrote {path}");
+    } else {
+        report.print(fmt);
+    }
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let opts = cxlmem::bench::BenchOpts {
+        smoke: args.flag("smoke"),
+        jobs: args.get_usize("jobs", cxlmem::perf::default_jobs()),
+    };
+    let report = cxlmem::bench::run_suite(&opts);
+    print!("{}", report.summary());
+    let out = args.get_or("out", "BENCH_hotpath.json");
+    report.save(std::path::Path::new(out))?;
+    println!("wrote {out}");
     Ok(())
 }
 
@@ -82,7 +117,8 @@ fn print_help() {
         "cxlmem — 'Exploring and Evaluating Real-world CXL' reproduction\n\
          \n\
          USAGE:\n\
-         \x20 cxlmem exp <id|all> [--csv|--json] [--out FILE]\n\
+         \x20 cxlmem exp <id|all> [--csv|--json] [--out FILE] [--jobs N]\n\
+         \x20 cxlmem bench [--smoke] [--jobs N] [--out FILE]\n\
          \x20 cxlmem train [--steps N] [--seed S] [--log-every K]\n\
          \x20 cxlmem serve [--requests N]\n\
          \x20 cxlmem info\n\

@@ -32,14 +32,18 @@ impl DataObject {
     }
 
     /// Fraction of this object's pages on each node (access weights for a
-    /// uniform scan of the object).
-    pub fn node_weights(&self) -> Vec<(NodeId, f64)> {
+    /// uniform scan of the object). `n_nodes` sizes the count buffer — pass
+    /// the system's node count; placements beyond it still work (the
+    /// buffer grows on demand), so no separate max() pass is needed.
+    pub fn node_weights_in(&self, n_nodes: usize) -> Vec<(NodeId, f64)> {
         if self.placement.is_empty() {
             return Vec::new();
         }
-        let max_node = *self.placement.iter().max().unwrap();
-        let mut counts = vec![0u64; max_node + 1];
+        let mut counts = vec![0u64; n_nodes];
         for &n in &self.placement {
+            if n >= counts.len() {
+                counts.resize(n + 1, 0);
+            }
             counts[n] += 1;
         }
         let total = self.placement.len() as f64;
@@ -49,6 +53,12 @@ impl DataObject {
             .filter(|&(_, c)| c > 0)
             .map(|(n, c)| (n, c as f64 / total))
             .collect()
+    }
+
+    /// [`DataObject::node_weights_in`] without a known node count (sizes
+    /// the buffer on demand in the same single pass).
+    pub fn node_weights(&self) -> Vec<(NodeId, f64)> {
+        self.node_weights_in(0)
     }
 
     pub fn pages_on(&self, node: NodeId) -> u64 {
@@ -166,12 +176,15 @@ impl AddressSpace {
         Ok(self.objects.len() - 1)
     }
 
-    /// Free an object's pages back to the zones.
+    /// Free an object's pages back to the zones. Also zeroes the object's
+    /// `bytes` so accounting queries ([`AddressSpace::total_bytes`]) no
+    /// longer count freed objects.
     pub fn free(&mut self, phys: &mut PhysMem, id: ObjectId) {
         for &n in &self.objects[id].placement {
             phys.free(n);
         }
         self.objects[id].placement.clear();
+        self.objects[id].bytes = 0;
     }
 
     pub fn object(&self, id: ObjectId) -> &DataObject {
@@ -354,5 +367,44 @@ mod tests {
         assert_eq!(phys.total_used(), before + 8);
         asp.free(&mut phys, id);
         assert_eq!(phys.total_used(), before);
+    }
+
+    #[test]
+    fn free_zeroes_accounting() {
+        // Regression: freeing cleared `placement` but left `bytes`, so
+        // total_bytes() kept counting freed objects.
+        let (sys, mut phys, mut asp) = setup();
+        let a = asp
+            .alloc(&sys, &mut phys, 0, "a", 8 * PAGE_BYTES, Policy::FirstTouch)
+            .unwrap();
+        let _b = asp
+            .alloc(&sys, &mut phys, 0, "b", 4 * PAGE_BYTES, Policy::FirstTouch)
+            .unwrap();
+        assert_eq!(asp.total_bytes(), 12 * PAGE_BYTES);
+        asp.free(&mut phys, a);
+        assert_eq!(asp.total_bytes(), 4 * PAGE_BYTES);
+        assert_eq!(asp.object(a).pages(), 0);
+    }
+
+    #[test]
+    fn node_weights_in_matches_unsized_and_handles_small_hint() {
+        let (sys, mut phys, mut asp) = setup();
+        let id = asp
+            .alloc(
+                &sys,
+                &mut phys,
+                0,
+                "nw",
+                64 * PAGE_BYTES,
+                policy::interleave_all(&sys, 0),
+            )
+            .unwrap();
+        let obj = asp.object(id);
+        let sized = obj.node_weights_in(sys.nodes.len());
+        assert_eq!(sized, obj.node_weights());
+        // An undersized hint must still be correct (buffer grows).
+        assert_eq!(obj.node_weights_in(1), sized);
+        let w: f64 = sized.iter().map(|&(_, w)| w).sum();
+        assert!((w - 1.0).abs() < 1e-12);
     }
 }

@@ -5,6 +5,24 @@
 //! The solver is the analytical heart of the reproduction: every figure in
 //! §III (Figs 2–4), the HPC engine (§V) and the LLM transfer model (§IV)
 //! are built on `solve_traffic`.
+//!
+//! Two implementations coexist:
+//!
+//! - [`System::solve_traffic`] — the production path: loop-invariant
+//!   per-(stream, node) quantities (hop latencies, issue rates, caps,
+//!   concentrated flags) are hoisted into a reusable thread-local
+//!   [`SolverScratch`], the damped fixed-point iteration adapts its step
+//!   size and exits on a residual test, and solutions are memoized on the
+//!   exact (system, stream-set) descriptor so sweeps that re-pose the
+//!   same scenario (Fig 3/4 grids, saturation searches, FlexGen policy
+//!   search) reuse them.
+//! - [`System::solve_traffic_reference`] — the seed's fixed-damping loop,
+//!   kept verbatim as the golden-parity oracle and the `cxlmem bench`
+//!   baseline. [`crate::perf::with_reference`] routes `solve_traffic`
+//!   here for before/after measurements.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
 
 use super::device::{MemDevice, MemKind, Pattern, LINE, RHO_MAX};
 use super::link::{Link, Path};
@@ -72,6 +90,87 @@ pub struct TrafficSolution {
     pub node_bw_gbs: Vec<f64>,
 }
 
+/// One precomputed (stream, node) interaction: everything about the pair
+/// that does not change across solver iterations.
+#[derive(Clone, Copy, Debug, Default)]
+struct Touch {
+    node: usize,
+    /// Access weight (only weights > 0 are materialized).
+    w: f64,
+    /// Multiplier on the node's queueing delay in the stream's latency:
+    /// `w * concentrated_rand_factor` for concentrated random streams,
+    /// plain `w` otherwise.
+    lat_coeff: f64,
+    /// Constant latency contribution: `lat_coeff * idle + w * hop`.
+    lat_base: f64,
+    /// Node queue model parameters, copied out of the device.
+    queue_ns: f64,
+    queue_cap_ns: f64,
+}
+
+/// Per-stream hoisted issue model.
+#[derive(Clone, Copy, Debug)]
+enum IssueModel {
+    /// Sequential streams are issue-rate-bound: offered bandwidth is a
+    /// constant, independent of latency.
+    Seq { demand: f64 },
+    /// Random streams are latency-bound: `coeff / (delay + lat)`.
+    Rand { coeff: f64, delay: f64 },
+}
+
+/// Reusable solver workspace: one per thread, allocation-free after the
+/// first solve of a given size.
+#[derive(Default)]
+pub struct SolverScratch {
+    touches: Vec<Touch>,
+    /// Offsets into `touches`, one per stream plus a final sentinel.
+    touch_start: Vec<usize>,
+    issue: Vec<IssueModel>,
+    caps: Vec<f64>,
+    cap_rho: Vec<f64>,
+    rho: Vec<f64>,
+    d_i: Vec<f64>,
+    b_i: Vec<f64>,
+    target: Vec<f64>,
+    demand: Vec<f64>,
+    served: Vec<f64>,
+    lat_out: Vec<f64>,
+}
+
+/// Memoization key: the exact stream descriptors (bit-level, so a cache
+/// hit is guaranteed to be the very same scenario) plus a fingerprint of
+/// the system calibration.
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct MemoStream {
+    socket: usize,
+    sequential: bool,
+    threads_bits: u64,
+    delay_bits: u64,
+    weights: Vec<(usize, u64)>,
+}
+
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct MemoKey {
+    fingerprint: u64,
+    streams: Vec<MemoStream>,
+}
+
+/// Bound on cached solutions per thread before the cache is reset.
+const MEMO_CAP: usize = 8192;
+
+thread_local! {
+    static SCRATCH: RefCell<SolverScratch> = RefCell::new(SolverScratch::default());
+    static MEMO: RefCell<HashMap<MemoKey, TrafficSolution>> = RefCell::new(HashMap::new());
+}
+
+#[inline]
+fn fnv1a(h: &mut u64, x: u64) {
+    for b in x.to_le_bytes() {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(0x100_0000_01b3);
+    }
+}
+
 impl System {
     /// Nodes of a given kind visible from `socket` (e.g. "the LDRAM node").
     pub fn node_of(&self, socket: usize, kind: MemKind) -> Option<NodeId> {
@@ -113,6 +212,27 @@ impl System {
         p
     }
 
+    /// Hop latency of [`System::path`] without materializing the path
+    /// (the solver's per-iteration paths are all 0-or-1 fabric hops).
+    #[inline]
+    fn hop_ns(&self, socket: usize, node: NodeId) -> f64 {
+        if self.nodes[node].socket != socket {
+            self.fabric.hop_ns
+        } else {
+            0.0
+        }
+    }
+
+    /// Bandwidth clamp of [`System::path`] without materializing it.
+    #[inline]
+    fn hop_bw_gbs(&self, socket: usize, node: NodeId) -> f64 {
+        if self.nodes[node].socket != socket {
+            self.fabric.bw_gbs
+        } else {
+            f64::INFINITY
+        }
+    }
+
     /// Unloaded latency from `socket` to `node` (Fig 2's quantity).
     pub fn idle_latency(&self, socket: usize, node: NodeId, pattern: Pattern) -> f64 {
         self.nodes[node].device.idle.get(pattern) + self.path(socket, node).latency_ns()
@@ -139,7 +259,55 @@ impl System {
     ///    bandwidth never exceeds RHO_MAX · cap_i *inside* the loop —
     ///    which keeps the solution monotone in thread count.
     /// 4. lat_s from ρ via each device's bounded-queue latency model.
+    ///
+    /// This entry point dispatches to the adaptive, workspace-backed,
+    /// memoized implementation; under [`crate::perf::with_reference`] it
+    /// runs the seed's fixed-damping loop instead.
     pub fn solve_traffic(&self, streams: &[Stream]) -> TrafficSolution {
+        if crate::perf::reference_enabled() {
+            return self.solve_traffic_reference(streams);
+        }
+        if !crate::perf::memo_enabled() {
+            return SCRATCH.with(|s| self.solve_adaptive(streams, &mut s.borrow_mut()));
+        }
+        let key = self.memo_key(streams);
+        if let Some(hit) = MEMO.with(|c| c.borrow().get(&key).cloned()) {
+            return hit;
+        }
+        let sol = SCRATCH.with(|s| self.solve_adaptive(streams, &mut s.borrow_mut()));
+        MEMO.with(|c| {
+            let mut cache = c.borrow_mut();
+            if cache.len() >= MEMO_CAP {
+                cache.clear();
+            }
+            cache.insert(key, sol.clone());
+        });
+        sol
+    }
+
+    /// The seed's solver, kept verbatim: fixed 0.35 damping, damped-delta
+    /// exit at 1e-7 after 10 iterations, 400-iteration cap, per-iteration
+    /// allocation. Serves as the `cxlmem bench` baseline and the loose
+    /// end of the golden-parity comparison.
+    pub fn solve_traffic_reference(&self, streams: &[Stream]) -> TrafficSolution {
+        self.solve_reference_inner(streams, 1e-7, 10, 400)
+    }
+
+    /// The reference iteration run to a much tighter exit (damped delta
+    /// 1e-12), leaving it within ~1e-11 of the true fixed point — the
+    /// strict oracle the golden-parity tests compare the adaptive solver
+    /// against.
+    pub fn solve_traffic_converged_reference(&self, streams: &[Stream]) -> TrafficSolution {
+        self.solve_reference_inner(streams, 1e-12, 10, 4000)
+    }
+
+    fn solve_reference_inner(
+        &self,
+        streams: &[Stream],
+        exit_delta: f64,
+        min_iters: usize,
+        max_iters: usize,
+    ) -> TrafficSolution {
         let nn = self.nodes.len();
         let caps: Vec<f64> = (0..nn).map(|i| self.node_cap(i, streams)).collect();
         let mut rho = vec![0.0f64; nn];
@@ -147,7 +315,7 @@ impl System {
         let mut lat_out = vec![0.0f64; streams.len()];
         let mut node_bw = vec![0.0f64; nn];
 
-        for iter in 0..400 {
+        for iter in 0..max_iters {
             // 1. unthrottled demand under current utilization estimate
             let mut demand: Vec<f64> = Vec::with_capacity(streams.len());
             for (si, s) in streams.iter().enumerate() {
@@ -196,7 +364,7 @@ impl System {
             }
             stream_bw = served;
             node_bw = b_i;
-            if max_delta < 1e-7 && iter > 10 {
+            if max_delta < exit_delta && iter > min_iters {
                 break;
             }
         }
@@ -213,6 +381,255 @@ impl System {
             node_rho: rho,
             node_bw_gbs: node_bw,
         }
+    }
+
+    /// Hoist every loop-invariant (stream, node) quantity into `ws`.
+    fn prepare_workspace(&self, streams: &[Stream], ws: &mut SolverScratch) {
+        let nn = self.nodes.len();
+        ws.touches.clear();
+        ws.touch_start.clear();
+        ws.issue.clear();
+
+        ws.caps.clear();
+        ws.caps.extend(self.nodes.iter().map(|n| n.device.peak_bw_gbs));
+        for s in streams {
+            for &(node, w) in &s.node_weights {
+                if w > 0.0 {
+                    let clamp = self.hop_bw_gbs(s.socket, node);
+                    if clamp < ws.caps[node] {
+                        ws.caps[node] = clamp;
+                    }
+                }
+            }
+        }
+        ws.cap_rho.clear();
+        ws.cap_rho.extend(ws.caps.iter().map(|&c| c * RHO_MAX));
+
+        for s in streams {
+            ws.touch_start.push(ws.touches.len());
+            let concentrated = s
+                .node_weights
+                .iter()
+                .filter(|&&(_, w)| w > 1e-9)
+                .count()
+                <= 1;
+            for &(node, w) in &s.node_weights {
+                if w <= 0.0 {
+                    continue;
+                }
+                let dev = &self.nodes[node].device;
+                let hop = self.hop_ns(s.socket, node);
+                // HPC observation 3: a *concentrated* random stream on one
+                // node benefits from row-buffer locality / device caching.
+                let factor = if s.pattern == Pattern::Random && concentrated {
+                    dev.concentrated_rand_factor
+                } else {
+                    1.0
+                };
+                let lat_coeff = w * factor;
+                ws.touches.push(Touch {
+                    node,
+                    w,
+                    lat_coeff,
+                    lat_base: lat_coeff * dev.idle.get(s.pattern) + w * hop,
+                    queue_ns: dev.queue_ns,
+                    queue_cap_ns: dev.queue_cap_ns,
+                });
+            }
+            ws.issue.push(match s.pattern {
+                Pattern::Sequential => {
+                    // Average per-line issue time across the node mix —
+                    // latency-independent, so the offered bandwidth is a
+                    // per-call constant.
+                    let mut t_line = s.delay_ns;
+                    for &(node, w) in &s.node_weights {
+                        if w <= 0.0 {
+                            continue;
+                        }
+                        let dev = &self.nodes[node].device;
+                        let hop = self.hop_ns(s.socket, node);
+                        let rate =
+                            dev.stream_rate_gbs * dev.idle.seq_ns / (dev.idle.seq_ns + hop);
+                        t_line += w * LINE / rate;
+                    }
+                    IssueModel::Seq {
+                        demand: s.threads * LINE / t_line,
+                    }
+                }
+                Pattern::Random => {
+                    let mut mlp = 0.0;
+                    for &(node, w) in &s.node_weights {
+                        mlp += w * self.nodes[node].device.mlp_rand;
+                    }
+                    IssueModel::Rand {
+                        coeff: s.threads * mlp * LINE,
+                        delay: s.delay_ns,
+                    }
+                }
+            });
+        }
+        ws.touch_start.push(ws.touches.len());
+
+        ws.rho.clear();
+        ws.rho.resize(nn, 0.0);
+        ws.d_i.clear();
+        ws.d_i.resize(nn, 0.0);
+        ws.b_i.clear();
+        ws.b_i.resize(nn, 0.0);
+        ws.target.clear();
+        ws.target.resize(nn, 0.0);
+        ws.demand.clear();
+        ws.demand.resize(streams.len(), 0.0);
+        ws.served.clear();
+        ws.served.resize(streams.len(), 0.0);
+        ws.lat_out.clear();
+        ws.lat_out.resize(streams.len(), 0.0);
+    }
+
+    /// The production fixed-point iteration: same update map as the
+    /// reference, but allocation-free, with hoisted invariants, an
+    /// adaptive damping factor, and a residual-based convergence exit
+    /// (max |target − ρ| < 1e-10) that leaves the answer strictly closer
+    /// to the fixed point than the reference's exit does.
+    fn solve_adaptive(&self, streams: &[Stream], ws: &mut SolverScratch) -> TrafficSolution {
+        let nn = self.nodes.len();
+        self.prepare_workspace(streams, ws);
+
+        let mut alpha = 0.35f64;
+        let mut prev_residual = f64::INFINITY;
+        for iter in 0..600 {
+            // 1. per-stream latency + offered demand under current rho
+            for si in 0..streams.len() {
+                let mut lat = 0.0;
+                for t in &ws.touches[ws.touch_start[si]..ws.touch_start[si + 1]] {
+                    let rho = ws.rho[t.node].clamp(0.0, RHO_MAX);
+                    let q = (t.queue_ns * rho / (1.0 - rho)).min(t.queue_cap_ns);
+                    lat += t.lat_base + t.lat_coeff * q;
+                }
+                ws.lat_out[si] = lat;
+                ws.demand[si] = match ws.issue[si] {
+                    IssueModel::Seq { demand } => demand,
+                    IssueModel::Rand { coeff, delay } => coeff / (delay + lat),
+                };
+            }
+            // 2. node demand
+            for d in ws.d_i.iter_mut() {
+                *d = 0.0;
+            }
+            for si in 0..streams.len() {
+                let d = ws.demand[si];
+                for t in &ws.touches[ws.touch_start[si]..ws.touch_start[si + 1]] {
+                    ws.d_i[t.node] += d * t.w;
+                }
+            }
+            // 3. backpressure throttle
+            for si in 0..streams.len() {
+                let mut scale: f64 = 1.0;
+                for t in &ws.touches[ws.touch_start[si]..ws.touch_start[si + 1]] {
+                    let d_node = ws.d_i[t.node];
+                    if d_node > ws.cap_rho[t.node] && d_node > 0.0 {
+                        scale = scale.min(ws.cap_rho[t.node] / d_node);
+                    }
+                }
+                ws.served[si] = ws.demand[si] * scale;
+            }
+            for b in ws.b_i.iter_mut() {
+                *b = 0.0;
+            }
+            for si in 0..streams.len() {
+                let b = ws.served[si];
+                for t in &ws.touches[ws.touch_start[si]..ws.touch_start[si + 1]] {
+                    ws.b_i[t.node] += b * t.w;
+                }
+            }
+            // 4. residual + adaptively damped update
+            let mut residual = 0.0f64;
+            for i in 0..nn {
+                let target = if ws.caps[i] > 0.0 {
+                    (ws.d_i[i] / ws.caps[i]).min(1.0)
+                } else {
+                    0.0
+                };
+                ws.target[i] = target;
+                residual = residual.max((target - ws.rho[i]).abs());
+            }
+            for i in 0..nn {
+                ws.rho[i] += alpha * (ws.target[i] - ws.rho[i]);
+            }
+            if residual < 1e-10 && iter >= 6 {
+                break;
+            }
+            // Monotone progress → lengthen the step; oscillation → back off.
+            if residual < prev_residual * 0.999 {
+                alpha = (alpha * 1.3).min(0.9);
+            } else {
+                alpha = (alpha * 0.5).max(0.2);
+            }
+            prev_residual = residual;
+        }
+
+        TrafficSolution {
+            streams: (0..streams.len())
+                .map(|si| StreamResult {
+                    bw_gbs: ws.served[si],
+                    latency_ns: ws.lat_out[si],
+                })
+                .collect(),
+            node_rho: ws.rho.clone(),
+            node_bw_gbs: ws.b_i.clone(),
+        }
+    }
+
+    /// FNV-1a fingerprint of every calibration parameter the solver reads,
+    /// so memoized solutions never leak across differently-calibrated
+    /// systems that share a name.
+    fn solver_fingerprint(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for b in self.name.as_bytes() {
+            fnv1a(&mut h, *b as u64);
+        }
+        fnv1a(&mut h, self.sockets as u64);
+        fnv1a(&mut h, self.nodes.len() as u64);
+        for n in &self.nodes {
+            fnv1a(&mut h, n.socket as u64);
+            fnv1a(&mut h, n.device.kind.label().len() as u64);
+            fnv1a(&mut h, n.device.idle.seq_ns.to_bits());
+            fnv1a(&mut h, n.device.idle.rand_ns.to_bits());
+            fnv1a(&mut h, n.device.peak_bw_gbs.to_bits());
+            fnv1a(&mut h, n.device.queue_ns.to_bits());
+            fnv1a(&mut h, n.device.queue_cap_ns.to_bits());
+            fnv1a(&mut h, n.device.stream_rate_gbs.to_bits());
+            fnv1a(&mut h, n.device.mlp_rand.to_bits());
+            fnv1a(&mut h, n.device.concentrated_rand_factor.to_bits());
+        }
+        fnv1a(&mut h, self.fabric.hop_ns.to_bits());
+        fnv1a(&mut h, self.fabric.bw_gbs.to_bits());
+        h
+    }
+
+    fn memo_key(&self, streams: &[Stream]) -> MemoKey {
+        MemoKey {
+            fingerprint: self.solver_fingerprint(),
+            streams: streams
+                .iter()
+                .map(|s| MemoStream {
+                    socket: s.socket,
+                    sequential: s.pattern == Pattern::Sequential,
+                    threads_bits: s.threads.to_bits(),
+                    delay_bits: s.delay_ns.to_bits(),
+                    weights: s
+                        .node_weights
+                        .iter()
+                        .map(|&(n, w)| (n, w.to_bits()))
+                        .collect(),
+                })
+                .collect(),
+        }
+    }
+
+    /// Drop this thread's memoized solutions (benchmark hygiene).
+    pub fn clear_solver_cache() {
+        MEMO.with(|c| c.borrow_mut().clear());
     }
 
     /// Effective node bandwidth cap given the sockets driving traffic at
@@ -469,5 +886,151 @@ mod tests {
         assert!(each < alone, "each={each} alone={alone}");
         let total = shared.streams[0].bw_gbs + shared.streams[1].bw_gbs;
         assert!(total <= sys.nodes[ld].device.peak_bw_gbs * 1.02);
+    }
+
+    // ---- optimized-solver specific tests ----
+
+    fn rel_close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol * b.abs().max(a.abs()).max(1e-12)
+    }
+
+    fn assert_solutions_close(a: &TrafficSolution, b: &TrafficSolution, tol: f64) {
+        assert_eq!(a.streams.len(), b.streams.len());
+        for (x, y) in a.streams.iter().zip(&b.streams) {
+            assert!(
+                rel_close(x.bw_gbs, y.bw_gbs, tol),
+                "bw {} vs {}",
+                x.bw_gbs,
+                y.bw_gbs
+            );
+            assert!(
+                rel_close(x.latency_ns, y.latency_ns, tol),
+                "lat {} vs {}",
+                x.latency_ns,
+                y.latency_ns
+            );
+        }
+        for (x, y) in a.node_bw_gbs.iter().zip(&b.node_bw_gbs) {
+            assert!(rel_close(*x, *y, tol), "node bw {x} vs {y}");
+        }
+    }
+
+    /// The two ISSUE-named convergence scenarios: the adaptive solver must
+    /// land on the same fixed point as the damped reference loop.
+    #[test]
+    fn adaptive_matches_reference_on_named_scenarios() {
+        // Scenario 1: two_streams_share_a_node (system B).
+        let sys = system_b();
+        let ld = sys.node_of(0, MemKind::Ldram).unwrap();
+        let mk = |threads: f64| Stream {
+            socket: 0,
+            node_weights: vec![(ld, 1.0)],
+            pattern: Pattern::Sequential,
+            threads,
+            delay_ns: 0.0,
+        };
+        let streams = [mk(26.0), mk(26.0)];
+        let opt = sys.solve_traffic(&streams);
+        let oracle = sys.solve_traffic_converged_reference(&streams);
+        assert_solutions_close(&opt, &oracle, 1e-7);
+        let loose = sys.solve_traffic_reference(&streams);
+        assert_solutions_close(&opt, &loose, 1e-5);
+
+        // Scenario 2: interleave_bottlenecked_by_slowest_node (system A).
+        let sys = system_a();
+        let ld = sys.node_of(0, MemKind::Ldram).unwrap();
+        let cxl = sys.node_of(0, MemKind::Cxl).unwrap();
+        let streams = [Stream {
+            socket: 0,
+            node_weights: vec![(ld, 0.5), (cxl, 0.5)],
+            pattern: Pattern::Sequential,
+            threads: 32.0,
+            delay_ns: 0.0,
+        }];
+        let opt = sys.solve_traffic(&streams);
+        let oracle = sys.solve_traffic_converged_reference(&streams);
+        assert_solutions_close(&opt, &oracle, 1e-7);
+        let loose = sys.solve_traffic_reference(&streams);
+        assert_solutions_close(&opt, &loose, 1e-5);
+    }
+
+    #[test]
+    fn adaptive_matches_reference_across_grid() {
+        // A broad grid over systems × tiers × patterns × loads.
+        for sys in [system_a(), system_b(), system_c()] {
+            for kind in [MemKind::Ldram, MemKind::Rdram, MemKind::Cxl] {
+                let node = sys.node_of(0, kind).unwrap();
+                for pattern in [Pattern::Sequential, Pattern::Random] {
+                    for threads in [1.0, 4.0, 16.0, 48.0] {
+                        for delay in [0.0, 300.0, 20_000.0] {
+                            let streams = [Stream {
+                                socket: 0,
+                                node_weights: vec![(node, 1.0)],
+                                pattern,
+                                threads,
+                                delay_ns: delay,
+                            }];
+                            let opt = crate::perf::without_memo(|| sys.solve_traffic(&streams));
+                            let oracle = sys.solve_traffic_converged_reference(&streams);
+                            assert_solutions_close(&opt, &oracle, 1e-7);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn memoized_solution_is_identical_to_cold() {
+        let sys = system_a();
+        let ld = sys.node_of(0, MemKind::Ldram).unwrap();
+        let cxl = sys.node_of(0, MemKind::Cxl).unwrap();
+        let streams = [Stream {
+            socket: 0,
+            node_weights: vec![(ld, 0.5), (cxl, 0.5)],
+            pattern: Pattern::Random,
+            threads: 24.0,
+            delay_ns: 0.0,
+        }];
+        System::clear_solver_cache();
+        let cold = sys.solve_traffic(&streams);
+        let warm = sys.solve_traffic(&streams);
+        assert_eq!(cold.streams[0].bw_gbs.to_bits(), warm.streams[0].bw_gbs.to_bits());
+        assert_eq!(
+            cold.streams[0].latency_ns.to_bits(),
+            warm.streams[0].latency_ns.to_bits()
+        );
+    }
+
+    #[test]
+    fn memo_key_distinguishes_calibrations() {
+        // Same stream on two systems must not collide.
+        let a = system_a();
+        let b = system_b();
+        let ld_a = a.node_of(0, MemKind::Ldram).unwrap();
+        let ld_b = b.node_of(0, MemKind::Ldram).unwrap();
+        System::clear_solver_cache();
+        let (bw_a, _) = a.drive(0, ld_a, Pattern::Sequential, 32.0, 0.0);
+        let (bw_b, _) = b.drive(0, ld_b, Pattern::Sequential, 32.0, 0.0);
+        assert!((bw_a - bw_b).abs() > 1.0, "distinct systems: {bw_a} vs {bw_b}");
+    }
+
+    #[test]
+    fn reference_mode_dispatches_seed_loop() {
+        let sys = system_c();
+        let ld = sys.node_of(0, MemKind::Ldram).unwrap();
+        let streams = [Stream {
+            socket: 0,
+            node_weights: vec![(ld, 1.0)],
+            pattern: Pattern::Sequential,
+            threads: 32.0,
+            delay_ns: 0.0,
+        }];
+        let via_mode = crate::perf::with_reference(|| sys.solve_traffic(&streams));
+        let direct = sys.solve_traffic_reference(&streams);
+        assert_eq!(
+            via_mode.streams[0].bw_gbs.to_bits(),
+            direct.streams[0].bw_gbs.to_bits()
+        );
     }
 }

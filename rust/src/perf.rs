@@ -1,0 +1,155 @@
+//! Per-thread performance-mode context shared by the optimized hot paths.
+//!
+//! Three knobs, all thread-local so parallel experiment workers stay
+//! independent:
+//!
+//! - **reference mode**: when enabled, [`crate::memsim::System::solve_traffic`]
+//!   and the tiering epoch loop dispatch to their seed-semantics reference
+//!   implementations (fixed damping, O(pages) recomputation, per-call
+//!   allocation). Used by the golden-parity tests and by `cxlmem bench` to
+//!   record the before/after trajectory in the same run.
+//! - **memoization**: lets benchmarks measure the solver cold (cache off)
+//!   vs warm (cache on, the default).
+//! - **jobs**: inner-sweep parallelism consulted by [`crate::util::par`].
+//!   Defaults to 1 so library calls stay single-threaded unless the CLI
+//!   (or an outer runner) raises it.
+//!
+//! [`crate::util::par::par_map`] propagates a snapshot of this context
+//! into its worker threads (with `jobs` forced to 1 inside workers to
+//! avoid oversubscription).
+
+use std::cell::Cell;
+
+thread_local! {
+    static REFERENCE: Cell<bool> = Cell::new(false);
+    static MEMO: Cell<bool> = Cell::new(true);
+    static JOBS: Cell<usize> = Cell::new(1);
+}
+
+/// Snapshot of the context, for propagation into worker threads.
+#[derive(Clone, Copy, Debug)]
+pub struct Snapshot {
+    pub reference: bool,
+    pub memo: bool,
+}
+
+/// True when hot paths must run their seed-semantics reference versions.
+pub fn reference_enabled() -> bool {
+    REFERENCE.with(|c| c.get())
+}
+
+/// True when the solver may consult/fill its memoization cache.
+pub fn memo_enabled() -> bool {
+    MEMO.with(|c| c.get())
+}
+
+/// Inner-sweep parallelism for the current thread (≥ 1).
+pub fn current_jobs() -> usize {
+    JOBS.with(|c| c.get()).max(1)
+}
+
+/// Set inner-sweep parallelism for the current thread.
+pub fn set_jobs(jobs: usize) {
+    JOBS.with(|c| c.set(jobs.max(1)));
+}
+
+/// A sensible default for `--jobs`: the machine's available parallelism.
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Capture the current thread's context.
+pub fn snapshot() -> Snapshot {
+    Snapshot {
+        reference: reference_enabled(),
+        memo: memo_enabled(),
+    }
+}
+
+/// Apply a snapshot on the current thread (worker-side; jobs stays 1).
+pub fn apply(snap: Snapshot) {
+    REFERENCE.with(|c| c.set(snap.reference));
+    MEMO.with(|c| c.set(snap.memo));
+}
+
+struct Restore {
+    reference: bool,
+    memo: bool,
+}
+
+impl Drop for Restore {
+    fn drop(&mut self) {
+        REFERENCE.with(|c| c.set(self.reference));
+        MEMO.with(|c| c.set(self.memo));
+    }
+}
+
+/// Run `f` with reference mode enabled (restored on exit, even on panic).
+pub fn with_reference<R>(f: impl FnOnce() -> R) -> R {
+    let _restore = Restore {
+        reference: REFERENCE.with(|c| c.replace(true)),
+        memo: MEMO.with(|c| c.get()),
+    };
+    f()
+}
+
+/// Run `f` with the solver memo cache disabled (restored on exit).
+pub fn without_memo<R>(f: impl FnOnce() -> R) -> R {
+    let _restore = Restore {
+        reference: REFERENCE.with(|c| c.get()),
+        memo: MEMO.with(|c| c.replace(false)),
+    };
+    f()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults() {
+        assert!(!reference_enabled());
+        assert!(memo_enabled());
+        assert!(current_jobs() >= 1);
+        assert!(default_jobs() >= 1);
+    }
+
+    #[test]
+    fn guards_nest_and_restore() {
+        assert!(!reference_enabled());
+        with_reference(|| {
+            assert!(reference_enabled());
+            without_memo(|| {
+                assert!(reference_enabled());
+                assert!(!memo_enabled());
+            });
+            assert!(memo_enabled());
+        });
+        assert!(!reference_enabled());
+    }
+
+    #[test]
+    fn snapshot_roundtrip() {
+        let snap = with_reference(snapshot);
+        assert!(snap.reference);
+        // apply + manual restore
+        apply(snap);
+        assert!(reference_enabled());
+        apply(Snapshot {
+            reference: false,
+            memo: true,
+        });
+        assert!(!reference_enabled());
+    }
+
+    #[test]
+    fn jobs_set_get() {
+        set_jobs(0);
+        assert_eq!(current_jobs(), 1);
+        set_jobs(4);
+        assert_eq!(current_jobs(), 4);
+        set_jobs(1);
+    }
+}

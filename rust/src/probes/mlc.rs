@@ -1,6 +1,7 @@
 //! MLC-equivalent probes: idle latency, bandwidth scaling, loaded latency.
 
 use crate::memsim::{NodeId, Pattern, Stream, System};
+use crate::util::par::par_map_auto;
 use crate::util::rng::Rng;
 use crate::util::stats;
 
@@ -48,6 +49,9 @@ pub fn idle_latency(
 }
 
 /// Bandwidth scaling: drive `node` with 1..=max_threads (Fig 3).
+/// The per-thread-count solves are independent; they fan out over
+/// [`crate::perf::current_jobs`] threads when the CLI raised `--jobs`
+/// (sequential by default).
 pub fn bw_scaling_sweep(
     sys: &System,
     socket: usize,
@@ -55,16 +59,15 @@ pub fn bw_scaling_sweep(
     pattern: Pattern,
     max_threads: usize,
 ) -> Vec<BwPoint> {
-    (1..=max_threads)
-        .map(|t| {
-            let (bw, lat) = sys.drive(socket, node, pattern, t as f64, 0.0);
-            BwPoint {
-                threads: t,
-                bw_gbs: bw,
-                latency_ns: lat,
-            }
-        })
-        .collect()
+    let threads: Vec<usize> = (1..=max_threads).collect();
+    par_map_auto(&threads, |&t| {
+        let (bw, lat) = sys.drive(socket, node, pattern, t as f64, 0.0);
+        BwPoint {
+            threads: t,
+            bw_gbs: bw,
+            latency_ns: lat,
+        }
+    })
 }
 
 /// Loaded latency: fixed thread count, sweep the inter-access injection

@@ -15,6 +15,27 @@
 //!   threshold (59× fewer faults than TPP, PMO 2);
 //! - TPP scans the slow tier aggressively and promotes on LRU presence;
 //! - AutoNUMA promotes any faulted slow page.
+//!
+//! Hot-path structure: the per-epoch work is O(Δ) in the number of
+//! migrations plus a single O(pages) pass per epoch to ingest the new
+//! access histogram —
+//! - `fast_used` is an incrementally-maintained counter (was an O(pages)
+//!   recount per promotion batch);
+//! - per-(object, node) traffic aggregates are built once per epoch and
+//!   updated on each migration (was a full O(pages) rebuild inside
+//!   [`epoch_app_time`]);
+//! - victim selection uses `select_nth_unstable` (was a full sort);
+//! - hint-fault sampling uses geometric skip sampling (one RNG draw per
+//!   *fault* instead of one per candidate page).
+//!
+//! Under [`crate::perf::with_reference`] the seed's O(pages)
+//! implementations run instead; they make identical decisions (see the
+//! golden-parity tests), so the mode only changes cost, not results.
+//! One deliberate semantic change relative to the seed: both modes share
+//! the geometric-skip sampler, whose RNG *realization* differs from the
+//! seed's per-page Bernoulli draws (the fault distribution is identical,
+//! but individual fault sets — and hence fig16/fig17 cell values — are
+//! a different draw from the same process).
 
 pub mod policies;
 pub mod stats;
@@ -34,7 +55,30 @@ pub const MIGRATE_REGION_NS: f64 = 1_250_000.0;
 /// 4 KB pages per 2 MB region (for vmstat-style counters).
 pub const SMALL_PER_REGION: u64 = 512;
 
+/// Per-epoch ingested access histogram + per-(object, node) aggregates,
+/// kept consistent across migrations so epoch app time is O(objects ×
+/// nodes) instead of O(pages).
+#[derive(Clone, Debug, Default)]
+struct EpochAgg {
+    /// Node count the aggregate was built for.
+    nn: usize,
+    /// This epoch's per-page access counts (owned copy; buffers reused).
+    counts: Vec<u32>,
+    /// Address of the slice that was ingested — a fast-path identity
+    /// hint for the staleness check in [`epoch_app_time`].
+    src_ptr: usize,
+    /// Flattened [object][node] access totals. Integer-valued, so the
+    /// incremental ± updates are exact and bit-identical to a rebuild.
+    agg: Vec<u64>,
+}
+
 /// Page-granular placement state shared with the policies.
+///
+/// The `node`/`migratable`/`object` maps stay public for construction
+/// and inspection, but *placement changes must go through
+/// [`PageState::promote`] / [`PageState::promote_batch`]* (and object
+/// remapping through [`PageState::set_objects`]) so the incremental
+/// `fast_used` counter and epoch aggregates stay consistent.
 #[derive(Clone, Debug)]
 pub struct PageState {
     /// Current node of each page.
@@ -51,27 +95,123 @@ pub struct PageState {
     pub slow_node: NodeId,
     /// Last-epoch access count per page (policy LRU/recency signal).
     pub last_counts: Vec<u32>,
+    /// Incremental count of pages on `fast_node`.
+    fast_used: usize,
+    /// Number of distinct objects (`max(object) + 1`), fixed at
+    /// construction / [`PageState::set_objects`] — the per-epoch
+    /// O(pages) max scan the seed did is gone.
+    n_obj: usize,
+    /// Current epoch's histogram + aggregates (None between epochs).
+    epoch: Option<EpochAgg>,
 }
 
 impl PageState {
+    /// Build a state from explicit page maps; derives `fast_used` and the
+    /// object count once, here, instead of per epoch.
+    pub fn new(
+        node: Vec<NodeId>,
+        migratable: Vec<bool>,
+        object: Vec<u32>,
+        fast_node: NodeId,
+        fast_capacity: usize,
+        slow_node: NodeId,
+    ) -> PageState {
+        assert_eq!(node.len(), migratable.len());
+        assert_eq!(node.len(), object.len());
+        let fast_used = node.iter().filter(|&&n| n == fast_node).count();
+        let n_obj = object.iter().map(|&o| o as usize + 1).max().unwrap_or(1);
+        let pages = node.len();
+        PageState {
+            node,
+            migratable,
+            object,
+            fast_node,
+            fast_capacity,
+            slow_node,
+            last_counts: vec![0; pages],
+            fast_used,
+            n_obj,
+            epoch: None,
+        }
+    }
+
+    /// Pages currently on the fast tier — O(1), maintained incrementally.
     pub fn fast_used(&self) -> usize {
-        self.node.iter().filter(|&&n| n == self.fast_node).count()
+        self.fast_used
+    }
+
+    /// Number of distinct objects (`max(object) + 1`).
+    pub fn n_obj(&self) -> usize {
+        self.n_obj
+    }
+
+    /// Replace the page→object map (multi-object HPC runs), recomputing
+    /// the object count once.
+    pub fn set_objects(&mut self, object: Vec<u32>) {
+        assert_eq!(object.len(), self.node.len());
+        self.n_obj = object.iter().map(|&o| o as usize + 1).max().unwrap_or(1);
+        self.object = object;
+        self.epoch = None;
+    }
+
+    /// Ingest this epoch's access histogram: one O(pages) pass that makes
+    /// every later placement change an O(1) aggregate update.
+    pub(crate) fn set_epoch_counts(&mut self, counts: &[u32], nn: usize) {
+        debug_assert_eq!(counts.len(), self.node.len());
+        let n_obj = self.n_obj;
+        let epoch = self.epoch.get_or_insert_with(EpochAgg::default);
+        epoch.nn = nn;
+        epoch.src_ptr = counts.as_ptr() as usize;
+        epoch.counts.clear();
+        epoch.counts.extend_from_slice(counts);
+        epoch.agg.clear();
+        epoch.agg.resize(n_obj * nn, 0);
+        for p in 0..counts.len() {
+            epoch.agg[self.object[p] as usize * nn + self.node[p]] += counts[p] as u64;
+        }
+    }
+
+    /// Move one page, maintaining `fast_used` and the epoch aggregates.
+    fn move_page(&mut self, p: usize, to: NodeId) {
+        let from = self.node[p];
+        if from == to {
+            return;
+        }
+        if from == self.fast_node {
+            self.fast_used -= 1;
+        }
+        if to == self.fast_node {
+            self.fast_used += 1;
+        }
+        if let Some(epoch) = self.epoch.as_mut() {
+            let c = epoch.counts[p] as u64;
+            if c > 0 {
+                let row = self.object[p] as usize * epoch.nn;
+                epoch.agg[row + from] -= c;
+                epoch.agg[row + to] += c;
+            }
+        }
+        self.node[p] = to;
     }
 
     /// Promote `page` to the fast tier, demoting the coldest fast page if
     /// the tier is full. Returns number of regions moved (1 or 2).
-    /// O(pages) per call — use [`PageState::promote_batch`] for epoch-sized
-    /// promotion sets.
     pub fn promote(&mut self, page: usize) -> u64 {
         let (p, d) = self.promote_batch(&[page]);
         p + d
     }
 
     /// Promote a batch of pages, demoting the coldest migratable
-    /// fast-tier pages as needed — one O(n log n) pass for the whole
-    /// epoch instead of O(n) per promotion. Returns
-    /// (promoted_regions, demoted_regions).
+    /// fast-tier pages as needed. Returns (promoted_regions,
+    /// demoted_regions).
+    ///
+    /// Victim selection is O(pages) via `select_nth_unstable` with the
+    /// deterministic key `(last_counts, page)` — the same victims the
+    /// seed's stable full sort picked, without the O(n log n).
     pub fn promote_batch(&mut self, pages: &[usize]) -> (u64, u64) {
+        if crate::perf::reference_enabled() {
+            return self.promote_batch_reference(pages);
+        }
         let want: Vec<usize> = pages
             .iter()
             .copied()
@@ -80,9 +220,53 @@ impl PageState {
         if want.is_empty() {
             return (0, 0);
         }
-        let free = self.fast_capacity.saturating_sub(self.fast_used());
+        let free = self.fast_capacity.saturating_sub(self.fast_used);
         let need_demote = want.len().saturating_sub(free);
-        // Victim selection: coldest migratable fast pages.
+        let mut demoted = 0u64;
+        if need_demote > 0 {
+            let mut victims: Vec<usize> = (0..self.node.len())
+                .filter(|&p| self.node[p] == self.fast_node && self.migratable[p])
+                .collect();
+            if need_demote < victims.len() {
+                victims
+                    .select_nth_unstable_by_key(need_demote - 1, |&p| (self.last_counts[p], p));
+                victims.truncate(need_demote);
+            }
+            demoted = victims.len() as u64;
+            for &v in &victims {
+                self.move_page(v, self.slow_node);
+            }
+        }
+        // Promote as many as now fit.
+        let capacity_now = self.fast_capacity.saturating_sub(self.fast_used);
+        let mut promoted = 0u64;
+        for &p in want.iter().take(capacity_now) {
+            self.move_page(p, self.fast_node);
+            promoted += 1;
+        }
+        (promoted, demoted)
+    }
+
+    /// The seed's promotion batch, verbatim: O(pages) `fast_used`
+    /// recounts and a full victim sort. Identical decisions to the
+    /// optimized path; kept as the `cxlmem bench` baseline.
+    fn promote_batch_reference(&mut self, pages: &[usize]) -> (u64, u64) {
+        // Reference mode bypasses the incremental bookkeeping entirely.
+        self.epoch = None;
+        let recount =
+            |node: &[NodeId], fast: NodeId| node.iter().filter(|&&n| n == fast).count();
+        let want: Vec<usize> = pages
+            .iter()
+            .copied()
+            .filter(|&p| self.node[p] != self.fast_node)
+            .collect();
+        if want.is_empty() {
+            return (0, 0);
+        }
+        let free = self
+            .fast_capacity
+            .saturating_sub(recount(&self.node, self.fast_node));
+        let need_demote = want.len().saturating_sub(free);
         let mut demoted = 0u64;
         if need_demote > 0 {
             let mut victims: Vec<usize> = (0..self.node.len())
@@ -95,13 +279,16 @@ impl PageState {
             }
             demoted = victims.len() as u64;
         }
-        // Promote as many as now fit.
-        let capacity_now = self.fast_capacity.saturating_sub(self.fast_used());
+        let capacity_now = self
+            .fast_capacity
+            .saturating_sub(recount(&self.node, self.fast_node));
         let mut promoted = 0u64;
         for &p in want.iter().take(capacity_now) {
             self.node[p] = self.fast_node;
             promoted += 1;
         }
+        // Keep the incremental counter coherent for later optimized use.
+        self.fast_used = recount(&self.node, self.fast_node);
         (promoted, demoted)
     }
 }
@@ -136,6 +323,13 @@ pub struct SimConfig {
 
 /// Hint-fault sampling: the policy asks for a scan fraction; faults fire
 /// for scanned+accessed+migratable pages. Returns faulted page indices.
+///
+/// Sampling is geometric-skip: instead of one Bernoulli draw per
+/// candidate page, one draw per *fault* yields the number of candidates
+/// to skip — the two processes have identical distributions, but at
+/// Tiering-0.8's 2% scan rate this is ~50× fewer RNG calls (and zero
+/// calls at TPP's scan rate of 1.0). Both the optimized and reference
+/// tiering paths share this sampler, so their decisions are identical.
 pub fn sample_hint_faults(
     state: &PageState,
     counts: &[u32],
@@ -144,6 +338,12 @@ pub fn sample_hint_faults(
     rng: &mut Rng,
 ) -> Vec<usize> {
     let mut faults = Vec::new();
+    if scan_frac <= 0.0 {
+        return faults;
+    }
+    let full = scan_frac >= 1.0;
+    let ln_q = if full { 0.0 } else { (1.0 - scan_frac).ln() };
+    let mut skip = if full { 0 } else { geometric_skip(rng, ln_q) };
     for p in 0..counts.len() {
         if counts[p] == 0 || !state.migratable[p] {
             continue;
@@ -151,21 +351,116 @@ pub fn sample_hint_faults(
         if slow_tier_only && state.node[p] == state.fast_node {
             continue;
         }
-        if rng.f64() < scan_frac {
+        if full {
             faults.push(p);
+        } else if skip == 0 {
+            faults.push(p);
+            skip = geometric_skip(rng, ln_q);
+        } else {
+            skip -= 1;
         }
     }
     faults
 }
 
+/// Failures before the next success of a Bernoulli(p) process, via
+/// inversion: `floor(ln(1-U) / ln(1-p))`.
+fn geometric_skip(rng: &mut Rng, ln_q: f64) -> usize {
+    let u = rng.f64();
+    let x = (1.0 - u).ln() / ln_q;
+    if x.is_finite() {
+        x as usize // saturating cast
+    } else {
+        usize::MAX / 2
+    }
+}
+
 /// Execute one epoch's application time given current placement.
+///
+/// When the state carries this epoch's aggregates (set by [`simulate`]),
+/// this is O(objects × nodes); otherwise (standalone calls, reference
+/// mode) it falls back to a full O(pages) aggregation.
 pub fn epoch_app_time(
     sys: &System,
     cfg: &SimConfig,
     state: &PageState,
     wl: &EpochWorkload,
 ) -> f64 {
-    // Aggregate per (object, node) access counts.
+    let nn = sys.nodes.len();
+    let objects = if crate::perf::reference_enabled() {
+        object_traffic_reference(sys, state, wl)
+    } else {
+        match &state.epoch {
+            // The aggregates are only valid for the histogram they were
+            // built from: accept on slice identity (the simulate() fast
+            // path), else on content equality (a cheap memcmp); anything
+            // else falls through to a fresh aggregation.
+            Some(e)
+                if e.nn == nn
+                    && e.counts.len() == wl.counts.len()
+                    && (e.src_ptr == wl.counts.as_ptr() as usize
+                        || e.counts == wl.counts) =>
+            {
+                object_traffic_from_agg(&e.agg, state.n_obj, nn, wl)
+            }
+            _ => {
+                let mut agg = vec![0u64; state.n_obj * nn];
+                for p in 0..wl.counts.len() {
+                    agg[state.object[p] as usize * nn + state.node[p]] += wl.counts[p] as u64;
+                }
+                object_traffic_from_agg(&agg, state.n_obj, nn, wl)
+            }
+        }
+    };
+    let rcfg = RunConfig {
+        socket: cfg.socket,
+        threads: cfg.threads,
+        compute_ns_per_byte: cfg.compute_ns_per_byte,
+    };
+    engine::run(sys, &rcfg, &objects).total_s
+}
+
+/// Build the engine's object traffic from flattened [object][node]
+/// aggregates. Aggregates are integer totals, so this produces exactly
+/// the values the seed's per-page f64 accumulation produced.
+fn object_traffic_from_agg(
+    agg: &[u64],
+    n_obj: usize,
+    nn: usize,
+    wl: &EpochWorkload,
+) -> Vec<ObjectTraffic> {
+    let mut objects = Vec::new();
+    for oi in 0..n_obj {
+        let row = &agg[oi * nn..(oi + 1) * nn];
+        let total: u64 = row.iter().sum();
+        if total == 0 {
+            continue;
+        }
+        let total_f = total as f64;
+        let (pattern, dep) = (wl.pattern)(oi as u32);
+        objects.push(ObjectTraffic {
+            name: format!("obj{oi}"),
+            traffic_bytes: total_f * crate::memsim::LINE,
+            pattern,
+            dep_frac: dep,
+            node_weights: row
+                .iter()
+                .enumerate()
+                .filter(|&(_, &c)| c > 0)
+                .map(|(n, &c)| (n, c as f64 / total_f))
+                .collect(),
+        });
+    }
+    objects
+}
+
+/// The seed's per-epoch aggregation, verbatim: O(pages) object-count max
+/// plus a full per-page pass. Baseline for `cxlmem bench`.
+fn object_traffic_reference(
+    sys: &System,
+    state: &PageState,
+    wl: &EpochWorkload,
+) -> Vec<ObjectTraffic> {
     let n_obj = state.object.iter().map(|&o| o as usize + 1).max().unwrap_or(1);
     let nn = sys.nodes.len();
     let mut per = vec![vec![0.0f64; nn]; n_obj];
@@ -192,12 +487,7 @@ pub fn epoch_app_time(
                 .collect(),
         });
     }
-    let rcfg = RunConfig {
-        socket: cfg.socket,
-        threads: cfg.threads,
-        compute_ns_per_byte: cfg.compute_ns_per_byte,
-    };
-    engine::run(sys, &rcfg, &objects).total_s
+    objects
 }
 
 /// Run the full tiering simulation: `epochs` epochs of (trace → faults →
@@ -214,6 +504,7 @@ pub fn simulate(
     let mut stats = VmStats::default();
     let mut app_s = 0.0;
     let mut overhead_s = 0.0;
+    let nn = sys.nodes.len();
 
     for e in 0..cfg.epochs {
         let counts = next_epoch(e);
@@ -221,6 +512,11 @@ pub fn simulate(
         let scan = policy.scan_request(state, &stats);
         let faults = sample_hint_faults(state, &counts, scan.frac, scan.slow_tier_only, &mut rng);
         stats.hint_faults += faults.len() as u64;
+        if !crate::perf::reference_enabled() {
+            // Ingest the histogram once; migrations below keep the
+            // (object, node) aggregates consistent in O(Δ).
+            state.set_epoch_counts(&counts, nn);
+        }
         let moved_regions = policy.epoch(state, &counts, &faults, &mut stats);
         stats.migrated_pages += moved_regions * SMALL_PER_REGION;
         // 2. overheads (parallelized across threads)
@@ -237,6 +533,10 @@ pub fn simulate(
         // 4. recency state for next epoch
         state.last_counts.copy_from_slice(&counts);
     }
+    // Drop the last epoch's aggregates: they are only valid for the
+    // histogram passed alongside them, and a later standalone
+    // `epoch_app_time` call would otherwise silently reuse them.
+    state.epoch = None;
 
     TieringRun {
         policy: policy.name().to_string(),
@@ -249,9 +549,9 @@ pub fn simulate(
 }
 
 /// Build initial page state from a placement policy over one flat object.
-/// `ldram_frac_interleave`: if `Some(k)`, pages are round-robined over
-/// {fast, slow} every k-th to fast (uniform interleave, unmigratable);
-/// if `None`, first touch fills fast then spills (migratable).
+/// `interleave`: if true, pages round-robin over {fast, slow}
+/// (uniform interleave, unmigratable); if false, first touch fills fast
+/// then spills (migratable).
 pub fn initial_state(
     pages: usize,
     fast_node: NodeId,
@@ -278,15 +578,14 @@ pub fn initial_state(
         }
         node.push(target);
     }
-    PageState {
+    PageState::new(
         node,
-        migratable: vec![!interleave; pages],
-        object: vec![0; pages],
+        vec![!interleave; pages],
+        vec![0; pages],
         fast_node,
         fast_capacity,
         slow_node,
-        last_counts: vec![0; pages],
-    }
+    )
 }
 
 #[cfg(test)]
@@ -337,7 +636,63 @@ mod tests {
     }
 
     #[test]
-    fn hint_faults_skip_unmigratable(){
+    fn fast_used_counter_tracks_recount() {
+        let mut s = mini_state(false);
+        let faults: Vec<usize> = (40..70).collect();
+        s.promote_batch(&faults);
+        let recount = s.node.iter().filter(|&&n| n == s.fast_node).count();
+        assert_eq!(s.fast_used(), recount);
+    }
+
+    #[test]
+    fn promote_batch_matches_reference_decisions() {
+        // Same inputs through the optimized and reference paths must
+        // yield the same placement, counts, and fast_used.
+        let build = || {
+            let mut s = initial_state(500, 0, 2, 120, false);
+            for p in 0..500 {
+                s.last_counts[p] = ((p * 7) % 23) as u32;
+            }
+            s
+        };
+        let batch: Vec<usize> = (150..350).step_by(3).collect();
+        let mut opt = build();
+        let (p1, d1) = opt.promote_batch(&batch);
+        let mut reference = build();
+        let (p2, d2) = crate::perf::with_reference(|| reference.promote_batch(&batch));
+        assert_eq!((p1, d1), (p2, d2));
+        assert_eq!(opt.node, reference.node);
+        assert_eq!(opt.fast_used(), reference.fast_used());
+    }
+
+    #[test]
+    fn set_objects_updates_n_obj() {
+        let mut s = mini_state(false);
+        assert_eq!(s.n_obj(), 1);
+        let objs: Vec<u32> = (0..100).map(|p| if p < 30 { 0 } else { 2 }).collect();
+        s.set_objects(objs);
+        assert_eq!(s.n_obj(), 3);
+    }
+
+    #[test]
+    fn aggregates_survive_migrations_exactly() {
+        // After ingest + migrations, incremental aggregates must equal a
+        // from-scratch rebuild (integers: bit-exact).
+        let mut s = initial_state(200, 0, 2, 50, false);
+        let counts: Vec<u32> = (0..200).map(|p| (p % 17) as u32).collect();
+        s.set_epoch_counts(&counts, 4);
+        let batch: Vec<usize> = (60..160).collect();
+        s.promote_batch(&batch);
+        let e = s.epoch.as_ref().unwrap();
+        let mut rebuilt = vec![0u64; s.n_obj() * 4];
+        for p in 0..200 {
+            rebuilt[s.object[p] as usize * 4 + s.node[p]] += counts[p] as u64;
+        }
+        assert_eq!(e.agg, rebuilt);
+    }
+
+    #[test]
+    fn hint_faults_skip_unmigratable() {
         let s = mini_state(true);
         let counts = vec![5u32; 100];
         let mut rng = Rng::seeded(1);
@@ -353,6 +708,28 @@ mod tests {
         let mut rng = Rng::seeded(1);
         let faults = sample_hint_faults(&s, &counts, 1.0, false, &mut rng);
         assert_eq!(faults, vec![3]);
+    }
+
+    #[test]
+    fn geometric_sampling_hits_expected_rate() {
+        // 2% scan of 50k candidates → ~1000 faults (±35%), and far fewer
+        // RNG draws than candidates.
+        let s = initial_state(50_000, 0, 2, 20_000, false);
+        let counts = vec![1u32; 50_000];
+        let mut rng = Rng::seeded(42);
+        let faults = sample_hint_faults(&s, &counts, 0.02, false, &mut rng);
+        let n = faults.len() as f64;
+        assert!((650.0..=1350.0).contains(&n), "faults {n}");
+        // All faults are valid candidate pages, strictly increasing.
+        assert!(faults.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn zero_scan_never_faults() {
+        let s = mini_state(false);
+        let counts = vec![9u32; 100];
+        let mut rng = Rng::seeded(3);
+        assert!(sample_hint_faults(&s, &counts, 0.0, false, &mut rng).is_empty());
     }
 
     #[test]
@@ -374,5 +751,80 @@ mod tests {
         let tf = epoch_app_time(&sys, &cfg, &all_fast, &EpochWorkload { counts: &counts, pattern: &pat });
         let ts = epoch_app_time(&sys, &cfg, &all_slow, &EpochWorkload { counts: &counts, pattern: &pat });
         assert!(tf > 0.0 && ts > tf, "fast {tf} slow {ts}");
+    }
+
+    #[test]
+    fn epoch_app_time_agg_matches_full_pass() {
+        // With aggregates ingested, epoch time must equal the fallback
+        // full-pass computation bit-for-bit (integer aggregation).
+        let sys = system_a();
+        let ld = sys.node_of(0, MemKind::Ldram).unwrap();
+        let cxl = sys.node_of(0, MemKind::Cxl).unwrap();
+        let cfg = SimConfig {
+            socket: 0,
+            threads: 32,
+            compute_ns_per_byte: 0.2,
+            epochs: 1,
+            seed: 1,
+        };
+        let counts: Vec<u32> = (0..2000).map(|p| (p % 97) as u32).collect();
+        let pat = |_: u32| (Pattern::Random, 0.4);
+        let mut with_agg = initial_state(2000, ld, cxl, 700, false);
+        with_agg.set_epoch_counts(&counts, sys.nodes.len());
+        with_agg.promote_batch(&(900..1100).collect::<Vec<usize>>());
+        let mut plain = initial_state(2000, ld, cxl, 700, false);
+        plain.promote_batch(&(900..1100).collect::<Vec<usize>>());
+        assert_eq!(with_agg.node, plain.node);
+        let wl = EpochWorkload { counts: &counts, pattern: &pat };
+        let ta = epoch_app_time(&sys, &cfg, &with_agg, &wl);
+        let tp = epoch_app_time(&sys, &cfg, &plain, &wl);
+        assert_eq!(ta.to_bits(), tp.to_bits());
+    }
+
+    #[test]
+    fn simulate_reference_parity_full_run() {
+        // End-to-end: a multi-epoch PageRank-style run must produce
+        // identical results through the optimized and reference paths
+        // (shared sampler → same RNG stream → same decisions; integer
+        // aggregates → same app times).
+        use crate::workloads::tiering_apps::{pagerank, TraceGen};
+        let sys = system_a();
+        let ld = sys.node_of(0, MemKind::Ldram).unwrap();
+        let cxl = sys.node_of(0, MemKind::Cxl).unwrap();
+        let mut app = pagerank();
+        app.pages = 4000; // keep the test quick
+        let run_once = |reference: bool| {
+            let mut state = initial_state(4000, ld, cxl, 1500, false);
+            let mut gen = TraceGen::new(app.clone(), 9);
+            let mut pol = Tiering08::default();
+            let cfg = SimConfig {
+                socket: 0,
+                threads: 64,
+                compute_ns_per_byte: 0.5,
+                epochs: 4,
+                seed: 9,
+            };
+            let body = || {
+                simulate(
+                    &sys,
+                    &cfg,
+                    &mut state,
+                    &mut pol,
+                    |_| gen.epoch_counts(),
+                    |_| (Pattern::Random, 0.5),
+                )
+            };
+            if reference {
+                crate::perf::with_reference(body)
+            } else {
+                body()
+            }
+        };
+        let opt = run_once(false);
+        let reference = run_once(true);
+        assert_eq!(opt.stats, reference.stats);
+        assert_eq!(opt.overhead_s.to_bits(), reference.overhead_s.to_bits());
+        let rel = (opt.app_s - reference.app_s).abs() / reference.app_s;
+        assert!(rel < 1e-9, "app_s {} vs {}", opt.app_s, reference.app_s);
     }
 }

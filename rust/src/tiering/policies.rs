@@ -167,12 +167,24 @@ impl TieringPolicy for Tiering08 {
             .filter(|&p| state.node[p] != state.fast_node && counts[p] as f64 >= self.threshold)
             .collect();
         let n_cands = cands.len();
-        // Hottest first; respect the promotion budget.
-        cands.sort_by_key(|&p| std::cmp::Reverse(counts[p]));
-        if cands.len() as u64 > self.promote_budget {
-            stats.throttled += cands.len() as u64 - self.promote_budget;
-            cands.truncate(self.promote_budget as usize);
+        // Hottest first; respect the promotion budget. The key
+        // `(Reverse(count), page)` is unique, so selecting the top-k
+        // with `select_nth_unstable` then ordering just those k is
+        // O(n + k log k) and picks exactly the set (and order) the
+        // previous stable full sort produced.
+        let budget = self.promote_budget as usize;
+        if cands.len() > budget {
+            stats.throttled += (cands.len() - budget) as u64;
+            if budget == 0 {
+                cands.clear();
+            } else {
+                cands.select_nth_unstable_by_key(budget - 1, |&p| {
+                    (std::cmp::Reverse(counts[p]), p)
+                });
+                cands.truncate(budget);
+            }
         }
+        cands.sort_unstable_by_key(|&p| (std::cmp::Reverse(counts[p]), p));
         let (promoted, demoted) = state.promote_batch(&cands);
         stats.promoted_regions += promoted;
         stats.demoted_regions += demoted;

@@ -1,0 +1,112 @@
+//! Scoped-thread parallel map for experiment sweeps (no `rayon` in the
+//! offline vendor set).
+//!
+//! Work is distributed by an atomic index counter (dynamic load balance —
+//! experiment costs vary by two orders of magnitude), results are
+//! reassembled in input order, and the caller's [`crate::perf`] context is
+//! propagated into each worker (with inner `jobs` pinned to 1 so nested
+//! sweeps don't oversubscribe the machine).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::perf;
+
+/// Map `f` over `items` using up to `jobs` OS threads, preserving input
+/// order in the output. `jobs <= 1` (or a single item) runs inline on the
+/// calling thread; a worker panic propagates to the caller.
+pub fn par_map<T, R, F>(items: &[T], jobs: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let jobs = jobs.max(1).min(items.len().max(1));
+    if jobs <= 1 || items.len() <= 1 {
+        return items.iter().map(f).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let ctx = perf::snapshot();
+    let f = &f;
+    let mut indexed: Vec<(usize, R)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..jobs)
+            .map(|_| {
+                let next = &next;
+                s.spawn(move || {
+                    perf::apply(ctx);
+                    perf::set_jobs(1);
+                    let mut out = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= items.len() {
+                            break;
+                        }
+                        out.push((i, f(&items[i])));
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("par_map worker panicked"))
+            .collect()
+    });
+    indexed.sort_unstable_by_key(|&(i, _)| i);
+    indexed.into_iter().map(|(_, r)| r).collect()
+}
+
+/// `par_map` with the current thread's configured job count
+/// ([`perf::current_jobs`]); the default of 1 keeps library calls
+/// sequential unless the CLI raised it.
+pub fn par_map_auto<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    par_map(items, perf::current_jobs(), f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let xs: Vec<u64> = (0..100).collect();
+        let out = par_map(&xs, 8, |&x| x * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn inline_when_single_job() {
+        let xs = vec![1, 2, 3];
+        assert_eq!(par_map(&xs, 1, |&x| x + 1), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let xs: Vec<u32> = Vec::new();
+        let out: Vec<u32> = par_map(&xs, 4, |&x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn propagates_reference_mode_into_workers() {
+        let xs: Vec<u32> = (0..16).collect();
+        let flags = crate::perf::with_reference(|| {
+            par_map(&xs, 4, |_| crate::perf::reference_enabled())
+        });
+        assert!(flags.iter().all(|&r| r));
+        let flags = par_map(&xs, 4, |_| crate::perf::reference_enabled());
+        assert!(flags.iter().all(|&r| !r));
+    }
+
+    #[test]
+    fn workers_run_inner_jobs_sequentially() {
+        let xs: Vec<u32> = (0..8).collect();
+        let inner = par_map(&xs, 4, |_| crate::perf::current_jobs());
+        assert!(inner.iter().all(|&j| j == 1));
+    }
+}

@@ -87,7 +87,7 @@ impl HpcWorkload {
                 traffic_bytes: o.traffic_bytes(),
                 pattern: o.pattern,
                 dep_frac: o.spec.dep_frac,
-                node_weights: asp.object(id).node_weights(),
+                node_weights: asp.object(id).node_weights_in(sys.nodes.len()),
             });
         }
         let cfg = RunConfig {

@@ -1,0 +1,184 @@
+//! Golden-parity suite: the optimized hot paths must reproduce the
+//! seed-semantics reference results for every experiment the CLI can
+//! regenerate.
+//!
+//! Comparison model: each table cell must be byte-identical, except that
+//! numeric cells tolerate a difference of 1.5 units in the last printed
+//! digit. The reference solver stops at a damped-delta of 1e-7, i.e. up
+//! to ~3e-7 relative away from the true fixed point, while the adaptive
+//! solver stops within ~1e-10 of it — so the underlying numbers agree to
+//! ~1e-6 and only print-boundary cells can differ, by at most one step
+//! of the last digit. Anything larger is a real regression and fails.
+//! The tiering paths share their RNG sampler and use integer traffic
+//! aggregates, so their parity is exact.
+
+use cxlmem::exp;
+use cxlmem::memsim::{topology, MemKind, Pattern, Stream};
+use cxlmem::perf;
+
+/// Parse a rendered cell into (value, printed decimal places): accepts
+/// plain numbers plus the drivers' decorated forms ("+12.3%", "42 GB").
+fn parse_cell(cell: &str) -> Option<(f64, i32)> {
+    let trimmed = cell
+        .trim()
+        .trim_start_matches('+')
+        .trim_end_matches('%')
+        .trim_end_matches(" GB")
+        .trim();
+    let v: f64 = trimmed.parse().ok()?;
+    let decimals = match trimmed.find('.') {
+        Some(i) => (trimmed.len() - i - 1) as i32,
+        None => 0,
+    };
+    Some((v, decimals))
+}
+
+fn cells_match(opt: &str, reference: &str, rel_tol: f64) -> bool {
+    if opt == reference {
+        return true;
+    }
+    match (parse_cell(opt), parse_cell(reference)) {
+        (Some((a, da)), Some((b, db))) => {
+            // One step of the last printed digit, plus float slack —
+            // widened by rel_tol for discrete-search experiments.
+            let tol = 1.5 * 10f64.powi(-(da.max(db))) + rel_tol * b.abs();
+            da == db && (a - b).abs() <= tol
+        }
+        _ => false,
+    }
+}
+
+/// Numeric slack per experiment. Most experiments print continuous
+/// solver outputs and must agree to one unit of the last printed digit.
+/// `assign` (hill-climb thread split) and `table2`/`fig11`/`fig12`
+/// (FlexGen discrete policy search) run argmax searches over near-tied
+/// candidates: the two solver implementations agree to ~1e-6, but a
+/// near-tie can resolve to a different — equally good — discrete
+/// choice, shifting dependent cells by a few percent. A real regression
+/// is far larger, so those ids get 5%.
+fn rel_tol_for(id: &str) -> f64 {
+    match id {
+        "assign" | "table2" | "fig11" | "fig12" => 0.05,
+        _ => 0.0,
+    }
+}
+
+/// All 19 experiment ids: the optimized solver/tiering/parallel paths
+/// must reproduce the reference tables.
+#[test]
+fn all_experiments_match_reference() {
+    for id in exp::ALL {
+        let optimized = exp::run(id).unwrap();
+        let reference = perf::with_reference(|| exp::run(id).unwrap());
+        assert_eq!(
+            optimized.tables.len(),
+            reference.tables.len(),
+            "{id}: table count"
+        );
+        for (t_opt, t_ref) in optimized.tables.iter().zip(&reference.tables) {
+            assert_eq!(t_opt.title, t_ref.title, "{id}: title");
+            assert_eq!(t_opt.headers, t_ref.headers, "{id}: headers");
+            assert_eq!(
+                t_opt.rows.len(),
+                t_ref.rows.len(),
+                "{id} '{}': row count",
+                t_opt.title
+            );
+            let rel_tol = rel_tol_for(id);
+            for (ri, (r_opt, r_ref)) in t_opt.rows.iter().zip(&t_ref.rows).enumerate() {
+                for (ci, (c_opt, c_ref)) in r_opt.iter().zip(r_ref).enumerate() {
+                    assert!(
+                        cells_match(c_opt, c_ref, rel_tol),
+                        "{id} '{}' row {ri} col {ci}: optimized '{}' vs reference '{}'",
+                        t_opt.title,
+                        c_opt,
+                        c_ref
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Parallel execution is a pure scheduling change: `exp all` through the
+/// scoped-thread runner must produce byte-identical tables.
+#[test]
+fn parallel_runner_is_bit_identical() {
+    let ids = ["fig2", "fig6", "table1", "fig13"];
+    let par = exp::run_all(&ids, 4).unwrap();
+    for (id, report) in &par {
+        let seq = exp::run(id).unwrap();
+        for (a, b) in report.tables.iter().zip(&seq.tables) {
+            assert_eq!(a.rows, b.rows, "{id}");
+        }
+    }
+}
+
+/// The ISSUE's named convergence scenarios: the adaptive solver must land
+/// on the fixed point the 400-iteration damped reference converges to.
+#[test]
+fn adaptive_solver_convergence_named_scenarios() {
+    // two_streams_share_a_node (system B)
+    let sys = topology::system_b();
+    let ld = sys.node_of(0, MemKind::Ldram).unwrap();
+    let mk = |threads: f64| Stream {
+        socket: 0,
+        node_weights: vec![(ld, 1.0)],
+        pattern: Pattern::Sequential,
+        threads,
+        delay_ns: 0.0,
+    };
+    let streams = [mk(26.0), mk(26.0)];
+    let opt = sys.solve_traffic(&streams);
+    let oracle = sys.solve_traffic_converged_reference(&streams);
+    for (a, b) in opt.streams.iter().zip(&oracle.streams) {
+        assert!(
+            (a.bw_gbs - b.bw_gbs).abs() <= 1e-7 * b.bw_gbs.abs().max(1.0),
+            "bw {} vs {}",
+            a.bw_gbs,
+            b.bw_gbs
+        );
+        assert!(
+            (a.latency_ns - b.latency_ns).abs() <= 1e-7 * b.latency_ns.abs().max(1.0),
+            "lat {} vs {}",
+            a.latency_ns,
+            b.latency_ns
+        );
+    }
+
+    // interleave_bottlenecked_by_slowest_node (system A)
+    let sys = topology::system_a();
+    let ld = sys.node_of(0, MemKind::Ldram).unwrap();
+    let cxl = sys.node_of(0, MemKind::Cxl).unwrap();
+    let streams = [Stream {
+        socket: 0,
+        node_weights: vec![(ld, 0.5), (cxl, 0.5)],
+        pattern: Pattern::Sequential,
+        threads: 32.0,
+        delay_ns: 0.0,
+    }];
+    let opt = sys.solve_traffic(&streams);
+    let oracle = sys.solve_traffic_converged_reference(&streams);
+    assert!(
+        (opt.streams[0].bw_gbs - oracle.streams[0].bw_gbs).abs()
+            <= 1e-7 * oracle.streams[0].bw_gbs,
+        "bw {} vs {}",
+        opt.streams[0].bw_gbs,
+        oracle.streams[0].bw_gbs
+    );
+    assert!(opt.node_rho[cxl] > 0.9 && oracle.node_rho[cxl] > 0.9);
+}
+
+#[test]
+fn cell_comparison_rules() {
+    assert!(cells_match("1.25", "1.25", 0.0));
+    assert!(cells_match("1.25", "1.26", 0.0)); // one print-ulp apart
+    assert!(!cells_match("1.25", "1.31", 0.0)); // real difference
+    assert!(cells_match("+12.3%", "+12.4%", 0.0));
+    assert!(cells_match("42 GB", "42 GB", 0.0));
+    assert!(!cells_match("sat@6", "sat@8", 0.0)); // non-numeric: exact only
+    assert!(cells_match("sat@6", "sat@6", 0.0));
+    assert!(!cells_match("1.2", "1.25", 0.0)); // different precision: exact only
+    assert!(cells_match("100.0", "102.0", 0.05)); // discrete-search slack
+    assert!(!cells_match("100.0", "110.0", 0.05));
+}

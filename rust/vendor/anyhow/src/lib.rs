@@ -1,0 +1,206 @@
+//! Minimal, API-compatible subset of the `anyhow` crate for fully-offline
+//! builds (the container has no crates.io access). Implements exactly what
+//! this repository uses:
+//!
+//! - [`Error`]: boxed dynamic error with a context chain
+//! - [`Result<T>`] alias
+//! - [`anyhow!`] / [`bail!`] macros (format-string and value forms)
+//! - [`Context`] trait with `context` / `with_context` on `Result` and
+//!   `Option`
+//! - blanket `From<E: std::error::Error + Send + Sync + 'static>` so `?`
+//!   converts std errors
+//!
+//! Semantics follow upstream closely enough for error propagation and
+//! message formatting; downcasting and backtraces are not implemented.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A boxed error with optional context frames (most recent first).
+pub struct Error {
+    /// Context messages wrapped around the cause, outermost first.
+    context: Vec<String>,
+    cause: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+/// Plain-message error used when an `Error` is built from a string.
+#[derive(Debug)]
+struct MessageError(String);
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for MessageError {}
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error {
+            context: Vec::new(),
+            cause: Box::new(MessageError(message.to_string())),
+        }
+    }
+
+    /// Create an error from a concrete `std::error::Error` value.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Self {
+        Error {
+            context: Vec::new(),
+            cause: Box::new(error),
+        }
+    }
+
+    /// Wrap the error in an additional context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.context.insert(0, context.to_string());
+        self
+    }
+
+    /// The root cause as a trait object.
+    pub fn root_cause(&self) -> &(dyn StdError + 'static) {
+        &*self.cause
+    }
+
+    /// Iterate the chain: context frames, then the cause.
+    pub fn chain(&self) -> impl Iterator<Item = String> + '_ {
+        self.context
+            .iter()
+            .cloned()
+            .chain(std::iter::once(self.cause.to_string()))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.context.first() {
+            Some(c) => f.write_str(c),
+            None => write!(f, "{}", self.cause),
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // anyhow-style: top message, then a "Caused by" chain.
+        let mut frames = self.chain();
+        let top = frames.next().unwrap_or_default();
+        write!(f, "{top}")?;
+        let rest: Vec<String> = frames.collect();
+        if !rest.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for (i, frame) in rest.iter().enumerate() {
+                write!(f, "\n    {i}: {frame}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+/// `anyhow::Result<T>` — `Result` with a boxed dynamic error.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to errors, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T> for Result<T, E>
+where
+    E: Into<Error>,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($tt:tt)*) => {
+        return Err($crate::anyhow!($($tt)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/real/path/xyz")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn macros_and_context() {
+        fn inner() -> Result<()> {
+            bail!("bad value {}", 42)
+        }
+        let e = inner().unwrap_err().context("outer");
+        assert_eq!(e.to_string(), "outer");
+        let chain: Vec<String> = e.chain().collect();
+        assert_eq!(chain, vec!["outer".to_string(), "bad value 42".to_string()]);
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing").unwrap_err();
+        assert_eq!(e.to_string(), "missing");
+    }
+
+    #[test]
+    fn with_context_on_result() {
+        let r: Result<(), std::io::Error> = Err(std::io::Error::new(
+            std::io::ErrorKind::Other,
+            "inner failure",
+        ));
+        let e = r.with_context(|| format!("step {}", 3)).unwrap_err();
+        assert_eq!(e.to_string(), "step 3");
+        assert!(e.chain().any(|f| f.contains("inner failure")));
+    }
+}
