@@ -4,9 +4,9 @@
 # golden-parity suite), a smoke run of the hot-path benchmarks, and a
 # formatting check. Mirrors .github/workflows/ci.yml.
 
-.PHONY: ci build test bench-smoke bench fmt-check exp-all
+.PHONY: ci build test bench-smoke bench fmt-check exp-all scenario-check
 
-ci: build test bench-smoke fmt-check
+ci: build test bench-smoke scenario-check fmt-check
 
 build:
 	cargo build --release
@@ -25,6 +25,14 @@ bench:
 
 fmt-check:
 	cargo fmt --check
+
+# Scenario engine gate: every bundled spec validates, a single scenario
+# runs end-to-end, and a small seeded fleet expands + evaluates.
+scenario-check: build
+	./target/release/cxlmem scenario validate examples/scenarios/*.json
+	./target/release/cxlmem scenario run examples/scenarios/table1.json --out /tmp/scenario_smoke.jsonl
+	./target/release/cxlmem scenario expand examples/scenarios/fleet.json --count 8 --out /tmp/fleet8.jsonl
+	./target/release/cxlmem scenario run /tmp/fleet8.jsonl --jobs 2 --out /tmp/fleet8_results.jsonl
 
 # Regenerate every paper figure/table, in parallel.
 exp-all: build

@@ -26,7 +26,10 @@
 //! `memoized` (production path with the solve cache warm — the sweep
 //! case). `speedup` maps each hot path to reference/optimized median
 //! ratio; `exp/all` is the wall-clock ratio of the full 19-experiment
-//! suite, sequential reference vs `--jobs`-parallel optimized.
+//! suite, sequential reference vs `--jobs`-parallel optimized, and
+//! `exp/fig16(policy x placement grid)` is the wall-clock ratio of the
+//! fig16 tiering grid at jobs=1 vs `--jobs` (the parallelized inner
+//! policy×placement fan-out).
 //!
 //! One caveat on the tiering baseline: both modes share the
 //! geometric-skip fault sampler (required for decision parity), so the
@@ -98,6 +101,7 @@ const SOLVER_NAME: &str = "memsim/solve_traffic(2 streams)";
 const ENGINE_NAME: &str = "engine/run(MG, 2-tier)";
 const TIERING_NAME: &str = "tiering/epoch(PageRank, t08, 65k pages)";
 const FLEXGEN_NAME: &str = "flexgen/search+throughput";
+const GRID_NAME: &str = "exp/fig16(policy x placement grid)";
 const EXP_ALL_NAME: &str = "exp/all";
 
 /// Run the full suite. Prints one line per measurement as it completes.
@@ -256,6 +260,37 @@ pub fn run_suite(opts: &BenchOpts) -> BenchReport {
         let rs = b.results();
         speedups.push((FLEXGEN_NAME.to_string(), ratio(&rs[0], &rs[1])));
         push_modes(&mut hotpaths, rs, &["reference", "optimized"]);
+    }
+
+    // --- fig16 policy×placement grid: sequential vs --jobs-parallel ---
+    // Wall-clock pair (the grid is one experiment, not a microbenchmark):
+    // same optimized cell code both times, only the inner fan-out differs.
+    {
+        let (apps, epochs, fast_gb) = if opts.smoke {
+            // Shrunken working set for CI: same grid shape, ~10× cheaper.
+            let mut apps = crate::workloads::tiering_apps::all_apps();
+            for a in &mut apps {
+                a.pages = 8_000;
+            }
+            (apps, 3usize, 6u64)
+        } else {
+            (crate::workloads::tiering_apps::all_apps(), 10, 50)
+        };
+        let sys16 = topology::system_a();
+        perf::set_jobs(1);
+        let t0 = Instant::now();
+        std::hint::black_box(exp::tiering_exp::fig16_with(&sys16, &apps, epochs, 7, 64, fast_gb));
+        let seq_s = t0.elapsed().as_secs_f64();
+        perf::set_jobs(opts.jobs);
+        let t0 = Instant::now();
+        std::hint::black_box(exp::tiering_exp::fig16_with(&sys16, &apps, epochs, 7, 64, fast_gb));
+        let par_s = t0.elapsed().as_secs_f64();
+        perf::set_jobs(1);
+        println!(
+            "{GRID_NAME} [jobs=1]: {seq_s:.2} s, [jobs={}]: {par_s:.2} s",
+            opts.jobs
+        );
+        speedups.push((GRID_NAME.to_string(), seq_s / par_s.max(1e-12)));
     }
 
     // --- exp all wall clock: sequential reference vs parallel optimized ---

@@ -8,13 +8,21 @@ use crate::util::table::{f1, Table};
 
 const TIERS: [MemKind; 3] = [MemKind::Ldram, MemKind::Rdram, MemKind::Cxl];
 
+/// Default Fig 3 thread-count rows (truncated per system's core count).
+pub const FIG3_THREAD_ROWS: &[usize] = &[1, 2, 4, 6, 8, 12, 16, 20, 24, 28, 32, 40, 48, 52];
+
 /// Table I: the three systems.
 pub fn table1() -> Report {
+    table1_with(&topology::all_systems())
+}
+
+/// Table I over an arbitrary system list (scenario entry point).
+pub fn table1_with(systems: &[System]) -> Report {
     let mut t = Table::new(
         "Table I — three systems with CXL devices",
         &["Sys", "Description", "DDR spec GB/s", "CXL spec GB/s", "CXL cap"],
     );
-    for sys in topology::all_systems() {
+    for sys in systems {
         let cxl = sys.node_of(0, MemKind::Cxl).unwrap();
         t.row(vec![
             sys.name.clone(),
@@ -31,18 +39,24 @@ pub fn table1() -> Report {
 
 /// Fig 2: idle load latency, random + sequential, per system and tier.
 pub fn fig2() -> Report {
+    fig2_with(&topology::all_systems(), 5000, 42)
+}
+
+/// Fig 2 over arbitrary systems / sample budget / base seed (the random
+/// pattern uses `seed + 1`, matching the paper harness defaults 42/43).
+pub fn fig2_with(systems: &[System], samples: usize, seed: u64) -> Report {
     let mut r = Report::new();
     let mut t = Table::new(
         "Fig 2 — load latency (ns) for random/sequential access",
         &["Sys", "Tier", "sequential", "random"],
     );
-    for sys in topology::all_systems() {
+    for sys in systems {
         // Measure from the socket nearest the CXL card (paper's setup).
         let socket = sys.nodes[sys.node_of(0, MemKind::Cxl).unwrap()].socket;
         for kind in TIERS {
             let node = sys.node_of(socket, kind).unwrap();
-            let seq = mlc::idle_latency(&sys, socket, node, Pattern::Sequential, 5000, 42);
-            let rnd = mlc::idle_latency(&sys, socket, node, Pattern::Random, 5000, 43);
+            let seq = mlc::idle_latency(sys, socket, node, Pattern::Sequential, samples, seed);
+            let rnd = mlc::idle_latency(sys, socket, node, Pattern::Random, samples, seed + 1);
             t.row(vec![
                 sys.name.clone(),
                 kind.label().into(),
@@ -57,8 +71,13 @@ pub fn fig2() -> Report {
 
 /// Fig 3: bandwidth scaling vs thread count, per system.
 pub fn fig3() -> Report {
+    fig3_with(&topology::all_systems(), FIG3_THREAD_ROWS)
+}
+
+/// Fig 3 over arbitrary systems and thread-count rows.
+pub fn fig3_with(systems: &[System], rows: &[usize]) -> Report {
     let mut r = Report::new();
-    for sys in topology::all_systems() {
+    for sys in systems {
         let socket = 0;
         let max_t = sys.cores_per_socket;
         let mut t = Table::new(
@@ -69,11 +88,13 @@ pub fn fig3() -> Report {
         let sweeps: Vec<Vec<mlc::BwPoint>> =
             crate::util::par::par_map_auto(&TIERS[..], |&k| {
                 let node = sys.node_of(socket, k).unwrap();
-                mlc::bw_scaling_sweep(&sys, socket, node, Pattern::Sequential, max_t)
+                mlc::bw_scaling_sweep(sys, socket, node, Pattern::Sequential, max_t)
             });
-        for ti in [1, 2, 4, 6, 8, 12, 16, 20, 24, 28, 32, 40, 48, 52] {
-            if ti > max_t {
-                break;
+        // Skip (not stop at) rows beyond this system's core count — the
+        // row list is scenario data now and need not be sorted.
+        for &ti in rows {
+            if ti == 0 || ti > max_t {
+                continue;
             }
             t.row(vec![
                 ti.to_string(),
@@ -95,12 +116,17 @@ pub fn fig3() -> Report {
 
 /// Fig 4: latency/bandwidth under varying injected load.
 pub fn fig4() -> Report {
+    fig4_with(&topology::all_systems(), 32)
+}
+
+/// Fig 4 over arbitrary systems / driving thread count (MLC delay grid).
+pub fn fig4_with(systems: &[System], threads: usize) -> Report {
     let mut r = Report::new();
-    for sys in topology::all_systems() {
+    for sys in systems {
         let socket = 0;
         let mut t = Table::new(
             &format!(
-                "Fig 4 — loaded latency, system {} (32 threads, delay sweep)",
+                "Fig 4 — loaded latency, system {} ({threads} threads, delay sweep)",
                 sys.name
             ),
             &[
@@ -112,7 +138,7 @@ pub fn fig4() -> Report {
         let sweeps: Vec<Vec<mlc::LoadPoint>> =
             crate::util::par::par_map_auto(&TIERS[..], |&k| {
                 let node = sys.node_of(socket, k).unwrap();
-                mlc::loaded_latency_sweep(&sys, socket, node, Pattern::Sequential, 32, &grid)
+                mlc::loaded_latency_sweep(sys, socket, node, Pattern::Sequential, threads, &grid)
             });
         for i in 0..grid.len() {
             t.row(vec![
@@ -132,11 +158,14 @@ pub fn fig4() -> Report {
 
 /// §III thread-assignment study (system B: 6/23/23 → ~420 GB/s).
 pub fn assign() -> Report {
-    let sys = topology::system_b();
-    let socket = 0;
-    let best = probes::best_assignment(&sys, socket, sys.cores_per_socket);
+    assign_with(&topology::system_b(), 0)
+}
+
+/// The thread-assignment study on an arbitrary system/socket.
+pub fn assign_with(sys: &System, socket: usize) -> Report {
+    let best = probes::best_assignment(sys, socket, sys.cores_per_socket);
     let mut t = Table::new(
-        "§III — bandwidth-aware thread assignment (system B)",
+        &format!("§III — bandwidth-aware thread assignment (system {})", sys.name),
         &["assignment", "LDRAM t", "RDRAM t", "CXL t", "total GB/s"],
     );
     let names: Vec<MemKind> = best

@@ -11,11 +11,16 @@ use crate::workloads::HpcWorkload;
 
 /// Table III: HPC workload inventory + the OLI-selected objects.
 pub fn table3() -> Report {
+    table3_with(&all_hpc_workloads())
+}
+
+/// Table III over an arbitrary workload list.
+pub fn table3_with(workloads: &[HpcWorkload]) -> Report {
     let mut t = Table::new(
         "Table III — HPC workloads",
         &["wl", "type", "input", "footprint GB", "BW-hungry objects (OLI-selected)"],
     );
-    for wl in all_hpc_workloads() {
+    for wl in workloads {
         let sel = oli::select_bw_hungry(&wl.specs());
         let picked: Vec<String> = wl
             .objects
@@ -66,21 +71,29 @@ fn run_policy(
 /// Fig 13: HPC performance under the interleaving policy family
 /// (normalized to LDRAM preferred; lower is better).
 pub fn fig13() -> Report {
-    let sys = topology::system_a();
-    let socket = 0; // paper: benchmarks run on CPU 0
-    let threads = 32;
-    let pols = fig13_policies(&sys, socket);
+    // paper: benchmarks run on CPU 0
+    fig13_with(&topology::system_a(), 0, 32, &all_hpc_workloads())
+}
+
+/// Fig 13 on an arbitrary system / socket / thread count / workload set.
+pub fn fig13_with(
+    sys: &System,
+    socket: usize,
+    threads: usize,
+    workloads: &[HpcWorkload],
+) -> Report {
+    let pols = fig13_policies(sys, socket);
     let mut headers = vec!["wl".to_string()];
     headers.extend(pols.iter().map(|(n, _)| n.clone()));
     let mut t = Table::new(
         "Fig 13 — normalized time under interleaving policies (LDRAM preferred = 1.0)",
         &headers.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
     );
-    for wl in all_hpc_workloads() {
-        let base = run_policy(&sys, &wl, socket, threads, &pols[0].1).unwrap();
+    for wl in workloads {
+        let base = run_policy(sys, wl, socket, threads, &pols[0].1).unwrap();
         let mut row = vec![wl.name.to_string()];
         for (_, p) in &pols {
-            let v = run_policy(&sys, &wl, socket, threads, p).unwrap();
+            let v = run_policy(sys, wl, socket, threads, p).unwrap();
             row.push(f2(v / base));
         }
         t.row(row);
@@ -90,14 +103,25 @@ pub fn fig13() -> Report {
     r
 }
 
+/// Default Fig 14 thread-count grid.
+pub const FIG14_THREADS: &[usize] = &[4, 8, 12, 16, 20, 24, 28, 32];
+
 /// Fig 14: CG and MG thread-scaling under CXL-preferred / RDRAM-only /
 /// interleave-all, normalized to LDRAM-only at each thread count.
 /// Run on socket 1 (the CXL-attached socket, as in §V-B's setup).
 pub fn fig14() -> Report {
-    let sys = topology::system_a();
-    let socket = 1;
+    fig14_with(&topology::system_a(), 1, &["CG", "MG"], FIG14_THREADS)
+}
+
+/// Fig 14 on an arbitrary system / socket / workload names / thread grid.
+pub fn fig14_with(
+    sys: &System,
+    socket: usize,
+    names: &[&str],
+    thread_grid: &[usize],
+) -> Report {
     let mut r = Report::new();
-    for name in ["CG", "MG"] {
+    for name in names {
         let wl = by_name(name).unwrap();
         let mut t = Table::new(
             &format!("Fig 14 — {name} scalability (time normalized to LDRAM only)"),
@@ -105,13 +129,13 @@ pub fn fig14() -> Report {
         );
         let ld = Policy::Membind(vec![sys.node_of(socket, MemKind::Ldram).unwrap()]);
         let rd = Policy::Membind(vec![sys.node_of(socket, MemKind::Rdram).unwrap()]);
-        let cxl = mem::policy::cxl_preferred(&sys, socket);
-        let all = mem::policy::interleave_all(&sys, socket);
-        for threads in [4usize, 8, 12, 16, 20, 24, 28, 32] {
-            let base = run_policy(&sys, &wl, socket, threads, &ld).unwrap();
+        let cxl = mem::policy::cxl_preferred(sys, socket);
+        let all = mem::policy::interleave_all(sys, socket);
+        for &threads in thread_grid {
+            let base = run_policy(sys, &wl, socket, threads, &ld).unwrap();
             let mut row = vec![threads.to_string(), f2(1.0)];
             for p in [&rd, &cxl, &all] {
-                row.push(f2(run_policy(&sys, &wl, socket, threads, p).unwrap() / base));
+                row.push(f2(run_policy(sys, &wl, socket, threads, p).unwrap() / base));
             }
             t.row(row);
         }
@@ -123,9 +147,21 @@ pub fn fig14() -> Report {
 /// Fig 15 core: per-workload speedup (vs LDRAM preferred) for uniform
 /// interleave and OLI under an LDRAM capacity limit.
 fn fig15(ldram_gb: u64, title: &str) -> Report {
-    let sys = topology::system_a();
-    let socket = 0;
-    let threads = 32;
+    fig15_with(&topology::system_a(), 0, 32, ldram_gb, 32, title)
+}
+
+/// Fig 15 on an arbitrary system / socket / thread count / capacity
+/// limits. `rdram_residue_gb` is the emergency-overflow headroom the
+/// paper's GRUB-limited systems keep (MG's 210 GB does not fit 64+128 GB
+/// otherwise).
+pub fn fig15_with(
+    sys: &System,
+    socket: usize,
+    threads: usize,
+    ldram_gb: u64,
+    rdram_residue_gb: u64,
+    title: &str,
+) -> Report {
     let mut t = Table::new(
         title,
         &["wl", "LDRAM preferred", "uniform interleave", "OLI", "OLI LDRAM saved"],
@@ -137,37 +173,34 @@ fn fig15(ldram_gb: u64, title: &str) -> Report {
             let ld = sys.node_of(socket, MemKind::Ldram).unwrap();
             let rd = sys.node_of(socket, MemKind::Rdram).unwrap();
             phys.limit_node(ld, ldram_gb << 30);
-            // Small RDRAM residue as emergency overflow (the paper's
-            // GRUB-limited systems keep swap-like headroom; MG's 210 GB
-            // does not fit 64+128 GB otherwise).
-            phys.limit_node(rd, 32 << 30);
+            phys.limit_node(rd, rdram_residue_gb << 30);
         };
         // LDRAM preferred baseline
-        let mut phys = PhysMem::of_system(&sys);
+        let mut phys = PhysMem::of_system(sys);
         limit(&mut phys);
         let base = wl
-            .run_uniform(&sys, socket, threads, &mut phys, &mem::policy::ldram_preferred(&sys, socket))
+            .run_uniform(sys, socket, threads, &mut phys, &mem::policy::ldram_preferred(sys, socket))
             .unwrap()
             .total_s;
         // Uniform interleave LDRAM+CXL
-        let mut phys = PhysMem::of_system(&sys);
+        let mut phys = PhysMem::of_system(sys);
         limit(&mut phys);
         let uni = wl
             .run_uniform(
-                &sys,
+                sys,
                 socket,
                 threads,
                 &mut phys,
-                &mem::policy::interleave_kinds(&sys, socket, &[MemKind::Ldram, MemKind::Cxl]),
+                &mem::policy::interleave_kinds(sys, socket, &[MemKind::Ldram, MemKind::Cxl]),
             )
             .unwrap()
             .total_s;
         // OLI
-        let plan = oli::plan(&sys, socket, &wl.specs(), &[MemKind::Ldram, MemKind::Cxl]);
-        let mut phys = PhysMem::of_system(&sys);
+        let plan = oli::plan(sys, socket, &wl.specs(), &[MemKind::Ldram, MemKind::Cxl]);
+        let mut phys = PhysMem::of_system(sys);
         limit(&mut phys);
         let oli_t = wl
-            .run_with(&sys, socket, threads, &mut phys, &|i, _| {
+            .run_with(sys, socket, threads, &mut phys, &|i, _| {
                 plan.assignments[i].1.clone()
             })
             .unwrap()

@@ -14,6 +14,55 @@ fn sys_a() -> (System, Gpu) {
     (topology::system_a(), Gpu::a10())
 }
 
+/// A named CPU memory hierarchy handed to the FlexGen policy search —
+/// Fig 11/12 and Table II parameterize over lists of these, and scenario
+/// files supply them as data.
+#[derive(Clone, Debug)]
+pub struct Hierarchy {
+    pub name: String,
+    /// (tier kind, capacity bytes) in preference order.
+    pub tiers: Vec<(MemKind, f64)>,
+}
+
+impl Hierarchy {
+    pub fn new(name: &str, tiers: &[(MemKind, f64)]) -> Self {
+        Self {
+            name: name.to_string(),
+            tiers: tiers.to_vec(),
+        }
+    }
+}
+
+/// The paper's equal-capacity (324 GB) hierarchies of Fig 11.
+pub fn hierarchies_324() -> Vec<Hierarchy> {
+    configs_324()
+        .into_iter()
+        .map(|(n, t)| Hierarchy::new(n, &t))
+        .collect()
+}
+
+/// The paper's capacity ladder of Table II / Fig 12.
+pub fn hierarchies_ladder() -> Vec<Hierarchy> {
+    capacity_ladder()
+        .into_iter()
+        .map(|(n, t)| Hierarchy::new(n, &t))
+        .collect()
+}
+
+/// Inference model lookup for scenario specs.
+pub fn infer_model(name: &str) -> Option<ModelCfg> {
+    match name {
+        "llama-65b" => Some(llama_65b()),
+        "opt-66b" => Some(opt_66b()),
+        _ => None,
+    }
+}
+
+/// The paper's default inference model pair.
+pub fn default_infer_models() -> Vec<ModelCfg> {
+    vec![llama_65b(), opt_66b()]
+}
+
 /// The four CPU-side placements of Fig 8 (from the GPU's socket 1 the
 /// "local" DDR is node 1's pool; we keep the paper's socket-0 naming).
 fn placements(sys: &System) -> Vec<(&'static str, Vec<(NodeId, f64)>)> {
@@ -31,17 +80,25 @@ fn placements(sys: &System) -> Vec<(&'static str, Vec<(NodeId, f64)>)> {
     ]
 }
 
+/// Default Fig 5 transfer block sizes (log2 bytes).
+pub const FIG5_BLOCKS_LOG2: &[usize] = &[7, 12, 16, 20, 24, 28, 30, 32];
+
 /// Fig 5: GPU↔CPU copy bandwidth vs block size × memory policy.
 pub fn fig5() -> Report {
     let (sys, gpu) = sys_a();
+    fig5_with(&sys, &gpu, FIG5_BLOCKS_LOG2)
+}
+
+/// Fig 5 on an arbitrary system / block-size grid.
+pub fn fig5_with(sys: &System, gpu: &Gpu, blocks_log2: &[usize]) -> Report {
     let mut t = Table::new(
         "Fig 5 — GPU<->CPU transfer bandwidth (GB/s) vs block size",
         &["block", "LDRAM", "LDRAM+CXL", "LDRAM+RDRAM", "interleave all", "CXL only"],
     );
     let cxl = sys.node_of(0, MemKind::Cxl).unwrap();
-    let mut pols = placements(&sys);
+    let mut pols = placements(sys);
     pols.push(("CXL only", vec![(cxl, 1.0)]));
-    for exp in [7usize, 12, 16, 20, 24, 28, 30, 32] {
+    for &exp in blocks_log2 {
         let bytes = (1u64 << exp) as f64;
         let mut row = vec![if exp < 20 {
             format!("{} B", 1u64 << exp)
@@ -63,6 +120,11 @@ pub fn fig5() -> Report {
 /// Fig 6: 64-byte transfer latency GPU↔each memory node.
 pub fn fig6() -> Report {
     let (sys, gpu) = sys_a();
+    fig6_with(&sys, &gpu)
+}
+
+/// Fig 6 on an arbitrary system.
+pub fn fig6_with(sys: &System, gpu: &Gpu) -> Report {
     let mut t = Table::new(
         "Fig 6 — 64B GPU<->CPU transfer latency (ns)",
         &["target memory", "latency ns", "delta vs LDRAM"],
@@ -96,6 +158,11 @@ fn train_models() -> Vec<(ModelCfg, usize)> {
 /// Fig 8: ZeRO-Offload training throughput × policy × model size.
 pub fn fig8() -> Report {
     let (sys, gpu) = sys_a();
+    fig8_with(&sys, &gpu)
+}
+
+/// Fig 8 on an arbitrary system (e.g. one with a swapped CXL card).
+pub fn fig8_with(sys: &System, gpu: &Gpu) -> Report {
     let mut t = Table::new(
         "Fig 8 — ZeRO-Offload samples/s (bs=max batch @ model)",
         &["model", "bs", "LDRAM only", "LDRAM+CXL", "LDRAM+RDRAM", "interleave all"],
@@ -121,6 +188,11 @@ pub fn fig8() -> Report {
 /// Fig 9: optimizer + exposed-data-movement breakdown (% of step).
 pub fn fig9() -> Report {
     let (sys, gpu) = sys_a();
+    fig9_with(&sys, &gpu)
+}
+
+/// Fig 9 on an arbitrary system.
+pub fn fig9_with(sys: &System, gpu: &Gpu) -> Report {
     let mut t = Table::new(
         "Fig 9 — step breakdown (optimizer% / data-move% of total)",
         &["model", "policy", "optimizer s", "opt %", "data-move s", "dm %"],
@@ -170,19 +242,29 @@ fn configs_324() -> Vec<(&'static str, Vec<(MemKind, f64)>)> {
 /// Fig 11: FlexGen throughput across 324 GB memory systems.
 pub fn fig11() -> Report {
     let (sys, gpu) = sys_a();
+    fig11_with(&sys, &gpu, &default_infer_models(), &hierarchies_324())
+}
+
+/// Fig 11 over arbitrary models and memory hierarchies.
+pub fn fig11_with(
+    sys: &System,
+    gpu: &Gpu,
+    models: &[ModelCfg],
+    hierarchies: &[Hierarchy],
+) -> Report {
     let mut t = Table::new(
         "Fig 11 — LLM inference throughput, 324 GB configs (tok/s)",
         &["model", "config", "batch", "prefill", "decode", "total"],
     );
-    for model in [llama_65b(), opt_66b()] {
-        let cfg = InferCfg::paper(model);
-        for (name, kinds) in configs_324() {
-            let tiers = flexgen::tiers_of(&sys, &kinds);
-            let pol = flexgen::search_policy(&gpu, &cfg, &tiers);
-            let th = flexgen::throughput(&sys, &gpu, &cfg, &pol);
+    for model in models {
+        let cfg = InferCfg::paper(model.clone());
+        for h in hierarchies {
+            let tiers = flexgen::tiers_of(sys, &h.tiers);
+            let pol = flexgen::search_policy(gpu, &cfg, &tiers);
+            let th = flexgen::throughput(sys, gpu, &cfg, &pol);
             t.row(vec![
                 cfg.model.name.clone(),
-                name.into(),
+                h.name.clone(),
                 pol.batch.to_string(),
                 f1(th.prefill_tok_s),
                 f2(th.decode_tok_s),
@@ -221,18 +303,28 @@ fn capacity_ladder() -> Vec<(&'static str, Vec<(MemKind, f64)>)> {
 /// Table II: offload-policy search results.
 pub fn table2() -> Report {
     let (sys, gpu) = sys_a();
+    table2_with(&sys, &gpu, &default_infer_models(), &hierarchies_ladder())
+}
+
+/// Table II over arbitrary models and memory hierarchies.
+pub fn table2_with(
+    sys: &System,
+    gpu: &Gpu,
+    models: &[ModelCfg],
+    hierarchies: &[Hierarchy],
+) -> Report {
     let mut t = Table::new(
         "Table II — FlexGen offload policy per memory hierarchy",
         &["LLM", "hierarchy", "BS", "c on GPU", "c on CPU", "footprint"],
     );
-    for model in [llama_65b(), opt_66b()] {
-        let cfg = InferCfg::paper(model);
-        for (name, kinds) in capacity_ladder() {
-            let tiers = flexgen::tiers_of(&sys, &kinds);
-            let pol = flexgen::search_policy(&gpu, &cfg, &tiers);
+    for model in models {
+        let cfg = InferCfg::paper(model.clone());
+        for h in hierarchies {
+            let tiers = flexgen::tiers_of(sys, &h.tiers);
+            let pol = flexgen::search_policy(gpu, &cfg, &tiers);
             t.row(vec![
                 cfg.model.name.clone(),
-                name.into(),
+                h.name.clone(),
                 pol.batch.to_string(),
                 format!("{:.0}%", 100.0 * pol.kv_gpu_frac),
                 format!("{:.0}%", 100.0 * (1.0 - pol.kv_gpu_frac)),
@@ -248,23 +340,34 @@ pub fn table2() -> Report {
 /// Fig 12: throughput vs memory capacity (batch-size scaling).
 pub fn fig12() -> Report {
     let (sys, gpu) = sys_a();
+    fig12_with(&sys, &gpu, &default_infer_models(), &hierarchies_ladder())
+}
+
+/// Fig 12 over arbitrary models and hierarchies; the first hierarchy is
+/// the normalization baseline.
+pub fn fig12_with(
+    sys: &System,
+    gpu: &Gpu,
+    models: &[ModelCfg],
+    hierarchies: &[Hierarchy],
+) -> Report {
     let mut t = Table::new(
         "Fig 12 — inference throughput vs capacity (tok/s)",
         &["model", "config", "batch", "prefill", "decode", "total", "vs LDRAM only"],
     );
-    for model in [llama_65b(), opt_66b()] {
-        let cfg = InferCfg::paper(model);
+    for model in models {
+        let cfg = InferCfg::paper(model.clone());
         let mut base_total = 0.0;
-        for (i, (name, kinds)) in capacity_ladder().into_iter().enumerate() {
-            let tiers = flexgen::tiers_of(&sys, &kinds);
-            let pol = flexgen::search_policy(&gpu, &cfg, &tiers);
-            let th = flexgen::throughput(&sys, &gpu, &cfg, &pol);
+        for (i, h) in hierarchies.iter().enumerate() {
+            let tiers = flexgen::tiers_of(sys, &h.tiers);
+            let pol = flexgen::search_policy(gpu, &cfg, &tiers);
+            let th = flexgen::throughput(sys, gpu, &cfg, &pol);
             if i == 0 {
                 base_total = th.total_tok_s;
             }
             t.row(vec![
                 cfg.model.name.clone(),
-                name.into(),
+                h.name.clone(),
                 pol.batch.to_string(),
                 f1(th.prefill_tok_s),
                 f2(th.decode_tok_s),

@@ -1,4 +1,10 @@
 //! Experiment drivers for §VI: Figs 16–17 (page migration × placement).
+//!
+//! The policy×placement grids are embarrassingly parallel — every cell
+//! seeds its own trace generator and policy — so both drivers flatten
+//! their grid into a cell list and fan it out over
+//! [`crate::util::par::par_map_auto`]. Results are reassembled in the
+//! sequential order, so tables are byte-identical at any `--jobs`.
 
 use crate::mem::oli;
 use crate::memsim::{topology, MemKind, Pattern, System};
@@ -6,11 +12,15 @@ use crate::report::Report;
 use crate::tiering::{
     self, initial_state, AutoNuma, NoBalance, PageState, SimConfig, Tiering08, TieringPolicy, Tpp,
 };
+use crate::util::par::par_map_auto;
 use crate::util::table::{f1, Table};
 use crate::workloads::npb::all_hpc_workloads;
 use crate::workloads::tiering_apps::{all_apps, AppModel, TraceGen};
 
 const EPOCHS: usize = 10;
+
+/// Names of the §VI tiering policies, grid order.
+pub const POLICY_NAMES: &[&str] = &["NoBalance", "AutoNUMA", "Tiering-0.8", "TPP"];
 
 fn fresh_policies() -> Vec<Box<dyn TieringPolicy>> {
     vec![
@@ -21,25 +31,34 @@ fn fresh_policies() -> Vec<Box<dyn TieringPolicy>> {
     ]
 }
 
+fn policy_by_index(i: usize) -> Box<dyn TieringPolicy> {
+    fresh_policies()
+        .into_iter()
+        .nth(i)
+        .expect("policy index out of range")
+}
+
+#[allow(clippy::too_many_arguments)]
 fn app_sim(
     sys: &System,
     app: &AppModel,
     interleave: bool,
     policy: &mut dyn TieringPolicy,
     seed: u64,
+    epochs: usize,
+    threads: usize,
+    fast_cap: usize,
 ) -> tiering::TieringRun {
     let socket = 0;
     let ld = sys.node_of(socket, MemKind::Ldram).unwrap();
     let cxl = sys.node_of(socket, MemKind::Cxl).unwrap();
-    // §VI-A: LDRAM limited to 50 GB (~25k 2MB regions) of a 130 GB WSS.
-    let fast_cap = (50u64 << 30) / crate::mem::PAGE_BYTES;
-    let mut state = initial_state(app.pages, ld, cxl, fast_cap as usize, interleave);
+    let mut state = initial_state(app.pages, ld, cxl, fast_cap, interleave);
     let mut gen = TraceGen::new(app.clone(), seed);
     let cfg = SimConfig {
         socket,
-        threads: 64,
+        threads,
         compute_ns_per_byte: app.compute_ns_per_access / 64.0,
-        epochs: EPOCHS,
+        epochs,
         seed,
     };
     let dep = 0.55;
@@ -63,25 +82,58 @@ fn app_sim(
 /// {NoBalance, AutoNUMA, Tiering-0.8, TPP} × {first touch, interleave},
 /// plus the PMO hint-fault/migration counters.
 pub fn fig16() -> Report {
-    let sys = topology::system_a();
+    // §VI-A: LDRAM limited to 50 GB (~25k 2MB regions) of a 130 GB WSS.
+    fig16_with(&topology::system_a(), &all_apps(), EPOCHS, 7, 64, 50)
+}
+
+/// Fig 16 on an arbitrary system / app set / epoch budget / seed /
+/// thread count / fast-tier capacity (GB). The app × placement × policy
+/// grid runs in parallel over the configured `--jobs`.
+pub fn fig16_with(
+    sys: &System,
+    apps: &[AppModel],
+    epochs: usize,
+    seed: u64,
+    threads: usize,
+    fast_gb: u64,
+) -> Report {
+    let fast_cap = ((fast_gb << 30) / crate::mem::PAGE_BYTES) as usize;
     let mut t = Table::new(
         "Fig 16 — tiering x placement (seconds; lower is better)",
         &["app", "policy", "placement", "time s", "hint faults", "migrated 4K pages"],
     );
-    for app in all_apps() {
+    // Flatten the grid in row order; every cell is independent.
+    let mut cells: Vec<(usize, bool, usize)> = Vec::new();
+    for ai in 0..apps.len() {
         for interleave in [false, true] {
-            for mut pol in fresh_policies() {
-                let run = app_sim(&sys, &app, interleave, pol.as_mut(), 7);
-                t.row(vec![
-                    app.name.into(),
-                    run.policy.clone(),
-                    run.placement.clone(),
-                    f1(run.total_s),
-                    run.stats.hint_faults.to_string(),
-                    run.stats.migrated_pages.to_string(),
-                ]);
+            for pi in 0..POLICY_NAMES.len() {
+                cells.push((ai, interleave, pi));
             }
         }
+    }
+    let rows = par_map_auto(&cells, |&(ai, interleave, pi)| {
+        let mut pol = policy_by_index(pi);
+        let run = app_sim(
+            sys,
+            &apps[ai],
+            interleave,
+            pol.as_mut(),
+            seed,
+            epochs,
+            threads,
+            fast_cap,
+        );
+        vec![
+            apps[ai].name.into(),
+            run.policy.clone(),
+            run.placement.clone(),
+            f1(run.total_s),
+            run.stats.hint_faults.to_string(),
+            run.stats.migrated_pages.to_string(),
+        ]
+    });
+    for row in rows {
+        t.row(row);
     }
     let mut r = Report::new();
     r.add(t);
@@ -91,14 +143,26 @@ pub fn fig16() -> Report {
 /// Fig 17: tiering × {first touch, uniform interleave, OLI} for the HPC
 /// workloads (§VI-B; 32 threads, socket 1).
 pub fn fig17() -> Report {
-    let sys = topology::system_a();
-    let socket = 1;
+    fig17_with(&topology::system_a(), 1, 32, EPOCHS, 11)
+}
+
+/// Fig 17 on an arbitrary system / socket / thread count / epoch budget /
+/// seed. The placement × policy grid of each workload runs in parallel
+/// over the configured `--jobs`.
+pub fn fig17_with(
+    sys: &System,
+    socket: usize,
+    threads: usize,
+    epochs: usize,
+    seed: u64,
+) -> Report {
     let ld = sys.node_of(socket, MemKind::Ldram).unwrap();
     let cxl = sys.node_of(socket, MemKind::Cxl).unwrap();
     let mut t = Table::new(
         "Fig 17 — tiering x placement for HPC (seconds; lower is better)",
         &["wl", "placement", "NoBalance", "AutoNUMA", "Tiering-0.8", "TPP"],
     );
+    const PLACEMENTS: [&str; 3] = ["first-touch", "uniform", "OLI"];
     for wl in all_hpc_workloads() {
         // §VI-B capacities: 40 GB (FT), 100 GB (MG), 50 GB otherwise.
         let cap_gb: u64 = match wl.name {
@@ -113,58 +177,67 @@ pub fn fig17() -> Report {
             .map(|o| (o.spec.bytes / crate::mem::PAGE_BYTES) as usize)
             .collect();
         let total_pages: usize = pages_per_obj.iter().sum();
-        let plan = oli::plan(&sys, socket, &wl.specs(), &[MemKind::Ldram, MemKind::Cxl]);
-
-        for placement in ["first-touch", "uniform", "OLI"] {
-            let mut row = vec![wl.name.to_string(), placement.into()];
-            for mut pol in fresh_policies() {
-                // Build page state per (placement, policy) run.
-                let mut state = match placement {
-                    "first-touch" => initial_state(total_pages, ld, cxl, fast_cap, false),
-                    "uniform" => initial_state(total_pages, ld, cxl, fast_cap, true),
-                    _ => oli_state(&plan, &pages_per_obj, ld, cxl, fast_cap),
-                };
-                // object ids per page
-                let mut obj_of = Vec::with_capacity(total_pages);
-                for (oi, &n) in pages_per_obj.iter().enumerate() {
-                    obj_of.extend(std::iter::repeat(oi as u32).take(n));
-                }
-                state.set_objects(obj_of);
-
-                // per-epoch counts: uniform scan of each object scaled by
-                // its traffic (accesses in cache lines / page).
-                let counts: Vec<u32> = wl
-                    .objects
-                    .iter()
-                    .zip(&pages_per_obj)
-                    .flat_map(|(o, &n)| {
-                        let per_page =
-                            (o.traffic_bytes() / 64.0 / n.max(1) as f64 / EPOCHS as f64) as u32;
-                        std::iter::repeat(per_page).take(n)
-                    })
-                    .collect();
-                let cfg = SimConfig {
-                    socket,
-                    threads: 32,
-                    compute_ns_per_byte: wl.compute_ns_per_byte,
-                    epochs: EPOCHS,
-                    seed: 11,
-                };
-                let patterns: Vec<(Pattern, f64)> = wl
-                    .objects
-                    .iter()
-                    .map(|o| (o.pattern, o.spec.dep_frac))
-                    .collect();
-                let run = tiering::simulate(
-                    &sys,
-                    &cfg,
-                    &mut state,
-                    pol.as_mut(),
-                    |_| counts.clone(),
-                    move |oi| patterns[oi as usize],
-                );
-                row.push(f1(run.total_s));
+        let plan = oli::plan(sys, socket, &wl.specs(), &[MemKind::Ldram, MemKind::Cxl]);
+        // per-epoch counts: uniform scan of each object scaled by its
+        // traffic (accesses in cache lines / page).
+        let counts: Vec<u32> = wl
+            .objects
+            .iter()
+            .zip(&pages_per_obj)
+            .flat_map(|(o, &n)| {
+                let per_page =
+                    (o.traffic_bytes() / 64.0 / n.max(1) as f64 / epochs as f64) as u32;
+                std::iter::repeat(per_page).take(n)
+            })
+            .collect();
+        let patterns: Vec<(Pattern, f64)> = wl
+            .objects
+            .iter()
+            .map(|o| (o.pattern, o.spec.dep_frac))
+            .collect();
+        // Flatten the 3 × 4 grid; every cell builds its own page state
+        // and policy, so the cells are fully independent.
+        let mut cells: Vec<(usize, usize)> = Vec::new();
+        for li in 0..PLACEMENTS.len() {
+            for pi in 0..POLICY_NAMES.len() {
+                cells.push((li, pi));
             }
+        }
+        let times: Vec<String> = par_map_auto(&cells, |&(li, pi)| {
+            let placement = PLACEMENTS[li];
+            let mut pol = policy_by_index(pi);
+            let mut state = match placement {
+                "first-touch" => initial_state(total_pages, ld, cxl, fast_cap, false),
+                "uniform" => initial_state(total_pages, ld, cxl, fast_cap, true),
+                _ => oli_state(&plan, &pages_per_obj, ld, cxl, fast_cap),
+            };
+            // object ids per page
+            let mut obj_of = Vec::with_capacity(total_pages);
+            for (oi, &n) in pages_per_obj.iter().enumerate() {
+                obj_of.extend(std::iter::repeat(oi as u32).take(n));
+            }
+            state.set_objects(obj_of);
+            let cfg = SimConfig {
+                socket,
+                threads,
+                compute_ns_per_byte: wl.compute_ns_per_byte,
+                epochs,
+                seed,
+            };
+            let patterns = &patterns;
+            let run = tiering::simulate(
+                sys,
+                &cfg,
+                &mut state,
+                pol.as_mut(),
+                |_| counts.clone(),
+                move |oi| patterns[oi as usize],
+            );
+            f1(run.total_s)
+        });
+        for (li, placement) in PLACEMENTS.iter().enumerate() {
+            let mut row = vec![wl.name.to_string(), (*placement).into()];
+            row.extend(times[li * POLICY_NAMES.len()..(li + 1) * POLICY_NAMES.len()].to_vec());
             t.row(row);
         }
     }

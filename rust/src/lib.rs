@@ -27,6 +27,7 @@ pub mod perf;
 pub mod probes;
 pub mod report;
 pub mod runtime;
+pub mod scenario;
 pub mod testkit;
 pub mod tiering;
 pub mod util;

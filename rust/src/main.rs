@@ -2,6 +2,10 @@
 //!
 //! ```text
 //! cxlmem exp <id|all> [--csv|--json] [--out FILE] [--jobs N]  regenerate a paper figure/table
+//! cxlmem scenario validate <files…>                           parse + validate scenario specs
+//! cxlmem scenario expand <file> [--seed S] [--count N]        expand sweeps/fleets to spec JSONL
+//! cxlmem scenario run <files…|-> [--jobs N] [--out FILE]      batch-evaluate → result JSONL
+//! cxlmem scenario bench [--count N] [--jobs N]                fleet throughput probe
 //! cxlmem bench [--smoke] [--jobs N] [--out FILE]              hot-path benchmarks → BENCH_hotpath.json
 //! cxlmem train [--steps N] [--seed S]                         E2E training through the PJRT artifact
 //! cxlmem serve [--requests N]                                 FlexGen-style serving demo
@@ -12,12 +16,14 @@ use anyhow::Result;
 
 use cxlmem::report::Format;
 use cxlmem::util::cli::Args;
+use cxlmem::util::json::Json;
 
 fn main() -> Result<()> {
     let args = Args::from_env();
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "exp" => cmd_exp(&args),
+        "scenario" => cmd_scenario(&args),
         "bench" => cmd_bench(&args),
         "train" => cxlmem::exp::drivers::train(&args),
         "serve" => cxlmem::exp::drivers::serve(&args),
@@ -50,12 +56,13 @@ fn cmd_exp(args: &Args) -> Result<()> {
         let jobs = args.get_usize("jobs", cxlmem::perf::default_jobs());
         let reports = cxlmem::exp::run_all(cxlmem::exp::ALL, jobs)?;
         if let Some(path) = args.get("out") {
-            let body: Vec<String> = reports.iter().map(|(_, r)| r.render(fmt)).collect();
-            // Text/CSV concatenate; JSON documents must be wrapped in an
-            // array to stay parseable as one file.
+            // Text/CSV concatenate; JSON documents are wrapped in a
+            // `Json::Arr` so the file serializes through the same
+            // util::json writer as every other emitter.
             let doc = if fmt == Format::Json {
-                format!("[{}]", body.join(","))
+                Json::Arr(reports.iter().map(|(_, r)| r.to_json()).collect()).to_string()
             } else {
+                let body: Vec<String> = reports.iter().map(|(_, r)| r.render(fmt)).collect();
                 body.join("\n")
             };
             std::fs::write(path, doc)?;
@@ -75,6 +82,145 @@ fn cmd_exp(args: &Args) -> Result<()> {
         println!("wrote {path}");
     } else {
         report.print(fmt);
+    }
+    Ok(())
+}
+
+fn cmd_scenario(args: &Args) -> Result<()> {
+    use anyhow::{anyhow, bail, Context};
+    use cxlmem::scenario;
+    use cxlmem::util::json::to_jsonl;
+
+    let verb = args.positional.get(1).map(|s| s.as_str()).unwrap_or("help");
+    let files = &args.positional[args.positional.len().min(2)..];
+    match verb {
+        "validate" => {
+            if files.is_empty() {
+                bail!("usage: cxlmem scenario validate <files...>");
+            }
+            for file in files {
+                let text = std::fs::read_to_string(file)
+                    .with_context(|| format!("reading {file}"))?;
+                let docs = scenario::docs_of(&text).map_err(|e| anyhow!("{file}: {e}"))?;
+                for doc in &docs {
+                    if scenario::is_template(doc) {
+                        // Templates validate through a sample expansion
+                        // (fleet size capped; sweeps expand fully).
+                        let count = doc.get("fleet").map(|_| 4);
+                        let n = scenario::expand(doc, None, count)
+                            .map_err(|e| anyhow!("{file}: {e}"))?
+                            .len();
+                        println!("{file}: ok — template (validated {n}-scenario expansion)");
+                    } else {
+                        let spec = scenario::ScenarioSpec::parse(doc)
+                            .map_err(|e| anyhow!("{file}: {e}"))?;
+                        println!(
+                            "{file}: ok — '{}' ({}, {} system{})",
+                            spec.name,
+                            spec.kind_label(),
+                            spec.systems.len(),
+                            if spec.systems.len() == 1 { "" } else { "s" }
+                        );
+                    }
+                }
+            }
+            Ok(())
+        }
+        "expand" => {
+            let file = files
+                .first()
+                .ok_or_else(|| anyhow!("usage: cxlmem scenario expand <file> [--seed S] [--count N] [--out FILE]"))?;
+            let text = std::fs::read_to_string(file)
+                .with_context(|| format!("reading {file}"))?;
+            let doc = Json::parse(&text).map_err(|e| anyhow!("{file}: {e}"))?;
+            // Malformed override values must error, not silently fall
+            // back to the template's embedded seed/count.
+            let seed = args
+                .get("seed")
+                .map(|s| s.parse().map_err(|_| anyhow!("--seed '{s}' is not an integer")))
+                .transpose()?;
+            let count = args
+                .get("count")
+                .map(|s| s.parse().map_err(|_| anyhow!("--count '{s}' is not an integer")))
+                .transpose()?;
+            let expanded = scenario::expand(&doc, seed, count)?;
+            let out = to_jsonl(expanded);
+            write_or_print(args, &out)
+        }
+        "run" => {
+            if files.is_empty() {
+                bail!("usage: cxlmem scenario run <files...|-> [--jobs N] [--out FILE]");
+            }
+            let mut specs = Vec::new();
+            for file in files {
+                let text = if file == "-" {
+                    let mut buf = String::new();
+                    std::io::Read::read_to_string(&mut std::io::stdin(), &mut buf)?;
+                    buf
+                } else {
+                    std::fs::read_to_string(file).with_context(|| format!("reading {file}"))?
+                };
+                specs.extend(scenario::parse_docs(&text).map_err(|e| anyhow!("{file}: {e}"))?);
+            }
+            let jobs = args.get_usize("jobs", cxlmem::perf::default_jobs());
+            let results = scenario::run_batch(&specs, jobs)?;
+            eprintln!("ran {} scenario(s) on {jobs} job(s)", results.len());
+            let out = to_jsonl(results.into_iter().map(|r| r.doc));
+            write_or_print(args, &out)
+        }
+        "bench" => {
+            // Throughput probe: expand a default fleet and time the batch.
+            let count = args.get_usize("count", 64);
+            let seed = args.get_u64("seed", 42);
+            let jobs = args.get_usize("jobs", cxlmem::perf::default_jobs());
+            let doc = cxlmem::util::json::Json::parse(&format!(
+                r#"{{"name": "bench-fleet", "fleet": {{"count": {count}, "seed": {seed}}}}}"#
+            ))
+            .map_err(|e| anyhow!("internal fleet template: {e}"))?;
+            let expanded = scenario::expand(&doc, None, None)?;
+            let specs: Vec<_> = expanded
+                .iter()
+                .map(scenario::ScenarioSpec::parse)
+                .collect::<Result<_>>()?;
+            let t0 = std::time::Instant::now();
+            let results = scenario::run_batch(&specs, jobs)?;
+            let wall = t0.elapsed().as_secs_f64();
+            println!(
+                "scenario bench: {} scenarios, jobs={jobs}, {wall:.2} s wall, {:.1} scenarios/s",
+                results.len(),
+                results.len() as f64 / wall.max(1e-9)
+            );
+            if args.get("out").is_some() {
+                let out = to_jsonl(results.into_iter().map(|r| r.doc));
+                write_or_print(args, &out)?;
+            }
+            Ok(())
+        }
+        _ => {
+            println!(
+                "cxlmem scenario — declarative scenario engine\n\
+                 \n\
+                 USAGE:\n\
+                 \x20 cxlmem scenario validate <files...>\n\
+                 \x20 cxlmem scenario expand <file> [--seed S] [--count N] [--out FILE]\n\
+                 \x20 cxlmem scenario run <files...|-> [--jobs N] [--out FILE]\n\
+                 \x20 cxlmem scenario bench [--count N] [--seed S] [--jobs N] [--out FILE]\n\
+                 \n\
+                 Bundled scenarios: examples/scenarios/*.json (one per experiment id,\n\
+                 plus fleet.json). See README 'Scenario files' for the schema."
+            );
+            Ok(())
+        }
+    }
+}
+
+/// Write to `--out FILE` when given, else print to stdout.
+fn write_or_print(args: &Args, body: &str) -> Result<()> {
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, body)?;
+        println!("wrote {path}");
+    } else {
+        print!("{body}");
     }
     Ok(())
 }
@@ -118,6 +264,7 @@ fn print_help() {
          \n\
          USAGE:\n\
          \x20 cxlmem exp <id|all> [--csv|--json] [--out FILE] [--jobs N]\n\
+         \x20 cxlmem scenario validate|expand|run|bench ... (see `cxlmem scenario help`)\n\
          \x20 cxlmem bench [--smoke] [--jobs N] [--out FILE]\n\
          \x20 cxlmem train [--steps N] [--seed S] [--log-every K]\n\
          \x20 cxlmem serve [--requests N]\n\

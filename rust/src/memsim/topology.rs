@@ -79,6 +79,37 @@ fn nvme(cap_gb: u64) -> MemDevice {
     }
 }
 
+/// Names of the shipped device calibrations, in a stable order: the DDR
+/// pools and the three vendor CXL cards of Table I, plus the NVMe tier.
+pub const DEVICE_PRESETS: &[&str] = &[
+    "ddr-a", "ddr-b", "ddr-c", "cxl-a", "cxl-b", "cxl-c", "nvme",
+];
+
+/// Look a calibrated device profile up by preset name. These are the
+/// exact calibrations the systems below are assembled from, exposed so
+/// scenario specs can splice one vendor's card into another topology
+/// (e.g. "system A with CXL B's dual... card") as data, not code.
+pub fn device_preset(name: &str) -> Option<MemDevice> {
+    Some(match name {
+        "ddr-a" => ddr(98.0, 112.0, 230.0, 460.8, 8.2, 768),
+        "ddr-b" => ddr(112.0, 127.0, 260.0, 307.2, 9.3, 1024),
+        "ddr-c" => ddr(110.0, 125.0, 110.0, 307.2, 9.0, 512),
+        // Fig 2: +153 ns over LDRAM (seq); rand ≈ 2.1× LDRAM (§V).
+        "cxl-a" => cxl(251.0, 235.0, 22.5, 38.4, 7.4, 128),
+        // Fig 2: +211 ns over LDRAM (seq). 46.4% of RDRAM peak.
+        "cxl-b" => cxl(323.0, 310.0, 51.0, 64.0, 7.9, 64),
+        // Dual-channel card: bandwidth close to RDRAM (Fig 3),
+        // loaded latency band 400–550 ns (Fig 4c).
+        "cxl-c" => cxl(295.0, 280.0, 80.0, 96.8, 7.8, 128),
+        "nvme" => nvme(128),
+        _ => return None,
+    })
+}
+
+fn preset(name: &str) -> MemDevice {
+    device_preset(name).expect("unknown built-in device preset")
+}
+
 /// System A — 2× AMD EPYC 9354 (Genoa, 32c), 12× DDR5-4800 per socket,
 /// CXL A: single-channel DDR5-4800 128 GB card on socket 1, PCIe 5.0 x16.
 /// NVIDIA A10 (24 GB) on PCIe 4.0 hangs off socket 1 as well.
@@ -90,20 +121,19 @@ pub fn system_a() -> System {
         cores_per_socket: 32,
         nodes: vec![
             Node {
-                device: ddr(98.0, 112.0, 230.0, 460.8, 8.2, 768),
+                device: preset("ddr-a"),
                 socket: 0,
             },
             Node {
-                device: ddr(98.0, 112.0, 230.0, 460.8, 8.2, 768),
+                device: preset("ddr-a"),
                 socket: 1,
             },
             Node {
-                // Fig 2: +153 ns over LDRAM (seq); rand ≈ 2.1× LDRAM (§V).
-                device: cxl(251.0, 235.0, 22.5, 38.4, 7.4, 128),
+                device: preset("cxl-a"),
                 socket: 1,
             },
             Node {
-                device: nvme(128),
+                device: preset("nvme"),
                 socket: 1,
             },
         ],
@@ -123,16 +153,15 @@ pub fn system_b() -> System {
         cores_per_socket: 52,
         nodes: vec![
             Node {
-                device: ddr(112.0, 127.0, 260.0, 307.2, 9.3, 1024),
+                device: preset("ddr-b"),
                 socket: 0,
             },
             Node {
-                device: ddr(112.0, 127.0, 260.0, 307.2, 9.3, 1024),
+                device: preset("ddr-b"),
                 socket: 1,
             },
             Node {
-                // Fig 2: +211 ns over LDRAM (seq). 46.4% of RDRAM peak.
-                device: cxl(323.0, 310.0, 51.0, 64.0, 7.9, 64),
+                device: preset("cxl-b"),
                 socket: 1,
             },
         ],
@@ -152,17 +181,15 @@ pub fn system_c() -> System {
         cores_per_socket: 32,
         nodes: vec![
             Node {
-                device: ddr(110.0, 125.0, 110.0, 307.2, 9.0, 512),
+                device: preset("ddr-c"),
                 socket: 0,
             },
             Node {
-                device: ddr(110.0, 125.0, 110.0, 307.2, 9.0, 512),
+                device: preset("ddr-c"),
                 socket: 1,
             },
             Node {
-                // Dual-channel card: bandwidth close to RDRAM (Fig 3),
-                // loaded latency band 400–550 ns (Fig 4c).
-                device: cxl(295.0, 280.0, 80.0, 96.8, 7.8, 128),
+                device: preset("cxl-c"),
                 socket: 0,
             },
         ],
@@ -197,6 +224,24 @@ mod tests {
         assert_eq!(by_name("a").unwrap().name, "A");
         assert_eq!(by_name("B").unwrap().name, "B");
         assert!(by_name("X").is_none());
+    }
+
+    #[test]
+    fn device_presets_resolve_and_match_systems() {
+        for name in DEVICE_PRESETS {
+            assert!(device_preset(name).is_some(), "{name}");
+        }
+        assert!(device_preset("cxl-x").is_none());
+        // The preset is the exact calibration the system carries.
+        let a = system_a();
+        let card = device_preset("cxl-a").unwrap();
+        let node = a.node_of(0, MemKind::Cxl).unwrap();
+        assert_eq!(a.nodes[node].device.peak_bw_gbs, card.peak_bw_gbs);
+        assert_eq!(a.nodes[node].device.idle.seq_ns, card.idle.seq_ns);
+        let c = system_c();
+        let card_c = device_preset("cxl-c").unwrap();
+        let node_c = c.node_of(0, MemKind::Cxl).unwrap();
+        assert_eq!(c.nodes[node_c].device.capacity, card_c.capacity);
     }
 
     #[test]

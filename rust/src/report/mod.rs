@@ -33,6 +33,35 @@ impl Report {
         self
     }
 
+    /// The report as a JSON document: `{"tables": [...]}`. This is the
+    /// one JSON shape every emitter shares — `--json` report output, the
+    /// `exp all --json` array, and the scenario JSONL result lines all
+    /// serialize through this value and [`Json`]'s writer.
+    pub fn to_json(&self) -> Json {
+        let tables: Vec<Json> = self
+            .tables
+            .iter()
+            .map(|t| {
+                Json::obj(vec![
+                    ("title", t.title.as_str().into()),
+                    (
+                        "headers",
+                        Json::arr(t.headers.iter().map(|h| Json::from(h.as_str()))),
+                    ),
+                    (
+                        "rows",
+                        Json::arr(
+                            t.rows
+                                .iter()
+                                .map(|r| Json::arr(r.iter().map(|c| Json::from(c.as_str())))),
+                        ),
+                    ),
+                ])
+            })
+            .collect();
+        Json::obj(vec![("tables", Json::Arr(tables))])
+    }
+
     pub fn render(&self, fmt: Format) -> String {
         match fmt {
             Format::Text => self
@@ -47,28 +76,7 @@ impl Report {
                 .map(|t| format!("# {}\n{}", t.title, t.to_csv()))
                 .collect::<Vec<_>>()
                 .join("\n"),
-            Format::Json => {
-                let tables: Vec<Json> = self
-                    .tables
-                    .iter()
-                    .map(|t| {
-                        Json::obj(vec![
-                            ("title", t.title.as_str().into()),
-                            (
-                                "headers",
-                                Json::arr(t.headers.iter().map(|h| Json::from(h.as_str()))),
-                            ),
-                            (
-                                "rows",
-                                Json::arr(t.rows.iter().map(|r| {
-                                    Json::arr(r.iter().map(|c| Json::from(c.as_str())))
-                                })),
-                            ),
-                        ])
-                    })
-                    .collect();
-                Json::obj(vec![("tables", Json::Arr(tables))]).to_string()
-            }
+            Format::Json => self.to_json().to_string(),
         }
     }
 

@@ -1,0 +1,331 @@
+//! Scenario expansion: one base document in, a deterministic list of
+//! concrete scenario documents out.
+//!
+//! Two generators, checked in this order:
+//! - `"fleet"` — a seeded randomized fleet of `objects` scenarios:
+//!   random base system, a random vendor CXL card spliced in, a random
+//!   object mix. Same seed ⇒ byte-identical output (all sampled numbers
+//!   are dyadic rationals, so their JSON rendering is exact), which the
+//!   determinism tests pin.
+//! - `"sweep"` — a cross product over dotted-path axes
+//!   (`"workload.threads": [16, 32]`), axes in sorted key order.
+//!
+//! A document with neither field expands to itself.
+
+use anyhow::{anyhow, bail, Result};
+
+use super::spec::ScenarioSpec;
+use crate::memsim::{topology, MemKind};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// True when a document is a generator template rather than a concrete
+/// scenario — the single test `validate`, `run` and `expand` all share.
+pub fn is_template(doc: &Json) -> bool {
+    doc.get("fleet").is_some() || doc.get("sweep").is_some()
+}
+
+/// Expand a base document. `seed`/`count` override the fleet's own
+/// fields (the CLI's `--seed` / `--count`); passing either for a
+/// non-fleet document is an error rather than a silent no-op.
+pub fn expand(doc: &Json, seed: Option<u64>, count: Option<usize>) -> Result<Vec<Json>> {
+    if let Some(fleet) = doc.get("fleet") {
+        return expand_fleet(doc, fleet, seed, count);
+    }
+    if seed.is_some() || count.is_some() {
+        bail!("--seed/--count only apply to fleet templates (this document has no 'fleet')");
+    }
+    if let Some(sweep) = doc.get("sweep") {
+        return expand_sweep(doc, sweep);
+    }
+    // Already concrete: validate and pass through.
+    ScenarioSpec::parse(doc)?;
+    Ok(vec![doc.clone()])
+}
+
+// ---- sweep -----------------------------------------------------------
+
+fn expand_sweep(doc: &Json, sweep: &Json) -> Result<Vec<Json>> {
+    let axes = sweep
+        .as_obj()
+        .ok_or_else(|| anyhow!("'sweep' must map dotted paths to value arrays"))?;
+    let mut paths: Vec<&String> = axes.keys().collect();
+    paths.sort(); // BTreeMap is already sorted; keep the intent explicit
+    let mut values: Vec<&[Json]> = Vec::new();
+    for p in &paths {
+        let arr = axes[*p]
+            .as_arr()
+            .ok_or_else(|| anyhow!("sweep axis '{p}' must be an array"))?;
+        if arr.is_empty() {
+            bail!("sweep axis '{p}' is empty");
+        }
+        values.push(arr);
+    }
+    let base_name = doc
+        .get("name")
+        .and_then(Json::as_str)
+        .unwrap_or("sweep")
+        .to_string();
+    let total: usize = values.iter().map(|v| v.len()).product();
+    let mut out = Vec::with_capacity(total);
+    let mut idx = vec![0usize; paths.len()];
+    for i in 0..total {
+        let mut variant = doc.clone();
+        if let Json::Obj(m) = &mut variant {
+            m.remove("sweep");
+            // Swept parameters no longer match the base experiment, so
+            // variants must not carry its golden-equivalence tag (an
+            // axis that sets "experiment" explicitly re-adds it below).
+            m.remove("experiment");
+        }
+        for (axis, &j) in idx.iter().enumerate() {
+            set_path(&mut variant, paths[axis], values[axis][j].clone())?;
+        }
+        variant.set("name", format!("{base_name}#{i:04}").into());
+        ScenarioSpec::parse(&variant)
+            .map_err(|e| anyhow!("sweep variant {i} is invalid: {e}"))?;
+        out.push(variant);
+        // odometer increment
+        for axis in (0..idx.len()).rev() {
+            idx[axis] += 1;
+            if idx[axis] < values[axis].len() {
+                break;
+            }
+            idx[axis] = 0;
+        }
+    }
+    Ok(out)
+}
+
+/// Set a dotted path (`workload.threads`) inside a document, creating
+/// intermediate objects as needed.
+fn set_path(doc: &mut Json, path: &str, value: Json) -> Result<()> {
+    let mut cur = doc;
+    let parts: Vec<&str> = path.split('.').collect();
+    for (i, part) in parts.iter().enumerate() {
+        if i + 1 == parts.len() {
+            cur.set(part, value);
+            return Ok(());
+        }
+        let m = match cur {
+            Json::Obj(m) => m,
+            _ => bail!("sweep path '{path}' crosses a non-object"),
+        };
+        cur = m
+            .entry(part.to_string())
+            .or_insert_with(|| Json::Obj(Default::default()));
+    }
+    bail!("empty sweep path")
+}
+
+// ---- fleet -----------------------------------------------------------
+
+fn expand_fleet(
+    doc: &Json,
+    fleet: &Json,
+    seed_override: Option<u64>,
+    count_override: Option<usize>,
+) -> Result<Vec<Json>> {
+    let count = count_override
+        .or_else(|| fleet.get("count").and_then(Json::as_usize))
+        .unwrap_or(200);
+    let seed = seed_override
+        .or_else(|| fleet.get("seed").and_then(Json::as_u64))
+        .unwrap_or(42);
+    let base_name = doc
+        .get("name")
+        .and_then(Json::as_str)
+        .unwrap_or("fleet")
+        .to_string();
+
+    let systems: Vec<String> = match fleet.get("systems").and_then(Json::as_arr) {
+        Some(arr) => arr
+            .iter()
+            .map(|s| {
+                s.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow!("'fleet.systems' must hold system letters"))
+            })
+            .collect::<Result<Vec<_>>>()?,
+        None => vec!["A".into(), "B".into(), "C".into()],
+    };
+    for s in &systems {
+        if topology::by_name(s).is_none() {
+            bail!("unknown system '{s}' in fleet pool");
+        }
+    }
+    let cards: Vec<String> = match fleet.get("cxl_presets").and_then(Json::as_arr) {
+        Some(arr) => arr
+            .iter()
+            .map(|s| {
+                s.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow!("'fleet.cxl_presets' must hold preset names"))
+            })
+            .collect::<Result<Vec<_>>>()?,
+        None => vec!["cxl-a".into(), "cxl-b".into(), "cxl-c".into()],
+    };
+    for c in &cards {
+        match topology::device_preset(c) {
+            Some(d) if d.kind == MemKind::Cxl => {}
+            Some(_) => bail!("fleet card '{c}' is not a CXL profile"),
+            None => bail!("unknown device preset '{c}' in fleet pool"),
+        }
+    }
+    let threads_pool: Vec<usize> = match fleet.get("threads").and_then(Json::as_arr) {
+        Some(arr) => arr
+            .iter()
+            .map(|t| {
+                t.as_usize()
+                    .ok_or_else(|| anyhow!("'fleet.threads' must hold numbers"))
+            })
+            .collect::<Result<Vec<_>>>()?,
+        None => vec![8, 16, 32, 64],
+    };
+
+    // Object-count and size ranges (sizes snap to 0.25 GB).
+    let objs_min = fleet
+        .get("objects")
+        .and_then(|o| o.get("min"))
+        .and_then(Json::as_usize)
+        .unwrap_or(2);
+    let objs_max = fleet
+        .get("objects")
+        .and_then(|o| o.get("max"))
+        .and_then(Json::as_usize)
+        .unwrap_or(6);
+    if objs_min == 0 || objs_max < objs_min {
+        bail!("fleet object count range [{objs_min}, {objs_max}] is invalid");
+    }
+    let (gb_lo, gb_hi) = match fleet.get("objects").and_then(|o| o.get("gb")) {
+        None => (2.0, 48.0),
+        Some(v) => {
+            let arr = v
+                .as_arr()
+                .filter(|a| a.len() == 2)
+                .ok_or_else(|| anyhow!("'fleet.objects.gb' must be [lo, hi]"))?;
+            let lo = arr[0].as_f64().unwrap_or(2.0);
+            let hi = arr[1].as_f64().unwrap_or(48.0);
+            if lo <= 0.0 || hi < lo {
+                bail!("'fleet.objects.gb' range is invalid");
+            }
+            (lo, hi)
+        }
+    };
+
+    const PATTERNS: [&str; 2] = ["sequential", "random"];
+    const SCANS: [f64; 4] = [1.0, 2.0, 4.0, 8.0];
+    const DEP_FRACS: [f64; 4] = [0.0, 0.25, 0.5, 0.75];
+    const COMPUTE: [f64; 4] = [0.0, 0.25, 0.5, 1.0];
+
+    let mut out = Vec::with_capacity(count);
+    for i in 0..count {
+        // Independent per-scenario stream: order- and count-insensitive.
+        let mut rng = Rng::seeded(seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let base = rng.choose(&systems).clone();
+        let card = rng.choose(&cards).clone();
+        let sys = topology::by_name(&base).unwrap();
+        let cxl_node = sys
+            .node_of(0, MemKind::Cxl)
+            .ok_or_else(|| anyhow!("system {base} has no CXL node"))?;
+        let n_obj = objs_min + rng.index(objs_max - objs_min + 1);
+        // Sizes snap to the 0.25 GB lattice (dyadic → byte-stable JSON
+        // rendering) and clamp to the declared upper bound.
+        let steps = ((gb_hi - gb_lo) / 0.25).floor() as u64;
+        let objects: Vec<Json> = (0..n_obj)
+            .map(|k| {
+                let gb = (gb_lo + 0.25 * rng.below(steps + 1) as f64).min(gb_hi);
+                Json::obj(vec![
+                    ("name", format!("obj{k}").into()),
+                    ("gb", gb.into()),
+                    ("pattern", (*rng.choose(&PATTERNS)).into()),
+                    ("scans", (*rng.choose(&SCANS)).into()),
+                    ("dep_frac", (*rng.choose(&DEP_FRACS)).into()),
+                ])
+            })
+            .collect();
+        let workload = Json::obj(vec![
+            ("kind", "objects".into()),
+            ("socket", 0usize.into()),
+            ("threads", (*rng.choose(&threads_pool)).into()),
+            ("compute_ns_per_byte", (*rng.choose(&COMPUTE)).into()),
+            ("objects", Json::Arr(objects)),
+            ("oli_search", true.into()),
+        ]);
+        let system = Json::obj(vec![
+            ("base", base.as_str().into()),
+            (
+                "devices",
+                Json::obj(vec![(&cxl_node.to_string()[..], Json::Str(card))]),
+            ),
+        ]);
+        let scenario = Json::obj(vec![
+            ("schema", super::spec::SCHEMA.into()),
+            ("name", format!("{base_name}-{i:03}").into()),
+            ("systems", Json::Arr(vec![system])),
+            ("workload", workload),
+        ]);
+        ScenarioSpec::parse(&scenario)
+            .map_err(|e| anyhow!("generated fleet scenario {i} is invalid: {e}"))?;
+        out.push(scenario);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::to_jsonl;
+
+    #[test]
+    fn concrete_doc_expands_to_itself() {
+        let doc = Json::parse(r#"{"name": "x", "workload": {"kind": "table1"}}"#).unwrap();
+        let out = expand(&doc, None, None).unwrap();
+        assert_eq!(out, vec![doc]);
+    }
+
+    #[test]
+    fn sweep_cross_product() {
+        let doc = Json::parse(
+            r#"{"name": "s", "workload": {"kind": "loaded-latency"},
+                "sweep": {"workload.threads": [16, 32], "systems": [["A"], ["B"], ["C"]]}}"#,
+        )
+        .unwrap();
+        let out = expand(&doc, None, None).unwrap();
+        assert_eq!(out.len(), 6);
+        // Every variant is concrete (no sweep), uniquely named, valid.
+        let mut names = std::collections::BTreeSet::new();
+        for v in &out {
+            assert!(v.get("sweep").is_none());
+            names.insert(v.get("name").unwrap().as_str().unwrap().to_string());
+            ScenarioSpec::parse(v).unwrap();
+        }
+        assert_eq!(names.len(), 6);
+    }
+
+    #[test]
+    fn fleet_is_deterministic_and_seed_sensitive() {
+        let doc = Json::parse(r#"{"name": "f", "fleet": {"count": 12, "seed": 42}}"#).unwrap();
+        let a = to_jsonl(expand(&doc, None, None).unwrap());
+        let b = to_jsonl(expand(&doc, None, None).unwrap());
+        assert_eq!(a, b, "same seed must be byte-identical");
+        let c = to_jsonl(expand(&doc, Some(43), None).unwrap());
+        assert_ne!(a, c, "different seed must differ");
+        assert_eq!(a.lines().count(), 12);
+        // Count override wins, and the prefix is stable (per-index seeds).
+        let d = to_jsonl(expand(&doc, None, Some(5)).unwrap());
+        assert_eq!(d.lines().count(), 5);
+        assert!(a.starts_with(&d));
+    }
+
+    #[test]
+    fn fleet_rejects_bad_pools() {
+        let doc =
+            Json::parse(r#"{"name": "f", "fleet": {"count": 2, "systems": ["Z"]}}"#).unwrap();
+        assert!(expand(&doc, None, None).is_err());
+        let doc =
+            Json::parse(r#"{"name": "f", "fleet": {"count": 2, "cxl_presets": ["ddr-a"]}}"#)
+                .unwrap();
+        assert!(expand(&doc, None, None).is_err());
+    }
+}

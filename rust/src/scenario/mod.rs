@@ -1,0 +1,42 @@
+//! Declarative scenario engine: describe *what* to evaluate — device
+//! profiles, topology, workload mixes, policy grids — as data, and let
+//! the engine expand, shard and evaluate it in batch.
+//!
+//! The subsystem turns the 19 hard-coded experiment drivers into one
+//! parameterized surface:
+//!
+//! - [`spec`] — the `cxlmem-scenario-v1` JSON document model: systems
+//!   built from base presets plus per-node device overrides (the paper's
+//!   three vendor CXL cards ship as presets, see
+//!   [`crate::memsim::topology::device_preset`]), one workload kind per
+//!   experiment family, and a free-form `objects` kind for ad-hoc mixes.
+//! - [`expand`] — deterministic generators: `sweep` cross products and
+//!   seeded randomized `fleet`s (same seed ⇒ byte-identical JSONL).
+//! - [`eval`] — one spec → one [`crate::report::Report`], dispatching to
+//!   the parameterized `exp::*_with` drivers so bundled defaults
+//!   reproduce `cxlmem exp` output exactly.
+//! - [`batch`] — shard a scenario list over [`crate::util::par`] and
+//!   stream per-scenario results as JSON lines.
+//!
+//! CLI surface (`cxlmem scenario …`):
+//!
+//! ```text
+//! scenario validate <files…>                       parse + validate
+//! scenario expand <file> [--seed S] [--count N]    spec JSONL to stdout/--out
+//! scenario run <files…|-> [--jobs N] [--out F]     result JSONL
+//! scenario bench [--count N] [--jobs N]            fleet throughput probe
+//! ```
+//!
+//! The bundled files under `examples/scenarios/` re-express every
+//! experiment id as a scenario; `rust/tests/scenario.rs` pins the
+//! equivalence.
+
+pub mod batch;
+pub mod eval;
+pub mod expand;
+pub mod spec;
+
+pub use batch::{docs_of, parse_docs, run_batch, ScenarioResult};
+pub use eval::evaluate;
+pub use expand::{expand, is_template};
+pub use spec::{ScenarioSpec, SystemSpec, WorkloadSpec, SCHEMA};

@@ -1,0 +1,1044 @@
+//! Scenario spec: the declarative document (`cxlmem-scenario-v1`) that
+//! describes one evaluation — system topology with per-node device
+//! profiles, a workload, and its parameter/policy grid.
+//!
+//! Specs are plain JSON parsed with [`crate::util::json`]; every field a
+//! workload kind accepts has a paper-calibrated default, so the bundled
+//! files under `examples/scenarios/` stay small while still being fully
+//! explicit data (see README "Scenario files" for the schema reference).
+//! [`ScenarioSpec::to_json`] is the canonical serializer — parse ∘
+//! to_json is the identity on the canonical form, which the round-trip
+//! tests and the fleet generator both rely on.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::exp::llm::Hierarchy;
+use crate::memsim::device::{IdleLatency, MemDevice};
+use crate::memsim::{topology, MemKind, Pattern, System};
+use crate::util::json::Json;
+
+/// Spec schema identifier (the `"schema"` field, when present, must match).
+pub const SCHEMA: &str = "cxlmem-scenario-v1";
+
+/// The placement-policy grid names the `objects` kind understands.
+pub const POLICY_NAMES: &[&str] = &[
+    "ldram-preferred",
+    "rdram-preferred",
+    "cxl-preferred",
+    "interleave-ldram-cxl",
+    "interleave-rdram-cxl",
+    "interleave-all",
+];
+
+/// One parsed, validated scenario.
+#[derive(Clone, Debug)]
+pub struct ScenarioSpec {
+    pub name: String,
+    /// Experiment id this scenario reproduces (golden-test hook).
+    pub experiment: Option<String>,
+    pub systems: Vec<SystemSpec>,
+    pub workload: WorkloadSpec,
+}
+
+/// A system: a base preset (paper letter) plus per-node device overrides.
+#[derive(Clone, Debug)]
+pub struct SystemSpec {
+    pub base: String,
+    /// (node index, override), applied in order.
+    pub devices: Vec<(usize, DeviceOverride)>,
+}
+
+#[derive(Clone, Debug)]
+pub enum DeviceOverride {
+    /// A shipped calibration (`topology::device_preset` name).
+    Preset(String),
+    /// A fully custom profile.
+    Profile(MemDevice),
+}
+
+impl SystemSpec {
+    pub fn preset(base: &str) -> Self {
+        Self {
+            base: base.to_string(),
+            devices: Vec::new(),
+        }
+    }
+
+    /// Canonical JSON form (a bare letter, or `{base, devices}`), as
+    /// used in specs and echoed into result JSONL lines so results stay
+    /// joinable to their device profiles without the spec file.
+    pub fn to_json(&self) -> Json {
+        system_json(self)
+    }
+
+    /// Materialize the system: base preset + device overrides.
+    pub fn build(&self) -> Result<System> {
+        let mut sys = topology::by_name(&self.base)
+            .ok_or_else(|| anyhow!("unknown system preset '{}' (want A, B or C)", self.base))?;
+        for (node, ov) in &self.devices {
+            if *node >= sys.nodes.len() {
+                bail!(
+                    "device override node {node} out of range for system {} ({} nodes)",
+                    self.base,
+                    sys.nodes.len()
+                );
+            }
+            sys.nodes[*node].device = match ov {
+                DeviceOverride::Preset(p) => topology::device_preset(p)
+                    .ok_or_else(|| anyhow!("unknown device preset '{p}'"))?,
+                DeviceOverride::Profile(d) => d.clone(),
+            };
+        }
+        Ok(sys)
+    }
+}
+
+/// The workload + parameter grid of a scenario, one variant per
+/// evaluator. Kind-specific fields default to the paper's calibration.
+#[derive(Clone, Debug)]
+pub enum WorkloadSpec {
+    /// Table I platform inventory.
+    Table1,
+    /// Fig 2 idle latency probes.
+    IdleLatency { samples: usize, seed: u64 },
+    /// Fig 3 bandwidth-vs-threads scaling.
+    BwScaling { rows: Vec<usize> },
+    /// Fig 4 loaded-latency delay sweep.
+    LoadedLatency { threads: usize },
+    /// §III bandwidth-aware thread assignment search.
+    Assign { socket: usize },
+    /// Fig 5 GPU↔CPU copy bandwidth grid.
+    GpuCopy { blocks_log2: Vec<usize> },
+    /// Fig 6 64 B GPU transfer latency.
+    GpuLatency,
+    /// Fig 8 ZeRO-Offload training throughput grid.
+    ZeroTrain,
+    /// Fig 9 step breakdown.
+    ZeroBreakdown,
+    /// Figs 11/12 + Table II FlexGen policy search over hierarchies.
+    Flexgen {
+        style: FlexgenStyle,
+        models: Vec<String>,
+        hierarchies: Vec<Hierarchy>,
+    },
+    /// Table III workload inventory.
+    HpcTable,
+    /// Fig 13 interleaving-policy family.
+    HpcPolicies { socket: usize, threads: usize },
+    /// Fig 14 thread scaling.
+    HpcScaling {
+        workloads: Vec<String>,
+        threads: Vec<usize>,
+        socket: usize,
+    },
+    /// Fig 15 OLI vs uniform interleave under an LDRAM cap.
+    Oli {
+        ldram_gb: u64,
+        rdram_residue_gb: u64,
+        socket: usize,
+        threads: usize,
+        title: String,
+    },
+    /// Fig 16 tiering policy × placement grid over the §VI apps.
+    TieringApps {
+        apps: Vec<String>,
+        epochs: usize,
+        seed: u64,
+        threads: usize,
+        fast_gb: u64,
+    },
+    /// Fig 17 tiering × placement for the HPC workloads.
+    TieringHpc {
+        socket: usize,
+        threads: usize,
+        epochs: usize,
+        seed: u64,
+    },
+    /// Free-form object mix evaluated over a placement-policy grid with
+    /// best-policy selection and an optional OLI per-object search.
+    Objects(ObjectsSpec),
+}
+
+/// Which FlexGen table to produce.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlexgenStyle {
+    Fig11,
+    Table2,
+    Fig12,
+}
+
+impl FlexgenStyle {
+    pub fn label(&self) -> &'static str {
+        match self {
+            FlexgenStyle::Fig11 => "fig11",
+            FlexgenStyle::Table2 => "table2",
+            FlexgenStyle::Fig12 => "fig12",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "fig11" => FlexgenStyle::Fig11,
+            "table2" => FlexgenStyle::Table2,
+            "fig12" => FlexgenStyle::Fig12,
+            other => bail!("unknown flexgen style '{other}' (want fig11|table2|fig12)"),
+        })
+    }
+}
+
+/// The `objects` workload: an explicit data-object mix plus its grid.
+#[derive(Clone, Debug)]
+pub struct ObjectsSpec {
+    pub socket: usize,
+    pub threads: usize,
+    pub compute_ns_per_byte: f64,
+    pub objects: Vec<ObjDecl>,
+    pub policies: Vec<String>,
+    /// Run the OLI per-object assignment search as an extra grid row.
+    pub oli_search: bool,
+}
+
+/// One declared data object.
+#[derive(Clone, Debug)]
+pub struct ObjDecl {
+    pub name: String,
+    pub gbytes: f64,
+    pub pattern: Pattern,
+    /// Traffic per iteration as a multiple of the object size.
+    pub scans: f64,
+    pub dep_frac: f64,
+}
+
+// ---- parsing helpers -------------------------------------------------
+
+fn get<'a>(obj: &'a Json, key: &str) -> Option<&'a Json> {
+    obj.get(key)
+}
+
+fn str_or<'a>(obj: &'a Json, key: &str, default: &'a str) -> Result<&'a str> {
+    match get(obj, key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_str()
+            .ok_or_else(|| anyhow!("field '{key}' must be a string")),
+    }
+}
+
+fn u64_or(obj: &Json, key: &str, default: u64) -> Result<u64> {
+    match get(obj, key) {
+        None => Ok(default),
+        Some(v) => {
+            let f = v
+                .as_f64()
+                .ok_or_else(|| anyhow!("field '{key}' must be a number"))?;
+            if !f.is_finite() || f < 0.0 || f.fract() != 0.0 {
+                bail!("field '{key}' must be a non-negative integer (got {f})");
+            }
+            Ok(f as u64)
+        }
+    }
+}
+
+fn usize_or(obj: &Json, key: &str, default: usize) -> Result<usize> {
+    u64_or(obj, key, default as u64).map(|v| v as usize)
+}
+
+/// A `usize` field that must be ≥ 1 (thread/epoch/sample budgets).
+fn positive_usize(obj: &Json, key: &str, default: usize) -> Result<usize> {
+    let v = usize_or(obj, key, default)?;
+    if v == 0 {
+        bail!("field '{key}' must be >= 1");
+    }
+    Ok(v)
+}
+
+fn f64_or(obj: &Json, key: &str, default: f64) -> Result<f64> {
+    match get(obj, key) {
+        None => Ok(default),
+        Some(v) => {
+            let f = v
+                .as_f64()
+                .ok_or_else(|| anyhow!("field '{key}' must be a number"))?;
+            if !f.is_finite() {
+                bail!("field '{key}' must be finite");
+            }
+            Ok(f)
+        }
+    }
+}
+
+fn bool_or(obj: &Json, key: &str, default: bool) -> Result<bool> {
+    match get(obj, key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_bool()
+            .ok_or_else(|| anyhow!("field '{key}' must be a boolean")),
+    }
+}
+
+fn req_f64(obj: &Json, key: &str) -> Result<f64> {
+    get(obj, key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow!("missing numeric field '{key}'"))
+}
+
+fn str_list_or(obj: &Json, key: &str, default: &[&str]) -> Result<Vec<String>> {
+    match get(obj, key) {
+        None => Ok(default.iter().map(|s| s.to_string()).collect()),
+        Some(v) => v
+            .as_arr()
+            .ok_or_else(|| anyhow!("field '{key}' must be an array"))?
+            .iter()
+            .map(|x| {
+                x.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow!("field '{key}' must hold strings"))
+            })
+            .collect(),
+    }
+}
+
+fn usize_list_or(obj: &Json, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+    match get(obj, key) {
+        None => Ok(default.to_vec()),
+        Some(v) => v
+            .as_arr()
+            .ok_or_else(|| anyhow!("field '{key}' must be an array"))?
+            .iter()
+            .map(|x| {
+                // Same strictness as the scalar path: integral, >= 0.
+                let f = x
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("field '{key}' must hold numbers"))?;
+                if !f.is_finite() || f < 0.0 || f.fract() != 0.0 {
+                    bail!("field '{key}' entries must be non-negative integers (got {f})");
+                }
+                Ok(f as usize)
+            })
+            .collect(),
+    }
+}
+
+fn parse_pattern(s: &str) -> Result<Pattern> {
+    Ok(match s {
+        "sequential" => Pattern::Sequential,
+        "random" => Pattern::Random,
+        other => bail!("unknown pattern '{other}' (want sequential|random)"),
+    })
+}
+
+fn pattern_label(p: Pattern) -> &'static str {
+    match p {
+        Pattern::Sequential => "sequential",
+        Pattern::Random => "random",
+    }
+}
+
+fn parse_mem_kind(s: &str) -> Result<MemKind> {
+    Ok(match s {
+        "ldram" => MemKind::Ldram,
+        "rdram" => MemKind::Rdram,
+        "cxl" => MemKind::Cxl,
+        "nvme" => MemKind::Nvme,
+        other => bail!("unknown memory kind '{other}' (want ldram|rdram|cxl|nvme)"),
+    })
+}
+
+fn mem_kind_label(k: MemKind) -> &'static str {
+    match k {
+        MemKind::Ldram => "ldram",
+        MemKind::Rdram => "rdram",
+        MemKind::Cxl => "cxl",
+        MemKind::Nvme => "nvme",
+    }
+}
+
+fn parse_device_profile(obj: &Json) -> Result<MemDevice> {
+    let kind = parse_mem_kind(str_or(obj, "kind", "cxl")?)?;
+    Ok(MemDevice {
+        kind,
+        idle: IdleLatency {
+            seq_ns: req_f64(obj, "idle_seq_ns")?,
+            rand_ns: req_f64(obj, "idle_rand_ns")?,
+        },
+        peak_bw_gbs: req_f64(obj, "peak_bw_gbs")?,
+        spec_bw_gbs: f64_or(obj, "spec_bw_gbs", req_f64(obj, "peak_bw_gbs")?)?,
+        capacity: (f64_or(obj, "capacity_gb", 64.0)? * (1u64 << 30) as f64) as u64,
+        queue_ns: f64_or(obj, "queue_ns", 6.0)?,
+        queue_cap_ns: f64_or(obj, "queue_cap_ns", 230.0)?,
+        stream_rate_gbs: req_f64(obj, "stream_rate_gbs")?,
+        mlp_rand: f64_or(obj, "mlp_rand", 10.0)?,
+        concentrated_rand_factor: f64_or(obj, "concentrated_rand_factor", 1.0)?,
+    })
+}
+
+fn device_profile_json(d: &MemDevice) -> Json {
+    Json::obj(vec![
+        ("kind", mem_kind_label(d.kind).into()),
+        ("idle_seq_ns", d.idle.seq_ns.into()),
+        ("idle_rand_ns", d.idle.rand_ns.into()),
+        ("peak_bw_gbs", d.peak_bw_gbs.into()),
+        ("spec_bw_gbs", d.spec_bw_gbs.into()),
+        (
+            "capacity_gb",
+            (d.capacity as f64 / (1u64 << 30) as f64).into(),
+        ),
+        ("queue_ns", d.queue_ns.into()),
+        ("queue_cap_ns", d.queue_cap_ns.into()),
+        ("stream_rate_gbs", d.stream_rate_gbs.into()),
+        ("mlp_rand", d.mlp_rand.into()),
+        ("concentrated_rand_factor", d.concentrated_rand_factor.into()),
+    ])
+}
+
+fn parse_system(v: &Json) -> Result<SystemSpec> {
+    if let Some(base) = v.as_str() {
+        let spec = SystemSpec::preset(base);
+        spec.build()?; // validate the preset exists
+        return Ok(spec);
+    }
+    let base = str_or(v, "base", "")?;
+    if base.is_empty() {
+        bail!("system object needs a 'base' preset (A, B or C)");
+    }
+    let mut devices = Vec::new();
+    if let Some(devs) = v.get("devices") {
+        let map = devs
+            .as_obj()
+            .ok_or_else(|| anyhow!("'devices' must map node index -> preset|profile"))?;
+        for (k, dv) in map {
+            let node: usize = k
+                .parse()
+                .map_err(|_| anyhow!("device override key '{k}' is not a node index"))?;
+            let ov = match dv {
+                Json::Str(name) => DeviceOverride::Preset(name.clone()),
+                Json::Obj(_) => DeviceOverride::Profile(parse_device_profile(dv)?),
+                _ => bail!("device override for node {node} must be a preset name or profile"),
+            };
+            devices.push((node, ov));
+        }
+    }
+    let spec = SystemSpec {
+        base: base.to_string(),
+        devices,
+    };
+    spec.build()?; // validate presets, node ranges
+    Ok(spec)
+}
+
+fn system_json(s: &SystemSpec) -> Json {
+    if s.devices.is_empty() {
+        return Json::Str(s.base.clone());
+    }
+    let mut devices = std::collections::BTreeMap::new();
+    for (node, ov) in &s.devices {
+        let v = match ov {
+            DeviceOverride::Preset(p) => Json::Str(p.clone()),
+            DeviceOverride::Profile(d) => device_profile_json(d),
+        };
+        devices.insert(node.to_string(), v);
+    }
+    Json::obj(vec![
+        ("base", s.base.as_str().into()),
+        ("devices", Json::Obj(devices)),
+    ])
+}
+
+fn parse_hierarchies(v: &Json) -> Result<Vec<Hierarchy>> {
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| anyhow!("'hierarchies' must be an array"))?;
+    let mut out = Vec::new();
+    for h in arr {
+        let name = h
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("hierarchy needs a 'name'"))?;
+        let tiers = h
+            .get("tiers")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("hierarchy '{name}' needs 'tiers'"))?;
+        let mut parsed = Vec::new();
+        for t in tiers {
+            let pair = t
+                .as_arr()
+                .filter(|p| p.len() == 2)
+                .ok_or_else(|| anyhow!("hierarchy '{name}': tier must be [kind, gb]"))?;
+            let kind = parse_mem_kind(
+                pair[0]
+                    .as_str()
+                    .ok_or_else(|| anyhow!("hierarchy '{name}': tier kind must be a string"))?,
+            )?;
+            let gb = pair[1]
+                .as_f64()
+                .ok_or_else(|| anyhow!("hierarchy '{name}': tier capacity must be a number"))?;
+            parsed.push((kind, gb * 1e9));
+        }
+        if parsed.is_empty() {
+            bail!("hierarchy '{name}' has no tiers");
+        }
+        out.push(Hierarchy {
+            name: name.to_string(),
+            tiers: parsed,
+        });
+    }
+    if out.is_empty() {
+        bail!("'hierarchies' is empty");
+    }
+    Ok(out)
+}
+
+fn hierarchies_json(hs: &[Hierarchy]) -> Json {
+    Json::arr(hs.iter().map(|h| {
+        Json::obj(vec![
+            ("name", h.name.as_str().into()),
+            (
+                "tiers",
+                Json::arr(h.tiers.iter().map(|&(k, bytes)| {
+                    Json::arr([Json::from(mem_kind_label(k)), Json::Num(bytes / 1e9)])
+                })),
+            ),
+        ])
+    }))
+}
+
+impl ScenarioSpec {
+    /// Parse and validate one scenario document.
+    pub fn parse(doc: &Json) -> Result<ScenarioSpec> {
+        if doc.as_obj().is_none() {
+            bail!("scenario must be a JSON object");
+        }
+        if let Some(schema) = doc.get("schema").and_then(Json::as_str) {
+            if schema != SCHEMA {
+                bail!("unsupported schema '{schema}' (this build reads {SCHEMA})");
+            }
+        }
+        let name = doc
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("scenario needs a 'name'"))?
+            .to_string();
+        let experiment = doc
+            .get("experiment")
+            .and_then(Json::as_str)
+            .map(str::to_string);
+        let systems = match doc.get("systems") {
+            None => vec![SystemSpec::preset("A")],
+            Some(v) => {
+                let arr = v
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("'systems' must be an array"))?;
+                if arr.is_empty() {
+                    bail!("'systems' is empty");
+                }
+                arr.iter().map(parse_system).collect::<Result<Vec<_>>>()?
+            }
+        };
+        let wl = doc
+            .get("workload")
+            .ok_or_else(|| anyhow!("scenario needs a 'workload'"))?;
+        let kind = wl
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("workload needs a 'kind'"))?;
+        let workload = Self::parse_workload(kind, wl)?;
+        if systems.len() > 1 && !workload.uses_all_systems() {
+            bail!(
+                "workload kind '{kind}' evaluates a single system, but {} were given — \
+                 use one scenario per system (or a sweep over 'systems')",
+                systems.len()
+            );
+        }
+        Ok(ScenarioSpec {
+            name,
+            experiment,
+            systems,
+            workload,
+        })
+    }
+
+    fn parse_workload(kind: &str, wl: &Json) -> Result<WorkloadSpec> {
+        use WorkloadSpec as W;
+        Ok(match kind {
+            "table1" => W::Table1,
+            "idle-latency" => W::IdleLatency {
+                samples: positive_usize(wl, "samples", 5000)?,
+                seed: u64_or(wl, "seed", 42)?,
+            },
+            "bw-scaling" => W::BwScaling {
+                rows: usize_list_or(wl, "threads", crate::exp::basic::FIG3_THREAD_ROWS)?,
+            },
+            "loaded-latency" => W::LoadedLatency {
+                threads: positive_usize(wl, "threads", 32)?,
+            },
+            "assign" => W::Assign {
+                socket: usize_or(wl, "socket", 0)?,
+            },
+            "gpu-copy" => {
+                let blocks_log2 =
+                    usize_list_or(wl, "blocks_log2", crate::exp::llm::FIG5_BLOCKS_LOG2)?;
+                if blocks_log2.iter().any(|&b| b > 40) {
+                    bail!("'blocks_log2' entries must be <= 40 (1 TB)");
+                }
+                W::GpuCopy { blocks_log2 }
+            }
+            "gpu-latency" => W::GpuLatency,
+            "zero-train" => W::ZeroTrain,
+            "zero-breakdown" => W::ZeroBreakdown,
+            "flexgen" => {
+                let style = FlexgenStyle::parse(str_or(wl, "style", "fig11")?)?;
+                let models = str_list_or(wl, "models", &["llama-65b", "opt-66b"])?;
+                for m in &models {
+                    if crate::exp::llm::infer_model(m).is_none() {
+                        bail!("unknown inference model '{m}'");
+                    }
+                }
+                let hierarchies = match wl.get("hierarchies") {
+                    Some(v) => parse_hierarchies(v)?,
+                    None => match style {
+                        FlexgenStyle::Fig11 => crate::exp::llm::hierarchies_324(),
+                        _ => crate::exp::llm::hierarchies_ladder(),
+                    },
+                };
+                W::Flexgen {
+                    style,
+                    models,
+                    hierarchies,
+                }
+            }
+            "hpc-table" => W::HpcTable,
+            "hpc-policies" => W::HpcPolicies {
+                socket: usize_or(wl, "socket", 0)?,
+                threads: positive_usize(wl, "threads", 32)?,
+            },
+            "hpc-scaling" => {
+                let workloads = str_list_or(wl, "workloads", &["CG", "MG"])?;
+                for w in &workloads {
+                    if crate::workloads::npb::by_name(w).is_none() {
+                        bail!("unknown HPC workload '{w}'");
+                    }
+                }
+                let threads = usize_list_or(wl, "threads", crate::exp::hpc::FIG14_THREADS)?;
+                if threads.iter().any(|&t| t == 0) {
+                    bail!("'threads' entries must be >= 1");
+                }
+                W::HpcScaling {
+                    workloads,
+                    threads,
+                    socket: usize_or(wl, "socket", 1)?,
+                }
+            }
+            "oli" => {
+                let ldram_gb = u64_or(wl, "ldram_gb", 0)?;
+                if ldram_gb == 0 {
+                    bail!("'oli' workload needs 'ldram_gb'");
+                }
+                W::Oli {
+                    ldram_gb,
+                    rdram_residue_gb: u64_or(wl, "rdram_residue_gb", 32)?,
+                    socket: usize_or(wl, "socket", 0)?,
+                    threads: positive_usize(wl, "threads", 32)?,
+                    title: str_or(
+                        wl,
+                        "title",
+                        &format!("OLI speedup vs LDRAM preferred ({ldram_gb} GB LDRAM)"),
+                    )?
+                    .to_string(),
+                }
+            }
+            "tiering" => {
+                let apps = str_list_or(
+                    wl,
+                    "apps",
+                    &["BTree", "PageRank", "Graph500", "Silo"],
+                )?;
+                for a in &apps {
+                    // The evaluator's lookup is the single name authority.
+                    super::eval::tiering_app(a)?;
+                }
+                let fast_gb = u64_or(wl, "fast_gb", 50)?;
+                if fast_gb == 0 {
+                    bail!("'fast_gb' must be >= 1");
+                }
+                W::TieringApps {
+                    apps,
+                    epochs: positive_usize(wl, "epochs", 10)?,
+                    seed: u64_or(wl, "seed", 7)?,
+                    threads: positive_usize(wl, "threads", 64)?,
+                    fast_gb,
+                }
+            }
+            "tiering-hpc" => W::TieringHpc {
+                socket: usize_or(wl, "socket", 1)?,
+                threads: positive_usize(wl, "threads", 32)?,
+                epochs: positive_usize(wl, "epochs", 10)?,
+                seed: u64_or(wl, "seed", 11)?,
+            },
+            "objects" => {
+                let objs = wl
+                    .get("objects")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("'objects' workload needs an 'objects' array"))?;
+                if objs.is_empty() {
+                    bail!("'objects' array is empty");
+                }
+                let mut objects = Vec::new();
+                for o in objs {
+                    let name = o
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("object needs a 'name'"))?;
+                    let gbytes = req_f64(o, "gb")?;
+                    if gbytes <= 0.0 {
+                        bail!("object '{name}': 'gb' must be positive");
+                    }
+                    let dep_frac = f64_or(o, "dep_frac", 0.0)?;
+                    if !(0.0..=1.0).contains(&dep_frac) {
+                        bail!("object '{name}': 'dep_frac' must be in [0, 1]");
+                    }
+                    objects.push(ObjDecl {
+                        name: name.to_string(),
+                        gbytes,
+                        pattern: parse_pattern(str_or(o, "pattern", "sequential")?)?,
+                        scans: f64_or(o, "scans", 1.0)?,
+                        dep_frac,
+                    });
+                }
+                let policies = str_list_or(wl, "policies", POLICY_NAMES)?;
+                for p in &policies {
+                    if !POLICY_NAMES.contains(&p.as_str()) {
+                        bail!("unknown policy '{p}' (want one of {POLICY_NAMES:?})");
+                    }
+                }
+                W::Objects(ObjectsSpec {
+                    socket: usize_or(wl, "socket", 0)?,
+                    threads: positive_usize(wl, "threads", 32)?,
+                    compute_ns_per_byte: f64_or(wl, "compute_ns_per_byte", 0.0)?,
+                    objects,
+                    policies,
+                    oli_search: bool_or(wl, "oli_search", true)?,
+                })
+            }
+            other => bail!("unknown workload kind '{other}'"),
+        })
+    }
+
+    /// Canonical serialization: parse(to_json(spec)) reproduces the spec.
+    pub fn to_json(&self) -> Json {
+        let mut doc = Json::obj(vec![
+            ("schema", SCHEMA.into()),
+            ("name", self.name.as_str().into()),
+            (
+                "systems",
+                Json::arr(self.systems.iter().map(system_json)),
+            ),
+            ("workload", self.workload_json()),
+        ]);
+        if let Some(e) = &self.experiment {
+            doc.set("experiment", e.as_str().into());
+        }
+        doc
+    }
+
+    fn workload_json(&self) -> Json {
+        use WorkloadSpec as W;
+        match &self.workload {
+            W::Table1 => Json::obj(vec![("kind", "table1".into())]),
+            W::IdleLatency { samples, seed } => Json::obj(vec![
+                ("kind", "idle-latency".into()),
+                ("samples", (*samples).into()),
+                ("seed", (*seed).into()),
+            ]),
+            W::BwScaling { rows } => Json::obj(vec![
+                ("kind", "bw-scaling".into()),
+                ("threads", Json::arr(rows.iter().map(|&t| Json::from(t)))),
+            ]),
+            W::LoadedLatency { threads } => Json::obj(vec![
+                ("kind", "loaded-latency".into()),
+                ("threads", (*threads).into()),
+            ]),
+            W::Assign { socket } => Json::obj(vec![
+                ("kind", "assign".into()),
+                ("socket", (*socket).into()),
+            ]),
+            W::GpuCopy { blocks_log2 } => Json::obj(vec![
+                ("kind", "gpu-copy".into()),
+                (
+                    "blocks_log2",
+                    Json::arr(blocks_log2.iter().map(|&b| Json::from(b))),
+                ),
+            ]),
+            W::GpuLatency => Json::obj(vec![("kind", "gpu-latency".into())]),
+            W::ZeroTrain => Json::obj(vec![("kind", "zero-train".into())]),
+            W::ZeroBreakdown => Json::obj(vec![("kind", "zero-breakdown".into())]),
+            W::Flexgen {
+                style,
+                models,
+                hierarchies,
+            } => Json::obj(vec![
+                ("kind", "flexgen".into()),
+                ("style", style.label().into()),
+                (
+                    "models",
+                    Json::arr(models.iter().map(|m| Json::from(m.as_str()))),
+                ),
+                ("hierarchies", hierarchies_json(hierarchies)),
+            ]),
+            W::HpcTable => Json::obj(vec![("kind", "hpc-table".into())]),
+            W::HpcPolicies { socket, threads } => Json::obj(vec![
+                ("kind", "hpc-policies".into()),
+                ("socket", (*socket).into()),
+                ("threads", (*threads).into()),
+            ]),
+            W::HpcScaling {
+                workloads,
+                threads,
+                socket,
+            } => Json::obj(vec![
+                ("kind", "hpc-scaling".into()),
+                (
+                    "workloads",
+                    Json::arr(workloads.iter().map(|w| Json::from(w.as_str()))),
+                ),
+                ("threads", Json::arr(threads.iter().map(|&t| Json::from(t)))),
+                ("socket", (*socket).into()),
+            ]),
+            W::Oli {
+                ldram_gb,
+                rdram_residue_gb,
+                socket,
+                threads,
+                title,
+            } => Json::obj(vec![
+                ("kind", "oli".into()),
+                ("ldram_gb", (*ldram_gb).into()),
+                ("rdram_residue_gb", (*rdram_residue_gb).into()),
+                ("socket", (*socket).into()),
+                ("threads", (*threads).into()),
+                ("title", title.as_str().into()),
+            ]),
+            W::TieringApps {
+                apps,
+                epochs,
+                seed,
+                threads,
+                fast_gb,
+            } => Json::obj(vec![
+                ("kind", "tiering".into()),
+                (
+                    "apps",
+                    Json::arr(apps.iter().map(|a| Json::from(a.as_str()))),
+                ),
+                ("epochs", (*epochs).into()),
+                ("seed", (*seed).into()),
+                ("threads", (*threads).into()),
+                ("fast_gb", (*fast_gb).into()),
+            ]),
+            W::TieringHpc {
+                socket,
+                threads,
+                epochs,
+                seed,
+            } => Json::obj(vec![
+                ("kind", "tiering-hpc".into()),
+                ("socket", (*socket).into()),
+                ("threads", (*threads).into()),
+                ("epochs", (*epochs).into()),
+                ("seed", (*seed).into()),
+            ]),
+            W::Objects(o) => Json::obj(vec![
+                ("kind", "objects".into()),
+                ("socket", o.socket.into()),
+                ("threads", o.threads.into()),
+                ("compute_ns_per_byte", o.compute_ns_per_byte.into()),
+                (
+                    "objects",
+                    Json::arr(o.objects.iter().map(|d| {
+                        Json::obj(vec![
+                            ("name", d.name.as_str().into()),
+                            ("gb", d.gbytes.into()),
+                            ("pattern", pattern_label(d.pattern).into()),
+                            ("scans", d.scans.into()),
+                            ("dep_frac", d.dep_frac.into()),
+                        ])
+                    })),
+                ),
+                (
+                    "policies",
+                    Json::arr(o.policies.iter().map(|p| Json::from(p.as_str()))),
+                ),
+                ("oli_search", o.oli_search.into()),
+            ]),
+        }
+    }
+
+    /// Short human label for `scenario validate` output.
+    pub fn kind_label(&self) -> &'static str {
+        self.workload.kind_label()
+    }
+}
+
+impl WorkloadSpec {
+    /// Whether the evaluator consumes the whole `systems` list (the §III
+    /// per-system probes) or exactly one system (everything else).
+    /// Multi-system specs for single-system kinds are rejected at parse
+    /// so no system is ever silently dropped.
+    pub fn uses_all_systems(&self) -> bool {
+        matches!(
+            self,
+            WorkloadSpec::Table1
+                | WorkloadSpec::IdleLatency { .. }
+                | WorkloadSpec::BwScaling { .. }
+                | WorkloadSpec::LoadedLatency { .. }
+        )
+    }
+
+    /// Short kind label (the spec's `workload.kind` value).
+    pub fn kind_label(&self) -> &'static str {
+        use WorkloadSpec as W;
+        match self {
+            W::Table1 => "table1",
+            W::IdleLatency { .. } => "idle-latency",
+            W::BwScaling { .. } => "bw-scaling",
+            W::LoadedLatency { .. } => "loaded-latency",
+            W::Assign { .. } => "assign",
+            W::GpuCopy { .. } => "gpu-copy",
+            W::GpuLatency => "gpu-latency",
+            W::ZeroTrain => "zero-train",
+            W::ZeroBreakdown => "zero-breakdown",
+            W::Flexgen { .. } => "flexgen",
+            W::HpcTable => "hpc-table",
+            W::HpcPolicies { .. } => "hpc-policies",
+            W::HpcScaling { .. } => "hpc-scaling",
+            W::Oli { .. } => "oli",
+            W::TieringApps { .. } => "tiering",
+            W::TieringHpc { .. } => "tiering-hpc",
+            W::Objects(_) => "objects",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_text(text: &str) -> Result<ScenarioSpec> {
+        ScenarioSpec::parse(&Json::parse(text).unwrap())
+    }
+
+    #[test]
+    fn minimal_spec_defaults() {
+        let s = parse_text(r#"{"name": "t", "workload": {"kind": "table1"}}"#).unwrap();
+        assert_eq!(s.name, "t");
+        assert_eq!(s.systems.len(), 1);
+        assert_eq!(s.systems[0].base, "A");
+        assert!(matches!(s.workload, WorkloadSpec::Table1));
+    }
+
+    #[test]
+    fn schema_mismatch_rejected() {
+        assert!(parse_text(
+            r#"{"schema": "cxlmem-scenario-v0", "name": "t", "workload": {"kind": "table1"}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn unknown_kind_and_system_rejected() {
+        assert!(parse_text(r#"{"name": "t", "workload": {"kind": "nope"}}"#).is_err());
+        assert!(parse_text(
+            r#"{"name": "t", "systems": ["Z"], "workload": {"kind": "table1"}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn device_override_applies() {
+        let s = parse_text(
+            r#"{"name": "t",
+                "systems": [{"base": "A", "devices": {"2": "cxl-c"}}],
+                "workload": {"kind": "table1"}}"#,
+        )
+        .unwrap();
+        let sys = s.systems[0].build().unwrap();
+        let preset = crate::memsim::topology::device_preset("cxl-c").unwrap();
+        assert_eq!(sys.nodes[2].device.peak_bw_gbs, preset.peak_bw_gbs);
+    }
+
+    #[test]
+    fn custom_profile_parses() {
+        let s = parse_text(
+            r#"{"name": "t",
+                "systems": [{"base": "B", "devices": {"2": {
+                    "kind": "cxl", "idle_seq_ns": 300, "idle_rand_ns": 320,
+                    "peak_bw_gbs": 40, "stream_rate_gbs": 7.5, "capacity_gb": 96}}}],
+                "workload": {"kind": "table1"}}"#,
+        )
+        .unwrap();
+        let sys = s.systems[0].build().unwrap();
+        assert_eq!(sys.nodes[2].device.peak_bw_gbs, 40.0);
+        assert_eq!(sys.nodes[2].device.capacity, 96u64 << 30);
+    }
+
+    #[test]
+    fn objects_spec_validates() {
+        let ok = r#"{"name": "t", "workload": {"kind": "objects",
+            "objects": [{"name": "a", "gb": 8, "pattern": "random", "dep_frac": 0.5}]}}"#;
+        let s = parse_text(ok).unwrap();
+        if let WorkloadSpec::Objects(o) = &s.workload {
+            assert_eq!(o.objects.len(), 1);
+            assert!(o.oli_search);
+            assert_eq!(o.policies.len(), POLICY_NAMES.len());
+        } else {
+            panic!("wrong kind");
+        }
+        let bad = r#"{"name": "t", "workload": {"kind": "objects",
+            "objects": [{"name": "a", "gb": -1}]}}"#;
+        assert!(parse_text(bad).is_err());
+        let bad_pol = r#"{"name": "t", "workload": {"kind": "objects",
+            "objects": [{"name": "a", "gb": 1}], "policies": ["warp-drive"]}}"#;
+        assert!(parse_text(bad_pol).is_err());
+    }
+
+    #[test]
+    fn multi_system_single_kind_rejected() {
+        // `assign` consumes one system; listing three must not silently
+        // drop two of them.
+        assert!(parse_text(
+            r#"{"name": "t", "systems": ["A", "B", "C"], "workload": {"kind": "assign"}}"#
+        )
+        .is_err());
+        // Multi-system kinds still take the full list.
+        assert!(parse_text(
+            r#"{"name": "t", "systems": ["A", "B", "C"], "workload": {"kind": "table1"}}"#
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn bad_numeric_fields_rejected() {
+        for bad in [
+            r#"{"name": "t", "workload": {"kind": "tiering", "epochs": -1}}"#,
+            r#"{"name": "t", "workload": {"kind": "tiering", "epochs": 0}}"#,
+            r#"{"name": "t", "workload": {"kind": "idle-latency", "samples": 2.7}}"#,
+            r#"{"name": "t", "workload": {"kind": "loaded-latency", "threads": 0}}"#,
+            r#"{"name": "t", "workload": {"kind": "gpu-copy", "blocks_log2": [64]}}"#,
+            r#"{"name": "t", "workload": {"kind": "hpc-scaling", "threads": [0, 8]}}"#,
+        ] {
+            assert!(parse_text(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_stable() {
+        let text = r#"{"name": "rt", "experiment": "fig3",
+            "systems": ["A", {"base": "B", "devices": {"2": "cxl-a"}}],
+            "workload": {"kind": "bw-scaling", "threads": [1, 2, 4]}}"#;
+        let s1 = parse_text(text).unwrap();
+        let j1 = s1.to_json();
+        let s2 = ScenarioSpec::parse(&j1).unwrap();
+        let j2 = s2.to_json();
+        assert_eq!(j1, j2);
+        assert_eq!(j1.to_string(), j2.to_string());
+    }
+}

@@ -59,6 +59,31 @@ impl Json {
         }
     }
 
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|f| f as usize)
+    }
+
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Insert/replace a key (no-op unless `self` is an object).
+    pub fn set(&mut self, key: &str, value: Json) {
+        if let Json::Obj(m) = self {
+            m.insert(key.to_string(), value);
+        }
+    }
+
     /// Parse a JSON document.
     pub fn parse(input: &str) -> Result<Json, JsonError> {
         let mut p = Parser {
@@ -158,6 +183,28 @@ fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
         }
     }
     write!(f, "\"")
+}
+
+/// Serialize documents as JSON Lines: one compact document per line,
+/// trailing newline included when non-empty. This is the single
+/// serialization/escaping path shared by `cxlmem exp all --json`
+/// (wrapped in a `Json::Arr` instead) and the scenario JSONL emitters —
+/// every byte goes through [`Json`]'s `Display` impl above.
+pub fn to_jsonl<I: IntoIterator<Item = Json>>(docs: I) -> String {
+    let mut out = String::new();
+    for d in docs {
+        out.push_str(&d.to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse a JSON Lines document (blank lines ignored).
+pub fn parse_jsonl(text: &str) -> Result<Vec<Json>, JsonError> {
+    text.lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(Json::parse)
+        .collect()
 }
 
 #[derive(Debug)]
@@ -422,5 +469,28 @@ mod tests {
         let j = Json::Str("héllo → 世界".to_string());
         let back = Json::parse(&j.to_string()).unwrap();
         assert_eq!(j, back);
+    }
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let docs = vec![
+            Json::obj(vec![("a", 1u64.into())]),
+            Json::obj(vec![("b", "x\ny".into())]),
+        ];
+        let text = to_jsonl(docs.clone());
+        assert_eq!(text.lines().count(), 2, "escaped newline must not split lines");
+        let back = parse_jsonl(&text).unwrap();
+        assert_eq!(back, docs);
+        assert!(parse_jsonl("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn accessors_and_set() {
+        let mut j = Json::obj(vec![("n", 3u64.into()), ("f", true.into())]);
+        assert_eq!(j.get("n").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("f").unwrap().as_bool(), Some(true));
+        assert!(j.as_obj().is_some());
+        j.set("n", 5u64.into());
+        assert_eq!(j.get("n").unwrap().as_u64(), Some(5));
     }
 }

@@ -1,0 +1,126 @@
+//! Scenario-subsystem integration suite.
+//!
+//! Pins the ISSUE 2 acceptance criteria:
+//! - every bundled `examples/scenarios/*.json` parses and validates, and
+//!   together they cover all 19 experiment ids;
+//! - each bundled scenario reproduces its experiment's tables exactly
+//!   (titles, headers, rows — byte-for-byte);
+//! - spec parse → canonical serialize → parse is a fixed point;
+//! - seeded fleet expansion is deterministic (same seed ⇒ byte-identical
+//!   spec JSONL) and batch evaluation is `--jobs`-invariant (byte-
+//!   identical result JSONL).
+
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+
+use cxlmem::scenario::{evaluate, expand, run_batch, ScenarioSpec};
+use cxlmem::util::json::{parse_jsonl, to_jsonl, Json};
+use cxlmem::{exp, perf};
+
+fn scenarios_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../examples/scenarios")
+}
+
+fn bundled() -> Vec<(String, Json)> {
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir(scenarios_dir()).expect("examples/scenarios missing") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("json") {
+            continue;
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = Json::parse(&text)
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        out.push((path.file_name().unwrap().to_string_lossy().into_owned(), doc));
+    }
+    out.sort_by(|a, b| a.0.cmp(&b.0));
+    assert!(!out.is_empty(), "no bundled scenario files found");
+    out
+}
+
+#[test]
+fn bundled_files_validate_and_cover_all_experiments() {
+    let mut covered = BTreeSet::new();
+    for (file, doc) in bundled() {
+        if doc.get("fleet").is_some() {
+            // The fleet template is validated through expansion below.
+            assert!(expand(&doc, None, Some(3)).is_ok(), "{file}");
+            continue;
+        }
+        let spec = ScenarioSpec::parse(&doc).unwrap_or_else(|e| panic!("{file}: {e}"));
+        // Round-trip: canonical serialization is a parse fixed point.
+        let j1 = spec.to_json();
+        let spec2 = ScenarioSpec::parse(&j1).unwrap_or_else(|e| panic!("{file} roundtrip: {e}"));
+        assert_eq!(j1.to_string(), spec2.to_json().to_string(), "{file}");
+        if let Some(id) = spec.experiment {
+            covered.insert(id);
+        }
+    }
+    let want: BTreeSet<String> = exp::ALL.iter().map(|s| s.to_string()).collect();
+    assert_eq!(covered, want, "bundled scenarios must cover every experiment id");
+}
+
+/// Each bundled scenario file reproduces its experiment's golden output:
+/// both sides run the same parameterized drivers, so the equality is
+/// exact (any drift means a bundled parameter no longer matches).
+#[test]
+fn bundled_scenarios_reproduce_experiments() {
+    for (file, doc) in bundled() {
+        if doc.get("fleet").is_some() {
+            continue;
+        }
+        let spec = ScenarioSpec::parse(&doc).unwrap();
+        let Some(id) = spec.experiment.clone() else {
+            continue;
+        };
+        let via_scenario = evaluate(&spec).unwrap_or_else(|e| panic!("{file}: {e}"));
+        let via_exp = exp::run(&id).unwrap();
+        assert_eq!(
+            via_scenario.tables.len(),
+            via_exp.tables.len(),
+            "{file}: table count"
+        );
+        for (a, b) in via_scenario.tables.iter().zip(&via_exp.tables) {
+            assert_eq!(a.title, b.title, "{file}");
+            assert_eq!(a.headers, b.headers, "{file}");
+            assert_eq!(a.rows, b.rows, "{file} '{}'", a.title);
+        }
+    }
+}
+
+#[test]
+fn fleet_expansion_and_batch_run_are_deterministic() {
+    let text = std::fs::read_to_string(scenarios_dir().join("fleet.json")).unwrap();
+    let doc = Json::parse(&text).unwrap();
+    // Same seed ⇒ byte-identical spec JSONL.
+    let a = to_jsonl(expand(&doc, Some(42), Some(8)).unwrap());
+    let b = to_jsonl(expand(&doc, Some(42), Some(8)).unwrap());
+    assert_eq!(a, b);
+    assert_eq!(a.lines().count(), 8);
+    // Evaluate the fleet twice at different parallelism: result JSONL is
+    // byte-identical (order-preserving sharding, deterministic solves).
+    let specs: Vec<ScenarioSpec> = parse_jsonl(&a)
+        .unwrap()
+        .iter()
+        .map(|d| ScenarioSpec::parse(d).unwrap())
+        .collect();
+    let r1 = to_jsonl(run_batch(&specs, 1).unwrap().into_iter().map(|r| r.doc));
+    let r4 = to_jsonl(run_batch(&specs, 4).unwrap().into_iter().map(|r| r.doc));
+    assert_eq!(r1, r4, "results must not depend on --jobs");
+    // Every result line names its scenario and carries tables.
+    for (line, spec) in parse_jsonl(&r1).unwrap().iter().zip(&specs) {
+        assert_eq!(line.get("scenario").unwrap().as_str(), Some(spec.name.as_str()));
+        assert!(!line.get("tables").unwrap().as_arr().unwrap().is_empty());
+    }
+}
+
+/// The fig16 grid parallelization (PR satellite) is a pure scheduling
+/// change: any `--jobs` produces the sequential table byte-for-byte.
+#[test]
+fn fig16_grid_parallelism_is_bit_identical() {
+    let seq = exp::run("fig16").unwrap();
+    perf::set_jobs(4);
+    let par = exp::run("fig16").unwrap();
+    perf::set_jobs(1);
+    assert_eq!(seq.tables[0].rows, par.tables[0].rows);
+}
