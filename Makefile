@@ -1,12 +1,14 @@
 # cxlmem build/verify entry points.
 #
 # `make ci` is the PR gate: release build, tests (including the
-# golden-parity suite), a smoke run of the hot-path benchmarks, and a
-# formatting check. Mirrors .github/workflows/ci.yml.
+# golden-parity suite), a quick hot-path benchmark pass with schema
+# validation of BENCH_hotpath.json, the scenario engine checks, the
+# result-cache smoke, and a formatting check. Mirrors
+# .github/workflows/ci.yml.
 
-.PHONY: ci build test bench-smoke bench fmt-check exp-all scenario-check
+.PHONY: ci build test bench-smoke bench bench-check fmt-check exp-all scenario-check cache-smoke
 
-ci: build test bench-smoke scenario-check fmt-check
+ci: build test bench-check scenario-check cache-smoke fmt-check
 
 build:
 	cargo build --release
@@ -23,16 +25,33 @@ bench-smoke:
 bench:
 	cargo bench --bench hotpath
 
+# Benchmark gate: quick suite run through the CLI (writes
+# BENCH_hotpath.json), then schema validation (cxlmem-bench-v1).
+bench-check: build
+	./target/release/cxlmem bench --quick --out BENCH_hotpath.json
+	./target/release/cxlmem bench --validate BENCH_hotpath.json
+
 fmt-check:
 	cargo fmt --check
 
 # Scenario engine gate: every bundled spec validates, a single scenario
 # runs end-to-end, and a small seeded fleet expands + evaluates.
+# (--no-cache: this gate measures the evaluation path, not the cache.)
 scenario-check: build
 	./target/release/cxlmem scenario validate examples/scenarios/*.json
-	./target/release/cxlmem scenario run examples/scenarios/table1.json --out /tmp/scenario_smoke.jsonl
+	./target/release/cxlmem scenario run examples/scenarios/table1.json --no-cache --out /tmp/scenario_smoke.jsonl
 	./target/release/cxlmem scenario expand examples/scenarios/fleet.json --count 8 --out /tmp/fleet8.jsonl
-	./target/release/cxlmem scenario run /tmp/fleet8.jsonl --jobs 2 --out /tmp/fleet8_results.jsonl
+	./target/release/cxlmem scenario run /tmp/fleet8.jsonl --jobs 2 --no-cache --out /tmp/fleet8_results.jsonl
+
+# Result-cache gate: a re-run of the same scenario must be served from
+# the cache (the CLI reports `cached: true`) and emit byte-identical
+# JSONL to the cold run.
+cache-smoke: build
+	rm -rf /tmp/cxlmem-cache-smoke
+	./target/release/cxlmem scenario run examples/scenarios/table1.json --cache-dir /tmp/cxlmem-cache-smoke --out /tmp/cache_run1.jsonl
+	./target/release/cxlmem scenario run examples/scenarios/table1.json --cache-dir /tmp/cxlmem-cache-smoke --out /tmp/cache_run2.jsonl 2>&1 | grep -q "cached: true"
+	cmp /tmp/cache_run1.jsonl /tmp/cache_run2.jsonl
+	rm -rf /tmp/cxlmem-cache-smoke
 
 # Regenerate every paper figure/table, in parallel.
 exp-all: build

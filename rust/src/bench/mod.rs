@@ -25,11 +25,18 @@
 //! `optimized` (production path, memo cache off for the raw solver), or
 //! `memoized` (production path with the solve cache warm — the sweep
 //! case). `speedup` maps each hot path to reference/optimized median
-//! ratio; `exp/all` is the wall-clock ratio of the full 19-experiment
-//! suite, sequential reference vs `--jobs`-parallel optimized, and
-//! `exp/fig16(policy x placement grid)` is the wall-clock ratio of the
-//! fig16 tiering grid at jobs=1 vs `--jobs` (the parallelized inner
-//! policy×placement fan-out).
+//! ratio; three wall-clock ratios ride along: `exp/all` (full
+//! 19-experiment suite, sequential reference vs `--jobs`-parallel
+//! optimized), `exp/fig16(policy x placement grid)` (the fig16 tiering
+//! grid at jobs=1 vs `--jobs`), and `scenario/cache(fleet re-run)` (one
+//! seeded fleet evaluated cold vs served warm from the persistent
+//! result cache, measured against the same on-disk store).
+//! `tiering/epoch_counts(Graph500)` times per-epoch histogram
+//! *production* — seed-style full regeneration vs the incremental copy —
+//! with the (mode-shared) hot-set drift untimed between epochs.
+//!
+//! [`validate_report_doc`] checks a written `BENCH_hotpath.json` against
+//! this schema (`cxlmem bench --validate FILE`, `make bench-check`).
 //!
 //! One caveat on the tiering baseline: both modes share the
 //! geometric-skip fault sampler (required for decision parity), so the
@@ -40,7 +47,7 @@
 use std::path::Path;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{anyhow, bail, Result};
 
 use crate::engine::{self, ObjectTraffic, RunConfig};
 use crate::exp;
@@ -48,9 +55,10 @@ use crate::memsim::{topology, MemKind, Pattern, Stream, System};
 use crate::perf;
 use crate::tiering::{self, initial_state, SimConfig, Tiering08};
 use crate::util::json::Json;
+use crate::util::stats;
 use crate::util::timer::{BenchResult, Bencher};
 use crate::workloads::npb;
-use crate::workloads::tiering_apps::{pagerank, TraceGen};
+use crate::workloads::tiering_apps::{graph500, pagerank, TraceGen};
 
 /// Benchmark configuration.
 #[derive(Clone, Copy, Debug)]
@@ -100,8 +108,10 @@ fn bencher(opts: &BenchOpts) -> Bencher {
 const SOLVER_NAME: &str = "memsim/solve_traffic(2 streams)";
 const ENGINE_NAME: &str = "engine/run(MG, 2-tier)";
 const TIERING_NAME: &str = "tiering/epoch(PageRank, t08, 65k pages)";
+const EPOCH_COUNTS_NAME: &str = "tiering/epoch_counts(Graph500)";
 const FLEXGEN_NAME: &str = "flexgen/search+throughput";
 const GRID_NAME: &str = "exp/fig16(policy x placement grid)";
+const SCENARIO_CACHE_NAME: &str = "scenario/cache(fleet re-run)";
 const EXP_ALL_NAME: &str = "exp/all";
 
 /// Run the full suite. Prints one line per measurement as it completes.
@@ -219,7 +229,10 @@ pub fn run_suite(opts: &BenchOpts) -> BenchReport {
                     &cfg,
                     &mut state,
                     &mut pol,
-                    |_| c.clone(),
+                    |_, buf| {
+                        buf.clear();
+                        buf.extend_from_slice(c);
+                    },
                     |_| (Pattern::Random, 0.5),
                 );
                 std::hint::black_box(run.total_s);
@@ -235,6 +248,59 @@ pub fn run_suite(opts: &BenchOpts) -> BenchReport {
         let rs = b.results();
         speedups.push((name, ratio(&rs[0], &rs[1])));
         push_modes(&mut hotpaths, rs, &["reference", "optimized"]);
+    }
+
+    // --- incremental epoch-trace generation ---
+    // A custom paired loop rather than `Bencher`: the hot-set drift
+    // between epochs must run *untimed* — it is the application's own
+    // behavior, identical RNG stream in both modes — so each epoch times
+    // only histogram production: full seed-style regeneration (weight
+    // table recomputed per epoch) vs the incremental copy. Both run on
+    // the same generator state each epoch and are checked bit-identical.
+    {
+        let pages = if opts.smoke { 16_000 } else { 65_000 };
+        let mut app = graph500();
+        app.pages = pages;
+        let mut gen = TraceGen::new(app, 11);
+        let mut opt_buf = Vec::new();
+        let mut ref_buf = Vec::new();
+        let epochs = if opts.smoke { 16 } else { 48 };
+        let mut opt_ns: Vec<f64> = Vec::with_capacity(epochs);
+        let mut ref_ns: Vec<f64> = Vec::with_capacity(epochs);
+        // Warm both paths (and size the reusable buffers) untimed.
+        gen.epoch_counts_into(&mut opt_buf);
+        perf::with_reference(|| gen.epoch_counts_into(&mut ref_buf));
+        for _ in 0..epochs {
+            gen.drift();
+            let t0 = Instant::now();
+            gen.epoch_counts_into(&mut opt_buf);
+            opt_ns.push(t0.elapsed().as_nanos() as f64);
+            let t0 = Instant::now();
+            perf::with_reference(|| gen.epoch_counts_into(&mut ref_buf));
+            ref_ns.push(t0.elapsed().as_nanos() as f64);
+            assert_eq!(opt_buf, ref_buf, "incremental vs regeneration parity");
+        }
+        let mk = |label: String, ns: &[f64]| BenchResult {
+            name: label,
+            iters: ns.len() as u64,
+            mean_ns: stats::mean(ns),
+            median_ns: stats::median(ns),
+            p95_ns: stats::percentile(ns, 95.0),
+            stddev_ns: stats::stddev(ns),
+        };
+        let r_ref = mk(format!("{EPOCH_COUNTS_NAME} [reference]"), &ref_ns);
+        let r_opt = mk(format!("{EPOCH_COUNTS_NAME} [optimized]"), &opt_ns);
+        println!("{}", r_ref.report());
+        println!("{}", r_opt.report());
+        speedups.push((EPOCH_COUNTS_NAME.to_string(), ratio(&r_ref, &r_opt)));
+        hotpaths.push(HotpathResult {
+            result: r_ref,
+            mode: "reference",
+        });
+        hotpaths.push(HotpathResult {
+            result: r_opt,
+            mode: "optimized",
+        });
     }
 
     // --- FlexGen control plane (policy search over the solver) ---
@@ -291,6 +357,50 @@ pub fn run_suite(opts: &BenchOpts) -> BenchReport {
             opts.jobs
         );
         speedups.push((GRID_NAME.to_string(), seq_s / par_s.max(1e-12)));
+    }
+
+    // --- scenario result cache: fleet re-run, cold vs warm ---
+    // Wall-clock pair over one seeded fleet and one on-disk store: the
+    // cold pass evaluates every scenario and appends to the cache; the
+    // warm pass reloads the store from disk and must be pure cache reads
+    // — asserted via the miss probe and byte-identical JSONL.
+    {
+        let count = if opts.smoke { 6 } else { 16 };
+        let template = Json::parse(&format!(
+            r#"{{"name": "bench-fleet", "fleet": {{"count": {count}, "seed": 7}}}}"#
+        ))
+        .expect("internal fleet template");
+        let specs: Vec<crate::scenario::ScenarioSpec> =
+            crate::scenario::expand(&template, None, None)
+                .expect("fleet expansion")
+                .iter()
+                .map(|d| crate::scenario::ScenarioSpec::parse(d).expect("fleet spec"))
+                .collect();
+        let dir = std::env::temp_dir().join(format!("cxlmem-bench-cache-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut cache = crate::scenario::ResultCache::open(&dir).expect("cache open");
+        let t0 = Instant::now();
+        let cold = crate::scenario::run_batch_cached(&specs, opts.jobs, Some(&mut cache))
+            .expect("cold fleet run");
+        let cold_s = t0.elapsed().as_secs_f64();
+        // The warm pass is timed end-to-end including the store load: a
+        // real re-run pays the disk read too.
+        let t0 = Instant::now();
+        let mut cache = crate::scenario::ResultCache::open(&dir).expect("cache reopen");
+        let warm = crate::scenario::run_batch_cached(&specs, opts.jobs, Some(&mut cache))
+            .expect("warm fleet run");
+        let warm_s = t0.elapsed().as_secs_f64();
+        assert_eq!(cache.misses(), 0, "warm fleet run must not evaluate");
+        let cold_jsonl = crate::util::json::to_jsonl(cold.into_iter().map(|r| r.doc));
+        let warm_jsonl = crate::util::json::to_jsonl(warm.into_iter().map(|r| r.doc));
+        assert_eq!(cold_jsonl, warm_jsonl, "cache hits must not change output");
+        let _ = std::fs::remove_dir_all(&dir);
+        println!(
+            "{SCENARIO_CACHE_NAME} [cold]: {cold_s:.3} s, [warm]: {warm_s:.4} s \
+             ({count} scenarios, jobs={})",
+            opts.jobs
+        );
+        speedups.push((SCENARIO_CACHE_NAME.to_string(), cold_s / warm_s.max(1e-12)));
     }
 
     // --- exp all wall clock: sequential reference vs parallel optimized ---
@@ -397,6 +507,83 @@ fn strip_mode_suffix(name: &str) -> String {
     }
 }
 
+/// Validate a parsed `BENCH_hotpath.json` document against schema
+/// `cxlmem-bench-v1` — the gate behind `cxlmem bench --validate FILE`
+/// and `make bench-check`. Checks the schema tag, the top-level shape,
+/// and that every measurement carries finite, non-negative numbers.
+pub fn validate_report_doc(doc: &Json) -> Result<()> {
+    match doc.get("schema").and_then(Json::as_str) {
+        Some("cxlmem-bench-v1") => {}
+        Some(other) => bail!("schema is '{other}', want 'cxlmem-bench-v1'"),
+        None => bail!("missing string field 'schema'"),
+    }
+    doc.get("jobs")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| anyhow!("missing numeric field 'jobs'"))?;
+    doc.get("smoke")
+        .and_then(Json::as_bool)
+        .ok_or_else(|| anyhow!("missing boolean field 'smoke'"))?;
+    let hotpaths = doc
+        .get("hotpaths")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing array field 'hotpaths'"))?;
+    if hotpaths.is_empty() {
+        bail!("'hotpaths' is empty");
+    }
+    for (i, h) in hotpaths.iter().enumerate() {
+        let name = h
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("hotpaths[{i}]: missing string 'name'"))?;
+        let mode = h
+            .get("mode")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("hotpaths[{i}] ('{name}'): missing string 'mode'"))?;
+        if !matches!(mode, "reference" | "optimized" | "memoized") {
+            bail!(
+                "hotpaths[{i}] ('{name}'): mode '{mode}' not one of \
+                 reference|optimized|memoized"
+            );
+        }
+        for field in ["median_ns", "mean_ns", "p95_ns", "iters"] {
+            let v = h.get(field).and_then(Json::as_f64).ok_or_else(|| {
+                anyhow!("hotpaths[{i}] ('{name}'): missing numeric '{field}'")
+            })?;
+            if !v.is_finite() || v < 0.0 {
+                bail!("hotpaths[{i}] ('{name}'): '{field}' must be finite and >= 0");
+            }
+        }
+    }
+    let wall = doc
+        .get("wall")
+        .ok_or_else(|| anyhow!("missing object field 'wall'"))?;
+    for field in ["exp_all_reference_s", "exp_all_optimized_s"] {
+        let v = wall
+            .get(field)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("wall: missing numeric '{field}'"))?;
+        if !v.is_finite() || v < 0.0 {
+            bail!("wall.{field} must be finite and >= 0");
+        }
+    }
+    let speedup = doc
+        .get("speedup")
+        .and_then(Json::as_obj)
+        .ok_or_else(|| anyhow!("missing object field 'speedup'"))?;
+    if speedup.is_empty() {
+        bail!("'speedup' is empty");
+    }
+    for (k, v) in speedup {
+        let v = v
+            .as_f64()
+            .ok_or_else(|| anyhow!("speedup['{k}'] must be a number"))?;
+        if !v.is_finite() || v < 0.0 {
+            bail!("speedup['{k}'] must be finite and >= 0");
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -436,6 +623,57 @@ mod tests {
         // Round-trips through the parser.
         let text = j.to_string();
         assert_eq!(Json::parse(&text).unwrap(), j);
+        // And the emitted document is schema-valid.
+        validate_report_doc(&j).unwrap();
+    }
+
+    #[test]
+    fn validator_rejects_malformed_documents() {
+        let good = BenchReport {
+            hotpaths: vec![HotpathResult {
+                result: BenchResult {
+                    name: format!("{EPOCH_COUNTS_NAME} [reference]"),
+                    iters: 4,
+                    mean_ns: 2.0,
+                    median_ns: 1.5,
+                    p95_ns: 3.0,
+                    stddev_ns: 0.1,
+                },
+                mode: "reference",
+            }],
+            exp_all_reference_s: 4.0,
+            exp_all_optimized_s: 1.0,
+            speedups: vec![(SCENARIO_CACHE_NAME.to_string(), 40.0)],
+            jobs: 2,
+            smoke: true,
+        }
+        .to_json();
+        validate_report_doc(&good).unwrap();
+        // Each mutation below must fail with a pointed message.
+        let mutate = |f: &dyn Fn(&mut Json)| {
+            let mut doc = good.clone();
+            f(&mut doc);
+            doc
+        };
+        let bad_schema = mutate(&|d| d.set("schema", "cxlmem-bench-v0".into()));
+        assert!(validate_report_doc(&bad_schema).is_err());
+        let no_wall = mutate(&|d| d.set("wall", Json::Null));
+        assert!(validate_report_doc(&no_wall).is_err());
+        let empty_hot = mutate(&|d| d.set("hotpaths", Json::Arr(Vec::new())));
+        assert!(validate_report_doc(&empty_hot).is_err());
+        let bad_mode = mutate(&|d| {
+            if let Json::Obj(m) = d {
+                if let Some(Json::Arr(hp)) = m.get_mut("hotpaths") {
+                    hp[0].set("mode", "turbo".into());
+                }
+            }
+        });
+        assert!(validate_report_doc(&bad_mode).is_err());
+        let nan_speedup = mutate(&|d| {
+            d.set("speedup", Json::obj(vec![("x", Json::Num(f64::NAN))]));
+        });
+        assert!(validate_report_doc(&nan_speedup).is_err());
+        assert!(validate_report_doc(&Json::parse("{}").unwrap()).is_err());
     }
 
     #[test]

@@ -67,10 +67,9 @@ fn app_sim(
         &cfg,
         &mut state,
         policy,
-        |_| {
-            let c = gen.epoch_counts();
+        |_, buf| {
+            gen.epoch_counts_into(buf);
             gen.drift();
-            c
         },
         move |_| (Pattern::Random, dep),
     );
@@ -230,7 +229,10 @@ pub fn fig17_with(
                 &cfg,
                 &mut state,
                 pol.as_mut(),
-                |_| counts.clone(),
+                |_, buf| {
+                    buf.clear();
+                    buf.extend_from_slice(&counts);
+                },
                 move |oi| patterns[oi as usize],
             );
             f1(run.total_s)

@@ -5,8 +5,10 @@
 //! cxlmem scenario validate <files…>                           parse + validate scenario specs
 //! cxlmem scenario expand <file> [--seed S] [--count N]        expand sweeps/fleets to spec JSONL
 //! cxlmem scenario run <files…|-> [--jobs N] [--out FILE]      batch-evaluate → result JSONL
-//! cxlmem scenario bench [--count N] [--jobs N]                fleet throughput probe
-//! cxlmem bench [--smoke] [--jobs N] [--out FILE]              hot-path benchmarks → BENCH_hotpath.json
+//!                    [--no-cache] [--cache-dir DIR]           (result cache on by default)
+//! cxlmem scenario bench [--count N] [--jobs N] [--cache]      fleet throughput probe
+//! cxlmem bench [--smoke|--quick] [--jobs N] [--out FILE]      hot-path benchmarks → BENCH_hotpath.json
+//! cxlmem bench --validate FILE                                schema-check a BENCH_hotpath.json
 //! cxlmem train [--steps N] [--seed S]                         E2E training through the PJRT artifact
 //! cxlmem serve [--requests N]                                 FlexGen-style serving demo
 //! cxlmem info                                                 platform + artifact status
@@ -149,7 +151,10 @@ fn cmd_scenario(args: &Args) -> Result<()> {
         }
         "run" => {
             if files.is_empty() {
-                bail!("usage: cxlmem scenario run <files...|-> [--jobs N] [--out FILE]");
+                bail!(
+                    "usage: cxlmem scenario run <files...|-> [--jobs N] [--out FILE] \
+                     [--no-cache] [--cache-dir DIR]"
+                );
             }
             let mut specs = Vec::new();
             for file in files {
@@ -163,8 +168,19 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                 specs.extend(scenario::parse_docs(&text).map_err(|e| anyhow!("{file}: {e}"))?);
             }
             let jobs = args.get_usize("jobs", cxlmem::perf::default_jobs());
-            let results = scenario::run_batch(&specs, jobs)?;
-            eprintln!("ran {} scenario(s) on {jobs} job(s)", results.len());
+            let mut cache = open_scenario_cache(args, true)?;
+            let results = scenario::run_batch_cached(&specs, jobs, cache.as_mut())?;
+            match &cache {
+                Some(c) => eprintln!(
+                    "ran {} scenario(s) on {jobs} job(s) (cache: {} hit(s), {} miss(es), \
+                     cached: {})",
+                    results.len(),
+                    c.hits(),
+                    c.misses(),
+                    c.misses() == 0 && c.hits() > 0
+                ),
+                None => eprintln!("ran {} scenario(s) on {jobs} job(s)", results.len()),
+            }
             let out = to_jsonl(results.into_iter().map(|r| r.doc));
             write_or_print(args, &out)
         }
@@ -182,14 +198,21 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                 .iter()
                 .map(scenario::ScenarioSpec::parse)
                 .collect::<Result<_>>()?;
+            // The probe is uncached by default — it measures evaluation
+            // throughput; pass --cache/--cache-dir to measure warm-cache
+            // serving instead.
+            let mut cache = open_scenario_cache(args, false)?;
             let t0 = std::time::Instant::now();
-            let results = scenario::run_batch(&specs, jobs)?;
+            let results = scenario::run_batch_cached(&specs, jobs, cache.as_mut())?;
             let wall = t0.elapsed().as_secs_f64();
             println!(
                 "scenario bench: {} scenarios, jobs={jobs}, {wall:.2} s wall, {:.1} scenarios/s",
                 results.len(),
                 results.len() as f64 / wall.max(1e-9)
             );
+            if let Some(c) = &cache {
+                println!("cache: {} hit(s), {} miss(es)", c.hits(), c.misses());
+            }
             if args.get("out").is_some() {
                 let out = to_jsonl(results.into_iter().map(|r| r.doc));
                 write_or_print(args, &out)?;
@@ -204,14 +227,50 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                  \x20 cxlmem scenario validate <files...>\n\
                  \x20 cxlmem scenario expand <file> [--seed S] [--count N] [--out FILE]\n\
                  \x20 cxlmem scenario run <files...|-> [--jobs N] [--out FILE]\n\
-                 \x20 cxlmem scenario bench [--count N] [--seed S] [--jobs N] [--out FILE]\n\
+                 \x20\x20\x20\x20 [--no-cache] [--cache-dir DIR]\n\
+                 \x20 cxlmem scenario bench [--count N] [--seed S] [--jobs N] [--out FILE] [--cache]\n\
+                 \n\
+                 `run` serves repeated specs from the content-addressed result cache\n\
+                 (default {}; key = canonical spec hash — see README 'Result cache').\n\
+                 `bench` measures evaluation throughput and is uncached unless asked.\n\
                  \n\
                  Bundled scenarios: examples/scenarios/*.json (one per experiment id,\n\
-                 plus fleet.json). See README 'Scenario files' for the schema."
+                 plus fleet.json). See README 'Scenario files' for the schema.",
+                cxlmem::scenario::cache::DEFAULT_DIR
             );
             Ok(())
         }
     }
+}
+
+/// `--cache` / `--no-cache` / `--cache-dir DIR` handling shared by
+/// `scenario run` (cached by default) and `scenario bench` (uncached by
+/// default — it is a throughput probe). `--no-cache` wins over the
+/// enabling forms.
+fn open_scenario_cache(
+    args: &Args,
+    default_on: bool,
+) -> Result<Option<cxlmem::scenario::ResultCache>> {
+    use anyhow::bail;
+    // The tiny CLI parser turns `--cache FILE` into an option and
+    // swallows FILE from the positional list — on a file-list command
+    // that silently drops a scenario file. Reject the valued forms
+    // outright instead of guessing.
+    for flag in ["cache", "no-cache"] {
+        if let Some(v) = args.get(flag) {
+            bail!(
+                "--{flag} takes no value (got '{v}', which would be dropped from the \
+                 file list) — put the flag after the files or before another --option"
+            );
+        }
+    }
+    let dir = args.get("cache-dir");
+    let on = !args.flag("no-cache") && (args.flag("cache") || dir.is_some() || default_on);
+    if !on {
+        return Ok(None);
+    }
+    let dir = std::path::Path::new(dir.unwrap_or(cxlmem::scenario::cache::DEFAULT_DIR));
+    Ok(Some(cxlmem::scenario::ResultCache::open(dir)?))
 }
 
 /// Write to `--out FILE` when given, else print to stdout.
@@ -226,8 +285,24 @@ fn write_or_print(args: &Args, body: &str) -> Result<()> {
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {
+    use anyhow::{anyhow, bail, Context};
+    // `--validate FILE`: schema-check an existing BENCH_hotpath.json
+    // instead of running the suite (the `make bench-check` gate). A bare
+    // `--validate` (file forgotten, or eaten by a following flag) must
+    // error, not silently fall through to a full suite run.
+    if args.flag("validate") {
+        bail!("--validate requires a FILE argument (a written BENCH_hotpath.json)");
+    }
+    if let Some(path) = args.get("validate") {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let doc = Json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+        cxlmem::bench::validate_report_doc(&doc).map_err(|e| anyhow!("{path}: {e}"))?;
+        println!("{path}: ok (schema cxlmem-bench-v1)");
+        return Ok(());
+    }
     let opts = cxlmem::bench::BenchOpts {
-        smoke: args.flag("smoke"),
+        // --quick is an alias for --smoke (the `make bench-check` spelling).
+        smoke: args.flag("smoke") || args.flag("quick"),
         jobs: args.get_usize("jobs", cxlmem::perf::default_jobs()),
     };
     let report = cxlmem::bench::run_suite(&opts);
@@ -265,7 +340,7 @@ fn print_help() {
          USAGE:\n\
          \x20 cxlmem exp <id|all> [--csv|--json] [--out FILE] [--jobs N]\n\
          \x20 cxlmem scenario validate|expand|run|bench ... (see `cxlmem scenario help`)\n\
-         \x20 cxlmem bench [--smoke] [--jobs N] [--out FILE]\n\
+         \x20 cxlmem bench [--smoke|--quick] [--jobs N] [--out FILE] [--validate FILE]\n\
          \x20 cxlmem train [--steps N] [--seed S] [--log-every K]\n\
          \x20 cxlmem serve [--requests N]\n\
          \x20 cxlmem info\n\

@@ -9,9 +9,16 @@
 //! — see the quantized admission in `memsim::system`). Results come back
 //! in input order, so a batch's JSONL output is deterministic at any
 //! `--jobs`.
+//!
+//! [`run_batch_cached`] layers the persistent result cache
+//! ([`super::cache`]) in front of evaluation: specs are keyed by their
+//! canonical content hash, hits skip evaluation entirely, and only the
+//! misses are scheduled — fleet re-runs and overlapping sweeps become
+//! cache reads while the emitted JSONL stays byte-identical.
 
 use anyhow::{anyhow, Result};
 
+use super::cache::ResultCache;
 use super::eval::evaluate;
 use super::spec::ScenarioSpec;
 use crate::report::Report;
@@ -57,21 +64,98 @@ pub fn result_doc(spec: &ScenarioSpec, report: &Report) -> ScenarioResult {
 /// inner sweeps stay sequential. The first failing scenario aborts the
 /// batch with its name attached.
 pub fn run_batch(specs: &[ScenarioSpec], jobs: usize) -> Result<Vec<ScenarioResult>> {
-    if specs.len() == 1 {
+    run_batch_cached(specs, jobs, None)
+}
+
+/// [`run_batch`] with an optional content-addressed result cache: specs
+/// whose canonical hash is already stored are served without evaluation,
+/// only the misses are scheduled, and newly evaluated results are
+/// appended to the store. Results keep input order whatever mix of hits
+/// and misses a batch is, so the JSONL output stays byte-identical to an
+/// uncached run at any `--jobs` — the cache changes cost, never results.
+/// A batch that reduces to a single miss keeps the inline fast path (the
+/// whole `jobs` budget goes to that scenario's inner sweeps).
+pub fn run_batch_cached(
+    specs: &[ScenarioSpec],
+    jobs: usize,
+    mut cache: Option<&mut ResultCache>,
+) -> Result<Vec<ScenarioResult>> {
+    // Probe the cache in input order; slots hold hits, keys carry the
+    // (key, canonical spec) pair for the post-evaluation inserts.
+    let mut slots: Vec<Option<ScenarioResult>> = Vec::with_capacity(specs.len());
+    let mut keys: Vec<Option<(String, String)>> = Vec::with_capacity(specs.len());
+    for spec in specs {
+        match cache.as_mut() {
+            Some(c) => {
+                let (key, canon) = spec.cache_identity();
+                let hit = c.lookup(&key, &canon).map(|doc| ScenarioResult {
+                    name: spec.name.clone(),
+                    experiment: spec.experiment.clone(),
+                    doc: doc.clone(),
+                });
+                keys.push(Some((key, canon)));
+                slots.push(hit);
+            }
+            None => {
+                keys.push(None);
+                slots.push(None);
+            }
+        }
+    }
+    let miss_idx: Vec<usize> = (0..specs.len()).filter(|&i| slots[i].is_none()).collect();
+
+    let evaluated: Vec<Result<ScenarioResult>> = if miss_idx.len() == 1 {
         let prev = crate::perf::current_jobs();
         crate::perf::set_jobs(jobs.max(1));
-        let result = evaluate(&specs[0])
-            .map(|report| result_doc(&specs[0], &report))
-            .map_err(|e| anyhow!("scenario '{}' failed: {e}", specs[0].name));
+        let r = eval_one(&specs[miss_idx[0]]);
         crate::perf::set_jobs(prev);
-        return result.map(|r| vec![r]);
+        vec![r]
+    } else {
+        let miss_specs: Vec<&ScenarioSpec> = miss_idx.iter().map(|&i| &specs[i]).collect();
+        par_map(&miss_specs, jobs, |spec| eval_one(spec))
+    };
+
+    // Fill the slots, keeping the first failure (input order) but still
+    // flushing whatever completed before it — a failing fleet member
+    // doesn't throw away its siblings' work on the next run.
+    let mut first_err = None;
+    for (&i, r) in miss_idx.iter().zip(evaluated) {
+        match r {
+            Ok(result) => {
+                if let (Some(c), Some((key, canon))) = (cache.as_mut(), &keys[i]) {
+                    c.insert(key.clone(), canon.clone(), &result);
+                }
+                slots[i] = Some(result);
+            }
+            Err(e) => {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        }
     }
-    let results = par_map(specs, jobs, |spec| {
-        evaluate(spec)
-            .map(|report| result_doc(spec, &report))
-            .map_err(|e| anyhow!("scenario '{}' failed: {e}", spec.name))
-    });
-    results.into_iter().collect()
+    if let Some(c) = cache.as_mut() {
+        // The cache changes cost, never results: a store that cannot be
+        // written (read-only checkout, full disk) must not discard the
+        // batch's computed results or mask a scenario failure — degrade
+        // to uncached behavior with a warning.
+        if let Err(e) = c.flush() {
+            eprintln!("warning: scenario result cache not persisted: {e}");
+        }
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    Ok(slots
+        .into_iter()
+        .map(|s| s.expect("every non-hit slot was evaluated"))
+        .collect())
+}
+
+fn eval_one(spec: &ScenarioSpec) -> Result<ScenarioResult> {
+    evaluate(spec)
+        .map(|report| result_doc(spec, &report))
+        .map_err(|e| anyhow!("scenario '{}' failed: {e}", spec.name))
 }
 
 /// Parse a text blob into raw documents: either one JSON document or
@@ -151,9 +235,55 @@ mod tests {
 
     #[test]
     fn batch_surfaces_failures_with_name() {
-        // A spec that parses but cannot build: node override out of range
-        // is caught at parse time, so use a model name gated at eval time
-        // is not possible either — instead check empty batch is fine.
+        // 'doomed' parses — a socket index is plain data at parse time —
+        // but fails at eval: socket 7 does not exist on system A. The
+        // batch must abort with the scenario's name attached.
+        let s = specs(&[
+            r#"{"name": "fine", "workload": {"kind": "hpc-table"}}"#,
+            r#"{"name": "doomed", "workload": {"kind": "objects", "socket": 7,
+                "objects": [{"name": "a", "gb": 1}], "oli_search": false}}"#,
+        ]);
+        let err = run_batch(&s, 2).unwrap_err().to_string();
+        assert!(err.contains("scenario 'doomed' failed"), "{err}");
+        assert!(err.contains("socket 7"), "{err}");
+        // The empty batch stays a no-op.
         assert!(run_batch(&[], 4).unwrap().is_empty());
+    }
+
+    #[test]
+    fn cache_serves_second_run_without_evaluation() {
+        use crate::scenario::cache::ResultCache;
+
+        let s = specs(&[
+            r#"{"name": "one", "workload": {"kind": "table1"}, "systems": ["A", "B"]}"#,
+            r#"{"name": "two", "workload": {"kind": "hpc-table"}}"#,
+        ]);
+        let dir = std::env::temp_dir().join(format!("cxlmem-batch-cache-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+
+        let mut cold = ResultCache::open(&dir).unwrap();
+        let r1 = run_batch_cached(&s, 2, Some(&mut cold)).unwrap();
+        assert_eq!((cold.hits(), cold.misses()), (0, 2));
+
+        // A fresh open reloads from disk; the warm batch must be pure
+        // cache reads (miss probe == 0 ⇒ evaluate was never called) and
+        // byte-identical JSONL at a different --jobs.
+        let mut warm = ResultCache::open(&dir).unwrap();
+        let r2 = run_batch_cached(&s, 4, Some(&mut warm)).unwrap();
+        assert_eq!((warm.hits(), warm.misses()), (2, 0));
+        let a = to_jsonl(r1.into_iter().map(|r| r.doc));
+        let b = to_jsonl(r2.into_iter().map(|r| r.doc));
+        assert_eq!(a, b, "cache hits must not change the output bytes");
+
+        // A changed spec is a different key: only it re-evaluates.
+        let s2 = specs(&[
+            r#"{"name": "one", "workload": {"kind": "table1"}, "systems": ["A", "B", "C"]}"#,
+            r#"{"name": "two", "workload": {"kind": "hpc-table"}}"#,
+        ]);
+        let mut mixed = ResultCache::open(&dir).unwrap();
+        let r3 = run_batch_cached(&s2, 2, Some(&mut mixed)).unwrap();
+        assert_eq!((mixed.hits(), mixed.misses()), (1, 1));
+        assert_eq!(r3.len(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

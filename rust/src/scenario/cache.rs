@@ -1,0 +1,312 @@
+//! Persistent scenario-result cache: content-addressed by the canonical
+//! spec hash, disk-backed as append-only JSONL.
+//!
+//! Keying: [`crate::scenario::ScenarioSpec::cache_key`] — FNV-1a 64 over
+//! the canonical serialization — indexes the store, and every entry also
+//! carries the canonical spec string itself, which [`ResultCache::lookup`]
+//! compares on hit: a 64-bit hash collision therefore degrades to a miss
+//! (re-evaluation), never to another spec's results. Invalidation *is*
+//! the content change: edit any field and the old entry is simply never
+//! consulted again. The store never re-validates entries against the
+//! evaluator, so after changing evaluator *code* the cache directory must
+//! be deleted (or the run made with `--no-cache`); see README
+//! "Result cache".
+//!
+//! On-disk format (`<dir>/results.jsonl`, schema
+//! `cxlmem-result-cache-v1`): one line per entry, `{"schema": …,
+//! "key": "<16-hex>", "scenario": "<name>", "spec": "<canonical JSON>",
+//! "result": {…}}`, where `result` is the exact result document
+//! `scenario run` would emit. Lines are only ever appended; unparseable
+//! or foreign lines (a truncated tail write, an older schema) are
+//! skipped on load, so a damaged cache degrades to re-evaluation rather
+//! than an error. Within one store the first line for a key wins —
+//! re-inserting an existing key is a no-op, so concurrent writers can at
+//! worst duplicate a line, never corrupt a lookup.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::batch::ScenarioResult;
+use crate::util::json::Json;
+
+/// Cache line schema identifier.
+pub const CACHE_SCHEMA: &str = "cxlmem-result-cache-v1";
+/// Default cache directory (relative to the working directory).
+pub const DEFAULT_DIR: &str = ".cxlmem-cache";
+/// Store file name inside the cache directory.
+pub const STORE_FILE: &str = "results.jsonl";
+
+/// One stored result: the canonical spec it was computed from (verified
+/// on lookup) and the result document.
+#[derive(Clone, Debug)]
+struct Entry {
+    spec: String,
+    doc: Json,
+}
+
+/// A loaded cache: in-memory index over the JSONL store, with pending
+/// inserts buffered until [`ResultCache::flush`].
+#[derive(Debug)]
+pub struct ResultCache {
+    path: PathBuf,
+    entries: BTreeMap<String, Entry>,
+    /// Keys inserted this session, not yet appended to disk (the entry
+    /// bodies live in `entries`): `(key, scenario name)`.
+    pending: Vec<(String, String)>,
+    hits: u64,
+    misses: u64,
+}
+
+impl ResultCache {
+    /// Open (or lazily create) the cache under `dir`. A missing
+    /// directory/file is an empty cache, and so is an *unreadable* one
+    /// (permissions, invalid UTF-8 from a torn write): the cache must
+    /// degrade to re-evaluation, never block a run. Nothing is written
+    /// until the first [`ResultCache::flush`] with pending entries.
+    pub fn open(dir: &Path) -> Result<Self> {
+        let path = dir.join(STORE_FILE);
+        let mut entries = BTreeMap::new();
+        if path.exists() {
+            let text = match fs::read_to_string(&path) {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!(
+                        "warning: unreadable scenario result cache {} ({e}); starting empty",
+                        path.display()
+                    );
+                    String::new()
+                }
+            };
+            for line in text.lines() {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                // Tolerate damage: skip anything that isn't a well-formed
+                // entry of our schema instead of failing the whole run.
+                let doc = match Json::parse(line) {
+                    Ok(d) => d,
+                    Err(_) => continue,
+                };
+                if doc.get("schema").and_then(Json::as_str) != Some(CACHE_SCHEMA) {
+                    continue;
+                }
+                let key = doc.get("key").and_then(Json::as_str);
+                let spec = doc.get("spec").and_then(Json::as_str);
+                if let (Some(key), Some(spec), Some(result)) = (key, spec, doc.get("result")) {
+                    entries.entry(key.to_string()).or_insert_with(|| Entry {
+                        spec: spec.to_string(),
+                        doc: result.clone(),
+                    });
+                }
+            }
+        }
+        Ok(Self {
+            path,
+            entries,
+            pending: Vec::new(),
+            hits: 0,
+            misses: 0,
+        })
+    }
+
+    /// Open the default store, [`DEFAULT_DIR`].
+    pub fn open_default() -> Result<Self> {
+        Self::open(Path::new(DEFAULT_DIR))
+    }
+
+    /// Look a key up, verifying the entry was computed from the same
+    /// canonical spec — a hash collision is served as a miss, never as
+    /// another spec's results. Counts the hit/miss (the probe the cache
+    /// tests use to prove a warm batch never evaluated anything).
+    pub fn lookup(&mut self, key: &str, canonical_spec: &str) -> Option<&Json> {
+        match self.entries.get(key) {
+            Some(e) if e.spec == canonical_spec => {
+                self.hits += 1;
+                Some(&e.doc)
+            }
+            _ => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Record a freshly evaluated result under `key`. First insert wins
+    /// (a colliding later spec stays uncached rather than overwriting);
+    /// the entry reaches disk on the next [`ResultCache::flush`].
+    pub fn insert(&mut self, key: String, canonical_spec: String, result: &ScenarioResult) {
+        if self.entries.contains_key(&key) {
+            return;
+        }
+        let entry = Entry {
+            spec: canonical_spec,
+            doc: result.doc.clone(),
+        };
+        self.entries.insert(key.clone(), entry);
+        self.pending.push((key, result.name.clone()));
+    }
+
+    /// Append pending entries to the store, creating the directory/file
+    /// on first use.
+    pub fn flush(&mut self) -> Result<()> {
+        if self.pending.is_empty() {
+            return Ok(());
+        }
+        if let Some(dir) = self.path.parent() {
+            fs::create_dir_all(dir)
+                .with_context(|| format!("creating cache dir {}", dir.display()))?;
+        }
+        let mut out = String::new();
+        for (key, name) in self.pending.drain(..) {
+            let entry = match self.entries.get(&key) {
+                Some(e) => e,
+                None => continue,
+            };
+            let line = Json::obj(vec![
+                ("schema", CACHE_SCHEMA.into()),
+                ("key", key.into()),
+                ("scenario", name.into()),
+                ("spec", entry.spec.as_str().into()),
+                ("result", entry.doc.clone()),
+            ]);
+            out.push_str(&line.to_string());
+            out.push('\n');
+        }
+        let mut f = fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.path)
+            .with_context(|| format!("opening cache store {}", self.path.display()))?;
+        f.write_all(out.as_bytes())
+            .with_context(|| format!("appending to cache store {}", self.path.display()))?;
+        Ok(())
+    }
+
+    /// Lookups served from the cache since open.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Lookups that fell through to evaluation since open.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Number of distinct keys currently held (loaded + inserted).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Path of the backing store file.
+    pub fn store_path(&self) -> &Path {
+        &self.path
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("cxlmem-cache-{tag}-{}", std::process::id()))
+    }
+
+    fn result(name: &str, v: u64) -> ScenarioResult {
+        ScenarioResult {
+            name: name.to_string(),
+            experiment: None,
+            doc: Json::obj(vec![("scenario", name.into()), ("v", v.into())]),
+        }
+    }
+
+    #[test]
+    fn roundtrips_through_disk() {
+        let dir = tmp_dir("roundtrip");
+        let _ = fs::remove_dir_all(&dir);
+        let mut c = ResultCache::open(&dir).unwrap();
+        assert!(c.is_empty());
+        assert!(c.lookup("00ab", "spec-a").is_none());
+        c.insert("00ab".into(), "spec-a".into(), &result("one", 1));
+        c.insert("00cd".into(), "spec-b".into(), &result("two", 2));
+        c.flush().unwrap();
+        // A fresh open sees both entries; hit/miss counters start clean.
+        let mut c2 = ResultCache::open(&dir).unwrap();
+        assert_eq!(c2.len(), 2);
+        let v = c2.lookup("00ab", "spec-a").unwrap().get("v").unwrap().as_u64();
+        assert_eq!(v, Some(1));
+        assert!(c2.lookup("zz", "spec-a").is_none());
+        assert_eq!((c2.hits(), c2.misses()), (1, 1));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn colliding_key_with_different_spec_misses() {
+        // A 64-bit key collision must degrade to a miss (re-evaluation),
+        // never serve another spec's results.
+        let dir = tmp_dir("collision");
+        let _ = fs::remove_dir_all(&dir);
+        let mut c = ResultCache::open(&dir).unwrap();
+        c.insert("k".into(), "spec-a".into(), &result("a", 1));
+        assert!(c.lookup("k", "spec-b").is_none());
+        assert_eq!((c.hits(), c.misses()), (0, 1));
+        assert!(c.lookup("k", "spec-a").is_some());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn first_insert_wins_and_reinsert_is_noop() {
+        let dir = tmp_dir("dup");
+        let _ = fs::remove_dir_all(&dir);
+        let mut c = ResultCache::open(&dir).unwrap();
+        c.insert("k".into(), "spec-a".into(), &result("a", 1));
+        c.insert("k".into(), "spec-b".into(), &result("b", 2));
+        c.flush().unwrap();
+        let mut c2 = ResultCache::open(&dir).unwrap();
+        assert_eq!(c2.len(), 1);
+        let doc = c2.lookup("k", "spec-a").unwrap();
+        assert_eq!(doc.get("v").unwrap().as_u64(), Some(1));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn damaged_lines_are_skipped_not_fatal() {
+        let dir = tmp_dir("damaged");
+        let _ = fs::remove_dir_all(&dir);
+        {
+            let mut c = ResultCache::open(&dir).unwrap();
+            c.insert("good".into(), "spec-g".into(), &result("ok", 7));
+            c.flush().unwrap();
+        }
+        // A truncated tail write, a foreign-schema line, and a line of
+        // our schema missing the 'spec' field (older format).
+        let path = dir.join(STORE_FILE);
+        let mut text = fs::read_to_string(&path).unwrap();
+        text.push_str("{\"schema\": \"other-v9\", \"key\": \"x\", \"result\": {}}\n");
+        text.push_str("{\"schema\": \"cxlmem-result-cache-v1\", \"key\": \"y\", \"result\": {}}\n");
+        text.push_str("{\"schema\": \"cxlmem-result-cache-v1\", \"key\": \"trunc");
+        fs::write(&path, text).unwrap();
+        let mut c = ResultCache::open(&dir).unwrap();
+        assert_eq!(c.len(), 1);
+        assert!(c.lookup("good", "spec-g").is_some());
+        assert!(c.lookup("x", "any").is_none());
+        assert!(c.lookup("y", "any").is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn flush_without_pending_creates_nothing() {
+        let dir = tmp_dir("empty");
+        let _ = fs::remove_dir_all(&dir);
+        let mut c = ResultCache::open(&dir).unwrap();
+        c.flush().unwrap();
+        assert!(!dir.exists(), "an untouched cache must not litter the disk");
+    }
+}

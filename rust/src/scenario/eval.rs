@@ -8,7 +8,7 @@
 //! `objects` kind evaluates a declared object mix over a placement-policy
 //! grid with best-policy selection and an OLI per-object search.
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use super::spec::{FlexgenStyle, ObjectsSpec, ScenarioSpec, WorkloadSpec};
 use crate::engine::{self, ObjectTraffic, RunConfig, RunResult};
@@ -32,6 +32,15 @@ pub fn evaluate(spec: &ScenarioSpec) -> Result<Report> {
         .first()
         .ok_or_else(|| anyhow!("scenario '{}' has no systems", spec.name))?;
     use WorkloadSpec as W;
+    // Socket indices are plain data at parse time (the workload is parsed
+    // independently of the system list); validate them here, against the
+    // system actually being evaluated, so a bad index is a clean error
+    // with the scenario name attached instead of a panic deep in a driver.
+    if let Some(socket) = workload_socket(&spec.workload) {
+        if sys.node_of(socket, MemKind::Ldram).is_none() {
+            bail!("socket {socket} out of range for system {}", sys.name);
+        }
+    }
     Ok(match &spec.workload {
         W::Table1 => exp::basic::table1_with(&systems),
         W::IdleLatency { samples, seed } => exp::basic::fig2_with(&systems, *samples, *seed),
@@ -100,6 +109,20 @@ pub fn evaluate(spec: &ScenarioSpec) -> Result<Report> {
         } => exp::tiering_exp::fig17_with(sys, *socket, *threads, *epochs, *seed),
         W::Objects(o) => eval_objects(&spec.name, sys, o)?,
     })
+}
+
+/// The socket a single-system workload evaluates on, if it names one.
+fn workload_socket(w: &WorkloadSpec) -> Option<usize> {
+    use WorkloadSpec as W;
+    match w {
+        W::Assign { socket }
+        | W::HpcPolicies { socket, .. }
+        | W::HpcScaling { socket, .. }
+        | W::Oli { socket, .. }
+        | W::TieringHpc { socket, .. } => Some(*socket),
+        W::Objects(o) => Some(o.socket),
+        _ => None,
+    }
 }
 
 /// Tiering-app lookup — the single authority for valid app names; spec
@@ -308,6 +331,27 @@ mod tests {
             }
         }
         assert!(named_policy(&crate::memsim::topology::system_a(), 0, "bogus").is_err());
+    }
+
+    #[test]
+    fn out_of_range_socket_is_a_clean_eval_error() {
+        for text in [
+            r#"{"name": "s", "workload": {"kind": "objects", "socket": 7,
+                "objects": [{"name": "a", "gb": 1}], "oli_search": false}}"#,
+            r#"{"name": "s", "workload": {"kind": "assign", "socket": 9}}"#,
+            r#"{"name": "s", "workload": {"kind": "oli", "ldram_gb": 16, "socket": 3}}"#,
+        ] {
+            let s = spec(text); // parses: sockets are data at parse time
+            let err = evaluate(&s).unwrap_err().to_string();
+            assert!(err.contains("out of range"), "{text}: {err}");
+        }
+        // In-range sockets on the same kinds still evaluate.
+        let ok = spec(
+            r#"{"name": "s", "workload": {"kind": "objects", "socket": 1,
+                "objects": [{"name": "a", "gb": 1}],
+                "policies": ["ldram-preferred"], "oli_search": false}}"#,
+        );
+        assert!(evaluate(&ok).is_ok());
     }
 
     #[test]

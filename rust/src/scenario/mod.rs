@@ -17,14 +17,19 @@
 //!   reproduce `cxlmem exp` output exactly.
 //! - [`batch`] — shard a scenario list over [`crate::util::par`] and
 //!   stream per-scenario results as JSON lines.
+//! - [`cache`] — persistent, content-addressed result cache keyed on the
+//!   canonical spec hash ([`ScenarioSpec::cache_key`]); `scenario run`
+//!   consults it by default, so fleet re-runs and overlapping sweeps
+//!   skip evaluation entirely while emitting byte-identical JSONL.
 //!
 //! CLI surface (`cxlmem scenario …`):
 //!
 //! ```text
-//! scenario validate <files…>                       parse + validate
-//! scenario expand <file> [--seed S] [--count N]    spec JSONL to stdout/--out
-//! scenario run <files…|-> [--jobs N] [--out F]     result JSONL
-//! scenario bench [--count N] [--jobs N]            fleet throughput probe
+//! scenario validate <files…>                          parse + validate
+//! scenario expand <file> [--seed S] [--count N]       spec JSONL to stdout/--out
+//! scenario run <files…|-> [--jobs N] [--out F]        result JSONL (cached;
+//!          [--no-cache] [--cache-dir D]               default .cxlmem-cache/)
+//! scenario bench [--count N] [--jobs N] [--cache]     fleet throughput probe
 //! ```
 //!
 //! The bundled files under `examples/scenarios/` re-express every
@@ -32,11 +37,13 @@
 //! equivalence.
 
 pub mod batch;
+pub mod cache;
 pub mod eval;
 pub mod expand;
 pub mod spec;
 
-pub use batch::{docs_of, parse_docs, run_batch, ScenarioResult};
+pub use batch::{docs_of, parse_docs, run_batch, run_batch_cached, ScenarioResult};
+pub use cache::ResultCache;
 pub use eval::evaluate;
 pub use expand::{expand, is_template};
 pub use spec::{ScenarioSpec, SystemSpec, WorkloadSpec, SCHEMA};

@@ -876,6 +876,38 @@ impl ScenarioSpec {
     pub fn kind_label(&self) -> &'static str {
         self.workload.kind_label()
     }
+
+    /// The canonical serialization as a compact JSON string — the
+    /// byte identity the scenario-result cache stores and verifies.
+    /// Formatting and field order never matter (parse ∘ to_json is the
+    /// identity on canonical form) while any semantic change (a device
+    /// override, a thread count, a policy list) changes the bytes.
+    pub fn canonical_string(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// FNV-1a 64 content hash over [`ScenarioSpec::canonical_string`] —
+    /// the scenario-result cache's index key. The hash is not
+    /// collision-free, so cache hits additionally compare the stored
+    /// canonical string ([`super::cache::ResultCache::lookup`]).
+    pub fn canonical_hash(&self) -> u64 {
+        crate::util::hash::hash_str(&self.canonical_string())
+    }
+
+    /// The cache identity pair `(key, canonical serialization)` — the
+    /// single authority for the key scheme, serializing once. The key
+    /// indexes the store; the canonical string is stored alongside and
+    /// verified on every hit.
+    pub fn cache_identity(&self) -> (String, String) {
+        let canon = self.canonical_string();
+        let key = crate::util::hash::hex16(crate::util::hash::hash_str(&canon));
+        (key, canon)
+    }
+
+    /// Hex form of [`ScenarioSpec::canonical_hash`] (the on-disk cache key).
+    pub fn cache_key(&self) -> String {
+        self.cache_identity().0
+    }
 }
 
 impl WorkloadSpec {
@@ -1027,6 +1059,41 @@ mod tests {
         ] {
             assert!(parse_text(bad).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn canonical_hash_ignores_formatting_but_not_content() {
+        // Same spec, different field order + whitespace: same hash.
+        let a = parse_text(
+            r#"{"name": "h", "workload": {"kind": "loaded-latency", "threads": 16}}"#,
+        )
+        .unwrap();
+        let b = parse_text(
+            r#"{  "workload": {"threads": 16, "kind": "loaded-latency"},  "name": "h" }"#,
+        )
+        .unwrap();
+        assert_eq!(a.canonical_hash(), b.canonical_hash());
+        assert_eq!(a.cache_key(), b.cache_key());
+        assert_eq!(a.cache_key().len(), 16);
+        // A defaulted field made explicit is still the same canonical spec.
+        let c = parse_text(
+            r#"{"name": "h", "systems": ["A"],
+                "workload": {"kind": "loaded-latency", "threads": 16}}"#,
+        )
+        .unwrap();
+        assert_eq!(a.canonical_hash(), c.canonical_hash());
+        // Any semantic change produces a new key.
+        let d = parse_text(
+            r#"{"name": "h", "workload": {"kind": "loaded-latency", "threads": 17}}"#,
+        )
+        .unwrap();
+        assert_ne!(a.canonical_hash(), d.canonical_hash());
+        let e = parse_text(
+            r#"{"name": "h", "systems": [{"base": "A", "devices": {"2": "cxl-c"}}],
+                "workload": {"kind": "loaded-latency", "threads": 16}}"#,
+        )
+        .unwrap();
+        assert_ne!(a.canonical_hash(), e.canonical_hash());
     }
 
     #[test]

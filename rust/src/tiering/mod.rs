@@ -492,12 +492,18 @@ fn object_traffic_reference(
 
 /// Run the full tiering simulation: `epochs` epochs of (trace → faults →
 /// policy decision → migration → app time).
+///
+/// `next_epoch` fills a buffer owned by the simulator with that epoch's
+/// per-page access counts; the buffer is reused across epochs, so the
+/// whole run performs no per-epoch histogram allocation
+/// ([`crate::workloads::tiering_apps::TraceGen::epoch_counts_into`] is
+/// the canonical producer).
 pub fn simulate(
     sys: &System,
     cfg: &SimConfig,
     state: &mut PageState,
     policy: &mut dyn TieringPolicy,
-    mut next_epoch: impl FnMut(usize) -> Vec<u32>,
+    mut next_epoch: impl FnMut(usize, &mut Vec<u32>),
     pattern: impl Fn(u32) -> (Pattern, f64),
 ) -> TieringRun {
     let mut rng = Rng::seeded(cfg.seed);
@@ -505,9 +511,10 @@ pub fn simulate(
     let mut app_s = 0.0;
     let mut overhead_s = 0.0;
     let nn = sys.nodes.len();
+    let mut counts: Vec<u32> = Vec::new();
 
     for e in 0..cfg.epochs {
-        let counts = next_epoch(e);
+        next_epoch(e, &mut counts);
         // 1. policy observes + migrates
         let scan = policy.scan_request(state, &stats);
         let faults = sample_hint_faults(state, &counts, scan.frac, scan.slow_tier_only, &mut rng);
@@ -795,7 +802,7 @@ mod tests {
         app.pages = 4000; // keep the test quick
         let run_once = |reference: bool| {
             let mut state = initial_state(4000, ld, cxl, 1500, false);
-            let mut gen = TraceGen::new(app.clone(), 9);
+            let gen = TraceGen::new(app.clone(), 9);
             let mut pol = Tiering08::default();
             let cfg = SimConfig {
                 socket: 0,
@@ -810,7 +817,7 @@ mod tests {
                     &cfg,
                     &mut state,
                     &mut pol,
-                    |_| gen.epoch_counts(),
+                    |_, buf| gen.epoch_counts_into(buf),
                     |_| (Pattern::Random, 0.5),
                 )
             };

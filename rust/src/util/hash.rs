@@ -1,0 +1,97 @@
+//! Content hashing for cache keys (no `xxhash`/`siphash` crates in the
+//! offline vendor set): FNV-1a 64-bit over bytes.
+//!
+//! Used by the scenario-result cache, which indexes entries by the hash
+//! of a spec's canonical serialization
+//! ([`crate::scenario::ScenarioSpec::canonical_string`]). FNV-1a 64 is
+//! fast but not collision-free, so the cache also stores the canonical
+//! string itself and verifies it on every hit — a collision costs a
+//! re-evaluation, never a wrong result.
+
+/// FNV-1a 64-bit offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a 64-bit prime.
+pub const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Incremental FNV-1a 64-bit hasher.
+#[derive(Clone, Debug)]
+pub struct Fnv64 {
+    state: u64,
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv64 {
+    pub fn new() -> Self {
+        Self { state: FNV_OFFSET }
+    }
+
+    /// Absorb bytes (order-sensitive, streaming-safe: hashing in chunks
+    /// equals hashing the concatenation).
+    pub fn write(&mut self, bytes: &[u8]) {
+        let mut h = self.state;
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+        self.state = h;
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.state
+    }
+}
+
+/// One-shot hash of a byte slice.
+pub fn hash_bytes(bytes: &[u8]) -> u64 {
+    let mut h = Fnv64::new();
+    h.write(bytes);
+    h.finish()
+}
+
+/// One-shot hash of a string's UTF-8 bytes.
+pub fn hash_str(s: &str) -> u64 {
+    hash_bytes(s.as_bytes())
+}
+
+/// Fixed-width lowercase hex rendering (16 chars) — the on-disk key form.
+pub fn hex16(h: u64) -> String {
+    format!("{h:016x}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_input_is_offset_basis() {
+        assert_eq!(hash_bytes(b""), FNV_OFFSET);
+    }
+
+    #[test]
+    fn deterministic_and_order_sensitive() {
+        assert_eq!(hash_str("cxlmem"), hash_str("cxlmem"));
+        assert_ne!(hash_str("ab"), hash_str("ba"));
+        assert_ne!(hash_str("a"), hash_str("a\0"));
+    }
+
+    #[test]
+    fn streaming_matches_one_shot() {
+        let mut h = Fnv64::new();
+        h.write(b"hello ");
+        h.write(b"world");
+        assert_eq!(h.finish(), hash_bytes(b"hello world"));
+    }
+
+    #[test]
+    fn hex16_is_fixed_width() {
+        assert_eq!(hex16(0), "0000000000000000");
+        assert_eq!(hex16(0xabc), "0000000000000abc");
+        assert_eq!(hex16(u64::MAX), "ffffffffffffffff");
+        assert_eq!(hex16(hash_str("x")).len(), 16);
+    }
+}

@@ -1,7 +1,9 @@
 //! Hand-rolled utility substrates (no external crates available offline):
-//! PRNG, statistics, table rendering, JSON, CLI parsing, and a bench timer.
+//! PRNG, statistics, table rendering, JSON, CLI parsing, content hashing,
+//! and a bench timer.
 
 pub mod cli;
+pub mod hash;
 pub mod json;
 pub mod par;
 pub mod rng;

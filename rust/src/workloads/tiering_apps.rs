@@ -12,6 +12,24 @@
 //!   hotness tracking must adapt; interleaving helps.
 //! - Silo: B-tree-like index gathers hot records into few pages →
 //!   small concentrated hot set, mild drift; first touch effective.
+//!
+//! Hot-path structure: a generator's histogram is *incremental*. The
+//! per-rank hot access counts and the cold-uniform base are fixed for the
+//! lifetime of the generator (they depend only on the model), so the full
+//! histogram is built once at construction and [`TraceGen::drift`] applies
+//! only the ± delta of each replaced hot page — producing an epoch is an
+//! O(pages) copy with zero recomputation (and O(drifted) maintenance on
+//! drift; drift = 0 apps like PageRank pay nothing between epochs).
+//! Under [`crate::perf::with_reference`] every epoch instead regenerates
+//! the histogram from scratch, seed-style (weight table recomputed per
+//! call); the two paths are bit-identical — integer counts, same
+//! deterministic rank assignment — which the parity tests pin.
+//!
+//! Access counts conserve exactly: the per-rank hot counts are assigned
+//! by cumulative rounding (largest share to the lowest ranks, remainder
+//! absorbed deterministically) and the cold base distributes its integer
+//! remainder to the lowest page indices, so every epoch's histogram sums
+//! to precisely `accesses_per_epoch`.
 
 use crate::util::rng::Rng;
 
@@ -102,11 +120,108 @@ pub fn all_apps() -> Vec<AppModel> {
     vec![btree(), pagerank(), graph500(), silo()]
 }
 
+/// Split one epoch's accesses: `(hot_total, per_cold, cold_rem)`.
+/// The cold share is `per_cold` on every page plus one extra access on
+/// the first `cold_rem` pages, so hot + cold always sums exactly to
+/// `accesses_per_epoch`. An empty hot set folds its share into cold.
+fn access_split(model: &AppModel, hot_n: usize) -> (u64, u32, usize) {
+    let mut hot_total = (model.accesses_per_epoch as f64 * model.hot_share) as u64;
+    if hot_n == 0 {
+        hot_total = 0;
+    }
+    let cold_total = model.accesses_per_epoch - hot_total;
+    if model.pages == 0 {
+        return (hot_total, 0, 0);
+    }
+    let pages = model.pages as u64;
+    (
+        hot_total,
+        (cold_total / pages) as u32,
+        (cold_total % pages) as usize,
+    )
+}
+
+/// Per-rank hot access counts, summing to exactly `hot_total`.
+///
+/// Skewed models keep the seed's zipf-ish `1/sqrt(rank)` weights but
+/// assign them by cumulative rounding: rank r receives
+/// `round(hot_total * W(r)) - round(hot_total * W(r-1))` (cumulative
+/// normalized weight `W`), with the final rank pinned to `hot_total` so
+/// the truncation the seed silently dropped (up to ~5% of accesses) is
+/// redistributed deterministically. Flat models split integrally, with
+/// the remainder going to the lowest ranks.
+///
+/// Deterministic in `(model, hot_n)`: the reference path recomputes this
+/// table every epoch (seed semantics) and gets bit-identical counts to
+/// the table the optimized path builds once at construction.
+fn build_rank_counts(model: &AppModel, hot_n: usize) -> Vec<u32> {
+    let (hot_total, _, _) = access_split(model, hot_n);
+    if hot_n == 0 {
+        return Vec::new();
+    }
+    let mut out = Vec::with_capacity(hot_n);
+    if model.hot_skewed {
+        let norm: f64 = (1..=hot_n).map(|r| 1.0 / (r as f64).sqrt()).sum();
+        let mut cum = 0.0f64;
+        let mut assigned = 0u64;
+        for rank in 0..hot_n {
+            cum += 1.0 / ((rank + 1) as f64).sqrt();
+            // Cumulative targets are monotone (round of a non-decreasing
+            // product); the last one is exact by construction.
+            let target = if rank + 1 == hot_n {
+                hot_total
+            } else {
+                (((hot_total as f64) * (cum / norm)).round() as u64).min(hot_total)
+            };
+            let c = target.saturating_sub(assigned);
+            assigned += c;
+            out.push(c as u32);
+        }
+    } else {
+        let per = (hot_total / hot_n as u64) as u32;
+        let rem = (hot_total % hot_n as u64) as usize;
+        for rank in 0..hot_n {
+            out.push(per + u32::from(rank < rem));
+        }
+    }
+    out
+}
+
+/// Full histogram regeneration into `buf`: branch-free fills for the
+/// cold-uniform base (two `fill` runs the autovectorizer turns into wide
+/// stores), then the per-rank hot scatter. Shared by construction and
+/// the reference path, so the incrementally-maintained histogram always
+/// has a bit-identical from-scratch oracle.
+fn fill_counts(
+    buf: &mut Vec<u32>,
+    pages: usize,
+    per_cold: u32,
+    cold_rem: usize,
+    hot_set: &[u32],
+    rank_counts: &[u32],
+) {
+    buf.clear();
+    buf.resize(pages, per_cold);
+    buf[..cold_rem.min(pages)].fill(per_cold + 1);
+    for (&p, &c) in hot_set.iter().zip(rank_counts) {
+        buf[p as usize] += c;
+    }
+}
+
 /// Evolving hot-set state + per-epoch access histogram generation.
 pub struct TraceGen {
     pub model: AppModel,
     hot_set: Vec<u32>,
     rng: Rng,
+    /// Per-rank hot access counts (fixed: ranks keep their share as the
+    /// pages under them drift).
+    rank_counts: Vec<u32>,
+    /// Cold-uniform base per page + pages receiving one extra access.
+    per_cold: u32,
+    cold_rem: usize,
+    /// The current hot set's histogram, maintained incrementally by
+    /// [`TraceGen::drift`].
+    counts: Vec<u32>,
 }
 
 impl TraceGen {
@@ -124,10 +239,25 @@ impl TraceGen {
             // the hot ones (graph/index structures built first).
             (0..hot_n as u32).collect()
         };
+        let rank_counts = build_rank_counts(&model, hot_set.len());
+        let (_, per_cold, cold_rem) = access_split(&model, hot_set.len());
+        let mut counts = Vec::new();
+        fill_counts(
+            &mut counts,
+            model.pages,
+            per_cold,
+            cold_rem,
+            &hot_set,
+            &rank_counts,
+        );
         Self {
             model,
             hot_set,
             rng,
+            rank_counts,
+            per_cold,
+            cold_rem,
+            counts,
         }
     }
 
@@ -135,47 +265,64 @@ impl TraceGen {
         &self.hot_set
     }
 
-    /// Advance the hot set by one epoch of drift.
+    /// Advance the hot set by one epoch of drift, applying only the
+    /// ± delta of each replaced page to the maintained histogram —
+    /// O(drifted) total, O(1) for drift-free apps (PageRank).
     pub fn drift(&mut self) {
         let n_replace = (self.hot_set.len() as f64 * self.model.drift).round() as usize;
         for _ in 0..n_replace {
             let idx = self.rng.index(self.hot_set.len());
-            self.hot_set[idx] = self.rng.below(self.model.pages as u64) as u32;
+            let new = self.rng.below(self.model.pages as u64) as u32;
+            let old = self.hot_set[idx];
+            self.hot_set[idx] = new;
+            // The rank keeps its count; only the page under it moves.
+            let c = self.rank_counts[idx];
+            self.counts[old as usize] -= c;
+            self.counts[new as usize] += c;
         }
     }
 
-    /// Per-page access counts for one epoch. Hot pages share
-    /// `hot_share` of accesses (zipf-skewed within the hot set); the
-    /// rest spread uniformly.
-    pub fn epoch_counts(&mut self) -> Vec<u32> {
-        let m = &self.model;
-        let mut counts = vec![0u32; m.pages];
-        // Use expected-value assignment rather than per-access sampling:
-        // deterministic and fast at 10^8 accesses per epoch.
-        let hot_total = (m.accesses_per_epoch as f64 * m.hot_share) as u64;
-        let cold_total = m.accesses_per_epoch - hot_total;
-        // zipf-ish weights within the hot set
-        let hn = self.hot_set.len();
-        if hn > 0 {
-            if m.hot_skewed {
-                let norm: f64 = (1..=hn).map(|r| 1.0 / (r as f64).sqrt()).sum();
-                for (rank, &p) in self.hot_set.iter().enumerate() {
-                    let w = (1.0 / ((rank + 1) as f64).sqrt()) / norm;
-                    counts[p as usize] += (hot_total as f64 * w) as u32;
-                }
-            } else {
-                let per = (hot_total as f64 / hn as f64) as u32;
-                for &p in &self.hot_set {
-                    counts[p as usize] += per;
-                }
-            }
+    /// Fill `buf` with this epoch's per-page access counts. Hot pages
+    /// share `hot_share` of accesses (zipf-skewed within the hot set);
+    /// the rest spread uniformly; totals are exact.
+    ///
+    /// Optimized path: one O(pages) copy of the incrementally-maintained
+    /// histogram, zero recomputation. Under
+    /// [`crate::perf::with_reference`]: full seed-style regeneration,
+    /// weight table recomputed every call.
+    pub fn epoch_counts_into(&self, buf: &mut Vec<u32>) {
+        if crate::perf::reference_enabled() {
+            let rank_counts = build_rank_counts(&self.model, self.hot_set.len());
+            let (_, per_cold, cold_rem) = access_split(&self.model, self.hot_set.len());
+            fill_counts(
+                buf,
+                self.model.pages,
+                per_cold,
+                cold_rem,
+                &self.hot_set,
+                &rank_counts,
+            );
+            return;
         }
-        let per_cold = (cold_total as f64 / m.pages as f64).round() as u32;
-        for c in counts.iter_mut() {
-            *c += per_cold;
-        }
-        counts
+        debug_assert_eq!(per_cold_check(self), (self.per_cold, self.cold_rem));
+        buf.clear();
+        buf.extend_from_slice(&self.counts);
     }
+
+    /// Allocating convenience wrapper around
+    /// [`TraceGen::epoch_counts_into`].
+    pub fn epoch_counts(&self) -> Vec<u32> {
+        let mut buf = Vec::new();
+        self.epoch_counts_into(&mut buf);
+        buf
+    }
+}
+
+/// Debug-build invariant: the cached cold split never drifts from a
+/// recomputation (the hot-set *size* is fixed for a generator's life).
+fn per_cold_check(g: &TraceGen) -> (u32, usize) {
+    let (_, per_cold, cold_rem) = access_split(&g.model, g.hot_set.len());
+    (per_cold, cold_rem)
 }
 
 #[cfg(test)]
@@ -218,17 +365,71 @@ mod tests {
     }
 
     #[test]
-    fn epoch_counts_conserve_accesses_roughly() {
-        let mut g = TraceGen::new(silo(), 3);
-        let counts = g.epoch_counts();
-        let total: u64 = counts.iter().map(|&c| c as u64).sum();
-        let expect = g.model.accesses_per_epoch as f64;
-        assert!((total as f64 - expect).abs() / expect < 0.05);
+    fn epoch_counts_conserve_accesses_exactly() {
+        // The seed tolerated ~5% truncation loss; the cumulative-rounding
+        // assignment conserves exactly — for every app, and across drift.
+        for app in all_apps() {
+            let mut g = TraceGen::new(app, 3);
+            for epoch in 0..4 {
+                let counts = g.epoch_counts();
+                let total: u64 = counts.iter().map(|&c| c as u64).sum();
+                assert_eq!(total, g.model.accesses_per_epoch, "{} epoch {epoch}", g.model.name);
+                g.drift();
+            }
+        }
+    }
+
+    #[test]
+    fn rank_counts_sum_and_skew() {
+        let app = graph500();
+        let hot_n = ((app.pages as f64) * app.hot_frac).round() as usize;
+        let rc = build_rank_counts(&app, hot_n);
+        let (hot_total, _, _) = access_split(&app, hot_n);
+        assert_eq!(rc.iter().map(|&c| c as u64).sum::<u64>(), hot_total);
+        // zipf-ish: rank 0 far hotter than the median rank.
+        assert!(rc[0] > 10 * rc[hot_n / 2].max(1));
+    }
+
+    #[test]
+    fn incremental_matches_full_regeneration() {
+        // The tentpole's parity oracle: across 50 epochs, the maintained
+        // histogram must be bit-identical to a from-scratch regeneration
+        // for every app at drift 0 / low / high.
+        for base in all_apps() {
+            for drift in [0.0, 0.05, 0.5] {
+                let mut app = base.clone();
+                app.drift = drift;
+                app.pages = 6_000; // keep 12 generators × 50 epochs quick
+                let mut g = TraceGen::new(app, 21);
+                let mut opt = Vec::new();
+                let mut full = Vec::new();
+                for epoch in 0..50 {
+                    g.epoch_counts_into(&mut opt);
+                    crate::perf::with_reference(|| g.epoch_counts_into(&mut full));
+                    assert_eq!(opt, full, "{} drift={drift} epoch={epoch}", g.model.name);
+                    g.drift();
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn epoch_counts_into_reuses_capacity() {
+        let mut g = TraceGen::new(silo(), 8);
+        let mut buf = Vec::new();
+        g.epoch_counts_into(&mut buf);
+        let cap = buf.capacity();
+        let ptr = buf.as_ptr();
+        g.drift();
+        g.epoch_counts_into(&mut buf);
+        assert_eq!(buf.len(), g.model.pages);
+        assert_eq!(buf.capacity(), cap);
+        assert_eq!(buf.as_ptr(), ptr, "refill must not reallocate");
     }
 
     #[test]
     fn hot_pages_hotter_than_cold() {
-        let mut g = TraceGen::new(pagerank(), 4);
+        let g = TraceGen::new(pagerank(), 4);
         let counts = g.epoch_counts();
         let hot0 = g.hot_set()[0] as usize;
         let cold = WSS_PAGES - 1; // clustered model: last page is cold
@@ -237,7 +438,7 @@ mod tests {
 
     #[test]
     fn btree_is_near_uniform() {
-        let mut g = TraceGen::new(btree(), 5);
+        let g = TraceGen::new(btree(), 5);
         let counts = g.epoch_counts();
         let mean = counts.iter().map(|&c| c as f64).sum::<f64>() / counts.len() as f64;
         let hottest = *counts.iter().max().unwrap() as f64;

@@ -13,7 +13,7 @@
 use std::collections::BTreeSet;
 use std::path::PathBuf;
 
-use cxlmem::scenario::{evaluate, expand, run_batch, ScenarioSpec};
+use cxlmem::scenario::{evaluate, expand, run_batch, run_batch_cached, ResultCache, ScenarioSpec};
 use cxlmem::util::json::{parse_jsonl, to_jsonl, Json};
 use cxlmem::{exp, perf};
 
@@ -112,6 +112,41 @@ fn fleet_expansion_and_batch_run_are_deterministic() {
         assert_eq!(line.get("scenario").unwrap().as_str(), Some(spec.name.as_str()));
         assert!(!line.get("tables").unwrap().as_arr().unwrap().is_empty());
     }
+}
+
+/// A fleet re-run against the persistent result cache is pure cache
+/// reads: the second batch must emit byte-identical JSONL without
+/// evaluating anything (the miss probe stays at 0), even at a different
+/// `--jobs`.
+#[test]
+fn fleet_rerun_is_served_from_cache() {
+    let text = std::fs::read_to_string(scenarios_dir().join("fleet.json")).unwrap();
+    let doc = Json::parse(&text).unwrap();
+    let specs: Vec<ScenarioSpec> = expand(&doc, Some(7), Some(4))
+        .unwrap()
+        .iter()
+        .map(|d| ScenarioSpec::parse(d).unwrap())
+        .collect();
+    let dir = std::env::temp_dir().join(format!("cxlmem-scenario-cache-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let mut cold = ResultCache::open(&dir).unwrap();
+    let r1 = run_batch_cached(&specs, 2, Some(&mut cold)).unwrap();
+    assert_eq!(cold.misses() as usize, specs.len());
+    assert_eq!(cold.hits(), 0);
+
+    let mut warm = ResultCache::open(&dir).unwrap();
+    let r2 = run_batch_cached(&specs, 4, Some(&mut warm)).unwrap();
+    assert_eq!(warm.hits() as usize, specs.len());
+    assert_eq!(warm.misses(), 0, "fleet re-run must not evaluate");
+
+    let a = to_jsonl(r1.into_iter().map(|r| r.doc));
+    let b = to_jsonl(r2.into_iter().map(|r| r.doc));
+    assert_eq!(a, b, "cached fleet re-run must be byte-identical");
+    // And the cached output equals an uncached run of the same fleet.
+    let plain = to_jsonl(run_batch(&specs, 2).unwrap().into_iter().map(|r| r.doc));
+    assert_eq!(a, plain, "the cache must never change results");
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 /// The fig16 grid parallelization (PR satellite) is a pure scheduling
