@@ -3,12 +3,12 @@
 # `make ci` is the PR gate: release build, tests (including the
 # golden-parity suite), a quick hot-path benchmark pass with schema
 # validation of BENCH_hotpath.json, the scenario engine checks, the
-# result-cache smoke, and a formatting check. Mirrors
-# .github/workflows/ci.yml.
+# result-cache smoke, the two-process shard smoke, and a formatting
+# check. Mirrors .github/workflows/ci.yml.
 
-.PHONY: ci build test bench-smoke bench bench-check fmt-check exp-all scenario-check cache-smoke
+.PHONY: ci build test bench-smoke bench bench-check fmt-check exp-all scenario-check cache-smoke shard-smoke
 
-ci: build test bench-check scenario-check cache-smoke fmt-check
+ci: build test bench-check scenario-check cache-smoke shard-smoke fmt-check
 
 build:
 	cargo build --release
@@ -52,6 +52,26 @@ cache-smoke: build
 	./target/release/cxlmem scenario run examples/scenarios/table1.json --cache-dir /tmp/cxlmem-cache-smoke --out /tmp/cache_run2.jsonl 2>&1 | grep -q "cached: true"
 	cmp /tmp/cache_run1.jsonl /tmp/cache_run2.jsonl
 	rm -rf /tmp/cxlmem-cache-smoke
+
+# Cross-process shard gate: a small fleet split across two concurrent
+# --shard processes sharing one cache dir must (a) merge loss-free — the
+# sorted union of the two shard outputs equals a single-process run —
+# (b) make the coordinator re-run pure cache hits with byte-identical
+# JSONL, and (c) feed `scenario report` a best-policy summary.
+shard-smoke: build
+	rm -rf /tmp/cxlmem-shard-smoke && mkdir -p /tmp/cxlmem-shard-smoke
+	./target/release/cxlmem scenario expand examples/scenarios/fleet.json --count 6 --seed 5 --out /tmp/cxlmem-shard-smoke/fleet.jsonl
+	./target/release/cxlmem scenario run /tmp/cxlmem-shard-smoke/fleet.jsonl --shard 1/2 --jobs 2 --cache-dir /tmp/cxlmem-shard-smoke/cache --out /tmp/cxlmem-shard-smoke/s1.jsonl & pid=$$!; \
+	./target/release/cxlmem scenario run /tmp/cxlmem-shard-smoke/fleet.jsonl --shard 2/2 --jobs 2 --cache-dir /tmp/cxlmem-shard-smoke/cache --out /tmp/cxlmem-shard-smoke/s2.jsonl || exit 1; \
+	wait $$pid
+	./target/release/cxlmem scenario run /tmp/cxlmem-shard-smoke/fleet.jsonl --no-cache --jobs 2 --out /tmp/cxlmem-shard-smoke/single.jsonl
+	sort /tmp/cxlmem-shard-smoke/s1.jsonl /tmp/cxlmem-shard-smoke/s2.jsonl > /tmp/cxlmem-shard-smoke/merged_sorted.jsonl
+	sort /tmp/cxlmem-shard-smoke/single.jsonl | cmp - /tmp/cxlmem-shard-smoke/merged_sorted.jsonl
+	./target/release/cxlmem scenario run /tmp/cxlmem-shard-smoke/fleet.jsonl --cache-dir /tmp/cxlmem-shard-smoke/cache --out /tmp/cxlmem-shard-smoke/coord.jsonl 2>&1 | grep -q "cached: true"
+	cmp /tmp/cxlmem-shard-smoke/coord.jsonl /tmp/cxlmem-shard-smoke/single.jsonl
+	./target/release/cxlmem scenario report /tmp/cxlmem-shard-smoke/coord.jsonl | grep -q "best policy per device profile"
+	./target/release/cxlmem scenario report /tmp/cxlmem-shard-smoke/cache | grep -q "best policy per device profile"
+	rm -rf /tmp/cxlmem-shard-smoke
 
 # Regenerate every paper figure/table, in parallel.
 exp-all: build

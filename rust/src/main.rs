@@ -5,8 +5,9 @@
 //! cxlmem scenario validate <files…>                           parse + validate scenario specs
 //! cxlmem scenario expand <file> [--seed S] [--count N]        expand sweeps/fleets to spec JSONL
 //! cxlmem scenario run <files…|-> [--jobs N] [--out FILE]      batch-evaluate → result JSONL
-//!                    [--no-cache] [--cache-dir DIR]           (result cache on by default)
+//!                    [--shard K/N] [--no-cache] [--cache-dir DIR]  (result cache on by default)
 //! cxlmem scenario bench [--count N] [--jobs N] [--cache]      fleet throughput probe
+//! cxlmem scenario report <results.jsonl|cache dir>            fleet summaries from result JSONL
 //! cxlmem bench [--smoke|--quick] [--jobs N] [--out FILE]      hot-path benchmarks → BENCH_hotpath.json
 //! cxlmem bench --validate FILE                                schema-check a BENCH_hotpath.json
 //! cxlmem train [--steps N] [--seed S]                         E2E training through the PJRT artifact
@@ -153,7 +154,7 @@ fn cmd_scenario(args: &Args) -> Result<()> {
             if files.is_empty() {
                 bail!(
                     "usage: cxlmem scenario run <files...|-> [--jobs N] [--out FILE] \
-                     [--no-cache] [--cache-dir DIR]"
+                     [--shard K/N] [--no-cache] [--cache-dir DIR]"
                 );
             }
             let mut specs = Vec::new();
@@ -167,6 +168,7 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                 };
                 specs.extend(scenario::parse_docs(&text).map_err(|e| anyhow!("{file}: {e}"))?);
             }
+            let specs = apply_shard(args, specs)?;
             let jobs = args.get_usize("jobs", cxlmem::perf::default_jobs());
             let mut cache = open_scenario_cache(args, true)?;
             let results = scenario::run_batch_cached(&specs, jobs, cache.as_mut())?;
@@ -198,6 +200,7 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                 .iter()
                 .map(scenario::ScenarioSpec::parse)
                 .collect::<Result<_>>()?;
+            let specs = apply_shard(args, specs)?;
             // The probe is uncached by default — it measures evaluation
             // throughput; pass --cache/--cache-dir to measure warm-cache
             // serving instead.
@@ -219,6 +222,43 @@ fn cmd_scenario(args: &Args) -> Result<()> {
             }
             Ok(())
         }
+        "report" => {
+            let file = files.first().ok_or_else(|| {
+                anyhow!(
+                    "usage: cxlmem scenario report <results.jsonl|cache dir|-> \
+                     [--csv|--json] [--out FILE]"
+                )
+            })?;
+            let text = if file == "-" {
+                let mut buf = String::new();
+                std::io::Read::read_to_string(&mut std::io::stdin(), &mut buf)?;
+                buf
+            } else {
+                // A cache directory is accepted directly: summarize its
+                // store file (what N --shard processes rendezvoused in).
+                let mut path = std::path::PathBuf::from(file);
+                if path.is_dir() {
+                    path = path.join(cxlmem::scenario::cache::STORE_FILE);
+                }
+                std::fs::read_to_string(&path)
+                    .with_context(|| format!("reading {}", path.display()))?
+            };
+            let report = scenario::summarize_text(&text).map_err(|e| anyhow!("{file}: {e}"))?;
+            let fmt = if args.flag("json") {
+                Format::Json
+            } else if args.flag("csv") {
+                Format::Csv
+            } else {
+                Format::Text
+            };
+            if let Some(path) = args.get("out") {
+                report.save(std::path::Path::new(path), fmt)?;
+                println!("wrote {path}");
+            } else {
+                report.print(fmt);
+            }
+            Ok(())
+        }
         _ => {
             println!(
                 "cxlmem scenario — declarative scenario engine\n\
@@ -227,12 +267,19 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                  \x20 cxlmem scenario validate <files...>\n\
                  \x20 cxlmem scenario expand <file> [--seed S] [--count N] [--out FILE]\n\
                  \x20 cxlmem scenario run <files...|-> [--jobs N] [--out FILE]\n\
-                 \x20\x20\x20\x20 [--no-cache] [--cache-dir DIR]\n\
+                 \x20\x20\x20\x20 [--shard K/N] [--no-cache] [--cache-dir DIR]\n\
                  \x20 cxlmem scenario bench [--count N] [--seed S] [--jobs N] [--out FILE] [--cache]\n\
+                 \x20\x20\x20\x20 [--shard K/N]\n\
+                 \x20 cxlmem scenario report <results.jsonl|cache dir|-> [--csv|--json] [--out FILE]\n\
                  \n\
                  `run` serves repeated specs from the content-addressed result cache\n\
                  (default {}; key = canonical spec hash — see README 'Result cache').\n\
                  `bench` measures evaluation throughput and is uncached unless asked.\n\
+                 `--shard K/N` runs the K-th of N index-modulo slices of the expanded\n\
+                 list: point N processes at one --cache-dir and they rendezvous in the\n\
+                 shared store; re-running the full list is then pure cache hits.\n\
+                 `report` aggregates result JSONL (or a cache dir) into fleet summaries:\n\
+                 best policy per device profile, win matrix, quantiles, OLI gains.\n\
                  \n\
                  Bundled scenarios: examples/scenarios/*.json (one per experiment id,\n\
                  plus fleet.json). See README 'Scenario files' for the schema.",
@@ -241,6 +288,29 @@ fn cmd_scenario(args: &Args) -> Result<()> {
             Ok(())
         }
     }
+}
+
+/// `--shard K/N` handling shared by `scenario run` and `scenario bench`:
+/// keep only this process's index-modulo slice of the expanded spec
+/// list (see `scenario::shard` for the pinned scheme), reporting the
+/// split on stderr so fleet drivers can log it.
+fn apply_shard(
+    args: &Args,
+    specs: Vec<cxlmem::scenario::ScenarioSpec>,
+) -> Result<Vec<cxlmem::scenario::ScenarioSpec>> {
+    // A bare `--shard` (K/N forgotten, or eaten by a following flag)
+    // must error, not silently run the whole fleet on every process.
+    if args.flag("shard") {
+        anyhow::bail!("--shard requires a K/N argument (e.g. --shard 1/2)");
+    }
+    let Some(spec) = args.get("shard") else {
+        return Ok(specs);
+    };
+    let shard = cxlmem::scenario::Shard::parse(spec)?;
+    let total = specs.len();
+    let kept = shard.filter(specs);
+    eprintln!("shard {shard}: {} of {total} scenario(s)", kept.len());
+    Ok(kept)
 }
 
 /// `--cache` / `--no-cache` / `--cache-dir DIR` handling shared by

@@ -104,6 +104,21 @@ pub fn without_memo<R>(f: impl FnOnce() -> R) -> R {
     f()
 }
 
+/// Run `f` with inner-sweep parallelism set to `jobs`, restored on exit
+/// *including panic unwinds* — callers that temporarily hand a whole
+/// `--jobs` budget to one evaluation (the batch runner's single-miss
+/// inline path) must not leave the session clamped when it panics.
+pub fn with_jobs<R>(jobs: usize, f: impl FnOnce() -> R) -> R {
+    struct RestoreJobs(usize);
+    impl Drop for RestoreJobs {
+        fn drop(&mut self) {
+            JOBS.with(|c| c.set(self.0));
+        }
+    }
+    let _restore = RestoreJobs(JOBS.with(|c| c.replace(jobs.max(1))));
+    f()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -150,6 +165,19 @@ mod tests {
         assert_eq!(current_jobs(), 1);
         set_jobs(4);
         assert_eq!(current_jobs(), 4);
+        set_jobs(1);
+    }
+
+    #[test]
+    fn with_jobs_restores_even_on_panic() {
+        set_jobs(3);
+        with_jobs(8, || assert_eq!(current_jobs(), 8));
+        assert_eq!(current_jobs(), 3);
+        let unwound = std::panic::catch_unwind(|| {
+            with_jobs(16, || panic!("evaluation blew up"));
+        });
+        assert!(unwound.is_err());
+        assert_eq!(current_jobs(), 3, "panic must not leave jobs clamped");
         set_jobs(1);
     }
 }

@@ -14,7 +14,12 @@
 //! ([`super::cache`]) in front of evaluation: specs are keyed by their
 //! canonical content hash, hits skip evaluation entirely, and only the
 //! misses are scheduled — fleet re-runs and overlapping sweeps become
-//! cache reads while the emitted JSONL stays byte-identical.
+//! cache reads while the emitted JSONL stays byte-identical. The same
+//! canonical identity dedupes *within* a batch, cache or no cache:
+//! identical specs (overlapping sweeps, re-expanded fleets) evaluate
+//! once, and every duplicate slot is filled from the representative.
+
+use std::collections::BTreeMap;
 
 use anyhow::{anyhow, Result};
 
@@ -58,11 +63,11 @@ pub fn result_doc(spec: &ScenarioSpec, report: &Report) -> ScenarioResult {
 }
 
 /// Evaluate a batch over up to `jobs` worker threads, preserving input
-/// order. A single-scenario batch runs inline with the whole `jobs`
-/// budget handed to the scenario's *inner* sweeps instead (the fig16
-/// grid path); larger batches shard scenarios across workers, whose
-/// inner sweeps stay sequential. The first failing scenario aborts the
-/// batch with its name attached.
+/// order. A batch that reduces to a single distinct evaluation runs it
+/// inline with the whole `jobs` budget handed to the scenario's *inner*
+/// sweeps instead (the fig16 grid path); larger batches shard scenarios
+/// across workers, whose inner sweeps stay sequential. The first failing
+/// scenario aborts the batch with its name attached.
 pub fn run_batch(specs: &[ScenarioSpec], jobs: usize) -> Result<Vec<ScenarioResult>> {
     run_batch_cached(specs, jobs, None)
 }
@@ -73,43 +78,54 @@ pub fn run_batch(specs: &[ScenarioSpec], jobs: usize) -> Result<Vec<ScenarioResu
 /// appended to the store. Results keep input order whatever mix of hits
 /// and misses a batch is, so the JSONL output stays byte-identical to an
 /// uncached run at any `--jobs` — the cache changes cost, never results.
-/// A batch that reduces to a single miss keeps the inline fast path (the
-/// whole `jobs` budget goes to that scenario's inner sweeps).
+///
+/// Duplicate specs within one batch (overlapping sweeps, re-expanded
+/// fleets) are deduplicated by canonical identity before probing: the
+/// first occurrence is the representative — it alone probes the cache
+/// and, on a miss, evaluates — and every later identical slot is filled
+/// from it. A batch that reduces to a single distinct miss keeps the
+/// inline fast path (the whole `jobs` budget goes to that scenario's
+/// inner sweeps, restored even if evaluation panics).
 pub fn run_batch_cached(
     specs: &[ScenarioSpec],
     jobs: usize,
     mut cache: Option<&mut ResultCache>,
 ) -> Result<Vec<ScenarioResult>> {
-    // Probe the cache in input order; slots hold hits, keys carry the
-    // (key, canonical spec) pair for the post-evaluation inserts.
-    let mut slots: Vec<Option<ScenarioResult>> = Vec::with_capacity(specs.len());
-    let mut keys: Vec<Option<(String, String)>> = Vec::with_capacity(specs.len());
-    for spec in specs {
-        match cache.as_mut() {
-            Some(c) => {
-                let (key, canon) = spec.cache_identity();
-                let hit = c.lookup(&key, &canon).map(|doc| ScenarioResult {
-                    name: spec.name.clone(),
-                    experiment: spec.experiment.clone(),
-                    doc: doc.clone(),
-                });
-                keys.push(Some((key, canon)));
-                slots.push(hit);
-            }
-            None => {
-                keys.push(None);
-                slots.push(None);
-            }
+    // One canonical serialization per slot: the cache key scheme doubles
+    // as the in-batch dedupe key (identical canonical spec ⇒ identical
+    // name, experiment and — evaluation being deterministic — result).
+    let identities: Vec<(String, String)> = specs.iter().map(|s| s.cache_identity()).collect();
+
+    let mut slots: Vec<Option<ScenarioResult>> = vec![None; specs.len()];
+    // Duplicate slot -> representative slot (first occurrence).
+    let mut rep_of: Vec<usize> = (0..specs.len()).collect();
+    let mut first_seen: BTreeMap<&str, usize> = BTreeMap::new();
+    let mut miss_idx: Vec<usize> = Vec::new();
+    for (i, spec) in specs.iter().enumerate() {
+        let (key, canon) = &identities[i];
+        if let Some(&rep) = first_seen.get(canon.as_str()) {
+            rep_of[i] = rep;
+            continue;
+        }
+        first_seen.insert(canon.as_str(), i);
+        let hit = cache.as_mut().and_then(|c| {
+            c.lookup(key, canon).map(|doc| ScenarioResult {
+                name: spec.name.clone(),
+                experiment: spec.experiment.clone(),
+                doc: doc.clone(),
+            })
+        });
+        match hit {
+            Some(r) => slots[i] = Some(r),
+            None => miss_idx.push(i),
         }
     }
-    let miss_idx: Vec<usize> = (0..specs.len()).filter(|&i| slots[i].is_none()).collect();
 
     let evaluated: Vec<Result<ScenarioResult>> = if miss_idx.len() == 1 {
-        let prev = crate::perf::current_jobs();
-        crate::perf::set_jobs(jobs.max(1));
-        let r = eval_one(&specs[miss_idx[0]]);
-        crate::perf::set_jobs(prev);
-        vec![r]
+        // Single distinct miss: run inline with the whole jobs budget
+        // handed to the scenario's inner sweeps; the guard restores the
+        // session's jobs even if evaluation panics.
+        vec![crate::perf::with_jobs(jobs, || eval_one(&specs[miss_idx[0]]))]
     } else {
         let miss_specs: Vec<&ScenarioSpec> = miss_idx.iter().map(|&i| &specs[i]).collect();
         par_map(&miss_specs, jobs, |spec| eval_one(spec))
@@ -122,7 +138,8 @@ pub fn run_batch_cached(
     for (&i, r) in miss_idx.iter().zip(evaluated) {
         match r {
             Ok(result) => {
-                if let (Some(c), Some((key, canon))) = (cache.as_mut(), &keys[i]) {
+                if let Some(c) = cache.as_mut() {
+                    let (key, canon) = &identities[i];
                     c.insert(key.clone(), canon.clone(), &result);
                 }
                 slots[i] = Some(result);
@@ -146,9 +163,16 @@ pub fn run_batch_cached(
     if let Some(e) = first_err {
         return Err(e);
     }
+    // Resolve duplicate slots from their representatives.
+    for i in 0..slots.len() {
+        if slots[i].is_none() {
+            let resolved = slots[rep_of[i]].clone();
+            slots[i] = resolved;
+        }
+    }
     Ok(slots
         .into_iter()
-        .map(|s| s.expect("every non-hit slot was evaluated"))
+        .map(|s| s.expect("every non-hit slot was evaluated or resolved"))
         .collect())
 }
 
@@ -159,7 +183,10 @@ fn eval_one(spec: &ScenarioSpec) -> Result<ScenarioResult> {
 }
 
 /// Parse a text blob into raw documents: either one JSON document or
-/// JSONL (one document per line, as `scenario expand` emits).
+/// JSONL (one document per line, as `scenario expand` emits). The
+/// whole-blob parse is strict ([`Json::parse`] rejects trailing
+/// content), so a multi-line JSONL input can never be mistaken for —
+/// and silently truncated to — its first document.
 pub fn docs_of(text: &str) -> Result<Vec<Json>> {
     match Json::parse(text) {
         Ok(doc) => Ok(vec![doc]),
@@ -233,6 +260,30 @@ mod tests {
         assert!(err.contains("expand"), "{err}");
     }
 
+    /// Pins the strictness `docs_of` relies on: the whole-blob parse
+    /// must reject a JSONL input (trailing content after the first
+    /// document) rather than tolerate it — a tolerant parser would
+    /// silently truncate a fleet to its first scenario.
+    #[test]
+    fn docs_of_never_truncates_jsonl_input() {
+        let a = r#"{"name": "a", "workload": {"kind": "table1"}}"#;
+        let b = r#"{"name": "b", "workload": {"kind": "hpc-table"}}"#;
+        // The underlying parser rejects trailing content outright.
+        assert!(Json::parse(&format!("{a}\n{b}")).is_err());
+        // So docs_of must yield every document, never just the first.
+        for text in [
+            format!("{a}\n{b}"),
+            format!("{a}\n{b}\n"),
+            format!("{a}\n\n{b}\n"),
+        ] {
+            let docs = docs_of(&text).unwrap();
+            assert_eq!(docs.len(), 2, "JSONL was truncated: {text:?}");
+            assert_eq!(docs[1].get("name").unwrap().as_str(), Some("b"));
+        }
+        // A single document with surrounding whitespace stays one doc.
+        assert_eq!(docs_of(&format!("  {a}\n")).unwrap().len(), 1);
+    }
+
     #[test]
     fn batch_surfaces_failures_with_name() {
         // 'doomed' parses — a socket index is plain data at parse time —
@@ -285,5 +336,52 @@ mod tests {
         assert_eq!((mixed.hits(), mixed.misses()), (1, 1));
         assert_eq!(r3.len(), 2);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Duplicate specs in one batch evaluate once: the cold cache sees a
+    /// single probe and stores a single entry, yet every input slot is
+    /// filled, in input order, with the representative's document.
+    #[test]
+    fn duplicate_specs_in_a_batch_evaluate_once() {
+        use crate::scenario::cache::ResultCache;
+
+        let x = r#"{"name": "x", "workload": {"kind": "hpc-table"}}"#;
+        let y = r#"{"name": "y", "workload": {"kind": "table1"}}"#;
+        let s = specs(&[x, y, x, x]);
+        let dir = std::env::temp_dir().join(format!("cxlmem-batch-dedupe-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+
+        let mut cold = ResultCache::open(&dir).unwrap();
+        let r = run_batch_cached(&s, 2, Some(&mut cold)).unwrap();
+        // Two *distinct* specs probed (and missed); only they evaluated
+        // and only they were stored — the duplicates rode along.
+        assert_eq!((cold.hits(), cold.misses()), (0, 2));
+        assert_eq!(cold.len(), 2);
+        assert_eq!(r.len(), 4, "every input slot must be filled");
+        assert_eq!(r[0].name, "x");
+        assert_eq!(r[1].name, "y");
+        assert_eq!(r[2].name, "x");
+        assert_eq!(r[0].doc, r[2].doc);
+        assert_eq!(r[0].doc, r[3].doc);
+
+        // Uncached batches dedupe the same way (order preserved).
+        let plain = run_batch(&s, 2).unwrap();
+        let a = to_jsonl(r.into_iter().map(|r| r.doc));
+        let b = to_jsonl(plain.into_iter().map(|r| r.doc));
+        assert_eq!(a, b, "dedupe must not change the output bytes");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The single-distinct-miss inline fast path restores the session's
+    /// jobs clamp even when evaluation fails (and, via the RAII guard in
+    /// `perf::with_jobs`, even if it panics).
+    #[test]
+    fn inline_fast_path_restores_jobs_on_failure() {
+        crate::perf::set_jobs(3);
+        let s = specs(&[r#"{"name": "doomed", "workload": {"kind": "objects", "socket": 7,
+            "objects": [{"name": "a", "gb": 1}], "oli_search": false}}"#]);
+        assert!(run_batch(&s, 8).is_err());
+        assert_eq!(crate::perf::current_jobs(), 3, "jobs left clamped");
+        crate::perf::set_jobs(1);
     }
 }

@@ -19,9 +19,19 @@
 //! `scenario run` would emit. Lines are only ever appended; unparseable
 //! or foreign lines (a truncated tail write, an older schema) are
 //! skipped on load, so a damaged cache degrades to re-evaluation rather
-//! than an error. Within one store the first line for a key wins —
-//! re-inserting an existing key is a no-op, so concurrent writers can at
-//! worst duplicate a line, never corrupt a lookup.
+//! than an error. Within one store the first line for a key wins.
+//!
+//! Concurrency: the store is the rendezvous point for `--shard`ed fleet
+//! processes, so all disk access is serialized under an advisory
+//! exclusive lock on `<dir>/lock` ([`crate::util::lock::FileLock`] —
+//! `flock(2)` on Unix). [`ResultCache::flush`] appends one line per
+//! `write` call under the lock and re-reads the store's keys first, so
+//! two shards that evaluated the same spec never tear a line *and* never
+//! duplicate one; [`ResultCache::reload`] picks up entries other
+//! processes flushed since open (first-insert-wins, so nothing a lookup
+//! already returned ever changes). A lock that cannot be taken degrades
+//! to the old unlocked behavior with a warning — the cache must never
+//! block a run.
 
 use std::collections::BTreeMap;
 use std::fs;
@@ -32,6 +42,7 @@ use anyhow::{Context, Result};
 
 use super::batch::ScenarioResult;
 use crate::util::json::Json;
+use crate::util::lock::FileLock;
 
 /// Cache line schema identifier.
 pub const CACHE_SCHEMA: &str = "cxlmem-result-cache-v1";
@@ -39,6 +50,8 @@ pub const CACHE_SCHEMA: &str = "cxlmem-result-cache-v1";
 pub const DEFAULT_DIR: &str = ".cxlmem-cache";
 /// Store file name inside the cache directory.
 pub const STORE_FILE: &str = "results.jsonl";
+/// Advisory lock file name inside the cache directory.
+pub const LOCK_FILE: &str = "lock";
 
 /// One stored result: the canonical spec it was computed from (verified
 /// on lookup) and the result document.
@@ -61,6 +74,72 @@ pub struct ResultCache {
     misses: u64,
 }
 
+/// Parse one store line into `(key, entry)`; `None` for damage or
+/// foreign schemas (the caller skips those).
+fn parse_line(line: &str) -> Option<(String, Entry)> {
+    if line.trim().is_empty() {
+        return None;
+    }
+    let doc = Json::parse(line).ok()?;
+    if doc.get("schema").and_then(Json::as_str) != Some(CACHE_SCHEMA) {
+        return None;
+    }
+    let key = doc.get("key").and_then(Json::as_str)?;
+    let spec = doc.get("spec").and_then(Json::as_str)?;
+    let result = doc.get("result")?;
+    Some((
+        key.to_string(),
+        Entry {
+            spec: spec.to_string(),
+            doc: result.clone(),
+        },
+    ))
+}
+
+/// Read the store at `path` into `entries`, keeping whatever is already
+/// there (first-insert-wins — both across duplicate lines in the file
+/// and against entries the caller holds in memory). An unreadable file
+/// degrades to "nothing new" with a warning: the cache must never block
+/// a run. Returns the number of keys added.
+fn load_into(path: &Path, entries: &mut BTreeMap<String, Entry>) -> usize {
+    let text = match fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!(
+                "warning: unreadable scenario result cache {} ({e}); treating as empty",
+                path.display()
+            );
+            return 0;
+        }
+    };
+    let mut added = 0;
+    for line in text.lines() {
+        if let Some((key, entry)) = parse_line(line) {
+            if !entries.contains_key(&key) {
+                entries.insert(key, entry);
+                added += 1;
+            }
+        }
+    }
+    added
+}
+
+/// Take the store lock, degrading to unlocked access with a warning if
+/// the lock file cannot be created/locked (read-only store, exotic FS).
+fn lock_store(path: &Path) -> Option<FileLock> {
+    let lock_path = path.parent()?.join(LOCK_FILE);
+    match FileLock::acquire(&lock_path) {
+        Ok(l) => Some(l),
+        Err(e) => {
+            eprintln!(
+                "warning: cache lock {} unavailable ({e}); proceeding unlocked",
+                lock_path.display()
+            );
+            None
+        }
+    }
+}
+
 impl ResultCache {
     /// Open (or lazily create) the cache under `dir`. A missing
     /// directory/file is an empty cache, and so is an *unreadable* one
@@ -71,38 +150,8 @@ impl ResultCache {
         let path = dir.join(STORE_FILE);
         let mut entries = BTreeMap::new();
         if path.exists() {
-            let text = match fs::read_to_string(&path) {
-                Ok(t) => t,
-                Err(e) => {
-                    eprintln!(
-                        "warning: unreadable scenario result cache {} ({e}); starting empty",
-                        path.display()
-                    );
-                    String::new()
-                }
-            };
-            for line in text.lines() {
-                if line.trim().is_empty() {
-                    continue;
-                }
-                // Tolerate damage: skip anything that isn't a well-formed
-                // entry of our schema instead of failing the whole run.
-                let doc = match Json::parse(line) {
-                    Ok(d) => d,
-                    Err(_) => continue,
-                };
-                if doc.get("schema").and_then(Json::as_str) != Some(CACHE_SCHEMA) {
-                    continue;
-                }
-                let key = doc.get("key").and_then(Json::as_str);
-                let spec = doc.get("spec").and_then(Json::as_str);
-                if let (Some(key), Some(spec), Some(result)) = (key, spec, doc.get("result")) {
-                    entries.entry(key.to_string()).or_insert_with(|| Entry {
-                        spec: spec.to_string(),
-                        doc: result.clone(),
-                    });
-                }
-            }
+            let _lock = lock_store(&path);
+            load_into(&path, &mut entries);
         }
         Ok(Self {
             path,
@@ -116,6 +165,18 @@ impl ResultCache {
     /// Open the default store, [`DEFAULT_DIR`].
     pub fn open_default() -> Result<Self> {
         Self::open(Path::new(DEFAULT_DIR))
+    }
+
+    /// Pick up entries other processes appended since open (or the last
+    /// reload). Existing in-memory entries — loaded *or* inserted — are
+    /// kept, so nothing a lookup already returned ever changes; pending
+    /// inserts stay pending. Returns the number of new keys.
+    pub fn reload(&mut self) -> Result<usize> {
+        if !self.path.exists() {
+            return Ok(0);
+        }
+        let _lock = lock_store(&self.path);
+        Ok(load_into(&self.path, &mut self.entries))
     }
 
     /// Look a key up, verifying the entry was computed from the same
@@ -151,7 +212,13 @@ impl ResultCache {
     }
 
     /// Append pending entries to the store, creating the directory/file
-    /// on first use.
+    /// on first use. The whole append runs under the store's advisory
+    /// lock: the current on-disk keys are re-read first (a concurrent
+    /// shard may have flushed the same spec already — those lines are
+    /// not appended again), then each surviving entry is written as one
+    /// whole line per `write` call, so a concurrent reader never sees a
+    /// torn line and a crash mid-flush loses at most the unwritten tail.
+    /// On failure, pending entries are retained for a retry.
     pub fn flush(&mut self) -> Result<()> {
         if self.pending.is_empty() {
             return Ok(());
@@ -160,29 +227,37 @@ impl ResultCache {
             fs::create_dir_all(dir)
                 .with_context(|| format!("creating cache dir {}", dir.display()))?;
         }
-        let mut out = String::new();
-        for (key, name) in self.pending.drain(..) {
-            let entry = match self.entries.get(&key) {
-                Some(e) => e,
-                None => continue,
-            };
-            let line = Json::obj(vec![
-                ("schema", CACHE_SCHEMA.into()),
-                ("key", key.into()),
-                ("scenario", name.into()),
-                ("spec", entry.spec.as_str().into()),
-                ("result", entry.doc.clone()),
-            ]);
-            out.push_str(&line.to_string());
-            out.push('\n');
+        let _lock = lock_store(&self.path);
+        let mut on_disk = BTreeMap::new();
+        if self.path.exists() {
+            load_into(&self.path, &mut on_disk);
         }
         let mut f = fs::OpenOptions::new()
             .create(true)
             .append(true)
             .open(&self.path)
             .with_context(|| format!("opening cache store {}", self.path.display()))?;
-        f.write_all(out.as_bytes())
-            .with_context(|| format!("appending to cache store {}", self.path.display()))?;
+        for (key, name) in &self.pending {
+            if on_disk.contains_key(key) {
+                continue;
+            }
+            let entry = match self.entries.get(key) {
+                Some(e) => e,
+                None => continue,
+            };
+            let line = Json::obj(vec![
+                ("schema", CACHE_SCHEMA.into()),
+                ("key", key.as_str().into()),
+                ("scenario", name.as_str().into()),
+                ("spec", entry.spec.as_str().into()),
+                ("result", entry.doc.clone()),
+            ]);
+            let mut text = line.to_string();
+            text.push('\n');
+            f.write_all(text.as_bytes())
+                .with_context(|| format!("appending to cache store {}", self.path.display()))?;
+        }
+        self.pending.clear();
         Ok(())
     }
 
@@ -308,5 +383,106 @@ mod tests {
         let mut c = ResultCache::open(&dir).unwrap();
         c.flush().unwrap();
         assert!(!dir.exists(), "an untouched cache must not litter the disk");
+    }
+
+    /// Two handles on one store, flushing interleaved entries: neither
+    /// flush corrupts the other's lines, `reload()` surfaces the sibling's
+    /// entries without touching ones already held, and a fresh open sees
+    /// the union.
+    #[test]
+    fn interleaved_handles_share_the_store_via_reload() {
+        let dir = tmp_dir("interleave");
+        let _ = fs::remove_dir_all(&dir);
+        let mut c1 = ResultCache::open(&dir).unwrap();
+        let mut c2 = ResultCache::open(&dir).unwrap();
+        c1.insert("ka".into(), "spec-a".into(), &result("a", 1));
+        c1.flush().unwrap();
+        c2.insert("kb".into(), "spec-b".into(), &result("b", 2));
+        c2.flush().unwrap();
+
+        // c1 has never seen kb; reload picks it up, and only it.
+        assert!(c1.lookup("kb", "spec-b").is_none());
+        assert_eq!(c1.reload().unwrap(), 1);
+        assert_eq!(c1.len(), 2);
+        let doc = c1.lookup("kb", "spec-b").unwrap();
+        assert_eq!(doc.get("v").unwrap().as_u64(), Some(2));
+        // Nothing already held changed (first-insert-wins).
+        let held = c1.lookup("ka", "spec-a").unwrap();
+        assert_eq!(held.get("v").unwrap().as_u64(), Some(1));
+        // A second reload finds nothing new.
+        assert_eq!(c1.reload().unwrap(), 0);
+
+        let c3 = ResultCache::open(&dir).unwrap();
+        assert_eq!(c3.len(), 2);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    /// Two handles that each evaluated the *same* spec (a shard overlap):
+    /// the second flush must not append a duplicate line — the store ends
+    /// up with one line for the key, and its content is the first
+    /// flusher's (first-insert-wins at the store level too).
+    #[test]
+    fn overlapping_flushes_do_not_duplicate_lines() {
+        let dir = tmp_dir("overlap");
+        let _ = fs::remove_dir_all(&dir);
+        let mut c1 = ResultCache::open(&dir).unwrap();
+        let mut c2 = ResultCache::open(&dir).unwrap();
+        c1.insert("k".into(), "spec".into(), &result("first", 1));
+        c2.insert("k".into(), "spec".into(), &result("second", 2));
+        c1.flush().unwrap();
+        c2.flush().unwrap();
+
+        let text = fs::read_to_string(dir.join(STORE_FILE)).unwrap();
+        assert_eq!(text.lines().count(), 1, "duplicate key was re-appended");
+        let mut c3 = ResultCache::open(&dir).unwrap();
+        assert_eq!(c3.len(), 1);
+        let doc = c3.lookup("k", "spec").unwrap();
+        assert_eq!(doc.get("v").unwrap().as_u64(), Some(1));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    /// Many concurrent writers (threads here; the lock excludes separate
+    /// processes the same way — each handle locks its own descriptor):
+    /// every entry survives, every line parses, no lookup is corrupted.
+    #[test]
+    fn concurrent_writers_never_tear_lines() {
+        let dir = tmp_dir("concurrent");
+        let _ = fs::remove_dir_all(&dir);
+        const WRITERS: usize = 4;
+        const PER_WRITER: usize = 8;
+        std::thread::scope(|s| {
+            for w in 0..WRITERS {
+                let dir = dir.clone();
+                s.spawn(move || {
+                    let mut c = ResultCache::open(&dir).unwrap();
+                    for i in 0..PER_WRITER {
+                        // A long filler pushes each line well past any
+                        // small-write atomicity threshold.
+                        let name = format!("w{w}-{i}-{}", "x".repeat(512));
+                        c.insert(
+                            format!("k-{w}-{i}"),
+                            format!("spec-{w}-{i}"),
+                            &result(&name, (w * PER_WRITER + i) as u64),
+                        );
+                        c.flush().unwrap();
+                    }
+                });
+            }
+        });
+        let mut c = ResultCache::open(&dir).unwrap();
+        assert_eq!(c.len(), WRITERS * PER_WRITER, "entries were lost or torn");
+        for w in 0..WRITERS {
+            for i in 0..PER_WRITER {
+                let doc = c
+                    .lookup(&format!("k-{w}-{i}"), &format!("spec-{w}-{i}"))
+                    .unwrap_or_else(|| panic!("k-{w}-{i} missing"));
+                assert_eq!(doc.get("v").unwrap().as_u64(), Some((w * PER_WRITER + i) as u64));
+            }
+        }
+        // Every stored line parses back as a well-formed entry.
+        let text = fs::read_to_string(dir.join(STORE_FILE)).unwrap();
+        assert_eq!(text.lines().count(), WRITERS * PER_WRITER);
+        assert!(text.lines().all(|l| parse_line(l).is_some()));
+        let _ = fs::remove_dir_all(&dir);
     }
 }

@@ -204,9 +204,12 @@ fn eval_objects(name: &str, sys: &System, o: &ObjectsSpec) -> Result<Report> {
         })
         .collect();
 
+    // The header row doubles as the table's identity: `scenario report`
+    // finds policy grids by exact header match (super::report), so both
+    // sides share the one constant and cannot drift apart.
     let mut grid = Table::new(
         &format!("Scenario {name} — policy grid (seconds; lower is better)"),
-        &["policy", "total s", "stream s", "dep s", "compute s", "best"],
+        &super::report::GRID_HEADERS,
     );
     let mut results: Vec<(String, RunResult)> = Vec::new();
     for pname in &o.policies {
@@ -264,7 +267,7 @@ fn eval_objects(name: &str, sys: &System, o: &ObjectsSpec) -> Result<Report> {
             best = baseline;
             sel = all_preferred;
         }
-        results.push(("OLI(search)".to_string(), best));
+        results.push((super::report::OLI_ROW.to_string(), best));
         oli_assignment = Some(sel);
     }
 

@@ -16,11 +16,21 @@
 //!   the parameterized `exp::*_with` drivers so bundled defaults
 //!   reproduce `cxlmem exp` output exactly.
 //! - [`batch`] — shard a scenario list over [`crate::util::par`] and
-//!   stream per-scenario results as JSON lines.
+//!   stream per-scenario results as JSON lines; duplicate specs within a
+//!   batch evaluate once (canonical-identity dedupe).
 //! - [`cache`] — persistent, content-addressed result cache keyed on the
 //!   canonical spec hash ([`ScenarioSpec::cache_key`]); `scenario run`
 //!   consults it by default, so fleet re-runs and overlapping sweeps
-//!   skip evaluation entirely while emitting byte-identical JSONL.
+//!   skip evaluation entirely while emitting byte-identical JSONL. Disk
+//!   access is serialized under an advisory lock, so concurrent
+//!   processes can share one store.
+//! - [`shard`] — deterministic cross-process splits (`--shard K/N`,
+//!   input-index modulo): N processes run disjoint slices of one
+//!   expanded fleet and rendezvous in a shared cache directory; a
+//!   coordinator re-run is then pure hits.
+//! - [`report`] — aggregate result JSONL (or a cache store) into fleet
+//!   summaries: best policy per device profile, win matrices, run-time
+//!   quantiles, OLI-vs-best-static gains.
 //!
 //! CLI surface (`cxlmem scenario …`):
 //!
@@ -28,8 +38,9 @@
 //! scenario validate <files…>                          parse + validate
 //! scenario expand <file> [--seed S] [--count N]       spec JSONL to stdout/--out
 //! scenario run <files…|-> [--jobs N] [--out F]        result JSONL (cached;
-//!          [--no-cache] [--cache-dir D]               default .cxlmem-cache/)
+//!          [--shard K/N] [--no-cache] [--cache-dir D] default .cxlmem-cache/)
 //! scenario bench [--count N] [--jobs N] [--cache]     fleet throughput probe
+//! scenario report <results.jsonl|cache dir>           fleet summary tables
 //! ```
 //!
 //! The bundled files under `examples/scenarios/` re-express every
@@ -40,10 +51,14 @@ pub mod batch;
 pub mod cache;
 pub mod eval;
 pub mod expand;
+pub mod report;
+pub mod shard;
 pub mod spec;
 
 pub use batch::{docs_of, parse_docs, run_batch, run_batch_cached, ScenarioResult};
 pub use cache::ResultCache;
 pub use eval::evaluate;
 pub use expand::{expand, is_template};
+pub use report::{summarize_docs, summarize_text};
+pub use shard::Shard;
 pub use spec::{ScenarioSpec, SystemSpec, WorkloadSpec, SCHEMA};

@@ -1,0 +1,481 @@
+//! Fleet summary reports: aggregate scenario-result JSONL into the
+//! fleet-scale answers the raw lines only imply — which placement
+//! policy wins on which device profile, how the policies' run times
+//! distribute, and what the OLI per-object search buys over the best
+//! static policy.
+//!
+//! Input is whatever `scenario run --out` wrote (one result document
+//! per line) *or* a result-cache store (`<dir>/results.jsonl`, schema
+//! `cxlmem-result-cache-v1` — each line's `result` field is the
+//! document), so `cxlmem scenario report` can summarize a shared
+//! `--cache-dir` that N `--shard` processes rendezvoused in without any
+//! coordinator run. Damaged lines are skipped and counted, mirroring
+//! the cache loader's tolerance.
+//!
+//! Output is an ordinary [`crate::report::Report`], so `--csv`/`--json`
+//! and `--out` come for free from the shared renderer. Documents
+//! without an `objects` policy grid (experiment reproductions, say) are
+//! counted in the overview but excluded from the policy aggregation.
+//! All aggregation is over `BTreeMap`/`BTreeSet`, so the report is
+//! deterministic for a given input.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use anyhow::{bail, Result};
+
+use super::cache::CACHE_SCHEMA;
+use super::spec::POLICY_NAMES;
+use crate::report::Report;
+use crate::util::json::Json;
+use crate::util::stats::{median, percentile};
+use crate::util::table::{f3, Table};
+
+/// The header row that identifies an `objects` policy-grid table (see
+/// `scenario::eval::eval_objects`).
+pub const GRID_HEADERS: [&str; 6] = ["policy", "total s", "stream s", "dep s", "compute s", "best"];
+
+/// The policy-grid row the OLI per-object search reports under.
+pub const OLI_ROW: &str = "OLI(search)";
+
+/// One parsed policy grid: scenario name, device-profile label, and the
+/// per-policy totals.
+struct Grid {
+    profile: String,
+    /// `(policy, total seconds)`, in table order.
+    rows: Vec<(String, f64)>,
+    /// The starred (winning) policy and its total.
+    best: (String, f64),
+    /// Fastest non-OLI row — the best *static* placement.
+    best_static: Option<(String, f64)>,
+    /// The OLI(search) row's total, when the search ran.
+    oli: Option<f64>,
+}
+
+/// Extract result documents from a text blob: result JSONL as written
+/// by `scenario run --out`, or a result-cache store (each line's
+/// `result` field). Returns `(documents, skipped_lines)`.
+pub fn collect_docs(text: &str) -> (Vec<Json>, usize) {
+    let mut docs = Vec::new();
+    let mut skipped = 0;
+    for line in text.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let doc = match Json::parse(line) {
+            Ok(d) => d,
+            Err(_) => {
+                skipped += 1;
+                continue;
+            }
+        };
+        if doc.get("schema").and_then(Json::as_str) == Some(CACHE_SCHEMA) {
+            match doc.get("result") {
+                Some(r) => docs.push(r.clone()),
+                None => skipped += 1,
+            }
+        } else {
+            docs.push(doc);
+        }
+    }
+    (docs, skipped)
+}
+
+/// Human label for a result document's device profile, from the
+/// canonical `systems` echo: `"A"`, `"B+2:cxl-c"` (base + node:device
+/// overrides), `"custom"` for a fully custom profile; multiple systems
+/// join with `" & "`.
+fn profile_label(doc: &Json) -> String {
+    let Some(systems) = doc.get("systems").and_then(Json::as_arr) else {
+        return "unknown".to_string();
+    };
+    let mut parts = Vec::new();
+    for sys in systems {
+        if let Some(s) = sys.as_str() {
+            parts.push(s.to_string());
+            continue;
+        }
+        let base = sys.get("base").and_then(Json::as_str).unwrap_or("?");
+        let mut label = base.to_string();
+        if let Some(devs) = sys.get("devices").and_then(Json::as_obj) {
+            for (node, ov) in devs {
+                let name = ov.as_str().unwrap_or("custom");
+                label.push_str(&format!("+{node}:{name}"));
+            }
+        }
+        parts.push(label);
+    }
+    if parts.is_empty() {
+        "unknown".to_string()
+    } else {
+        parts.join(" & ")
+    }
+}
+
+/// Parse a result document's `objects` policy grid, identified by its
+/// exact header row. `None` when the document has no such table
+/// (experiment reproductions) or the table is malformed.
+fn grid_of(doc: &Json) -> Option<Grid> {
+    let tables = doc.get("tables")?.as_arr()?;
+    let table = tables.iter().find(|t| {
+        t.get("headers").and_then(Json::as_arr).is_some_and(|hs| {
+            hs.len() == GRID_HEADERS.len()
+                && hs.iter().zip(GRID_HEADERS).all(|(h, w)| h.as_str() == Some(w))
+        })
+    })?;
+    let mut rows = Vec::new();
+    let mut best = None;
+    for row in table.get("rows")?.as_arr()? {
+        let cells = row.as_arr()?;
+        if cells.len() != GRID_HEADERS.len() {
+            return None;
+        }
+        let policy = cells[0].as_str()?.to_string();
+        let total: f64 = cells[1].as_str()?.parse().ok()?;
+        if !total.is_finite() {
+            return None;
+        }
+        if best.is_none() && cells[5].as_str() == Some("*") {
+            best = Some((policy.clone(), total));
+        }
+        rows.push((policy, total));
+    }
+    if rows.is_empty() {
+        return None;
+    }
+    let best = best.or_else(|| min_row(rows.iter().map(|(p, t)| (p.as_str(), *t))))?;
+    let best_static = min_row(
+        rows.iter()
+            .filter(|(p, _)| p != OLI_ROW)
+            .map(|(p, t)| (p.as_str(), *t)),
+    );
+    let oli = rows.iter().find(|(p, _)| p == OLI_ROW).map(|(_, t)| *t);
+    Some(Grid {
+        profile: profile_label(doc),
+        rows,
+        best,
+        best_static,
+        oli,
+    })
+}
+
+/// Row with the minimum total (first on ties — table order).
+fn min_row<'a, I: Iterator<Item = (&'a str, f64)>>(rows: I) -> Option<(String, f64)> {
+    let mut out: Option<(String, f64)> = None;
+    for (p, t) in rows {
+        if out.as_ref().map_or(true, |(_, b)| t < *b) {
+            out = Some((p.to_string(), t));
+        }
+    }
+    out
+}
+
+/// Canonical column/row order for policies: the declared grid order
+/// ([`POLICY_NAMES`]) first, then anything unrecognized alphabetically,
+/// then the OLI search row last.
+fn policy_order(all: &BTreeSet<String>) -> Vec<String> {
+    let mut out: Vec<String> = POLICY_NAMES
+        .iter()
+        .copied()
+        .filter(|p| all.contains(*p))
+        .map(str::to_string)
+        .collect();
+    for p in all {
+        if p != OLI_ROW && !out.contains(p) {
+            out.push(p.clone());
+        }
+    }
+    if all.contains(OLI_ROW) {
+        out.push(OLI_ROW.to_string());
+    }
+    out
+}
+
+/// Summarize result documents into a fleet report. `skipped` is the
+/// damaged-line count from [`collect_docs`], surfaced in the overview.
+pub fn summarize_docs(docs: &[Json], skipped: usize) -> Report {
+    let grids: Vec<Grid> = docs.iter().filter_map(grid_of).collect();
+
+    let mut policies = BTreeSet::new();
+    // profile -> (grid count, wins per policy, best totals)
+    let mut profiles: BTreeMap<String, (usize, BTreeMap<String, usize>, Vec<f64>)> =
+        BTreeMap::new();
+    // policy -> all observed totals
+    let mut totals: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+    // profile -> OLI-vs-best-static gains (fraction, positive = OLI faster)
+    let mut gains: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+    for g in &grids {
+        let entry = profiles.entry(g.profile.clone()).or_default();
+        entry.0 += 1;
+        *entry.1.entry(g.best.0.clone()).or_insert(0) += 1;
+        entry.2.push(g.best.1);
+        for (p, t) in &g.rows {
+            policies.insert(p.clone());
+            totals.entry(p.clone()).or_default().push(*t);
+        }
+        if let (Some(oli), Some((_, st))) = (g.oli, &g.best_static) {
+            if *st > 0.0 {
+                gains.entry(g.profile.clone()).or_default().push((*st - oli) / *st);
+            }
+        }
+    }
+
+    let mut report = Report::new();
+
+    let mut overview = Table::new("Fleet summary — input", &["metric", "count"]);
+    overview.row(vec!["result documents".into(), docs.len().to_string()]);
+    overview.row(vec!["objects policy grids".into(), grids.len().to_string()]);
+    let other = docs.len() - grids.len();
+    overview.row(vec!["other result documents".into(), other.to_string()]);
+    overview.row(vec!["unparseable lines skipped".into(), skipped.to_string()]);
+    overview.row(vec!["device profiles".into(), profiles.len().to_string()]);
+    overview.row(vec!["policies observed".into(), policies.len().to_string()]);
+    report.add(overview);
+    if grids.is_empty() {
+        return report;
+    }
+
+    let order = policy_order(&policies);
+
+    let mut best_t = Table::new(
+        "Fleet summary — best policy per device profile",
+        &["profile", "results", "best policy", "wins", "win share", "median best s"],
+    );
+    for (profile, (n, wins, best_totals)) in &profiles {
+        // Most wins; ties break to the canonical policy order (a plain
+        // max_by_key would keep the *last* maximum).
+        let mut top = ("", 0usize);
+        for p in &order {
+            if let Some(&w) = wins.get(p) {
+                if w > top.1 {
+                    top = (p.as_str(), w);
+                }
+            }
+        }
+        let (top, top_wins) = top;
+        best_t.row(vec![
+            profile.clone(),
+            n.to_string(),
+            top.to_string(),
+            top_wins.to_string(),
+            format!("{:.1}%", 100.0 * top_wins as f64 / *n as f64),
+            f3(median(best_totals)),
+        ]);
+    }
+    report.add(best_t);
+
+    let mut headers: Vec<&str> = vec!["profile"];
+    headers.extend(order.iter().map(String::as_str));
+    let mut matrix = Table::new("Fleet summary — policy win matrix (wins per profile)", &headers);
+    for (profile, (_, wins, _)) in &profiles {
+        let mut row = vec![profile.clone()];
+        for p in &order {
+            row.push(wins.get(p).copied().unwrap_or(0).to_string());
+        }
+        matrix.row(row);
+    }
+    report.add(matrix);
+
+    let mut quant = Table::new(
+        "Fleet summary — total-time quantiles per policy (seconds)",
+        &["policy", "n", "p10", "p50", "p90", "max"],
+    );
+    for p in &order {
+        let ts = &totals[p];
+        quant.row(vec![
+            p.clone(),
+            ts.len().to_string(),
+            f3(percentile(ts, 10.0)),
+            f3(percentile(ts, 50.0)),
+            f3(percentile(ts, 90.0)),
+            f3(ts.iter().cloned().fold(f64::NEG_INFINITY, f64::max)),
+        ]);
+    }
+    report.add(quant);
+
+    if !gains.is_empty() {
+        let mut oli_t = Table::new(
+            "Fleet summary — OLI(search) vs best static policy",
+            &["profile", "n", "median gain %", "best gain %", "OLI wins"],
+        );
+        for (profile, gs) in &gains {
+            let wins = gs.iter().filter(|&&g| g > 1e-9).count();
+            oli_t.row(vec![
+                profile.clone(),
+                gs.len().to_string(),
+                format!("{:.1}", 100.0 * median(gs)),
+                format!("{:.1}", 100.0 * percentile(gs, 100.0)),
+                wins.to_string(),
+            ]);
+        }
+        report.add(oli_t);
+    }
+    report
+}
+
+/// Summarize a results blob (see [`collect_docs`] for accepted forms)
+/// into a fleet report. Errors when nothing parses at all — a wrong
+/// file is a user error, not an empty fleet.
+pub fn summarize_text(text: &str) -> Result<Report> {
+    let (docs, skipped) = collect_docs(text);
+    if docs.is_empty() {
+        bail!(
+            "no result documents found (want `scenario run` JSONL or a \
+             result-cache store){}",
+            if skipped > 0 {
+                format!(" — {skipped} unparseable line(s)")
+            } else {
+                String::new()
+            }
+        );
+    }
+    Ok(summarize_docs(&docs, skipped))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A synthetic result document with an `objects` policy grid.
+    fn grid_doc(name: &str, system: Json, rows: &[(&str, f64, bool)]) -> Json {
+        let table = Json::obj(vec![
+            ("title", format!("Scenario {name} — policy grid").into()),
+            (
+                "headers",
+                Json::arr(GRID_HEADERS.iter().map(|h| Json::from(*h))),
+            ),
+            (
+                "rows",
+                Json::arr(rows.iter().map(|(p, t, star)| {
+                    Json::arr([
+                        Json::from(*p),
+                        Json::from(f3(*t)),
+                        Json::from("0.000"),
+                        Json::from("0.000"),
+                        Json::from("0.000"),
+                        Json::from(if *star { "*" } else { "" }),
+                    ])
+                })),
+            ),
+        ]);
+        Json::obj(vec![
+            ("scenario", name.into()),
+            ("systems", Json::arr([system])),
+            ("tables", Json::arr([table])),
+        ])
+    }
+
+    fn sys_with_card(base: &str, node: usize, card: &str) -> Json {
+        Json::obj(vec![
+            ("base", base.into()),
+            (
+                "devices",
+                Json::obj(vec![(&node.to_string()[..], card.into())]),
+            ),
+        ])
+    }
+
+    #[test]
+    fn collect_docs_reads_results_and_cache_lines() {
+        let result = r#"{"scenario": "s", "systems": ["A"], "tables": []}"#;
+        let cached = format!(
+            r#"{{"schema": "{CACHE_SCHEMA}", "key": "k", "scenario": "s", "spec": "x", "result": {result}}}"#
+        );
+        let text = format!("{result}\n{cached}\n\nnot json\n");
+        let (docs, skipped) = collect_docs(&text);
+        assert_eq!(docs.len(), 2);
+        assert_eq!(skipped, 1);
+        assert_eq!(docs[0], docs[1], "cache line must unwrap to the result");
+    }
+
+    #[test]
+    fn profile_labels_are_joinable() {
+        let plain = grid_doc("p", Json::from("B"), &[("cxl-preferred", 1.0, true)]);
+        assert_eq!(profile_label(&plain), "B");
+        let carded = grid_doc("c", sys_with_card("A", 2, "cxl-b"), &[("x", 1.0, true)]);
+        assert_eq!(profile_label(&carded), "A+2:cxl-b");
+    }
+
+    #[test]
+    fn summarize_reports_best_policy_per_profile() {
+        let a = sys_with_card("A", 2, "cxl-a");
+        let c = sys_with_card("C", 2, "cxl-c");
+        let docs = vec![
+            grid_doc(
+                "s0",
+                a.clone(),
+                &[("ldram-preferred", 1.0, true), ("cxl-preferred", 2.0, false)],
+            ),
+            grid_doc(
+                "s1",
+                a.clone(),
+                &[("ldram-preferred", 1.5, true), ("cxl-preferred", 3.0, false)],
+            ),
+            grid_doc("s2", a, &[("ldram-preferred", 4.0, false), ("cxl-preferred", 3.0, true)]),
+            grid_doc("s3", c, &[("ldram-preferred", 9.0, false), ("cxl-preferred", 5.0, true)]),
+            // A non-grid document must be counted but not aggregated.
+            Json::obj(vec![("scenario", "other".into()), ("tables", Json::arr([]))]),
+        ];
+        let report = summarize_docs(&docs, 0);
+        let best = report
+            .tables
+            .iter()
+            .find(|t| t.title.contains("best policy per device profile"))
+            .expect("best-policy table");
+        assert_eq!(best.rows.len(), 2, "one row per device profile");
+        let row_a = best.rows.iter().find(|r| r[0] == "A+2:cxl-a").unwrap();
+        assert_eq!(row_a[1], "3");
+        assert_eq!(row_a[2], "ldram-preferred");
+        assert_eq!(row_a[3], "2");
+        let row_c = best.rows.iter().find(|r| r[0] == "C+2:cxl-c").unwrap();
+        assert_eq!(row_c[2], "cxl-preferred");
+        assert_eq!(row_c[4], "100.0%");
+        // Matrix: profile column + the two policies in canonical order.
+        let matrix = report
+            .tables
+            .iter()
+            .find(|t| t.title.contains("win matrix"))
+            .unwrap();
+        assert_eq!(matrix.headers, vec!["profile", "ldram-preferred", "cxl-preferred"]);
+        // Overview counts the non-grid line.
+        let overview = &report.tables[0];
+        assert!(overview.rows.iter().any(|r| r[0] == "other result documents" && r[1] == "1"));
+    }
+
+    #[test]
+    fn oli_gains_compare_to_best_static() {
+        // OLI beats the best static (2.0) by 25% on one grid; the OLI
+        // row must not count as "static" in the baseline.
+        let docs = vec![grid_doc(
+            "s",
+            Json::from("A"),
+            &[
+                ("ldram-preferred", 2.0, false),
+                ("interleave-ldram-cxl", 3.0, false),
+                (OLI_ROW, 1.5, true),
+            ],
+        )];
+        let report = summarize_docs(&docs, 0);
+        let oli = report
+            .tables
+            .iter()
+            .find(|t| t.title.contains("OLI(search) vs best static"))
+            .expect("OLI table");
+        assert_eq!(oli.rows.len(), 1);
+        assert_eq!(oli.rows[0][1], "1");
+        assert_eq!(oli.rows[0][2], "25.0");
+        assert_eq!(oli.rows[0][4], "1");
+        // The OLI row sorts last in the quantile table.
+        let quant = report
+            .tables
+            .iter()
+            .find(|t| t.title.contains("quantiles per policy"))
+            .unwrap();
+        assert_eq!(quant.rows.last().unwrap()[0], OLI_ROW);
+    }
+
+    #[test]
+    fn summarize_text_rejects_garbage() {
+        assert!(summarize_text("").is_err());
+        assert!(summarize_text("not json at all\n").is_err());
+    }
+}

@@ -1,0 +1,139 @@
+//! Cross-process fleet sharding: deterministic assignment of expanded
+//! scenario specs to one of N cooperating runner processes.
+//!
+//! Scheme (pinned by the tests below and `rust/tests/scenario.rs`):
+//! **input-index modulo**. Expansion is deterministic (same
+//! file/seed/count ⇒ the same spec list in the same order), and shard
+//! `k` of `n` — CLI `--shard k/n`, `k` 1-based — takes exactly the
+//! specs whose 0-based position `i` in that list satisfies
+//! `i % n == k - 1`.
+//!
+//! Index modulo was chosen over canonical-hash modulo deliberately:
+//! shards stay balanced to within one spec no matter how similar the
+//! specs are (hash modulo can skew small fleets badly), the mapping is
+//! independent of the hash function (re-keying the cache can never
+//! re-shard a fleet), and duplicates spread round-robin instead of
+//! piling onto one shard. The cost is that assignment is positional —
+//! every shard must be fed the *same* expanded list. That is the
+//! intended workflow: `scenario expand` once, share the JSONL (or the
+//! template file plus identical `--seed/--count`), and point every
+//! process at the same `--cache-dir`; the shards rendezvous in the
+//! shared store, and a coordinator re-run of the full list is then pure
+//! cache hits, emitting the same bytes a single-process run would.
+
+use std::fmt;
+
+use anyhow::{anyhow, bail, Result};
+
+/// One shard of an N-way split: `index` is 1-based, `1 <= index <= count`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Shard {
+    pub index: usize,
+    pub count: usize,
+}
+
+impl Shard {
+    /// The trivial 1/1 shard (selects everything).
+    pub fn whole() -> Self {
+        Shard { index: 1, count: 1 }
+    }
+
+    /// Parse the CLI form `K/N` (e.g. `--shard 2/4`).
+    pub fn parse(s: &str) -> Result<Shard> {
+        let (k, n) = s
+            .split_once('/')
+            .ok_or_else(|| anyhow!("--shard wants K/N (e.g. 1/4), got '{s}'"))?;
+        let index: usize = k
+            .trim()
+            .parse()
+            .map_err(|_| anyhow!("--shard '{s}': K is not an integer"))?;
+        let count: usize = n
+            .trim()
+            .parse()
+            .map_err(|_| anyhow!("--shard '{s}': N is not an integer"))?;
+        if count == 0 {
+            bail!("--shard '{s}': N must be >= 1");
+        }
+        if index == 0 || index > count {
+            bail!("--shard '{s}': K must be in 1..=N");
+        }
+        Ok(Shard { index, count })
+    }
+
+    /// Whether the item at 0-based input position `i` belongs to this
+    /// shard: `i % count == index - 1`.
+    pub fn selects(&self, i: usize) -> bool {
+        i % self.count == self.index - 1
+    }
+
+    /// Filter a list down to this shard's slice, preserving input order.
+    pub fn filter<T>(&self, items: Vec<T>) -> Vec<T> {
+        items
+            .into_iter()
+            .enumerate()
+            .filter(|(i, _)| self.selects(*i))
+            .map(|(_, x)| x)
+            .collect()
+    }
+}
+
+impl fmt::Display for Shard {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}/{}", self.index, self.count)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_k_of_n() {
+        assert_eq!(Shard::parse("1/1").unwrap(), Shard::whole());
+        assert_eq!(Shard::parse("2/4").unwrap(), Shard { index: 2, count: 4 });
+        assert_eq!(Shard::parse(" 3 / 3 ").unwrap().to_string(), "3/3");
+    }
+
+    #[test]
+    fn parse_rejects_bad_forms() {
+        for bad in ["", "2", "a/b", "0/4", "5/4", "1/0", "-1/4", "1/-4"] {
+            assert!(Shard::parse(bad).is_err(), "'{bad}' should not parse");
+        }
+    }
+
+    /// Pins the assignment scheme: 0-based index modulo N, shard K
+    /// (1-based) takes `i % N == K - 1`. Every index lands in exactly
+    /// one shard, shards are balanced to within one item, and the
+    /// concatenation-in-index-order of all shards is the input.
+    #[test]
+    fn shards_partition_the_input_by_index_modulo() {
+        let items: Vec<usize> = (0..23).collect();
+        for count in 1..=5 {
+            let mut seen = vec![0u32; items.len()];
+            let mut sizes = Vec::new();
+            for index in 1..=count {
+                let sh = Shard { index, count };
+                let part = sh.filter(items.clone());
+                sizes.push(part.len());
+                let mut prev = None;
+                for &x in &part {
+                    assert!(sh.selects(x), "item {x} not selected by {sh}");
+                    assert_eq!(x % count, index - 1, "scheme drifted for {sh}");
+                    seen[x] += 1;
+                    // Order within a shard is input order.
+                    assert!(prev.map_or(true, |p| p < x));
+                    prev = Some(x);
+                }
+            }
+            assert!(seen.iter().all(|&n| n == 1), "partition broken at N={count}");
+            let (lo, hi) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(hi - lo <= 1, "unbalanced split at N={count}: {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn whole_shard_is_identity() {
+        let items = vec!["a", "b", "c"];
+        assert_eq!(Shard::whole().filter(items.clone()), items);
+    }
+}

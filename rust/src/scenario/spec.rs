@@ -897,7 +897,9 @@ impl ScenarioSpec {
     /// The cache identity pair `(key, canonical serialization)` — the
     /// single authority for the key scheme, serializing once. The key
     /// indexes the store; the canonical string is stored alongside and
-    /// verified on every hit.
+    /// verified on every hit. The batch runner reuses the same pair to
+    /// deduplicate identical specs within one batch (`scenario::batch`),
+    /// so "same cache entry" and "same batch slot" can never disagree.
     pub fn cache_identity(&self) -> (String, String) {
         let canon = self.canonical_string();
         let key = crate::util::hash::hex16(crate::util::hash::hash_str(&canon));

@@ -1,10 +1,11 @@
 //! Hand-rolled utility substrates (no external crates available offline):
 //! PRNG, statistics, table rendering, JSON, CLI parsing, content hashing,
-//! and a bench timer.
+//! advisory file locking, and a bench timer.
 
 pub mod cli;
 pub mod hash;
 pub mod json;
+pub mod lock;
 pub mod par;
 pub mod rng;
 pub mod stats;

@@ -14,6 +14,7 @@ use std::collections::BTreeSet;
 use std::path::PathBuf;
 
 use cxlmem::scenario::{evaluate, expand, run_batch, run_batch_cached, ResultCache, ScenarioSpec};
+use cxlmem::scenario::{summarize_text, Shard};
 use cxlmem::util::json::{parse_jsonl, to_jsonl, Json};
 use cxlmem::{exp, perf};
 
@@ -158,4 +159,103 @@ fn fig16_grid_parallelism_is_bit_identical() {
     let par = exp::run("fig16").unwrap();
     perf::set_jobs(1);
     assert_eq!(seq.tables[0].rows, par.tables[0].rows);
+}
+
+fn fleet_specs(seed: u64, count: usize) -> Vec<ScenarioSpec> {
+    let text = std::fs::read_to_string(scenarios_dir().join("fleet.json")).unwrap();
+    let doc = Json::parse(&text).unwrap();
+    expand(&doc, Some(seed), Some(count))
+        .unwrap()
+        .iter()
+        .map(|d| ScenarioSpec::parse(d).unwrap())
+        .collect()
+}
+
+/// The ISSUE 4 tentpole end-to-end, in-process: two `--shard`-style
+/// slices of one expanded fleet, evaluated through *separate cache
+/// handles* on one store directory, rendezvous on disk — `reload()`
+/// surfaces the sibling shard's entries, a coordinator re-run of the
+/// full list is pure cache hits, and its JSONL is byte-identical to a
+/// single-process run. The two-process version of this check is `make
+/// shard-smoke`.
+#[test]
+fn sharded_fleet_rendezvous_in_shared_cache() {
+    let specs = fleet_specs(13, 5);
+    let dir = std::env::temp_dir().join(format!("cxlmem-shard-cache-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // Index-modulo split (the pinned scheme): disjoint, order-keeping,
+    // balanced to within one spec.
+    let s1 = Shard::parse("1/2").unwrap().filter(specs.clone());
+    let s2 = Shard::parse("2/2").unwrap().filter(specs.clone());
+    assert_eq!(s1.len(), 3);
+    assert_eq!(s2.len(), 2);
+
+    let mut h1 = ResultCache::open(&dir).unwrap();
+    run_batch_cached(&s1, 2, Some(&mut h1)).unwrap();
+    assert_eq!((h1.hits(), h1.misses()), (0, s1.len() as u64));
+    let mut h2 = ResultCache::open(&dir).unwrap();
+    run_batch_cached(&s2, 2, Some(&mut h2)).unwrap();
+    assert_eq!((h2.hits(), h2.misses()), (0, s2.len() as u64), "shards overlap");
+
+    // The first shard's handle picks up its sibling's entries in place.
+    assert_eq!(h1.reload().unwrap(), s2.len());
+
+    // Coordinator re-run: full list, fresh handle — pure hits, and the
+    // merged JSONL is byte-identical to a single-process run.
+    let mut coord = ResultCache::open(&dir).unwrap();
+    let merged = run_batch_cached(&specs, 4, Some(&mut coord)).unwrap();
+    assert_eq!(coord.hits() as usize, specs.len());
+    assert_eq!(coord.misses(), 0, "coordinator re-run must not evaluate");
+    let merged = to_jsonl(merged.into_iter().map(|r| r.doc));
+    let single = to_jsonl(run_batch(&specs, 2).unwrap().into_iter().map(|r| r.doc));
+    assert_eq!(merged, single, "sharded + merged must equal single-process");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `scenario report` over fleet result JSONL: every fleet member lands
+/// in the best-policy-per-device-profile table, and the OLI search row
+/// shows up in the per-policy quantiles (fleets always search).
+#[test]
+fn fleet_report_summarizes_results() {
+    let specs = fleet_specs(21, 3);
+    let results = run_batch(&specs, 2).unwrap();
+    let jsonl = to_jsonl(results.iter().map(|r| r.doc.clone()));
+    let report = summarize_text(&jsonl).unwrap();
+
+    let best = report
+        .tables
+        .iter()
+        .find(|t| t.title.contains("best policy per device profile"))
+        .expect("best-policy table missing");
+    let counted: usize = best.rows.iter().map(|r| r[1].parse::<usize>().unwrap()).sum();
+    assert_eq!(counted, specs.len(), "every fleet member must be counted");
+    for row in &best.rows {
+        let policy = row[2].as_str();
+        assert!(
+            policy == "OLI(search)" || cxlmem::scenario::spec::POLICY_NAMES.contains(&policy),
+            "unknown best policy '{policy}'"
+        );
+    }
+    let quant = report
+        .tables
+        .iter()
+        .find(|t| t.title.contains("quantiles per policy"))
+        .expect("quantile table missing");
+    assert!(quant.rows.iter().any(|r| r[0] == "OLI(search)"));
+    // The report reads a cache store too: run the same fleet through a
+    // cache and summarize the store file directly.
+    let dir = std::env::temp_dir().join(format!("cxlmem-report-cache-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut cache = ResultCache::open(&dir).unwrap();
+    run_batch_cached(&specs, 2, Some(&mut cache)).unwrap();
+    let store = std::fs::read_to_string(cache.store_path()).unwrap();
+    let from_store = summarize_text(&store).unwrap();
+    let best2 = from_store
+        .tables
+        .iter()
+        .find(|t| t.title.contains("best policy per device profile"))
+        .expect("cache-store report missing the best-policy table");
+    assert_eq!(best2.rows, best.rows, "store and JSONL reports must agree");
+    let _ = std::fs::remove_dir_all(&dir);
 }
