@@ -3,12 +3,13 @@
 # `make ci` is the PR gate: release build, tests (including the
 # golden-parity suite), a quick hot-path benchmark pass with schema
 # validation of BENCH_hotpath.json, the scenario engine checks, the
-# result-cache smoke, the two-process shard smoke, and a formatting
-# check. Mirrors .github/workflows/ci.yml.
+# result-cache smoke, the two-process shard smoke, the shared
+# epoch-trace store smoke, and a formatting check. Mirrors
+# .github/workflows/ci.yml.
 
-.PHONY: ci build test bench-smoke bench bench-check fmt-check exp-all scenario-check cache-smoke shard-smoke
+.PHONY: ci build test bench-smoke bench bench-check fmt-check exp-all scenario-check cache-smoke shard-smoke trace-smoke
 
-ci: build test bench-check scenario-check cache-smoke shard-smoke fmt-check
+ci: build test bench-check scenario-check cache-smoke shard-smoke trace-smoke fmt-check
 
 build:
 	cargo build --release
@@ -72,6 +73,12 @@ shard-smoke: build
 	./target/release/cxlmem scenario report /tmp/cxlmem-shard-smoke/coord.jsonl | grep -q "best policy per device profile"
 	./target/release/cxlmem scenario report /tmp/cxlmem-shard-smoke/cache | grep -q "best policy per device profile"
 	rm -rf /tmp/cxlmem-shard-smoke
+
+# Shared epoch-trace store gate: fig16 twice in one process must emit
+# byte-identical reports from a single trace generation per app
+# (counter via TraceStore::stats; the second run is pure Arc replays).
+trace-smoke: build
+	./target/release/cxlmem trace-smoke
 
 # Regenerate every paper figure/table, in parallel.
 exp-all: build

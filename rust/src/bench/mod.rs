@@ -25,15 +25,20 @@
 //! `optimized` (production path, memo cache off for the raw solver), or
 //! `memoized` (production path with the solve cache warm — the sweep
 //! case). `speedup` maps each hot path to reference/optimized median
-//! ratio; three wall-clock ratios ride along: `exp/all` (full
+//! ratio; four wall-clock ratios ride along: `exp/all` (full
 //! 19-experiment suite, sequential reference vs `--jobs`-parallel
-//! optimized), `exp/fig16(policy x placement grid)` (the fig16 tiering
-//! grid at jobs=1 vs `--jobs`), and `scenario/cache(fleet re-run)` (one
-//! seeded fleet evaluated cold vs served warm from the persistent
-//! result cache, measured against the same on-disk store).
+//! optimized), `exp/fig16(shared trace)` (the fig16 grid at jobs=1,
+//! per-cell seed-style trace regeneration vs one shared immutable
+//! snapshot per app replayed by every cell on the SoA page state),
+//! `exp/fig16(policy x placement grid)` (the optimized grid at jobs=1
+//! vs `--jobs`), and `scenario/cache(fleet re-run)` (one seeded fleet
+//! evaluated cold vs served warm from the persistent result cache,
+//! measured against the same on-disk store).
 //! `tiering/epoch_counts(Graph500)` times per-epoch histogram
 //! *production* — seed-style full regeneration vs the incremental copy —
 //! with the (mode-shared) hot-set drift untimed between epochs.
+//! `tiering/promote_batch(SoA)` times a full-pressure promotion batch
+//! through the packed-column state vs the seed's recount-and-sort path.
 //!
 //! [`validate_report_doc`] checks a written `BENCH_hotpath.json` against
 //! this schema (`cxlmem bench --validate FILE`, `make bench-check`).
@@ -108,8 +113,10 @@ fn bencher(opts: &BenchOpts) -> Bencher {
 const SOLVER_NAME: &str = "memsim/solve_traffic(2 streams)";
 const ENGINE_NAME: &str = "engine/run(MG, 2-tier)";
 const TIERING_NAME: &str = "tiering/epoch(PageRank, t08, 65k pages)";
+const PROMOTE_NAME: &str = "tiering/promote_batch(SoA)";
 const EPOCH_COUNTS_NAME: &str = "tiering/epoch_counts(Graph500)";
 const FLEXGEN_NAME: &str = "flexgen/search+throughput";
+const SHARED_TRACE_NAME: &str = "exp/fig16(shared trace)";
 const GRID_NAME: &str = "exp/fig16(policy x placement grid)";
 const SCENARIO_CACHE_NAME: &str = "scenario/cache(fleet re-run)";
 const EXP_ALL_NAME: &str = "exp/all";
@@ -250,6 +257,36 @@ pub fn run_suite(opts: &BenchOpts) -> BenchReport {
         push_modes(&mut hotpaths, rs, &["reference", "optimized"]);
     }
 
+    // --- promotion batch on the SoA page state ---
+    // A full-pressure batch (promote slow pages into a full fast tier,
+    // forcing mass demotion) through the packed-column SoA path —
+    // single-stream victim scan + `select_nth_unstable` — vs the seed's
+    // O(pages) recounts + full victim sort. Each iteration clones a
+    // prebuilt template so both modes pay the identical setup cost.
+    {
+        let pages = if opts.smoke { 16_000 } else { 65_000 };
+        let fast_cap = pages * 2 / 5;
+        let mut template = initial_state(pages, ld, cxl, fast_cap, false);
+        for p in 0..pages {
+            template.last_counts[p] = ((p * 31) % 97) as u32;
+        }
+        // Every second slow page: larger than the (zero) free headroom,
+        // smaller than the victim pool, so select/sort both run.
+        let batch: Vec<usize> = (fast_cap..pages).step_by(2).collect();
+        let mut b = bencher(opts);
+        let mut measure = |b: &mut Bencher, label: String| {
+            b.bench(&label, || {
+                let mut s = template.clone();
+                std::hint::black_box(s.promote_batch(std::hint::black_box(&batch)));
+            });
+        };
+        perf::with_reference(|| measure(&mut b, format!("{PROMOTE_NAME} [reference]")));
+        measure(&mut b, format!("{PROMOTE_NAME} [optimized]"));
+        let rs = b.results();
+        speedups.push((PROMOTE_NAME.to_string(), ratio(&rs[0], &rs[1])));
+        push_modes(&mut hotpaths, rs, &["reference", "optimized"]);
+    }
+
     // --- incremental epoch-trace generation ---
     // A custom paired loop rather than `Bencher`: the hot-set drift
     // between epochs must run *untimed* — it is the application's own
@@ -328,9 +365,7 @@ pub fn run_suite(opts: &BenchOpts) -> BenchReport {
         push_modes(&mut hotpaths, rs, &["reference", "optimized"]);
     }
 
-    // --- fig16 policy×placement grid: sequential vs --jobs-parallel ---
-    // Wall-clock pair (the grid is one experiment, not a microbenchmark):
-    // same optimized cell code both times, only the inner fan-out differs.
+    // --- fig16 grid: shared-trace replay, then sequential vs parallel ---
     {
         let (apps, epochs, fast_gb) = if opts.smoke {
             // Shrunken working set for CI: same grid shape, ~10× cheaper.
@@ -343,6 +378,33 @@ pub fn run_suite(opts: &BenchOpts) -> BenchReport {
             (crate::workloads::tiering_apps::all_apps(), 10, 50)
         };
         let sys16 = topology::system_a();
+
+        // Shared-trace pair: the whole grid at jobs=1, seed semantics
+        // (every cell regenerates its own epoch stream, seed promote
+        // path, reference solver) vs the optimized stack (one immutable
+        // snapshot per app replayed by all 8 of its cells, SoA state).
+        // Same parallelism both sides — this isolates the algorithmic
+        // trajectory; the fan-out ratio is the GRID entry below.
+        perf::set_jobs(1);
+        let t0 = Instant::now();
+        perf::with_reference(|| {
+            std::hint::black_box(exp::tiering_exp::fig16_with(
+                &sys16, &apps, epochs, 7, 64, fast_gb,
+            ));
+        });
+        let ref_s = t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        std::hint::black_box(exp::tiering_exp::fig16_with(&sys16, &apps, epochs, 7, 64, fast_gb));
+        let shared_s = t0.elapsed().as_secs_f64();
+        println!(
+            "{SHARED_TRACE_NAME} [reference]: {ref_s:.2} s, [optimized]: {shared_s:.2} s \
+             (jobs=1)"
+        );
+        speedups.push((SHARED_TRACE_NAME.to_string(), ref_s / shared_s.max(1e-12)));
+
+        // Wall-clock pair (the grid is one experiment, not a
+        // microbenchmark): same optimized cell code both times, only
+        // the inner fan-out differs.
         perf::set_jobs(1);
         let t0 = Instant::now();
         std::hint::black_box(exp::tiering_exp::fig16_with(&sys16, &apps, epochs, 7, 64, fast_gb));
@@ -412,6 +474,10 @@ pub fn run_suite(opts: &BenchOpts) -> BenchReport {
     println!("exp/all [reference, jobs=1]: {exp_all_reference_s:.2} s");
 
     System::clear_solver_cache();
+    // Same methodology for the trace store: the fig16 block above warmed
+    // the exact keys exp/all's fig16 uses, and a standalone `cxlmem exp
+    // all` process would pay those generations.
+    crate::workloads::trace::global().clear();
     let t0 = Instant::now();
     exp::run_all(exp::ALL, opts.jobs).expect("exp all (optimized) failed");
     let exp_all_optimized_s = t0.elapsed().as_secs_f64();

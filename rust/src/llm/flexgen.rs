@@ -81,6 +81,42 @@ impl InferCfg {
     }
 }
 
+/// Largest batch the scan considers (the paper's policies top out far
+/// below this).
+const MAX_BATCH: usize = 512;
+
+/// Largest `b` in `1..=max` with `feasible(b)`, or 1 when none is.
+///
+/// The CPU footprint is non-decreasing in the batch (KV, its CPU spill
+/// and the activations all grow with `b`), so feasibility is monotone:
+/// an exponential probe brackets the boundary and a binary search pins
+/// it — O(log max) feasibility evaluations instead of the former linear
+/// `1..=512` scan, with the identical result (pinned by test against
+/// the scan, which [`crate::perf::with_reference`] keeps as the
+/// reference path).
+fn max_feasible_batch(feasible: &dyn Fn(usize) -> bool, max: usize) -> usize {
+    if !feasible(1) {
+        return 1;
+    }
+    let mut lo = 1usize; // invariant: feasible(lo)
+    let mut hi = 2usize;
+    while hi <= max && feasible(hi) {
+        lo = hi;
+        hi <<= 1;
+    }
+    // invariant: hi > max, or !feasible(hi)
+    let mut hi = hi.min(max + 1);
+    while hi - lo > 1 {
+        let mid = lo + (hi - lo) / 2;
+        if feasible(mid) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
 /// Capacity-driven policy search: grow the batch until the CPU footprint
 /// hits the tier capacities; pin weights to the fastest tiers, spill KV
 /// downward; give the GPU's leftover memory to the hottest KV slice.
@@ -91,21 +127,29 @@ pub fn search_policy(gpu: &Gpu, cfg: &InferCfg, tiers: &[Tier]) -> OffloadPolicy
     let layer_w = weights / cfg.model.layers as f64;
     let gpu_free = (gpu.mem_bytes as f64 * 0.9 - 2.5 * layer_w - 2e9).max(0.0);
 
-    // Max batch: weights + (1-kv_gpu_frac)·KV + activations ≤ cpu_cap.
-    // Solve by scan (kv_gpu_frac depends on batch).
-    let mut best_batch = 1usize;
-    for b in 1..=512 {
+    // Max batch: weights + (1-kv_gpu_frac)·KV + activations ≤ cpu_cap
+    // (kv_gpu_frac depends on batch). The footprint is monotone in the
+    // batch, so the boundary comes from exponential probe + binary
+    // search; reference mode keeps the seed's linear scan.
+    let feasible = |b: usize| {
         let kv = cfg.kv_total(b);
         let kv_gpu = gpu_free.min(kv);
         let act = cfg.model.act_bytes_per_token() as f64 * b as f64 * 64.0;
-        let need = weights + (kv - kv_gpu) + act;
-        if need <= cpu_cap {
-            best_batch = b;
-        } else {
-            break;
+        weights + (kv - kv_gpu) + act <= cpu_cap
+    };
+    let batch = if crate::perf::reference_enabled() {
+        let mut best_batch = 1usize;
+        for b in 1..=MAX_BATCH {
+            if feasible(b) {
+                best_batch = b;
+            } else {
+                break;
+            }
         }
-    }
-    let batch = best_batch;
+        best_batch
+    } else {
+        max_feasible_batch(&feasible, MAX_BATCH)
+    };
     let kv = cfg.kv_total(batch);
     let kv_gpu = gpu_free.min(kv);
     let kv_cpu = kv - kv_gpu;
@@ -295,6 +339,46 @@ mod tests {
         assert!((8..=18).contains(&small.batch), "batch {}", small.batch);
         assert!((30..=50).contains(&med.batch), "batch {}", med.batch);
         assert!((45..=70).contains(&big.batch), "batch {}", big.batch);
+    }
+
+    #[test]
+    fn batch_search_matches_linear_scan() {
+        // The exponential-probe + binary-search batch must equal the
+        // seed's linear scan for every model × capacity shape: below
+        // batch-1 feasibility, mid-range boundaries, and the MAX_BATCH
+        // cap (everything feasible).
+        let sys = system_a();
+        let gpu = Gpu::a10();
+        for model in [llama_65b(), opt_66b()] {
+            let cfg = InferCfg::paper(model);
+            let shapes: Vec<Vec<(MemKind, f64)>> = vec![
+                vec![(MemKind::Ldram, 8.0 * GB)], // weights alone overflow
+                vec![(MemKind::Ldram, 64.0 * GB)],
+                vec![(MemKind::Ldram, 150.0 * GB)],
+                vec![(MemKind::Ldram, 196.0 * GB)],
+                vec![(MemKind::Ldram, 196.0 * GB), (MemKind::Cxl, 128.0 * GB)],
+                vec![(MemKind::Ldram, 196.0 * GB), (MemKind::Nvme, 512.0 * GB)],
+                vec![
+                    (MemKind::Ldram, 196.0 * GB),
+                    (MemKind::Rdram, 196.0 * GB),
+                    (MemKind::Cxl, 128.0 * GB),
+                ],
+                vec![(MemKind::Ldram, 100_000.0 * GB)], // all 512 feasible
+            ];
+            for caps in shapes {
+                let tiers = tiers_of(&sys, &caps);
+                let opt = search_policy(&gpu, &cfg, &tiers);
+                let reference =
+                    crate::perf::with_reference(|| search_policy(&gpu, &cfg, &tiers));
+                assert_eq!(opt.batch, reference.batch, "{caps:?}");
+                assert_eq!(
+                    opt.footprint.to_bits(),
+                    reference.footprint.to_bits(),
+                    "{caps:?}"
+                );
+                assert_eq!(opt.weights, reference.weights, "{caps:?}");
+            }
+        }
     }
 
     #[test]

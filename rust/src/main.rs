@@ -10,6 +10,7 @@
 //! cxlmem scenario report <results.jsonl|cache dir>            fleet summaries from result JSONL
 //! cxlmem bench [--smoke|--quick] [--jobs N] [--out FILE]      hot-path benchmarks → BENCH_hotpath.json
 //! cxlmem bench --validate FILE                                schema-check a BENCH_hotpath.json
+//! cxlmem trace-smoke                                          shared epoch-trace store gate (make trace-smoke)
 //! cxlmem train [--steps N] [--seed S]                         E2E training through the PJRT artifact
 //! cxlmem serve [--requests N]                                 FlexGen-style serving demo
 //! cxlmem info                                                 platform + artifact status
@@ -28,6 +29,7 @@ fn main() -> Result<()> {
         "exp" => cmd_exp(&args),
         "scenario" => cmd_scenario(&args),
         "bench" => cmd_bench(&args),
+        "trace-smoke" => cmd_trace_smoke(),
         "train" => cxlmem::exp::drivers::train(&args),
         "serve" => cxlmem::exp::drivers::serve(&args),
         "info" => cmd_info(),
@@ -383,6 +385,53 @@ fn cmd_bench(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The `make trace-smoke` gate: fig16 twice in one process must emit
+/// byte-identical reports while the shared epoch-trace store generates
+/// each app's trace exactly once (the second run is pure `Arc` replays).
+fn cmd_trace_smoke() -> Result<()> {
+    use anyhow::bail;
+    let store = cxlmem::workloads::trace::global();
+    store.clear();
+    cxlmem::perf::set_jobs(cxlmem::perf::default_jobs());
+    let apps = cxlmem::workloads::tiering_apps::all_apps().len() as u64;
+    let first = cxlmem::exp::run("fig16")?.render(Format::Text);
+    let after_first = store.stats();
+    let second = cxlmem::exp::run("fig16")?.render(Format::Text);
+    let stats = store.stats();
+    if first != second {
+        bail!("fig16 reports differ between two in-process runs");
+    }
+    if after_first.generated != apps {
+        bail!(
+            "expected one trace generation per app ({apps}) after run 1, saw {}",
+            after_first.generated
+        );
+    }
+    if stats.generated != after_first.generated {
+        bail!(
+            "second run regenerated traces ({} -> {})",
+            after_first.generated,
+            stats.generated
+        );
+    }
+    if stats.requests < 2 * after_first.requests || stats.requests < 2 * apps {
+        bail!(
+            "second run did not request the store (requests {} -> {})",
+            after_first.requests,
+            stats.requests
+        );
+    }
+    println!(
+        "trace-smoke: ok — byte-identical fig16 reports; {} trace generation(s) served {} \
+         request(s), {} bytes held in {} entr(ies)",
+        stats.generated,
+        stats.requests,
+        stats.bytes,
+        stats.entries
+    );
+    Ok(())
+}
+
 fn cmd_info() -> Result<()> {
     match cxlmem::runtime::Runtime::discover() {
         Ok(rt) => {
@@ -411,6 +460,7 @@ fn print_help() {
          \x20 cxlmem exp <id|all> [--csv|--json] [--out FILE] [--jobs N]\n\
          \x20 cxlmem scenario validate|expand|run|bench ... (see `cxlmem scenario help`)\n\
          \x20 cxlmem bench [--smoke|--quick] [--jobs N] [--out FILE] [--validate FILE]\n\
+         \x20 cxlmem trace-smoke\n\
          \x20 cxlmem train [--steps N] [--seed S] [--log-every K]\n\
          \x20 cxlmem serve [--requests N]\n\
          \x20 cxlmem info\n\

@@ -160,6 +160,12 @@ pub fn run_batch_cached(
             eprintln!("warning: scenario result cache not persisted: {e}");
         }
     }
+    // Tiering fleet members sharing a trace key reused one immutable
+    // snapshot from the process-global epoch-trace store during this
+    // batch; with the batch done nobody holds those Arcs anymore, so
+    // release idle snapshots down to the store's watermark (the hard
+    // budget bound lives in `TraceStore::get`'s insert-time eviction).
+    crate::workloads::trace::global().trim();
     if let Some(e) = first_err {
         return Err(e);
     }

@@ -99,6 +99,13 @@ pub fn evaluate(spec: &ScenarioSpec) -> Result<Report> {
                 .iter()
                 .map(|a| tiering_app(a))
                 .collect::<Result<Vec<_>>>()?;
+            // Trace sharing happens inside fig16_with: it fetches one
+            // immutable snapshot per app from the process-global
+            // `workloads::trace` store, so every policy×placement cell
+            // of this grid — and any sibling fleet member in the same
+            // batch with an equal (app, pages, epochs, drift, seed)
+            // key — replays one Arc'd snapshot, generated at most once
+            // per process.
             exp::tiering_exp::fig16_with(sys, &models, *epochs, *seed, *threads, *fast_gb)
         }
         W::TieringHpc {

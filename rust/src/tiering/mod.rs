@@ -19,6 +19,11 @@
 //! Hot-path structure: the per-epoch work is O(Δ) in the number of
 //! migrations plus a single O(pages) pass per epoch to ingest the new
 //! access histogram —
+//! - the page placement state is structure-of-arrays: one packed `u32`
+//!   column carries each page's node id plus a "pinned" bit (set for
+//!   unmigratable pages), so the victim scan in [`PageState::promote_batch`]
+//!   and the candidate filter in [`sample_hint_faults`] stream a single
+//!   narrow column linearly instead of two pointer-width ones;
 //! - `fast_used` is an incrementally-maintained counter (was an O(pages)
 //!   recount per promotion batch);
 //! - per-(object, node) traffic aggregates are built once per epoch and
@@ -26,7 +31,11 @@
 //!   [`epoch_app_time`]);
 //! - victim selection uses `select_nth_unstable` (was a full sort);
 //! - hint-fault sampling uses geometric skip sampling (one RNG draw per
-//!   *fault* instead of one per candidate page).
+//!   *fault* instead of one per candidate page);
+//! - [`simulate_trace`] replays a shared immutable
+//!   [`crate::workloads::trace::EpochTrace`] snapshot, eliminating the
+//!   per-epoch histogram copy the producer path pays (and, through the
+//!   trace store, the per-cell regeneration an entire grid pays).
 //!
 //! Under [`crate::perf::with_reference`] the seed's O(pages)
 //! implementations run instead; they make identical decisions (see the
@@ -43,6 +52,7 @@ pub mod stats;
 use crate::engine::{self, ObjectTraffic, RunConfig};
 use crate::memsim::{NodeId, Pattern, System};
 use crate::util::rng::Rng;
+use crate::workloads::trace::EpochTrace;
 
 pub use policies::{AutoNuma, NoBalance, Tiering08, TieringPolicy, Tpp};
 pub use stats::VmStats;
@@ -54,6 +64,12 @@ pub const HINT_FAULT_NS: f64 = 1_500.0;
 pub const MIGRATE_REGION_NS: f64 = 1_250_000.0;
 /// 4 KB pages per 2 MB region (for vmstat-style counters).
 pub const SMALL_PER_REGION: u64 = 512;
+
+/// Packed-column "pinned" bit: set when the kernel may not migrate the
+/// page (explicit interleave/membind policies).
+const PIN: u32 = 1 << 31;
+/// Packed-column node mask (low 31 bits).
+const NODE_MASK: u32 = PIN - 1;
 
 /// Per-epoch ingested access histogram + per-(object, node) aggregates,
 /// kept consistent across migrations so epoch app time is O(objects ×
@@ -72,22 +88,30 @@ struct EpochAgg {
     agg: Vec<u64>,
 }
 
-/// Page-granular placement state shared with the policies.
+/// Page-granular placement state shared with the policies, held as
+/// structure-of-arrays.
 ///
-/// The `node`/`migratable`/`object` maps stay public for construction
-/// and inspection, but *placement changes must go through
-/// [`PageState::promote`] / [`PageState::promote_batch`]* (and object
-/// remapping through [`PageState::set_objects`]) so the incremental
-/// `fast_used` counter and epoch aggregates stay consistent.
+/// Columns (all `pages` long):
+/// - `page` (private, packed `u32`): node id in the low bits, [`PIN`] set
+///   for unmigratable pages. The victim scan (`page[p] == fast_node`,
+///   one compare for "on the fast tier *and* migratable") and the
+///   hint-fault candidate filter stream this single column.
+/// - `object` (`u32`): object index per page (multi-object HPC runs).
+/// - `last_counts` (`u32`, public): last epoch's access count per page —
+///   the policies' LRU/recency signal ("heat").
+///
+/// Placement is inspected through [`PageState::node_of`] /
+/// [`PageState::migratable`] / [`PageState::on_fast`]; *placement
+/// changes must go through [`PageState::promote`] /
+/// [`PageState::promote_batch`]* (and object remapping through
+/// [`PageState::set_objects`]) so the incremental `fast_used` counter
+/// and epoch aggregates stay consistent.
 #[derive(Clone, Debug)]
 pub struct PageState {
-    /// Current node of each page.
-    pub node: Vec<NodeId>,
-    /// Whether the kernel may migrate each page (false under explicit
-    /// interleave/membind policies).
-    pub migratable: Vec<bool>,
-    /// Object index of each page (for multi-object HPC runs).
-    pub object: Vec<u32>,
+    /// Packed placement column: `node | PIN?` per page.
+    page: Vec<u32>,
+    /// Object index of each page.
+    object: Vec<u32>,
     /// Fast tier node and its capacity in pages.
     pub fast_node: NodeId,
     pub fast_capacity: usize,
@@ -118,12 +142,27 @@ impl PageState {
     ) -> PageState {
         assert_eq!(node.len(), migratable.len());
         assert_eq!(node.len(), object.len());
-        let fast_used = node.iter().filter(|&&n| n == fast_node).count();
+        assert!(fast_node < PIN as usize && slow_node < PIN as usize);
+        let page: Vec<u32> = node
+            .iter()
+            .zip(&migratable)
+            .map(|(&n, &m)| {
+                assert!(n < PIN as usize, "node id {n} overflows the packed column");
+                if m {
+                    n as u32
+                } else {
+                    n as u32 | PIN
+                }
+            })
+            .collect();
+        let fast_used = page
+            .iter()
+            .filter(|&&v| v & NODE_MASK == fast_node as u32)
+            .count();
         let n_obj = object.iter().map(|&o| o as usize + 1).max().unwrap_or(1);
-        let pages = node.len();
+        let pages = page.len();
         PageState {
-            node,
-            migratable,
+            page,
             object,
             fast_node,
             fast_capacity,
@@ -133,6 +172,33 @@ impl PageState {
             n_obj,
             epoch: None,
         }
+    }
+
+    /// Number of pages.
+    pub fn len(&self) -> usize {
+        self.page.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.page.is_empty()
+    }
+
+    /// Current node of `p`.
+    #[inline]
+    pub fn node_of(&self, p: usize) -> NodeId {
+        (self.page[p] & NODE_MASK) as usize
+    }
+
+    /// Whether the kernel may migrate `p`.
+    #[inline]
+    pub fn migratable(&self, p: usize) -> bool {
+        self.page[p] & PIN == 0
+    }
+
+    /// Whether `p` currently sits on the fast tier.
+    #[inline]
+    pub fn on_fast(&self, p: usize) -> bool {
+        self.page[p] & NODE_MASK == self.fast_node as u32
     }
 
     /// Pages currently on the fast tier — O(1), maintained incrementally.
@@ -148,16 +214,17 @@ impl PageState {
     /// Replace the page→object map (multi-object HPC runs), recomputing
     /// the object count once.
     pub fn set_objects(&mut self, object: Vec<u32>) {
-        assert_eq!(object.len(), self.node.len());
+        assert_eq!(object.len(), self.page.len());
         self.n_obj = object.iter().map(|&o| o as usize + 1).max().unwrap_or(1);
         self.object = object;
         self.epoch = None;
     }
 
-    /// Ingest this epoch's access histogram: one O(pages) pass that makes
-    /// every later placement change an O(1) aggregate update.
+    /// Ingest this epoch's access histogram: one O(pages) pass over the
+    /// narrow columns that makes every later placement change an O(1)
+    /// aggregate update.
     pub(crate) fn set_epoch_counts(&mut self, counts: &[u32], nn: usize) {
-        debug_assert_eq!(counts.len(), self.node.len());
+        debug_assert_eq!(counts.len(), self.page.len());
         let n_obj = self.n_obj;
         let epoch = self.epoch.get_or_insert_with(EpochAgg::default);
         epoch.nn = nn;
@@ -167,13 +234,16 @@ impl PageState {
         epoch.agg.clear();
         epoch.agg.resize(n_obj * nn, 0);
         for p in 0..counts.len() {
-            epoch.agg[self.object[p] as usize * nn + self.node[p]] += counts[p] as u64;
+            epoch.agg[self.object[p] as usize * nn + (self.page[p] & NODE_MASK) as usize] +=
+                counts[p] as u64;
         }
     }
 
     /// Move one page, maintaining `fast_used` and the epoch aggregates.
+    /// The pinned bit travels with the page.
     fn move_page(&mut self, p: usize, to: NodeId) {
-        let from = self.node[p];
+        let v = self.page[p];
+        let from = (v & NODE_MASK) as usize;
         if from == to {
             return;
         }
@@ -191,7 +261,7 @@ impl PageState {
                 epoch.agg[row + to] += c;
             }
         }
-        self.node[p] = to;
+        self.page[p] = (v & PIN) | to as u32;
     }
 
     /// Promote `page` to the fast tier, demoting the coldest fast page if
@@ -205,17 +275,22 @@ impl PageState {
     /// fast-tier pages as needed. Returns (promoted_regions,
     /// demoted_regions).
     ///
-    /// Victim selection is O(pages) via `select_nth_unstable` with the
-    /// deterministic key `(last_counts, page)` — the same victims the
-    /// seed's stable full sort picked, without the O(n log n).
+    /// The victim scan is a single linear pass over the packed column
+    /// (`page[p] == fast_node` ⇔ fast-tier *and* migratable); selection
+    /// is O(pages) via `select_nth_unstable` with the deterministic key
+    /// `(last_counts, page)` — the same victims the seed's stable full
+    /// sort picked, without the O(n log n).
     pub fn promote_batch(&mut self, pages: &[usize]) -> (u64, u64) {
         if crate::perf::reference_enabled() {
             return self.promote_batch_reference(pages);
         }
+        // Migratable fast-tier cells are exactly the value `fast` (pin
+        // bit clear), so the victim scan below is a one-compare stream.
+        let fast = self.fast_node as u32;
         let want: Vec<usize> = pages
             .iter()
             .copied()
-            .filter(|&p| self.node[p] != self.fast_node)
+            .filter(|&p| self.page[p] & NODE_MASK != fast)
             .collect();
         if want.is_empty() {
             return (0, 0);
@@ -224,8 +299,12 @@ impl PageState {
         let need_demote = want.len().saturating_sub(free);
         let mut demoted = 0u64;
         if need_demote > 0 {
-            let mut victims: Vec<usize> = (0..self.node.len())
-                .filter(|&p| self.node[p] == self.fast_node && self.migratable[p])
+            let mut victims: Vec<usize> = self
+                .page
+                .iter()
+                .enumerate()
+                .filter(|&(_, &v)| v == fast)
+                .map(|(p, _)| p)
                 .collect();
             if need_demote < victims.len() {
                 victims
@@ -253,42 +332,39 @@ impl PageState {
     fn promote_batch_reference(&mut self, pages: &[usize]) -> (u64, u64) {
         // Reference mode bypasses the incremental bookkeeping entirely.
         self.epoch = None;
+        let fast = self.fast_node as u32;
         let recount =
-            |node: &[NodeId], fast: NodeId| node.iter().filter(|&&n| n == fast).count();
+            |page: &[u32], fast: u32| page.iter().filter(|&&v| v & NODE_MASK == fast).count();
         let want: Vec<usize> = pages
             .iter()
             .copied()
-            .filter(|&p| self.node[p] != self.fast_node)
+            .filter(|&p| self.page[p] & NODE_MASK != fast)
             .collect();
         if want.is_empty() {
             return (0, 0);
         }
-        let free = self
-            .fast_capacity
-            .saturating_sub(recount(&self.node, self.fast_node));
+        let free = self.fast_capacity.saturating_sub(recount(&self.page, fast));
         let need_demote = want.len().saturating_sub(free);
         let mut demoted = 0u64;
         if need_demote > 0 {
-            let mut victims: Vec<usize> = (0..self.node.len())
-                .filter(|&p| self.node[p] == self.fast_node && self.migratable[p])
+            let mut victims: Vec<usize> = (0..self.page.len())
+                .filter(|&p| self.page[p] == fast)
                 .collect();
             victims.sort_by_key(|&p| self.last_counts[p]);
             victims.truncate(need_demote);
-            for v in &victims {
-                self.node[*v] = self.slow_node;
+            for &v in &victims {
+                self.page[v] = (self.page[v] & PIN) | self.slow_node as u32;
             }
             demoted = victims.len() as u64;
         }
-        let capacity_now = self
-            .fast_capacity
-            .saturating_sub(recount(&self.node, self.fast_node));
+        let capacity_now = self.fast_capacity.saturating_sub(recount(&self.page, fast));
         let mut promoted = 0u64;
         for &p in want.iter().take(capacity_now) {
-            self.node[p] = self.fast_node;
+            self.page[p] = (self.page[p] & PIN) | fast;
             promoted += 1;
         }
         // Keep the incremental counter coherent for later optimized use.
-        self.fast_used = recount(&self.node, self.fast_node);
+        self.fast_used = recount(&self.page, fast);
         (promoted, demoted)
     }
 }
@@ -330,6 +406,8 @@ pub struct SimConfig {
 /// Tiering-0.8's 2% scan rate this is ~50× fewer RNG calls (and zero
 /// calls at TPP's scan rate of 1.0). Both the optimized and reference
 /// tiering paths share this sampler, so their decisions are identical.
+/// The candidate filter reads the packed placement column: one `u32`
+/// stream answers "migratable?" and "on the fast tier?" at once.
 pub fn sample_hint_faults(
     state: &PageState,
     counts: &[u32],
@@ -344,11 +422,15 @@ pub fn sample_hint_faults(
     let full = scan_frac >= 1.0;
     let ln_q = if full { 0.0 } else { (1.0 - scan_frac).ln() };
     let mut skip = if full { 0 } else { geometric_skip(rng, ln_q) };
+    let fast_key = state.fast_node as u32;
     for p in 0..counts.len() {
-        if counts[p] == 0 || !state.migratable[p] {
+        let v = state.page[p];
+        if counts[p] == 0 || v & PIN != 0 {
             continue;
         }
-        if slow_tier_only && state.node[p] == state.fast_node {
+        // `v == fast_key` ⇔ migratable (PIN clear, checked above) and on
+        // the fast node.
+        if slow_tier_only && v == fast_key {
             continue;
         }
         if full {
@@ -377,9 +459,10 @@ fn geometric_skip(rng: &mut Rng, ln_q: f64) -> usize {
 
 /// Execute one epoch's application time given current placement.
 ///
-/// When the state carries this epoch's aggregates (set by [`simulate`]),
-/// this is O(objects × nodes); otherwise (standalone calls, reference
-/// mode) it falls back to a full O(pages) aggregation.
+/// When the state carries this epoch's aggregates (set by [`simulate`] /
+/// [`simulate_trace`]), this is O(objects × nodes); otherwise
+/// (standalone calls, reference mode) it falls back to a full O(pages)
+/// aggregation.
 pub fn epoch_app_time(
     sys: &System,
     cfg: &SimConfig,
@@ -406,7 +489,8 @@ pub fn epoch_app_time(
             _ => {
                 let mut agg = vec![0u64; state.n_obj * nn];
                 for p in 0..wl.counts.len() {
-                    agg[state.object[p] as usize * nn + state.node[p]] += wl.counts[p] as u64;
+                    agg[state.object[p] as usize * nn + (state.page[p] & NODE_MASK) as usize] +=
+                        wl.counts[p] as u64;
                 }
                 object_traffic_from_agg(&agg, state.n_obj, nn, wl)
             }
@@ -465,7 +549,7 @@ fn object_traffic_reference(
     let nn = sys.nodes.len();
     let mut per = vec![vec![0.0f64; nn]; n_obj];
     for p in 0..wl.counts.len() {
-        per[state.object[p] as usize][state.node[p]] += wl.counts[p] as f64;
+        per[state.object[p] as usize][state.node_of(p)] += wl.counts[p] as f64;
     }
     let mut objects = Vec::new();
     for (oi, nodes) in per.iter().enumerate() {
@@ -490,6 +574,46 @@ fn object_traffic_reference(
     objects
 }
 
+/// One epoch of (faults → policy decision → migration → app time) —
+/// the body both [`simulate`] and [`simulate_trace`] drive, so a trace
+/// replay is bit-identical to the live producer by construction.
+#[allow(clippy::too_many_arguments)]
+fn epoch_step(
+    sys: &System,
+    cfg: &SimConfig,
+    state: &mut PageState,
+    policy: &mut dyn TieringPolicy,
+    counts: &[u32],
+    pattern: &dyn Fn(u32) -> (Pattern, f64),
+    nn: usize,
+    rng: &mut Rng,
+    stats: &mut VmStats,
+    app_s: &mut f64,
+    overhead_s: &mut f64,
+) {
+    // 1. policy observes + migrates
+    let scan = policy.scan_request(state, stats);
+    let faults = sample_hint_faults(state, counts, scan.frac, scan.slow_tier_only, rng);
+    stats.hint_faults += faults.len() as u64;
+    if !crate::perf::reference_enabled() {
+        // Ingest the histogram once; migrations below keep the
+        // (object, node) aggregates consistent in O(Δ).
+        state.set_epoch_counts(counts, nn);
+    }
+    let moved_regions = policy.epoch(state, counts, &faults, stats);
+    stats.migrated_pages += moved_regions * SMALL_PER_REGION;
+    // 2. overheads (parallelized across threads)
+    *overhead_s += (faults.len() as f64 * HINT_FAULT_NS
+        + moved_regions as f64 * MIGRATE_REGION_NS)
+        / cfg.threads as f64
+        / 1e9;
+    // 3. application time under the (new) placement
+    let wl = EpochWorkload { counts, pattern };
+    *app_s += epoch_app_time(sys, cfg, state, &wl);
+    // 4. recency state for next epoch
+    state.last_counts.copy_from_slice(counts);
+}
+
 /// Run the full tiering simulation: `epochs` epochs of (trace → faults →
 /// policy decision → migration → app time).
 ///
@@ -497,7 +621,9 @@ fn object_traffic_reference(
 /// per-page access counts; the buffer is reused across epochs, so the
 /// whole run performs no per-epoch histogram allocation
 /// ([`crate::workloads::tiering_apps::TraceGen::epoch_counts_into`] is
-/// the canonical producer).
+/// the canonical producer). This is the bit-parity reference for
+/// [`simulate_trace`], which replays a shared immutable snapshot
+/// instead of producing each epoch.
 pub fn simulate(
     sys: &System,
     cfg: &SimConfig,
@@ -515,34 +641,77 @@ pub fn simulate(
 
     for e in 0..cfg.epochs {
         next_epoch(e, &mut counts);
-        // 1. policy observes + migrates
-        let scan = policy.scan_request(state, &stats);
-        let faults = sample_hint_faults(state, &counts, scan.frac, scan.slow_tier_only, &mut rng);
-        stats.hint_faults += faults.len() as u64;
-        if !crate::perf::reference_enabled() {
-            // Ingest the histogram once; migrations below keep the
-            // (object, node) aggregates consistent in O(Δ).
-            state.set_epoch_counts(&counts, nn);
-        }
-        let moved_regions = policy.epoch(state, &counts, &faults, &mut stats);
-        stats.migrated_pages += moved_regions * SMALL_PER_REGION;
-        // 2. overheads (parallelized across threads)
-        overhead_s += (faults.len() as f64 * HINT_FAULT_NS
-            + moved_regions as f64 * MIGRATE_REGION_NS)
-            / cfg.threads as f64
-            / 1e9;
-        // 3. application time under the (new) placement
-        let wl = EpochWorkload {
-            counts: &counts,
-            pattern: &pattern,
-        };
-        app_s += epoch_app_time(sys, cfg, state, &wl);
-        // 4. recency state for next epoch
-        state.last_counts.copy_from_slice(&counts);
+        epoch_step(
+            sys,
+            cfg,
+            state,
+            policy,
+            &counts,
+            &pattern,
+            nn,
+            &mut rng,
+            &mut stats,
+            &mut app_s,
+            &mut overhead_s,
+        );
     }
     // Drop the last epoch's aggregates: they are only valid for the
     // histogram passed alongside them, and a later standalone
     // `epoch_app_time` call would otherwise silently reuse them.
+    state.epoch = None;
+
+    TieringRun {
+        policy: policy.name().to_string(),
+        placement: String::new(),
+        total_s: app_s + overhead_s,
+        app_s,
+        overhead_s,
+        stats,
+    }
+}
+
+/// [`simulate`] over a shared immutable trace snapshot: each epoch
+/// replays `trace.epoch(e)` in place — no per-epoch histogram
+/// production or copy at all — driving the exact same epoch body as the
+/// producer path, so results are bit-identical (pinned by test). This
+/// is the path every fig16/fig17 grid cell and fleet member takes; the
+/// snapshot usually comes from [`crate::workloads::trace::global`].
+pub fn simulate_trace(
+    sys: &System,
+    cfg: &SimConfig,
+    state: &mut PageState,
+    policy: &mut dyn TieringPolicy,
+    trace: &EpochTrace,
+    pattern: impl Fn(u32) -> (Pattern, f64),
+) -> TieringRun {
+    assert_eq!(trace.pages(), state.len(), "trace/page-state size mismatch");
+    assert!(
+        trace.epochs() >= cfg.epochs,
+        "trace holds {} epochs, run wants {}",
+        trace.epochs(),
+        cfg.epochs
+    );
+    let mut rng = Rng::seeded(cfg.seed);
+    let mut stats = VmStats::default();
+    let mut app_s = 0.0;
+    let mut overhead_s = 0.0;
+    let nn = sys.nodes.len();
+
+    for e in 0..cfg.epochs {
+        epoch_step(
+            sys,
+            cfg,
+            state,
+            policy,
+            trace.epoch(e),
+            &pattern,
+            nn,
+            &mut rng,
+            &mut stats,
+            &mut app_s,
+            &mut overhead_s,
+        );
+    }
     state.epoch = None;
 
     TieringRun {
@@ -609,17 +778,17 @@ mod tests {
     fn first_touch_fills_fast_then_spills() {
         let s = mini_state(false);
         assert_eq!(s.fast_used(), 40);
-        assert_eq!(s.node[0], 0);
-        assert_eq!(s.node[99], 2);
-        assert!(s.migratable.iter().all(|&m| m));
+        assert_eq!(s.node_of(0), 0);
+        assert_eq!(s.node_of(99), 2);
+        assert!((0..s.len()).all(|p| s.migratable(p)));
     }
 
     #[test]
     fn interleave_alternates_and_is_unmigratable() {
         let s = mini_state(true);
-        assert_eq!(s.node[0], 0);
-        assert_eq!(s.node[1], 2);
-        assert!(s.migratable.iter().all(|&m| !m));
+        assert_eq!(s.node_of(0), 0);
+        assert_eq!(s.node_of(1), 2);
+        assert!((0..s.len()).all(|p| !s.migratable(p)));
     }
 
     #[test]
@@ -632,7 +801,7 @@ mod tests {
         s.last_counts[7] = 0; // coldest
         let moved = s.promote(80);
         assert_eq!(moved, 2); // one demotion + one promotion
-        assert_eq!(s.node[80], s.fast_node);
+        assert!(s.on_fast(80));
         assert_eq!(s.fast_used(), 40);
     }
 
@@ -647,8 +816,21 @@ mod tests {
         let mut s = mini_state(false);
         let faults: Vec<usize> = (40..70).collect();
         s.promote_batch(&faults);
-        let recount = s.node.iter().filter(|&&n| n == s.fast_node).count();
+        let recount = (0..s.len()).filter(|&p| s.node_of(p) == s.fast_node).count();
         assert_eq!(s.fast_used(), recount);
+    }
+
+    #[test]
+    fn packed_column_keeps_pin_bit_across_moves() {
+        // The pinned bit must travel with a page through promote/demote
+        // cycles: an unmigratable page stays unmigratable wherever the
+        // (never-firing) policies would leave it, and a migratable page
+        // never becomes pinned.
+        let mut s = mini_state(false);
+        s.promote_batch(&(40..90).collect::<Vec<usize>>());
+        assert!((0..s.len()).all(|p| s.migratable(p)));
+        let i = mini_state(true);
+        assert!((0..i.len()).all(|p| !i.migratable(p)));
     }
 
     #[test]
@@ -668,7 +850,7 @@ mod tests {
         let mut reference = build();
         let (p2, d2) = crate::perf::with_reference(|| reference.promote_batch(&batch));
         assert_eq!((p1, d1), (p2, d2));
-        assert_eq!(opt.node, reference.node);
+        assert_eq!(opt.page, reference.page);
         assert_eq!(opt.fast_used(), reference.fast_used());
     }
 
@@ -693,7 +875,7 @@ mod tests {
         let e = s.epoch.as_ref().unwrap();
         let mut rebuilt = vec![0u64; s.n_obj() * 4];
         for p in 0..200 {
-            rebuilt[s.object[p] as usize * 4 + s.node[p]] += counts[p] as u64;
+            rebuilt[s.object[p] as usize * 4 + s.node_of(p)] += counts[p] as u64;
         }
         assert_eq!(e.agg, rebuilt);
     }
@@ -781,7 +963,7 @@ mod tests {
         with_agg.promote_batch(&(900..1100).collect::<Vec<usize>>());
         let mut plain = initial_state(2000, ld, cxl, 700, false);
         plain.promote_batch(&(900..1100).collect::<Vec<usize>>());
-        assert_eq!(with_agg.node, plain.node);
+        assert_eq!(with_agg.page, plain.page);
         let wl = EpochWorkload { counts: &counts, pattern: &pat };
         let ta = epoch_app_time(&sys, &cfg, &with_agg, &wl);
         let tp = epoch_app_time(&sys, &cfg, &plain, &wl);
@@ -833,5 +1015,109 @@ mod tests {
         assert_eq!(opt.overhead_s.to_bits(), reference.overhead_s.to_bits());
         let rel = (opt.app_s - reference.app_s).abs() / reference.app_s;
         assert!(rel < 1e-9, "app_s {} vs {}", opt.app_s, reference.app_s);
+    }
+
+    #[test]
+    fn simulate_trace_bit_identical_to_producer() {
+        // A shared-trace replay must be indistinguishable from driving
+        // the generator live through the FnMut producer (same mode).
+        use crate::workloads::tiering_apps::graph500;
+        use crate::workloads::tiering_apps::TraceGen;
+        let sys = system_a();
+        let ld = sys.node_of(0, MemKind::Ldram).unwrap();
+        let cxl = sys.node_of(0, MemKind::Cxl).unwrap();
+        let mut app = graph500();
+        app.pages = 3000;
+        let cfg = || SimConfig {
+            socket: 0,
+            threads: 64,
+            compute_ns_per_byte: 0.5,
+            epochs: 5,
+            seed: 13,
+        };
+        let pat = |_: u32| (Pattern::Random, 0.5);
+        let trace = EpochTrace::generate(&app, 5, 13);
+        let mut state_t = initial_state(3000, ld, cxl, 1100, false);
+        let mut pol_t = Tpp::default();
+        let via_trace = simulate_trace(&sys, &cfg(), &mut state_t, &mut pol_t, &trace, pat);
+        let mut state_p = initial_state(3000, ld, cxl, 1100, false);
+        let mut pol_p = Tpp::default();
+        let mut gen = TraceGen::new(app, 13);
+        let via_producer = simulate(
+            &sys,
+            &cfg(),
+            &mut state_p,
+            &mut pol_p,
+            |_, buf| {
+                gen.epoch_counts_into(buf);
+                gen.drift();
+            },
+            |_| (Pattern::Random, 0.5),
+        );
+        assert_eq!(via_trace.stats, via_producer.stats);
+        assert_eq!(via_trace.app_s.to_bits(), via_producer.app_s.to_bits());
+        assert_eq!(
+            via_trace.overhead_s.to_bits(),
+            via_producer.overhead_s.to_bits()
+        );
+        assert_eq!(state_t.page, state_p.page);
+    }
+
+    #[test]
+    fn soa_parity_all_policies_and_drifts() {
+        // The tentpole's bit-parity suite: the SoA state + trace replay
+        // must reproduce the reference (AoS-era seed semantics) run for
+        // every policy × drift {0, low, high} — same stats, same
+        // overheads, app time to float round-off.
+        use crate::workloads::tiering_apps::{graph500, TraceGen};
+        let sys = system_a();
+        let ld = sys.node_of(0, MemKind::Ldram).unwrap();
+        let cxl = sys.node_of(0, MemKind::Cxl).unwrap();
+        for drift in [0.0, 0.05, 0.5] {
+            let mut app = graph500();
+            app.pages = 3000;
+            app.drift = drift;
+            let cfg = || SimConfig {
+                socket: 0,
+                threads: 64,
+                compute_ns_per_byte: 0.4,
+                epochs: 4,
+                seed: 23,
+            };
+            let pat = |_: u32| (Pattern::Random, 0.5);
+            for pi in 0..policies::all_policies().len() {
+                let trace = EpochTrace::generate(&app, 4, 23);
+                let mut state = initial_state(3000, ld, cxl, 1100, false);
+                let mut pol = policies::all_policies().remove(pi);
+                let opt = simulate_trace(&sys, &cfg(), &mut state, pol.as_mut(), &trace, pat);
+                let mut state_r = initial_state(3000, ld, cxl, 1100, false);
+                let mut pol_r = policies::all_policies().remove(pi);
+                let gen = TraceGen::new(app.clone(), 23);
+                let reference = crate::perf::with_reference(|| {
+                    let mut gen = gen;
+                    simulate(
+                        &sys,
+                        &cfg(),
+                        &mut state_r,
+                        pol_r.as_mut(),
+                        |_, buf| {
+                            gen.epoch_counts_into(buf);
+                            gen.drift();
+                        },
+                        |_| (Pattern::Random, 0.5),
+                    )
+                });
+                let label = format!("{} drift={drift}", opt.policy);
+                assert_eq!(opt.stats, reference.stats, "{label}");
+                assert_eq!(
+                    opt.overhead_s.to_bits(),
+                    reference.overhead_s.to_bits(),
+                    "{label}"
+                );
+                let rel = (opt.app_s - reference.app_s).abs() / reference.app_s.max(1e-12);
+                assert!(rel < 1e-9, "{label}: app_s {} vs {}", opt.app_s, reference.app_s);
+                assert_eq!(state.page, state_r.page, "{label}: final placement");
+            }
+        }
     }
 }

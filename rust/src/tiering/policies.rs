@@ -108,7 +108,7 @@ impl TieringPolicy for AutoNuma {
         let mut cands: Vec<usize> = faults
             .iter()
             .copied()
-            .filter(|&p| state.node[p] != state.fast_node)
+            .filter(|&p| !state.on_fast(p))
             .collect();
         cands.truncate(self.migrate_cap);
         let (promoted, demoted) = state.promote_batch(&cands);
@@ -164,7 +164,7 @@ impl TieringPolicy for Tiering08 {
         let mut cands: Vec<usize> = faults
             .iter()
             .copied()
-            .filter(|&p| state.node[p] != state.fast_node && counts[p] as f64 >= self.threshold)
+            .filter(|&p| !state.on_fast(p) && counts[p] as f64 >= self.threshold)
             .collect();
         let n_cands = cands.len();
         // Hottest first; respect the promotion budget. The key
@@ -242,7 +242,7 @@ impl TieringPolicy for Tpp {
         let mut cands: Vec<usize> = faults
             .iter()
             .copied()
-            .filter(|&p| state.node[p] != state.fast_node && state.last_counts[p] > 0)
+            .filter(|&p| !state.on_fast(p) && state.last_counts[p] > 0)
             .collect();
         cands.truncate(self.migrate_cap);
         let (promoted, demoted) = state.promote_batch(&cands);
@@ -290,8 +290,8 @@ mod tests {
         let faults = vec![500, 600];
         let moved = AutoNuma::default().epoch(&mut s, &vec![1; 1000], &faults, &mut st);
         assert!(moved >= 2);
-        assert_eq!(s.node[500], s.fast_node);
-        assert_eq!(s.node[600], s.fast_node);
+        assert_eq!(s.node_of(500), s.fast_node);
+        assert_eq!(s.node_of(600), s.fast_node);
         assert_eq!(st.promoted_regions, 2);
     }
 
@@ -304,8 +304,8 @@ mod tests {
         let mut pol = Tiering08::default();
         let moved = pol.epoch(&mut s, &counts, &[500, 700], &mut st);
         assert_eq!(st.promoted_regions, 1);
-        assert_eq!(s.node[700], s.fast_node);
-        assert_ne!(s.node[500], s.fast_node);
+        assert_eq!(s.node_of(700), s.fast_node);
+        assert_ne!(s.node_of(500), s.fast_node);
         assert!(moved >= 1);
     }
 
@@ -336,8 +336,8 @@ mod tests {
         let moved = Tpp::default().epoch(&mut s, &vec![10; 1000], &[700, 800], &mut st);
         assert_eq!(st.promoted_regions, 1);
         assert!(moved >= 1);
-        assert_eq!(s.node[800], s.fast_node);
-        assert_ne!(s.node[700], s.fast_node);
+        assert_eq!(s.node_of(800), s.fast_node);
+        assert_ne!(s.node_of(700), s.fast_node);
     }
 
     #[test]

@@ -3,10 +3,13 @@
 //! [`npb`]/[`xsbench`] carry the seven HPC workloads of Table III as
 //! access-signature models; [`tiering_apps`] carries the four
 //! memory-intensive applications of §VI (BTree, PageRank, Graph500,
-//! Silo) as page-granular trace generators for the tiering study.
+//! Silo) as page-granular trace generators for the tiering study;
+//! [`trace`] is the shared immutable epoch-trace store that lets one
+//! generated trace serve an entire policy×placement grid or fleet.
 
 pub mod npb;
 pub mod tiering_apps;
+pub mod trace;
 pub mod xsbench;
 
 use anyhow::Result;

@@ -1,0 +1,421 @@
+//! Shared immutable epoch-trace store for the tiering study.
+//!
+//! The fig16/fig17 policy×placement grids and the fleet scenarios
+//! evaluate the *same* workload trace under many policy×placement
+//! combinations. Before this module every grid cell and every fleet
+//! member seeded its own [`TraceGen`] and regenerated the identical
+//! epoch stream — at fleet scale, by far the dominant redundant work.
+//!
+//! [`EpochTrace`] is one fully materialized trace: the per-page access
+//! histogram of every epoch, flattened `[epoch][page]`, immutable once
+//! built. [`TraceStore`] hands out `Arc<EpochTrace>` snapshots keyed by
+//! [`TraceKey`] — `(app, pages, epochs, drift, seed)` plus the
+//! remaining histogram-shaping model fields — generating each key **at
+//! most once per process**: generation happens under the store lock, so
+//! concurrent grid cells racing on a cold key still produce a single
+//! generation, and every requester gets a pointer-equal `Arc` (pinned
+//! by test).
+//!
+//! Lifetime and memory bound: the process-global store
+//! ([`global`]) retains snapshots LRU-evicted to
+//! [`DEFAULT_BUDGET_BYTES`] at insert time (a full-size fig16 app
+//! trace — 65 000 pages × 10 epochs — is ~2.6 MB, so the default
+//! budget holds on the order of a hundred distinct fleet keys).
+//! Eviction only drops the store's own handle; outstanding `Arc`s keep
+//! their snapshot alive until the last cell finishes replaying it. The
+//! scenario batch runner additionally calls [`TraceStore::trim`] after
+//! each batch, releasing snapshots nobody holds anymore down to an
+//! idle watermark so long-lived fleet processes don't pin a full
+//! budget of cold traces between batches.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::tiering_apps::{AppModel, TraceGen};
+
+/// Default byte budget for the process-global store.
+pub const DEFAULT_BUDGET_BYTES: usize = 256 << 20;
+
+/// Identity of one generated trace. Two models that differ only in
+/// fields that never enter the histogram (`compute_ns_per_access`)
+/// share a key; everything that shapes the access stream — page count,
+/// hot-set geometry, drift, skew, epoch budget, RNG seed — is part of
+/// it. Float fields enter as their IEEE-754 bit patterns so the key is
+/// totally ordered and exact.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct TraceKey {
+    app: String,
+    pages: u64,
+    epochs: u64,
+    seed: u64,
+    drift_bits: u64,
+    shape_bits: [u64; 3],
+    flags: u8,
+}
+
+impl TraceKey {
+    pub fn of(model: &AppModel, epochs: usize, seed: u64) -> TraceKey {
+        TraceKey {
+            app: model.name.to_string(),
+            pages: model.pages as u64,
+            epochs: epochs as u64,
+            seed,
+            drift_bits: model.drift.to_bits(),
+            shape_bits: [
+                model.hot_frac.to_bits(),
+                model.hot_share.to_bits(),
+                model.accesses_per_epoch,
+            ],
+            flags: model.scattered as u8 | (model.hot_skewed as u8) << 1,
+        }
+    }
+}
+
+/// One immutable, fully materialized epoch trace.
+///
+/// Epochs are recorded in the order the fig16 producer emits them:
+/// epoch `e`'s histogram, then one [`TraceGen::drift`] step — so a
+/// replay is bit-identical to driving the generator live (pinned by the
+/// parity test below).
+#[derive(Clone, Debug)]
+pub struct EpochTrace {
+    pages: usize,
+    epochs: usize,
+    /// Distance between consecutive epochs in `counts`: `pages` for a
+    /// generated trace, 0 for a constant trace (every epoch is the same
+    /// shared slice — fig17's uniform-scan workloads).
+    stride: usize,
+    counts: Vec<u32>,
+}
+
+impl EpochTrace {
+    /// Materialize `epochs` epochs of `model` under `seed`, driving the
+    /// incremental generator exactly as the live fig16 producer does.
+    pub fn generate(model: &AppModel, epochs: usize, seed: u64) -> EpochTrace {
+        let mut gen = TraceGen::new(model.clone(), seed);
+        let mut counts = Vec::with_capacity(epochs * model.pages);
+        let mut buf = Vec::new();
+        for _ in 0..epochs {
+            gen.epoch_counts_into(&mut buf);
+            counts.extend_from_slice(&buf);
+            gen.drift();
+        }
+        EpochTrace {
+            pages: model.pages,
+            epochs,
+            stride: model.pages,
+            counts,
+        }
+    }
+
+    /// A trace whose every epoch is the same histogram (fig17's
+    /// constant uniform scans), stored once.
+    pub fn constant(counts: Vec<u32>, epochs: usize) -> EpochTrace {
+        EpochTrace {
+            pages: counts.len(),
+            epochs,
+            stride: 0,
+            counts,
+        }
+    }
+
+    /// Per-page access counts of epoch `e`.
+    pub fn epoch(&self, e: usize) -> &[u32] {
+        assert!(e < self.epochs, "epoch {e} out of range ({})", self.epochs);
+        let base = e * self.stride;
+        &self.counts[base..base + self.pages]
+    }
+
+    pub fn pages(&self) -> usize {
+        self.pages
+    }
+
+    pub fn epochs(&self) -> usize {
+        self.epochs
+    }
+
+    /// Heap footprint (the store's budget currency).
+    pub fn bytes(&self) -> usize {
+        self.counts.len() * std::mem::size_of::<u32>()
+    }
+}
+
+struct Entry {
+    trace: Arc<EpochTrace>,
+    last_use: u64,
+}
+
+#[derive(Default)]
+struct Inner {
+    map: BTreeMap<TraceKey, Entry>,
+    bytes: usize,
+    tick: u64,
+    requests: u64,
+    generated: u64,
+    evicted: u64,
+}
+
+/// Store counters (`cxlmem trace-smoke` gates on `generated`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceStoreStats {
+    /// Total `get` calls.
+    pub requests: u64,
+    /// Traces generated (requests that missed).
+    pub generated: u64,
+    /// Entries dropped by the LRU budget.
+    pub evicted: u64,
+    /// Entries currently held.
+    pub entries: usize,
+    /// Bytes currently held.
+    pub bytes: usize,
+}
+
+/// Keyed store of immutable trace snapshots; see the module docs for
+/// keying, lifetime, and the memory bound.
+pub struct TraceStore {
+    budget: usize,
+    inner: Mutex<Inner>,
+}
+
+impl TraceStore {
+    pub fn with_budget(budget: usize) -> TraceStore {
+        TraceStore {
+            budget,
+            inner: Mutex::new(Inner::default()),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        // A panicked holder leaves consistent data (all mutation is
+        // counter/map bookkeeping) — recover instead of poisoning every
+        // later grid cell.
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// The snapshot for `(model, epochs, seed)`, generated on first
+    /// request and shared (pointer-equal) afterwards. Generation runs
+    /// under the store lock: exactly one generation per key per
+    /// process, however many cells race here. The deliberate trade-off
+    /// is that cold *distinct* keys also serialize through the lock —
+    /// acceptable because one generation is an O(epochs × pages) fill
+    /// (milliseconds) while the evaluation that follows each fetch is
+    /// orders of magnitude larger, and it keeps the single-generation
+    /// counter exact without per-key once-cells.
+    pub fn get(&self, model: &AppModel, epochs: usize, seed: u64) -> Arc<EpochTrace> {
+        let key = TraceKey::of(model, epochs, seed);
+        let mut inner = self.lock();
+        inner.requests += 1;
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(e) = inner.map.get_mut(&key) {
+            e.last_use = tick;
+            return Arc::clone(&e.trace);
+        }
+        let trace = Arc::new(EpochTrace::generate(model, epochs, seed));
+        inner.generated += 1;
+        inner.bytes += trace.bytes();
+        let entry = Entry {
+            trace: Arc::clone(&trace),
+            last_use: tick,
+        };
+        inner.map.insert(key, entry);
+        Self::evict_over(&mut inner, self.budget);
+        trace
+    }
+
+    /// Post-batch maintenance: drop snapshots nobody outside the store
+    /// still holds (`Arc` strong count 1), oldest first, down to a
+    /// quarter-budget idle watermark — so a long-lived fleet process
+    /// does not pin a full budget of cold traces between batches. The
+    /// *hard* bound is the insert-time LRU eviction in [`TraceStore::get`];
+    /// this only reclaims idle memory earlier.
+    pub fn trim(&self) {
+        let mut inner = self.lock();
+        let watermark = self.budget / 4;
+        if inner.bytes <= watermark {
+            return;
+        }
+        let mut idle: Vec<(u64, TraceKey)> = inner
+            .map
+            .iter()
+            .filter(|(_, e)| Arc::strong_count(&e.trace) == 1)
+            .map(|(k, e)| (e.last_use, k.clone()))
+            .collect();
+        idle.sort();
+        for (_, key) in idle {
+            if inner.bytes <= watermark {
+                break;
+            }
+            if let Some(e) = inner.map.remove(&key) {
+                inner.bytes -= e.trace.bytes();
+                inner.evicted += 1;
+            }
+        }
+    }
+
+    fn evict_over(inner: &mut Inner, budget: usize) {
+        while inner.bytes > budget && inner.map.len() > 1 {
+            let key = inner
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_use)
+                .map(|(k, _)| k.clone())
+                .expect("non-empty map");
+            if let Some(e) = inner.map.remove(&key) {
+                inner.bytes -= e.trace.bytes();
+                inner.evicted += 1;
+            }
+        }
+    }
+
+    /// Drop every entry and reset all counters (the trace-smoke gate
+    /// starts from a clean store).
+    pub fn clear(&self) {
+        *self.lock() = Inner::default();
+    }
+
+    pub fn stats(&self) -> TraceStoreStats {
+        let inner = self.lock();
+        TraceStoreStats {
+            requests: inner.requests,
+            generated: inner.generated,
+            evicted: inner.evicted,
+            entries: inner.map.len(),
+            bytes: inner.bytes,
+        }
+    }
+}
+
+/// The process-global store every grid cell and fleet member shares.
+pub fn global() -> &'static TraceStore {
+    static GLOBAL: OnceLock<TraceStore> = OnceLock::new();
+    GLOBAL.get_or_init(|| TraceStore::with_budget(DEFAULT_BUDGET_BYTES))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::par::par_map;
+    use crate::workloads::tiering_apps::{graph500, pagerank};
+
+    fn small(mut app: AppModel, pages: usize) -> AppModel {
+        app.pages = pages;
+        app
+    }
+
+    #[test]
+    fn generate_matches_live_producer_bit_exactly() {
+        // A replayed snapshot must be indistinguishable from driving
+        // the generator live, epoch by epoch (the fig16 producer
+        // order: counts, then drift).
+        let app = small(graph500(), 2_000);
+        let trace = EpochTrace::generate(&app, 6, 17);
+        let mut gen = TraceGen::new(app, 17);
+        let mut buf = Vec::new();
+        for e in 0..6 {
+            gen.epoch_counts_into(&mut buf);
+            assert_eq!(trace.epoch(e), &buf[..], "epoch {e}");
+            gen.drift();
+        }
+    }
+
+    #[test]
+    fn store_returns_pointer_equal_snapshots() {
+        let store = TraceStore::with_budget(DEFAULT_BUDGET_BYTES);
+        let app = small(pagerank(), 1_000);
+        let a = store.get(&app, 4, 7);
+        let b = store.get(&app, 4, 7);
+        assert!(Arc::ptr_eq(&a, &b));
+        let s = store.stats();
+        assert_eq!((s.requests, s.generated, s.entries), (2, 1, 1));
+        // A different seed is a different key — and a different trace.
+        let c = store.get(&app, 4, 8);
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(store.stats().generated, 2);
+    }
+
+    #[test]
+    fn grid_cells_share_one_snapshot_across_workers() {
+        // Mirrors the fig16 fan-out: parallel cells requesting the same
+        // key must observe pointer-equal Arcs from one generation.
+        let store = TraceStore::with_budget(DEFAULT_BUDGET_BYTES);
+        let app = small(graph500(), 1_500);
+        let cells: Vec<usize> = (0..8).collect();
+        let arcs = par_map(&cells, 4, |_| store.get(&app, 5, 3));
+        for arc in &arcs[1..] {
+            assert!(Arc::ptr_eq(&arcs[0], arc));
+        }
+        let s = store.stats();
+        assert_eq!(s.generated, 1, "racing cells must not regenerate");
+        assert_eq!(s.requests, 8);
+    }
+
+    #[test]
+    fn key_separates_shape_not_compute() {
+        let base = small(pagerank(), 800);
+        let mut compute_only = base.clone();
+        compute_only.compute_ns_per_access *= 2.0;
+        assert_eq!(TraceKey::of(&base, 3, 1), TraceKey::of(&compute_only, 3, 1));
+        let mut drifted = base.clone();
+        drifted.drift = 0.25;
+        assert_ne!(TraceKey::of(&base, 3, 1), TraceKey::of(&drifted, 3, 1));
+        assert_ne!(TraceKey::of(&base, 3, 1), TraceKey::of(&base, 4, 1));
+    }
+
+    #[test]
+    fn lru_budget_evicts_oldest_key() {
+        let app = small(pagerank(), 1_000);
+        let one = EpochTrace::generate(&app, 2, 1).bytes();
+        // Room for one trace only: the second insert evicts the first.
+        let store = TraceStore::with_budget(one);
+        let a = store.get(&app, 2, 1);
+        let _b = store.get(&app, 2, 2);
+        let s = store.stats();
+        assert_eq!((s.evicted, s.entries), (1, 1));
+        assert!(s.bytes <= one);
+        // The evicted snapshot stays alive through its Arc…
+        assert_eq!(a.epochs(), 2);
+        // …and a re-request regenerates it.
+        let a2 = store.get(&app, 2, 1);
+        assert!(!Arc::ptr_eq(&a, &a2));
+        assert_eq!(a.epoch(1), a2.epoch(1), "regeneration is deterministic");
+    }
+
+    #[test]
+    fn trim_releases_idle_snapshots_to_the_watermark() {
+        let app = small(pagerank(), 1_000);
+        let one = EpochTrace::generate(&app, 2, 1).bytes();
+        // All three entries fit the insert-time budget; the idle
+        // watermark is budget/4 = one trace.
+        let store = TraceStore::with_budget(4 * one);
+        store.get(&app, 2, 1); // returned Arc dropped at once — idle
+        let held = store.get(&app, 2, 2);
+        store.get(&app, 2, 3); // idle
+        store.trim();
+        let s = store.stats();
+        // Idle snapshots go oldest-first until the watermark is met;
+        // the held one survives whatever its age.
+        assert_eq!((s.evicted, s.entries), (2, 1));
+        assert_eq!(s.bytes, one);
+        assert!(Arc::ptr_eq(&held, &store.get(&app, 2, 2)));
+    }
+
+    #[test]
+    fn constant_trace_shares_one_slice() {
+        let t = EpochTrace::constant(vec![3, 1, 4, 1, 5], 10);
+        assert_eq!(t.pages(), 5);
+        assert_eq!(t.epochs(), 10);
+        assert_eq!(t.bytes(), 5 * 4);
+        assert_eq!(t.epoch(0), t.epoch(9));
+        assert!(std::ptr::eq(t.epoch(0).as_ptr(), t.epoch(9).as_ptr()));
+    }
+
+    #[test]
+    fn clear_resets_entries_and_counters() {
+        let store = TraceStore::with_budget(DEFAULT_BUDGET_BYTES);
+        let app = small(pagerank(), 500);
+        store.get(&app, 2, 1);
+        store.clear();
+        assert_eq!(store.stats(), TraceStoreStats::default());
+    }
+}
