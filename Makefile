@@ -4,12 +4,12 @@
 # golden-parity suite), a quick hot-path benchmark pass with schema
 # validation of BENCH_hotpath.json, the scenario engine checks, the
 # result-cache smoke, the two-process shard smoke, the shared
-# epoch-trace store smoke, and a formatting check. Mirrors
-# .github/workflows/ci.yml.
+# epoch-trace store smoke, the million-page scale smoke, and a
+# formatting check. Mirrors .github/workflows/ci.yml.
 
-.PHONY: ci build test bench-smoke bench bench-check fmt-check exp-all scenario-check cache-smoke shard-smoke trace-smoke
+.PHONY: ci build test bench-smoke bench bench-check fmt-check exp-all scenario-check cache-smoke shard-smoke trace-smoke scale-smoke
 
-ci: build test bench-check scenario-check cache-smoke shard-smoke trace-smoke fmt-check
+ci: build test bench-check scenario-check cache-smoke shard-smoke trace-smoke scale-smoke fmt-check
 
 build:
 	cargo build --release
@@ -79,6 +79,13 @@ shard-smoke: build
 # (counter via TraceStore::stats; the second run is pure Arc replays).
 trace-smoke: build
 	./target/release/cxlmem trace-smoke
+
+# Million-page scale gate: one 1M-page fig16 cell must be bit-identical
+# across chunked-vs-sequential epoch passes and delta-vs-dense trace
+# replay, with peak RSS under a bound a dense per-cell materialization
+# would break at production scale.
+scale-smoke: build
+	./target/release/cxlmem scale-smoke
 
 # Regenerate every paper figure/table, in parallel.
 exp-all: build

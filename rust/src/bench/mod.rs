@@ -39,6 +39,14 @@
 //! with the (mode-shared) hot-set drift untimed between epochs.
 //! `tiering/promote_batch(SoA)` times a full-pressure promotion batch
 //! through the packed-column state vs the seed's recount-and-sort path.
+//! `tiering/promote_batch(16M pages)` times the same full-pressure
+//! batch at production scale: the sequential single-thread scan (the
+//! parity reference, recorded as mode `reference`) vs the chunked
+//! `--jobs`-parallel scan (`optimized`), state clones untimed, results
+//! asserted bit-identical each iteration. `workloads/trace(delta encode
+//! 16M)` is a *memory* entry: its `speedup` value is the dense/delta
+//! byte ratio of a 16M-page × 10-epoch PageRank trace (the dense form
+//! cannot fit the trace-store budget; the delta form must).
 //!
 //! [`validate_report_doc`] checks a written `BENCH_hotpath.json` against
 //! this schema (`cxlmem bench --validate FILE`, `make bench-check`).
@@ -114,6 +122,8 @@ const SOLVER_NAME: &str = "memsim/solve_traffic(2 streams)";
 const ENGINE_NAME: &str = "engine/run(MG, 2-tier)";
 const TIERING_NAME: &str = "tiering/epoch(PageRank, t08, 65k pages)";
 const PROMOTE_NAME: &str = "tiering/promote_batch(SoA)";
+const PROMOTE16_NAME: &str = "tiering/promote_batch(16M pages)";
+const TRACE_DELTA_NAME: &str = "workloads/trace(delta encode 16M)";
 const EPOCH_COUNTS_NAME: &str = "tiering/epoch_counts(Graph500)";
 const FLEXGEN_NAME: &str = "flexgen/search+throughput";
 const SHARED_TRACE_NAME: &str = "exp/fig16(shared trace)";
@@ -287,6 +297,102 @@ pub fn run_suite(opts: &BenchOpts) -> BenchReport {
         push_modes(&mut hotpaths, rs, &["reference", "optimized"]);
     }
 
+    // --- promotion batch at production scale: sequential vs chunked ---
+    // The million-page regime: 16M pages (32 TB of 2 MB regions), full
+    // promotion pressure. Both sides run the *optimized* SoA scan; the
+    // pair isolates the intra-epoch chunking — sequential single-thread
+    // (the parity reference the chunked path is pinned against) vs the
+    // chunked `--jobs` scan with per-chunk top-k + rank merge. A custom
+    // paired loop keeps the ~190 MB state clone untimed (a `Bencher`
+    // closure would let the memcpy swamp the scan), and every iteration
+    // asserts the two paths moved identical page counts; the first also
+    // verifies full placement equality.
+    {
+        let pages: usize = 16 << 20;
+        let fast_cap = pages * 2 / 5;
+        let mut template = initial_state(pages, ld, cxl, fast_cap, false);
+        for p in 0..pages {
+            template.last_counts[p] = ((p * 31) % 97) as u32;
+        }
+        // Sparse batch of slow pages: far larger than the (zero) free
+        // headroom, far smaller than the ~6.7M-page victim pool, so the
+        // per-chunk top-k prunes hard.
+        let batch: Vec<usize> = (fast_cap..pages).step_by(24).collect();
+        let iters = if opts.smoke { 3 } else { 8 };
+        let jobs = opts.jobs.max(2);
+        let mut seq_ns: Vec<f64> = Vec::with_capacity(iters);
+        let mut par_ns: Vec<f64> = Vec::with_capacity(iters);
+        for it in 0..iters {
+            let mut seq = template.clone();
+            let t0 = Instant::now();
+            let seq_res = perf::with_jobs(1, || seq.promote_batch(&batch));
+            seq_ns.push(t0.elapsed().as_nanos() as f64);
+            let mut par = template.clone();
+            let t0 = Instant::now();
+            let par_res = perf::with_jobs(jobs, || par.promote_batch(&batch));
+            par_ns.push(t0.elapsed().as_nanos() as f64);
+            assert_eq!(seq_res, par_res, "chunked promote_batch parity (counts)");
+            if it == 0 {
+                assert_eq!(seq.fast_used(), par.fast_used());
+                assert!(
+                    (0..pages).all(|q| seq.node_of(q) == par.node_of(q)),
+                    "chunked promote_batch parity (placement)"
+                );
+            }
+        }
+        let r_seq = sampled_result(format!("{PROMOTE16_NAME} [reference]"), &seq_ns);
+        let r_par = sampled_result(
+            format!("{PROMOTE16_NAME} [optimized, jobs={jobs}]"),
+            &par_ns,
+        );
+        println!("{}", r_seq.report());
+        println!("{}", r_par.report());
+        speedups.push((PROMOTE16_NAME.to_string(), ratio(&r_seq, &r_par)));
+        hotpaths.push(HotpathResult {
+            result: r_seq,
+            mode: "reference",
+        });
+        hotpaths.push(HotpathResult {
+            result: r_par,
+            mode: "optimized",
+        });
+    }
+
+    // --- delta trace encoding at production scale ---
+    // A memory entry, not a time entry: its `speedup` value is the
+    // dense/delta byte ratio of the 16M-page × 10-epoch PageRank trace.
+    // Dense would be ~640 MB — it cannot fit the 256 MB trace-store
+    // budget at all — so the dense side is arithmetic, never allocated;
+    // the encode wall time is printed for the record.
+    {
+        let pages: usize = 16 << 20;
+        let epochs = 10;
+        let mut app = pagerank();
+        app.pages = pages;
+        let dense_bytes = epochs * pages * std::mem::size_of::<u32>();
+        let t0 = Instant::now();
+        let tr = crate::workloads::trace::EpochTrace::generate(&app, epochs, 5);
+        let encode_s = t0.elapsed().as_secs_f64();
+        assert!(tr.is_delta(), "16M-page PageRank trace must delta-encode");
+        assert!(
+            tr.bytes() <= crate::workloads::trace::DEFAULT_BUDGET_BYTES,
+            "delta trace ({} B) must fit the store budget",
+            tr.bytes()
+        );
+        assert!(
+            dense_bytes > crate::workloads::trace::DEFAULT_BUDGET_BYTES,
+            "scale check: the dense form must NOT fit the budget"
+        );
+        let mem_ratio = dense_bytes as f64 / tr.bytes().max(1) as f64;
+        println!(
+            "{TRACE_DELTA_NAME}: encoded in {encode_s:.2} s; {} MB delta vs {} MB dense \
+             ({mem_ratio:.1}x smaller)",
+            tr.bytes() >> 20,
+            dense_bytes >> 20
+        );
+        speedups.push((TRACE_DELTA_NAME.to_string(), mem_ratio));
+    }
+
     // --- incremental epoch-trace generation ---
     // A custom paired loop rather than `Bencher`: the hot-set drift
     // between epochs must run *untimed* — it is the application's own
@@ -317,16 +423,8 @@ pub fn run_suite(opts: &BenchOpts) -> BenchReport {
             ref_ns.push(t0.elapsed().as_nanos() as f64);
             assert_eq!(opt_buf, ref_buf, "incremental vs regeneration parity");
         }
-        let mk = |label: String, ns: &[f64]| BenchResult {
-            name: label,
-            iters: ns.len() as u64,
-            mean_ns: stats::mean(ns),
-            median_ns: stats::median(ns),
-            p95_ns: stats::percentile(ns, 95.0),
-            stddev_ns: stats::stddev(ns),
-        };
-        let r_ref = mk(format!("{EPOCH_COUNTS_NAME} [reference]"), &ref_ns);
-        let r_opt = mk(format!("{EPOCH_COUNTS_NAME} [optimized]"), &opt_ns);
+        let r_ref = sampled_result(format!("{EPOCH_COUNTS_NAME} [reference]"), &ref_ns);
+        let r_opt = sampled_result(format!("{EPOCH_COUNTS_NAME} [optimized]"), &opt_ns);
         println!("{}", r_ref.report());
         println!("{}", r_opt.report());
         speedups.push((EPOCH_COUNTS_NAME.to_string(), ratio(&r_ref, &r_opt)));
@@ -503,6 +601,19 @@ pub fn run_suite(opts: &BenchOpts) -> BenchReport {
 
 fn ratio(reference: &BenchResult, optimized: &BenchResult) -> f64 {
     reference.median_ns / optimized.median_ns.max(1e-9)
+}
+
+/// Summarize hand-timed samples (custom paired loops that must keep
+/// setup untimed) into the same shape `Bencher` produces.
+fn sampled_result(label: String, ns: &[f64]) -> BenchResult {
+    BenchResult {
+        name: label,
+        iters: ns.len() as u64,
+        mean_ns: stats::mean(ns),
+        median_ns: stats::median(ns),
+        p95_ns: stats::percentile(ns, 95.0),
+        stddev_ns: stats::stddev(ns),
+    }
 }
 
 fn push_modes(out: &mut Vec<HotpathResult>, results: &[BenchResult], modes: &[&'static str]) {

@@ -10,9 +10,11 @@
 //! so fig16 fetches one immutable `Arc<EpochTrace>` snapshot per app
 //! from the process-global [`crate::workloads::trace`] store (generated
 //! at most once per process — fleet scenarios with the same key reuse
-//! it too) and every cell replays it through
-//! [`tiering::simulate_trace`]; fig17 shares one constant-histogram
-//! trace per workload the same way. Under
+//! it too; million-page snapshots come back delta-encoded, so they fit
+//! the store budget dense traces would blow) and every cell replays it
+//! through [`tiering::simulate_trace`], which materializes epochs via a
+//! per-cell [`crate::workloads::trace::TraceCursor`]; fig17 shares one
+//! constant-histogram trace per workload the same way. Under
 //! [`crate::perf::with_reference`] each cell instead seeds its own
 //! generator and regenerates the stream per epoch — the seed-semantics
 //! baseline `cxlmem bench` records as `exp/fig16(shared trace)`.

@@ -11,6 +11,8 @@
 //! cxlmem bench [--smoke|--quick] [--jobs N] [--out FILE]      hot-path benchmarks → BENCH_hotpath.json
 //! cxlmem bench --validate FILE                                schema-check a BENCH_hotpath.json
 //! cxlmem trace-smoke                                          shared epoch-trace store gate (make trace-smoke)
+//! cxlmem scale-smoke [--pages N] [--epochs N] [--jobs N]      million-page parity + peak-RSS gate (make scale-smoke)
+//!                    [--rss-mb MB]
 //! cxlmem train [--steps N] [--seed S]                         E2E training through the PJRT artifact
 //! cxlmem serve [--requests N]                                 FlexGen-style serving demo
 //! cxlmem info                                                 platform + artifact status
@@ -30,6 +32,7 @@ fn main() -> Result<()> {
         "scenario" => cmd_scenario(&args),
         "bench" => cmd_bench(&args),
         "trace-smoke" => cmd_trace_smoke(),
+        "scale-smoke" => cmd_scale_smoke(&args),
         "train" => cxlmem::exp::drivers::train(&args),
         "serve" => cxlmem::exp::drivers::serve(&args),
         "info" => cmd_info(),
@@ -432,6 +435,109 @@ fn cmd_trace_smoke() -> Result<()> {
     Ok(())
 }
 
+/// The `make scale-smoke` gate: one million-page fig16-style cell must
+/// produce bit-identical results across (a) the chunked-parallel epoch
+/// passes vs the sequential seed path and (b) delta-encoded trace
+/// replay vs a dense materialized trace — while peak RSS stays under
+/// `--rss-mb` (a guard against accidental per-cell dense
+/// materialization or quadratic scratch at scale).
+fn cmd_scale_smoke(args: &Args) -> Result<()> {
+    use anyhow::bail;
+    use cxlmem::memsim::{topology, MemKind, Pattern};
+    use cxlmem::tiering::{self, initial_state, SimConfig, Tpp};
+    use cxlmem::workloads::tiering_apps::pagerank;
+    use cxlmem::workloads::trace::EpochTrace;
+
+    let pages = args.get_usize("pages", 1 << 20);
+    let epochs = args.get_usize("epochs", 5);
+    let rss_mb = args.get_usize("rss-mb", 1024);
+    let jobs = args.get_usize("jobs", cxlmem::perf::default_jobs()).max(2);
+    let seed = 7;
+
+    // PageRank with a small drift: every epoch boundary is a real —
+    // but sparse — delta, so the snapshot is certainly delta-encoded
+    // and the replay exercises the patch path, not a trivial constant.
+    let mut app = pagerank();
+    app.pages = pages;
+    app.drift = 0.05;
+
+    let trace = EpochTrace::generate(&app, epochs, seed);
+    if !trace.is_delta() {
+        bail!("expected a delta-encoded trace at {pages} pages (got the dense fallback)");
+    }
+    let dense = EpochTrace::generate_dense(&app, epochs, seed);
+
+    let sys = topology::system_a();
+    let socket = 0;
+    let ld = sys.node_of(socket, MemKind::Ldram).unwrap();
+    let cxl = sys.node_of(socket, MemKind::Cxl).unwrap();
+    let fast_cap = pages * 2 / 5;
+    let cfg = SimConfig {
+        socket,
+        threads: 8,
+        compute_ns_per_byte: app.compute_ns_per_access / 64.0,
+        epochs,
+        seed,
+    };
+
+    // One first-touch TPP cell, run three ways; every way must agree
+    // bit-for-bit on stats, times, and the final page placement.
+    let run_cell = |tr: &EpochTrace, jobs: usize| {
+        let mut state = initial_state(pages, ld, cxl, fast_cap, false);
+        let mut policy = Tpp::default();
+        let run = cxlmem::perf::with_jobs(jobs, || {
+            tiering::simulate_trace(&sys, &cfg, &mut state, &mut policy, tr, |_| {
+                (Pattern::Random, 0.55)
+            })
+        });
+        let placement: Vec<_> = (0..pages).map(|p| state.node_of(p)).collect();
+        (run, state.fast_used(), placement)
+    };
+    let t0 = std::time::Instant::now();
+    let (run_par, used_par, place_par) = run_cell(&trace, jobs);
+    let par_s = t0.elapsed().as_secs_f64();
+    let t0 = std::time::Instant::now();
+    let (run_seq, used_seq, place_seq) = run_cell(&trace, 1);
+    let seq_s = t0.elapsed().as_secs_f64();
+    let (run_dense, used_dense, place_dense) = run_cell(&dense, jobs);
+
+    for (label, run, used, place) in [
+        ("sequential delta replay (jobs=1)", &run_seq, used_seq, &place_seq),
+        ("dense-trace replay", &run_dense, used_dense, &place_dense),
+    ] {
+        if run.stats != run_par.stats
+            || run.app_s.to_bits() != run_par.app_s.to_bits()
+            || run.overhead_s.to_bits() != run_par.overhead_s.to_bits()
+        {
+            bail!("scale-smoke: {label} diverged from the chunked delta replay (stats/times)");
+        }
+        if used != used_par || place != &place_par {
+            bail!("scale-smoke: {label} diverged from the chunked delta replay (final placement)");
+        }
+    }
+    println!(
+        "scale-smoke: ok — {pages} pages x {epochs} epochs, TPP first-touch; chunked \
+         (jobs={jobs}, {par_s:.2} s) == sequential ({seq_s:.2} s) == dense replay; \
+         delta snapshot {} KB vs {} KB dense",
+        trace.bytes() >> 10,
+        dense.bytes() >> 10
+    );
+    match peak_rss_mb() {
+        Some(mb) if mb > rss_mb => bail!("scale-smoke: peak RSS {mb} MB exceeds --rss-mb {rss_mb}"),
+        Some(mb) => println!("scale-smoke: peak RSS {mb} MB (bound {rss_mb} MB)"),
+        None => println!("scale-smoke: VmHWM unreadable on this platform; skipping the RSS gate"),
+    }
+    Ok(())
+}
+
+/// Peak resident set size in MB from `/proc/self/status` (Linux only).
+fn peak_rss_mb() -> Option<usize> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    let kb: usize = line.split_whitespace().nth(1)?.parse().ok()?;
+    Some(kb / 1024)
+}
+
 fn cmd_info() -> Result<()> {
     match cxlmem::runtime::Runtime::discover() {
         Ok(rt) => {
@@ -461,6 +567,7 @@ fn print_help() {
          \x20 cxlmem scenario validate|expand|run|bench ... (see `cxlmem scenario help`)\n\
          \x20 cxlmem bench [--smoke|--quick] [--jobs N] [--out FILE] [--validate FILE]\n\
          \x20 cxlmem trace-smoke\n\
+         \x20 cxlmem scale-smoke [--pages N] [--epochs N] [--jobs N] [--rss-mb MB]\n\
          \x20 cxlmem train [--steps N] [--seed S] [--log-every K]\n\
          \x20 cxlmem serve [--requests N]\n\
          \x20 cxlmem info\n\

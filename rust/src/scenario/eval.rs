@@ -94,11 +94,20 @@ pub fn evaluate(spec: &ScenarioSpec) -> Result<Report> {
             seed,
             threads,
             fast_gb,
+            pages,
         } => {
-            let models: Vec<tiering_apps::AppModel> = apps
+            let mut models: Vec<tiering_apps::AppModel> = apps
                 .iter()
                 .map(|a| tiering_app(a))
                 .collect::<Result<Vec<_>>>()?;
+            // Scale studies override every app's working set (a
+            // different page count is a different trace key, so scaled
+            // cells never collide with 65k-page snapshots in the store).
+            if let Some(p) = pages {
+                for m in &mut models {
+                    m.pages = *p;
+                }
+            }
             // Trace sharing happens inside fig16_with: it fetches one
             // immutable snapshot per app from the process-global
             // `workloads::trace` store, so every policy×placement cell

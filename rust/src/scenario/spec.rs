@@ -146,6 +146,11 @@ pub enum WorkloadSpec {
         seed: u64,
         threads: usize,
         fast_gb: u64,
+        /// Working-set override in pages for every app (scale studies:
+        /// a 1M+-page fleet cell instead of the paper's 65k). `None`
+        /// keeps each app's own page count — and, being omitted from
+        /// the canonical form, existing cache keys.
+        pages: Option<usize>,
     },
     /// Fig 17 tiering × placement for the HPC workloads.
     TieringHpc {
@@ -660,12 +665,17 @@ impl ScenarioSpec {
                 if fast_gb == 0 {
                     bail!("'fast_gb' must be >= 1");
                 }
+                let pages = match get(wl, "pages") {
+                    None => None,
+                    Some(_) => Some(positive_usize(wl, "pages", 1)?),
+                };
                 W::TieringApps {
                     apps,
                     epochs: positive_usize(wl, "epochs", 10)?,
                     seed: u64_or(wl, "seed", 7)?,
                     threads: positive_usize(wl, "threads", 64)?,
                     fast_gb,
+                    pages,
                 }
             }
             "tiering-hpc" => W::TieringHpc {
@@ -823,17 +833,27 @@ impl ScenarioSpec {
                 seed,
                 threads,
                 fast_gb,
-            } => Json::obj(vec![
-                ("kind", "tiering".into()),
-                (
-                    "apps",
-                    Json::arr(apps.iter().map(|a| Json::from(a.as_str()))),
-                ),
-                ("epochs", (*epochs).into()),
-                ("seed", (*seed).into()),
-                ("threads", (*threads).into()),
-                ("fast_gb", (*fast_gb).into()),
-            ]),
+                pages,
+            } => {
+                let mut fields = vec![
+                    ("kind", Json::from("tiering")),
+                    (
+                        "apps",
+                        Json::arr(apps.iter().map(|a| Json::from(a.as_str()))),
+                    ),
+                    ("epochs", (*epochs).into()),
+                    ("seed", (*seed).into()),
+                    ("threads", (*threads).into()),
+                    ("fast_gb", (*fast_gb).into()),
+                ];
+                // Only an explicit override enters the canonical form:
+                // specs written before the field existed keep their
+                // canonical hash (and result-cache keys).
+                if let Some(p) = pages {
+                    fields.push(("pages", (*p).into()));
+                }
+                Json::obj(fields)
+            }
             W::TieringHpc {
                 socket,
                 threads,
@@ -1054,6 +1074,8 @@ mod tests {
         for bad in [
             r#"{"name": "t", "workload": {"kind": "tiering", "epochs": -1}}"#,
             r#"{"name": "t", "workload": {"kind": "tiering", "epochs": 0}}"#,
+            r#"{"name": "t", "workload": {"kind": "tiering", "pages": 0}}"#,
+            r#"{"name": "t", "workload": {"kind": "tiering", "pages": 1.5}}"#,
             r#"{"name": "t", "workload": {"kind": "idle-latency", "samples": 2.7}}"#,
             r#"{"name": "t", "workload": {"kind": "loaded-latency", "threads": 0}}"#,
             r#"{"name": "t", "workload": {"kind": "gpu-copy", "blocks_log2": [64]}}"#,
@@ -1061,6 +1083,33 @@ mod tests {
         ] {
             assert!(parse_text(bad).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn tiering_pages_override_round_trips() {
+        // Explicit page override survives the canonical round trip and
+        // changes the cache key; omitting it must canonicalize exactly
+        // as pre-override specs did (stable cache keys).
+        let plain = parse_text(r#"{"name": "t", "workload": {"kind": "tiering"}}"#).unwrap();
+        if let WorkloadSpec::TieringApps { pages, .. } = &plain.workload {
+            assert_eq!(*pages, None);
+        } else {
+            panic!("wrong kind");
+        }
+        assert!(!plain.to_json().to_string().contains("pages"));
+        let scaled = parse_text(
+            r#"{"name": "t", "workload": {"kind": "tiering", "pages": 1048576}}"#,
+        )
+        .unwrap();
+        if let WorkloadSpec::TieringApps { pages, .. } = &scaled.workload {
+            assert_eq!(*pages, Some(1 << 20));
+        } else {
+            panic!("wrong kind");
+        }
+        assert_ne!(plain.canonical_hash(), scaled.canonical_hash());
+        // Round trip: re-parsing the canonical form preserves the field.
+        let reparsed = ScenarioSpec::parse(&scaled.to_json()).unwrap();
+        assert_eq!(scaled.canonical_hash(), reparsed.canonical_hash());
     }
 
     #[test]

@@ -33,9 +33,29 @@
 //! - hint-fault sampling uses geometric skip sampling (one RNG draw per
 //!   *fault* instead of one per candidate page);
 //! - [`simulate_trace`] replays a shared immutable
-//!   [`crate::workloads::trace::EpochTrace`] snapshot, eliminating the
-//!   per-epoch histogram copy the producer path pays (and, through the
-//!   trace store, the per-cell regeneration an entire grid pays).
+//!   [`crate::workloads::trace::EpochTrace`] snapshot through a
+//!   [`crate::workloads::trace::TraceCursor`] (delta-encoded snapshots
+//!   materialize into the cursor's single reusable buffer; dense ones
+//!   are handed out as direct slices), eliminating the per-epoch
+//!   histogram copy the producer path pays (and, through the trace
+//!   store, the per-cell regeneration an entire grid pays);
+//! - at [`PAR_MIN_PAGES`] pages and above — the million-page regime —
+//!   the remaining O(pages) epoch passes run *chunked* over
+//!   [`crate::util::par`] when the caller configured `--jobs > 1`: the
+//!   [`PageState::promote_batch`] victim scan keeps each chunk's
+//!   `need`-smallest candidates via `select_nth_unstable` and
+//!   rank-merges the per-chunk winners (the global k-smallest set under
+//!   the strict total order `(last_counts, page)` is unique, so the
+//!   merged result is bit-identical to the sequential scan); the
+//!   [`sample_hint_faults`] candidate filter collects candidates per
+//!   chunk and then jump-selects over the concatenated list with the
+//!   same geometric-skip draws the streaming walk makes (identical RNG
+//!   consumption ⇒ identical fault sets); and
+//!   [`PageState::set_epoch_counts`] accumulates per-chunk integer
+//!   aggregates summed at the end (u64 adds — order-free). Below the
+//!   threshold everything stays sequential, so 65k-page paper runs
+//!   don't pay thread fan-out; inside a `par_map` grid cell worker
+//!   `jobs` is pinned to 1, so grids never nest parallelism.
 //!
 //! Under [`crate::perf::with_reference`] the seed's O(pages)
 //! implementations run instead; they make identical decisions (see the
@@ -51,6 +71,7 @@ pub mod stats;
 
 use crate::engine::{self, ObjectTraffic, RunConfig};
 use crate::memsim::{NodeId, Pattern, System};
+use crate::util::par::{chunk_ranges, par_map};
 use crate::util::rng::Rng;
 use crate::workloads::trace::EpochTrace;
 
@@ -70,6 +91,49 @@ pub const SMALL_PER_REGION: u64 = 512;
 const PIN: u32 = 1 << 31;
 /// Packed-column node mask (low 31 bits).
 const NODE_MASK: u32 = PIN - 1;
+
+/// Page count below which the chunked-parallel epoch passes stay
+/// sequential. At the paper's 65k pages a linear `u32` scan is a few
+/// tens of microseconds — thread fan-out would cost more than it saves —
+/// while at millions of pages the scan dominates the epoch. 2^18 pages
+/// (= 512 GB of 2 MB regions) is comfortably past the break-even on
+/// both counts.
+pub const PAR_MIN_PAGES: usize = 1 << 18;
+
+thread_local! {
+    /// Test/bench override of [`PAR_MIN_PAGES`] (see
+    /// [`with_par_min_pages`]).
+    static PAR_MIN: std::cell::Cell<usize> = std::cell::Cell::new(PAR_MIN_PAGES);
+}
+
+/// Run `f` with the chunked-parallel page threshold lowered to `min` on
+/// this thread (restored on exit, also on panic). Lets the parity tests
+/// and benches exercise the chunked paths at small page counts.
+pub fn with_par_min_pages<R>(min: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            PAR_MIN.with(|c| c.set(self.0));
+        }
+    }
+    let _restore = Restore(PAR_MIN.with(|c| c.get()));
+    PAR_MIN.with(|c| c.set(min));
+    f()
+}
+
+/// `Some(jobs)` when an O(pages) epoch pass over `pages` pages should
+/// run chunked: the caller raised `--jobs`, we are not in reference
+/// mode (the reference is the sequential seed), and the page count is
+/// past the fan-out break-even. `par_map` pins worker `jobs` to 1, so
+/// grid cells running inside a sweep never nest.
+fn par_chunks(pages: usize) -> Option<usize> {
+    let jobs = crate::perf::current_jobs();
+    if jobs > 1 && !crate::perf::reference_enabled() && pages >= PAR_MIN.with(|c| c.get()) {
+        Some(jobs)
+    } else {
+        None
+    }
+}
 
 /// Per-epoch ingested access histogram + per-(object, node) aggregates,
 /// kept consistent across migrations so epoch app time is O(objects ×
@@ -222,10 +286,14 @@ impl PageState {
 
     /// Ingest this epoch's access histogram: one O(pages) pass over the
     /// narrow columns that makes every later placement change an O(1)
-    /// aggregate update.
+    /// aggregate update. Past [`PAR_MIN_PAGES`] with `--jobs > 1` the
+    /// pass runs chunked, each chunk filling its own aggregate table
+    /// summed at the end — u64 adds over a fixed partition, so the
+    /// result is bit-identical to the sequential pass.
     pub(crate) fn set_epoch_counts(&mut self, counts: &[u32], nn: usize) {
         debug_assert_eq!(counts.len(), self.page.len());
         let n_obj = self.n_obj;
+        let (page, object) = (&self.page, &self.object);
         let epoch = self.epoch.get_or_insert_with(EpochAgg::default);
         epoch.nn = nn;
         epoch.src_ptr = counts.as_ptr() as usize;
@@ -233,9 +301,26 @@ impl PageState {
         epoch.counts.extend_from_slice(counts);
         epoch.agg.clear();
         epoch.agg.resize(n_obj * nn, 0);
-        for p in 0..counts.len() {
-            epoch.agg[self.object[p] as usize * nn + (self.page[p] & NODE_MASK) as usize] +=
-                counts[p] as u64;
+        if let Some(jobs) = par_chunks(counts.len()) {
+            let ranges = chunk_ranges(counts.len(), jobs);
+            let parts = par_map(&ranges, jobs, |r| {
+                let mut agg = vec![0u64; n_obj * nn];
+                for p in r.clone() {
+                    agg[object[p] as usize * nn + (page[p] & NODE_MASK) as usize] +=
+                        counts[p] as u64;
+                }
+                agg
+            });
+            for part in parts {
+                for (a, b) in epoch.agg.iter_mut().zip(part) {
+                    *a += b;
+                }
+            }
+        } else {
+            for p in 0..counts.len() {
+                epoch.agg[object[p] as usize * nn + (page[p] & NODE_MASK) as usize] +=
+                    counts[p] as u64;
+            }
         }
     }
 
@@ -275,11 +360,13 @@ impl PageState {
     /// fast-tier pages as needed. Returns (promoted_regions,
     /// demoted_regions).
     ///
-    /// The victim scan is a single linear pass over the packed column
+    /// The victim scan is a linear pass over the packed column
     /// (`page[p] == fast_node` ⇔ fast-tier *and* migratable); selection
     /// is O(pages) via `select_nth_unstable` with the deterministic key
     /// `(last_counts, page)` — the same victims the seed's stable full
-    /// sort picked, without the O(n log n).
+    /// sort picked, without the O(n log n). Past [`PAR_MIN_PAGES`] with
+    /// `--jobs > 1` the scan runs chunked (see
+    /// [`PageState::select_victims`]) with bit-identical results.
     pub fn promote_batch(&mut self, pages: &[usize]) -> (u64, u64) {
         if crate::perf::reference_enabled() {
             return self.promote_batch_reference(pages);
@@ -299,18 +386,7 @@ impl PageState {
         let need_demote = want.len().saturating_sub(free);
         let mut demoted = 0u64;
         if need_demote > 0 {
-            let mut victims: Vec<usize> = self
-                .page
-                .iter()
-                .enumerate()
-                .filter(|&(_, &v)| v == fast)
-                .map(|(p, _)| p)
-                .collect();
-            if need_demote < victims.len() {
-                victims
-                    .select_nth_unstable_by_key(need_demote - 1, |&p| (self.last_counts[p], p));
-                victims.truncate(need_demote);
-            }
+            let victims = self.select_victims(need_demote, fast);
             demoted = victims.len() as u64;
             for &v in &victims {
                 self.move_page(v, self.slow_node);
@@ -324,6 +400,50 @@ impl PageState {
             promoted += 1;
         }
         (promoted, demoted)
+    }
+
+    /// The `need` coldest migratable fast-tier pages (all of them if
+    /// fewer exist), under the strict total order `(last_counts, page)`.
+    ///
+    /// Chunked path: each chunk scans its range, keeps only its own
+    /// `need`-smallest candidates (per-chunk `select_nth_unstable` — the
+    /// global winners are necessarily among them), and a final select
+    /// over the concatenated survivors picks the true k-smallest. The
+    /// key is a strict total order, so the selected *set* is unique and
+    /// the result is bit-identical to the sequential scan however the
+    /// pages were chunked; the per-victim [`PageState::move_page`]
+    /// bookkeeping (`fast_used` ±1, u64 aggregate ±) commutes, so the
+    /// in-set order select leaves behind never matters.
+    fn select_victims(&self, need: usize, fast: u32) -> Vec<usize> {
+        debug_assert!(need > 0);
+        let key = |p: usize| (self.last_counts[p], p);
+        let mut victims: Vec<usize> = match par_chunks(self.page.len()) {
+            Some(jobs) => {
+                let ranges = chunk_ranges(self.page.len(), jobs);
+                par_map(&ranges, jobs, |r| {
+                    let mut part: Vec<usize> =
+                        r.clone().filter(|&p| self.page[p] == fast).collect();
+                    if need < part.len() {
+                        part.select_nth_unstable_by_key(need - 1, |&p| key(p));
+                        part.truncate(need);
+                    }
+                    part
+                })
+                .concat()
+            }
+            None => self
+                .page
+                .iter()
+                .enumerate()
+                .filter(|&(_, &v)| v == fast)
+                .map(|(p, _)| p)
+                .collect(),
+        };
+        if need < victims.len() {
+            victims.select_nth_unstable_by_key(need - 1, |&p| key(p));
+            victims.truncate(need);
+        }
+        victims
     }
 
     /// The seed's promotion batch, verbatim: O(pages) `fast_used`
@@ -416,21 +536,69 @@ pub fn sample_hint_faults(
     rng: &mut Rng,
 ) -> Vec<usize> {
     let mut faults = Vec::new();
+    sample_hint_faults_into(state, counts, scan_frac, slow_tier_only, rng, &mut faults);
+    faults
+}
+
+/// [`sample_hint_faults`] into a caller-owned buffer (cleared first).
+/// [`epoch_step`] threads one scratch vector through the whole run, so
+/// a simulation performs no per-epoch fault allocation.
+///
+/// Past [`PAR_MIN_PAGES`] with `--jobs > 1` the candidate filter runs
+/// chunked: each chunk collects its candidate pages, and the geometric
+/// skips then *jump* over the concatenated candidate list instead of
+/// streaming it. The jump consumes the RNG exactly as the streaming
+/// walk does — one draw up front, then one per emitted fault — so the
+/// fault set (and every later draw in the epoch) is bit-identical to
+/// the sequential path.
+pub fn sample_hint_faults_into(
+    state: &PageState,
+    counts: &[u32],
+    scan_frac: f64,
+    slow_tier_only: bool,
+    rng: &mut Rng,
+    faults: &mut Vec<usize>,
+) {
+    faults.clear();
     if scan_frac <= 0.0 {
-        return faults;
+        return;
     }
     let full = scan_frac >= 1.0;
     let ln_q = if full { 0.0 } else { (1.0 - scan_frac).ln() };
-    let mut skip = if full { 0 } else { geometric_skip(rng, ln_q) };
     let fast_key = state.fast_node as u32;
-    for p in 0..counts.len() {
+    // `v == fast_key` ⇔ migratable (PIN clear) and on the fast node.
+    let is_candidate = |p: usize| {
         let v = state.page[p];
-        if counts[p] == 0 || v & PIN != 0 {
-            continue;
+        counts[p] != 0 && v & PIN == 0 && !(slow_tier_only && v == fast_key)
+    };
+    if let Some(jobs) = par_chunks(counts.len()) {
+        let ranges = chunk_ranges(counts.len(), jobs);
+        let parts = par_map(&ranges, jobs, |r| {
+            r.clone().filter(|&p| is_candidate(p)).collect::<Vec<usize>>()
+        });
+        if full {
+            for part in &parts {
+                faults.extend_from_slice(part);
+            }
+            return;
         }
-        // `v == fast_key` ⇔ migratable (PIN clear, checked above) and on
-        // the fast node.
-        if slow_tier_only && v == fast_key {
+        // Jump selection: candidate i is the same page the streaming
+        // walk would see i-th, so `i = skip0; emit; i += 1 + skip…`
+        // replays the walk's draw sequence verbatim.
+        let mut i = geometric_skip(rng, ln_q);
+        let mut base = 0usize;
+        for part in &parts {
+            while i < base + part.len() {
+                faults.push(part[i - base]);
+                i += 1 + geometric_skip(rng, ln_q);
+            }
+            base += part.len();
+        }
+        return;
+    }
+    let mut skip = if full { 0 } else { geometric_skip(rng, ln_q) };
+    for p in 0..counts.len() {
+        if !is_candidate(p) {
             continue;
         }
         if full {
@@ -442,7 +610,6 @@ pub fn sample_hint_faults(
             skip -= 1;
         }
     }
-    faults
 }
 
 /// Failures before the next success of a Bernoulli(p) process, via
@@ -577,6 +744,8 @@ fn object_traffic_reference(
 /// One epoch of (faults → policy decision → migration → app time) —
 /// the body both [`simulate`] and [`simulate_trace`] drive, so a trace
 /// replay is bit-identical to the live producer by construction.
+/// `faults` is a run-long scratch buffer (cleared and refilled here),
+/// so no epoch allocates a fresh fault vector.
 #[allow(clippy::too_many_arguments)]
 fn epoch_step(
     sys: &System,
@@ -587,20 +756,21 @@ fn epoch_step(
     pattern: &dyn Fn(u32) -> (Pattern, f64),
     nn: usize,
     rng: &mut Rng,
+    faults: &mut Vec<usize>,
     stats: &mut VmStats,
     app_s: &mut f64,
     overhead_s: &mut f64,
 ) {
     // 1. policy observes + migrates
     let scan = policy.scan_request(state, stats);
-    let faults = sample_hint_faults(state, counts, scan.frac, scan.slow_tier_only, rng);
+    sample_hint_faults_into(state, counts, scan.frac, scan.slow_tier_only, rng, faults);
     stats.hint_faults += faults.len() as u64;
     if !crate::perf::reference_enabled() {
         // Ingest the histogram once; migrations below keep the
         // (object, node) aggregates consistent in O(Δ).
         state.set_epoch_counts(counts, nn);
     }
-    let moved_regions = policy.epoch(state, counts, &faults, stats);
+    let moved_regions = policy.epoch(state, counts, faults, stats);
     stats.migrated_pages += moved_regions * SMALL_PER_REGION;
     // 2. overheads (parallelized across threads)
     *overhead_s += (faults.len() as f64 * HINT_FAULT_NS
@@ -638,6 +808,7 @@ pub fn simulate(
     let mut overhead_s = 0.0;
     let nn = sys.nodes.len();
     let mut counts: Vec<u32> = Vec::new();
+    let mut faults: Vec<usize> = Vec::new();
 
     for e in 0..cfg.epochs {
         next_epoch(e, &mut counts);
@@ -650,6 +821,7 @@ pub fn simulate(
             &pattern,
             nn,
             &mut rng,
+            &mut faults,
             &mut stats,
             &mut app_s,
             &mut overhead_s,
@@ -671,11 +843,14 @@ pub fn simulate(
 }
 
 /// [`simulate`] over a shared immutable trace snapshot: each epoch
-/// replays `trace.epoch(e)` in place — no per-epoch histogram
-/// production or copy at all — driving the exact same epoch body as the
-/// producer path, so results are bit-identical (pinned by test). This
-/// is the path every fig16/fig17 grid cell and fleet member takes; the
-/// snapshot usually comes from [`crate::workloads::trace::global`].
+/// replays through a [`crate::workloads::trace::TraceCursor`] — dense
+/// snapshots are read in place with no per-epoch histogram production
+/// or copy at all; delta-encoded snapshots patch forward into the
+/// cursor's single reusable buffer (O(drift) per epoch) — driving the
+/// exact same epoch body as the producer path, so results are
+/// bit-identical (pinned by test). This is the path every fig16/fig17
+/// grid cell and fleet member takes; the snapshot usually comes from
+/// [`crate::workloads::trace::global`].
 pub fn simulate_trace(
     sys: &System,
     cfg: &SimConfig,
@@ -696,6 +871,8 @@ pub fn simulate_trace(
     let mut app_s = 0.0;
     let mut overhead_s = 0.0;
     let nn = sys.nodes.len();
+    let mut cursor = trace.cursor();
+    let mut faults: Vec<usize> = Vec::new();
 
     for e in 0..cfg.epochs {
         epoch_step(
@@ -703,10 +880,11 @@ pub fn simulate_trace(
             cfg,
             state,
             policy,
-            trace.epoch(e),
+            cursor.epoch(e),
             &pattern,
             nn,
             &mut rng,
+            &mut faults,
             &mut stats,
             &mut app_s,
             &mut overhead_s,
@@ -1118,6 +1296,142 @@ mod tests {
                 assert!(rel < 1e-9, "{label}: app_s {} vs {}", opt.app_s, reference.app_s);
                 assert_eq!(state.page, state_r.page, "{label}: final placement");
             }
+        }
+    }
+
+    /// A state with tie-heavy synthetic heat (forces the `(count, page)`
+    /// tie-break to matter) and a spread of fast/slow placement.
+    fn chunk_state(pages: usize) -> PageState {
+        let mut s = initial_state(pages, 0, 2, pages * 2 / 5, false);
+        for p in 0..pages {
+            s.last_counts[p] = ((p * 31) % 97) as u32;
+        }
+        s
+    }
+
+    #[test]
+    fn promote_batch_chunked_matches_sequential() {
+        // The chunked victim scan must be bit-identical to the
+        // sequential one for every job count and page count — including
+        // page counts that don't divide evenly by the chunk count.
+        for pages in [1_000usize, 1_003, 65_000] {
+            let batch: Vec<usize> = (pages * 2 / 5..pages).step_by(3).collect();
+            let mut seq = chunk_state(pages);
+            let seq_res = seq.promote_batch(&batch);
+            for jobs in [1usize, 2, 8] {
+                let mut par = chunk_state(pages);
+                let par_res = with_par_min_pages(1, || {
+                    crate::perf::with_jobs(jobs, || par.promote_batch(&batch))
+                });
+                assert_eq!(seq_res, par_res, "pages={pages} jobs={jobs}");
+                assert_eq!(seq.page, par.page, "pages={pages} jobs={jobs}");
+                assert_eq!(seq.fast_used(), par.fast_used(), "pages={pages} jobs={jobs}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_paths_stay_sequential_below_threshold() {
+        // At the paper's 65k pages and default threshold, jobs > 1 must
+        // not change anything either (the gate keeps it sequential) —
+        // same results, pinned so a threshold regression can't slip by.
+        let pages = 2_000;
+        let batch: Vec<usize> = (800..pages).step_by(2).collect();
+        let mut seq = chunk_state(pages);
+        let mut par = chunk_state(pages);
+        let a = seq.promote_batch(&batch);
+        let b = crate::perf::with_jobs(8, || par.promote_batch(&batch));
+        assert_eq!(a, b);
+        assert_eq!(seq.page, par.page);
+    }
+
+    #[test]
+    fn hint_faults_chunked_matches_sequential() {
+        // Chunked candidate filtering + jump selection must reproduce
+        // the streaming walk exactly: same fault set AND same RNG
+        // position afterwards (the epoch body keeps drawing from the
+        // same generator).
+        let pages = 50_000;
+        let s = chunk_state(pages);
+        let counts: Vec<u32> = (0..pages).map(|p| ((p * 13) % 5) as u32).collect();
+        for (frac, slow_only) in [(0.02, false), (0.02, true), (1.0, true), (0.6, false)] {
+            let mut rng_seq = Rng::seeded(99);
+            let seq = sample_hint_faults(&s, &counts, frac, slow_only, &mut rng_seq);
+            for jobs in [2usize, 8] {
+                let mut rng_par = Rng::seeded(99);
+                let par = with_par_min_pages(1, || {
+                    crate::perf::with_jobs(jobs, || {
+                        sample_hint_faults(&s, &counts, frac, slow_only, &mut rng_par)
+                    })
+                });
+                assert_eq!(seq, par, "frac={frac} slow={slow_only} jobs={jobs}");
+                assert_eq!(
+                    rng_seq.f64().to_bits(),
+                    rng_par.f64().to_bits(),
+                    "frac={frac} slow={slow_only} jobs={jobs}: RNG position diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn set_epoch_counts_chunked_matches_sequential() {
+        let pages = 30_000;
+        let counts: Vec<u32> = (0..pages).map(|p| ((p * 7) % 41) as u32).collect();
+        let objs: Vec<u32> = (0..pages as u32).map(|p| p % 3).collect();
+        let mut seq = chunk_state(pages);
+        seq.set_objects(objs.clone());
+        seq.set_epoch_counts(&counts, 4);
+        for jobs in [2usize, 8] {
+            let mut par = chunk_state(pages);
+            par.set_objects(objs.clone());
+            with_par_min_pages(1, || {
+                crate::perf::with_jobs(jobs, || par.set_epoch_counts(&counts, 4))
+            });
+            assert_eq!(
+                seq.epoch.as_ref().unwrap().agg,
+                par.epoch.as_ref().unwrap().agg,
+                "jobs={jobs}"
+            );
+        }
+    }
+
+    #[test]
+    fn full_run_chunked_matches_sequential_all_policies() {
+        // End-to-end: an entire simulate_trace run with every chunked
+        // path active (threshold lowered) must be bit-identical to the
+        // sequential run, for all four policies.
+        use crate::workloads::tiering_apps::graph500;
+        let sys = system_a();
+        let ld = sys.node_of(0, MemKind::Ldram).unwrap();
+        let cxl = sys.node_of(0, MemKind::Cxl).unwrap();
+        let mut app = graph500();
+        app.pages = 3_000;
+        let cfg = || SimConfig {
+            socket: 0,
+            threads: 64,
+            compute_ns_per_byte: 0.4,
+            epochs: 4,
+            seed: 31,
+        };
+        let pat = |_: u32| (Pattern::Random, 0.5);
+        let trace = EpochTrace::generate(&app, 4, 31);
+        for pi in 0..policies::all_policies().len() {
+            let mut state_s = initial_state(3_000, ld, cxl, 1_100, false);
+            let mut pol_s = policies::all_policies().remove(pi);
+            let seq = simulate_trace(&sys, &cfg(), &mut state_s, pol_s.as_mut(), &trace, pat);
+            let mut state_p = initial_state(3_000, ld, cxl, 1_100, false);
+            let mut pol_p = policies::all_policies().remove(pi);
+            let par = with_par_min_pages(1, || {
+                crate::perf::with_jobs(8, || {
+                    simulate_trace(&sys, &cfg(), &mut state_p, pol_p.as_mut(), &trace, pat)
+                })
+            });
+            let label = &seq.policy;
+            assert_eq!(seq.stats, par.stats, "{label}");
+            assert_eq!(seq.app_s.to_bits(), par.app_s.to_bits(), "{label}");
+            assert_eq!(seq.overhead_s.to_bits(), par.overhead_s.to_bits(), "{label}");
+            assert_eq!(state_s.page, state_p.page, "{label}");
         }
     }
 }

@@ -56,6 +56,25 @@ where
     indexed.into_iter().map(|(_, r)| r).collect()
 }
 
+/// Split `0..len` into at most `chunks` contiguous, near-equal ranges
+/// (the first `len % chunks` ranges are one element longer). Used by the
+/// chunked tiering hot paths: each range is scanned independently and the
+/// partial results are rank-merged, so the split geometry never affects
+/// the final answer — only how the work is distributed.
+pub fn chunk_ranges(len: usize, chunks: usize) -> Vec<std::ops::Range<usize>> {
+    let chunks = chunks.max(1).min(len.max(1));
+    let base = len / chunks;
+    let extra = len % chunks;
+    let mut out = Vec::with_capacity(chunks);
+    let mut start = 0;
+    for i in 0..chunks {
+        let sz = base + usize::from(i < extra);
+        out.push(start..start + sz);
+        start += sz;
+    }
+    out
+}
+
 /// `par_map` with the current thread's configured job count
 /// ([`perf::current_jobs`]); the default of 1 keeps library calls
 /// sequential unless the CLI raised it.
@@ -101,6 +120,26 @@ mod tests {
         assert!(flags.iter().all(|&r| r));
         let flags = par_map(&xs, 4, |_| crate::perf::reference_enabled());
         assert!(flags.iter().all(|&r| !r));
+    }
+
+    #[test]
+    fn chunk_ranges_cover_exactly_in_order() {
+        for len in [0usize, 1, 2, 7, 8, 9, 100, 65_000] {
+            for chunks in [1usize, 2, 3, 8, 64] {
+                let rs = chunk_ranges(len, chunks);
+                assert!(!rs.is_empty());
+                assert!(rs.len() <= chunks.max(1));
+                assert_eq!(rs[0].start, 0);
+                assert_eq!(rs.last().unwrap().end, len);
+                for w in rs.windows(2) {
+                    assert_eq!(w[0].end, w[1].start);
+                }
+                // Near-equal: sizes differ by at most one.
+                let sizes: Vec<usize> = rs.iter().map(|r| r.len()).collect();
+                let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+                assert!(mx - mn <= 1);
+            }
+        }
     }
 
     #[test]

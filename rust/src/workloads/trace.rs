@@ -6,9 +6,28 @@
 //! member seeded its own [`TraceGen`] and regenerated the identical
 //! epoch stream — at fleet scale, by far the dominant redundant work.
 //!
-//! [`EpochTrace`] is one fully materialized trace: the per-page access
-//! histogram of every epoch, flattened `[epoch][page]`, immutable once
-//! built. [`TraceStore`] hands out `Arc<EpochTrace>` snapshots keyed by
+//! [`EpochTrace`] is one immutable trace snapshot. Internally it is
+//! either **dense** (every epoch's per-page histogram, flattened
+//! `[epoch][page]`) or **delta-encoded**: consecutive epochs differ
+//! only by a drift-sized set of pages, so the snapshot stores the
+//! epoch-0 histogram plus one sparse `(page, wrapping Δcount)` list
+//! per epoch boundary. [`EpochTrace::generate`] picks whichever
+//! representation is smaller (falling back to dense mid-encode the
+//! moment deltas stop paying for themselves, so pathological drifts
+//! never hold both forms at once). A 16M-page × 10-epoch PageRank
+//! trace is ~640 MB dense — over twice the default store budget — but
+//! only base + near-empty deltas (~64 MB) delta-encoded.
+//!
+//! Replay goes through [`TraceCursor`]: a cursor owns one reusable
+//! `pages`-sized buffer and materializes epochs into it by applying
+//! boundary deltas in order, which is O(drift) per forward step and
+//! zero-copy for dense traces (the cursor hands out the stored slice
+//! directly). Delta application uses wrapping adds of wrapping
+//! differences, so reconstruction is exact for every `u32` histogram —
+//! bit-parity with the dense path is pinned by tests here and by the
+//! end-to-end `simulate_trace` parity suite.
+//!
+//! [`TraceStore`] hands out `Arc<EpochTrace>` snapshots keyed by
 //! [`TraceKey`] — `(app, pages, epochs, drift, seed)` plus the
 //! remaining histogram-shaping model fields — generating each key **at
 //! most once per process**: generation happens under the store lock, so
@@ -19,14 +38,18 @@
 //! Lifetime and memory bound: the process-global store
 //! ([`global`]) retains snapshots LRU-evicted to
 //! [`DEFAULT_BUDGET_BYTES`] at insert time (a full-size fig16 app
-//! trace — 65 000 pages × 10 epochs — is ~2.6 MB, so the default
-//! budget holds on the order of a hundred distinct fleet keys).
-//! Eviction only drops the store's own handle; outstanding `Arc`s keep
-//! their snapshot alive until the last cell finishes replaying it. The
-//! scenario batch runner additionally calls [`TraceStore::trim`] after
-//! each batch, releasing snapshots nobody holds anymore down to an
-//! idle watermark so long-lived fleet processes don't pin a full
-//! budget of cold traces between batches.
+//! trace — 65 000 pages × 10 epochs — is ~2.6 MB dense, far less
+//! delta-encoded, so the default budget holds on the order of a
+//! hundred distinct fleet keys). A single trace larger than the whole
+//! budget is returned to the caller but **never cached** (counted in
+//! `stats().oversized`) — retaining it would permanently blow the
+//! byte budget for everyone else. Eviction only drops the store's own
+//! handle; outstanding `Arc`s keep their snapshot alive until the
+//! last cell finishes replaying it. The scenario batch runner
+//! additionally calls [`TraceStore::trim`] after each batch, releasing
+//! snapshots nobody holds anymore down to an idle watermark so
+//! long-lived fleet processes don't pin a full budget of cold traces
+//! between batches.
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex, OnceLock};
@@ -71,7 +94,37 @@ impl TraceKey {
     }
 }
 
-/// One immutable, fully materialized epoch trace.
+/// Physical representation of a trace. Dense keeps every epoch's
+/// histogram flat; Delta keeps epoch 0 plus one sparse per-boundary
+/// patch list. Both reproduce the exact same epoch histograms — the
+/// representation is a pure storage decision and never part of
+/// [`TraceKey`] identity.
+#[derive(Clone, Debug)]
+enum Repr {
+    Dense {
+        /// Distance between consecutive epochs in `counts`: `pages`
+        /// for a generated trace, 0 for a constant trace (every epoch
+        /// is the same shared slice — fig17's uniform-scan workloads).
+        stride: usize,
+        counts: Vec<u32>,
+    },
+    Delta {
+        /// Epoch 0 histogram, `pages` long.
+        base: Vec<u32>,
+        /// Patched page indices, concatenated over all boundaries.
+        idx: Vec<u32>,
+        /// `new.wrapping_sub(old)` per patched page — wrapping deltas
+        /// are exact mod 2^32 for *any* pair of `u32` counts, so no
+        /// value-range fallback is ever needed.
+        val: Vec<u32>,
+        /// `ends[b]` = one-past-the-end offset into `idx`/`val` of the
+        /// boundary taking epoch `b` to epoch `b+1` (`epochs - 1`
+        /// entries; boundary `b` spans `ends[b-1]..ends[b]`).
+        ends: Vec<usize>,
+    },
+}
+
+/// One immutable epoch trace (dense or delta-encoded — see [`Repr`]).
 ///
 /// Epochs are recorded in the order the fig16 producer emits them:
 /// epoch `e`'s histogram, then one [`TraceGen::drift`] step — so a
@@ -81,17 +134,69 @@ impl TraceKey {
 pub struct EpochTrace {
     pages: usize,
     epochs: usize,
-    /// Distance between consecutive epochs in `counts`: `pages` for a
-    /// generated trace, 0 for a constant trace (every epoch is the same
-    /// shared slice — fig17's uniform-scan workloads).
-    stride: usize,
-    counts: Vec<u32>,
+    repr: Repr,
 }
 
 impl EpochTrace {
     /// Materialize `epochs` epochs of `model` under `seed`, driving the
-    /// incremental generator exactly as the live fig16 producer does.
+    /// incremental generator exactly as the live fig16 producer does,
+    /// and choosing the smaller of the dense and delta representations.
+    /// The delta encoder only ever holds two epoch buffers plus the
+    /// sparse patches; if mid-encode the patches grow past the dense
+    /// footprint it abandons them and regenerates densely (the
+    /// generator is deterministic, so the restart is exact).
     pub fn generate(model: &AppModel, epochs: usize, seed: u64) -> EpochTrace {
+        let pages = model.pages;
+        if epochs == 0 {
+            return EpochTrace {
+                pages,
+                epochs,
+                repr: Repr::Dense {
+                    stride: pages,
+                    counts: Vec::new(),
+                },
+            };
+        }
+        let dense_bytes = epochs * pages * std::mem::size_of::<u32>();
+        let mut gen = TraceGen::new(model.clone(), seed);
+        let mut base = Vec::new();
+        gen.epoch_counts_into(&mut base);
+        gen.drift();
+        let mut prev = base.clone();
+        let mut cur = Vec::new();
+        let (mut idx, mut val, mut ends) = (Vec::new(), Vec::new(), Vec::new());
+        for _ in 1..epochs {
+            gen.epoch_counts_into(&mut cur);
+            for p in 0..pages {
+                if cur[p] != prev[p] {
+                    idx.push(p as u32);
+                    val.push(cur[p].wrapping_sub(prev[p]));
+                }
+            }
+            ends.push(idx.len());
+            if delta_bytes(pages, idx.len(), ends.len()) >= dense_bytes {
+                return Self::generate_dense(model, epochs, seed);
+            }
+            std::mem::swap(&mut prev, &mut cur);
+            gen.drift();
+        }
+        EpochTrace {
+            pages,
+            epochs,
+            repr: Repr::Delta {
+                base,
+                idx,
+                val,
+                ends,
+            },
+        }
+    }
+
+    /// Materialize every epoch flat (`[epoch][page]`), unconditionally.
+    /// This is the pre-delta storage layout; [`EpochTrace::generate`]
+    /// falls back to it when the sparse encoding would not be smaller,
+    /// and the parity tests use it as the bit-exact reference.
+    pub fn generate_dense(model: &AppModel, epochs: usize, seed: u64) -> EpochTrace {
         let mut gen = TraceGen::new(model.clone(), seed);
         let mut counts = Vec::with_capacity(epochs * model.pages);
         let mut buf = Vec::new();
@@ -103,8 +208,10 @@ impl EpochTrace {
         EpochTrace {
             pages: model.pages,
             epochs,
-            stride: model.pages,
-            counts,
+            repr: Repr::Dense {
+                stride: model.pages,
+                counts,
+            },
         }
     }
 
@@ -114,16 +221,32 @@ impl EpochTrace {
         EpochTrace {
             pages: counts.len(),
             epochs,
-            stride: 0,
-            counts,
+            repr: Repr::Dense { stride: 0, counts },
         }
     }
 
-    /// Per-page access counts of epoch `e`.
-    pub fn epoch(&self, e: usize) -> &[u32] {
-        assert!(e < self.epochs, "epoch {e} out of range ({})", self.epochs);
-        let base = e * self.stride;
-        &self.counts[base..base + self.pages]
+    /// A replay cursor with its own reusable materialization buffer.
+    /// Cursors are cheap; each replaying cell holds one for the length
+    /// of its run.
+    pub fn cursor(&self) -> TraceCursor<'_> {
+        TraceCursor {
+            trace: self,
+            buf: Vec::new(),
+            at: usize::MAX,
+        }
+    }
+
+    /// Epoch `e`'s histogram as an owned vector (convenience for tests
+    /// and one-shot inspection; replay loops should use [`cursor`]).
+    ///
+    /// [`cursor`]: EpochTrace::cursor
+    pub fn materialize(&self, e: usize) -> Vec<u32> {
+        self.cursor().epoch(e).to_vec()
+    }
+
+    /// Whether this snapshot is delta-encoded (vs dense).
+    pub fn is_delta(&self) -> bool {
+        matches!(self.repr, Repr::Delta { .. })
     }
 
     pub fn pages(&self) -> usize {
@@ -136,7 +259,70 @@ impl EpochTrace {
 
     /// Heap footprint (the store's budget currency).
     pub fn bytes(&self) -> usize {
-        self.counts.len() * std::mem::size_of::<u32>()
+        match &self.repr {
+            Repr::Dense { counts, .. } => counts.len() * std::mem::size_of::<u32>(),
+            Repr::Delta {
+                base, idx, ends, ..
+            } => delta_bytes(base.len(), idx.len(), ends.len()),
+        }
+    }
+}
+
+fn delta_bytes(pages: usize, patches: usize, boundaries: usize) -> usize {
+    // base + idx + val (u32 each) + ends (usize each).
+    (pages + 2 * patches) * std::mem::size_of::<u32>()
+        + boundaries * std::mem::size_of::<usize>()
+}
+
+/// Sequential-friendly epoch accessor over one [`EpochTrace`].
+///
+/// For dense traces [`epoch`] returns the stored slice directly (zero
+/// copies). For delta traces it keeps the last materialized epoch in a
+/// reusable buffer: stepping forward applies only the boundary patches
+/// in between (O(drift) per step — the `simulate_trace` replay pattern),
+/// while a backward or cold request rebuilds from the epoch-0 base.
+///
+/// [`epoch`]: TraceCursor::epoch
+pub struct TraceCursor<'a> {
+    trace: &'a EpochTrace,
+    buf: Vec<u32>,
+    /// Epoch currently materialized in `buf`; `usize::MAX` = none.
+    at: usize,
+}
+
+impl<'a> TraceCursor<'a> {
+    /// Per-page access counts of epoch `e`.
+    pub fn epoch(&mut self, e: usize) -> &[u32] {
+        let t = self.trace;
+        assert!(e < t.epochs, "epoch {e} out of range ({})", t.epochs);
+        match &t.repr {
+            Repr::Dense { stride, counts } => {
+                let start = e * stride;
+                &counts[start..start + t.pages]
+            }
+            Repr::Delta {
+                base,
+                idx,
+                val,
+                ends,
+            } => {
+                if self.at == usize::MAX || self.at > e {
+                    self.buf.clear();
+                    self.buf.extend_from_slice(base);
+                    self.at = 0;
+                }
+                while self.at < e {
+                    let b = self.at;
+                    let start = if b == 0 { 0 } else { ends[b - 1] };
+                    for i in start..ends[b] {
+                        let p = idx[i] as usize;
+                        self.buf[p] = self.buf[p].wrapping_add(val[i]);
+                    }
+                    self.at += 1;
+                }
+                &self.buf
+            }
+        }
     }
 }
 
@@ -153,6 +339,7 @@ struct Inner {
     requests: u64,
     generated: u64,
     evicted: u64,
+    oversized: u64,
 }
 
 /// Store counters (`cxlmem trace-smoke` gates on `generated`).
@@ -164,6 +351,9 @@ pub struct TraceStoreStats {
     pub generated: u64,
     /// Entries dropped by the LRU budget.
     pub evicted: u64,
+    /// Generated traces larger than the whole budget, returned to the
+    /// caller but never cached (each repeat request regenerates).
+    pub oversized: u64,
     /// Entries currently held.
     pub entries: usize,
     /// Bytes currently held.
@@ -201,6 +391,10 @@ impl TraceStore {
     /// (milliseconds) while the evaluation that follows each fetch is
     /// orders of magnitude larger, and it keeps the single-generation
     /// counter exact without per-key once-cells.
+    ///
+    /// A trace larger than the whole budget is returned but not cached
+    /// (`stats().oversized`): retaining it would exceed the byte budget
+    /// permanently, since LRU eviction can never shrink below one entry.
     pub fn get(&self, model: &AppModel, epochs: usize, seed: u64) -> Arc<EpochTrace> {
         let key = TraceKey::of(model, epochs, seed);
         let mut inner = self.lock();
@@ -213,6 +407,10 @@ impl TraceStore {
         }
         let trace = Arc::new(EpochTrace::generate(model, epochs, seed));
         inner.generated += 1;
+        if trace.bytes() > self.budget {
+            inner.oversized += 1;
+            return trace;
+        }
         inner.bytes += trace.bytes();
         let entry = Entry {
             trace: Arc::clone(&trace),
@@ -254,6 +452,9 @@ impl TraceStore {
     }
 
     fn evict_over(inner: &mut Inner, budget: usize) {
+        // Oversized entries never enter the map (see `get`), so this
+        // always terminates with `bytes <= budget`: the `len() > 1`
+        // guard only stops it when the single remaining entry fits.
         while inner.bytes > budget && inner.map.len() > 1 {
             let key = inner
                 .map
@@ -280,6 +481,7 @@ impl TraceStore {
             requests: inner.requests,
             generated: inner.generated,
             evicted: inner.evicted,
+            oversized: inner.oversized,
             entries: inner.map.len(),
             bytes: inner.bytes,
         }
@@ -296,7 +498,7 @@ pub fn global() -> &'static TraceStore {
 mod tests {
     use super::*;
     use crate::util::par::par_map;
-    use crate::workloads::tiering_apps::{graph500, pagerank};
+    use crate::workloads::tiering_apps::{all_apps, graph500, pagerank};
 
     fn small(mut app: AppModel, pages: usize) -> AppModel {
         app.pages = pages;
@@ -310,13 +512,64 @@ mod tests {
         // order: counts, then drift).
         let app = small(graph500(), 2_000);
         let trace = EpochTrace::generate(&app, 6, 17);
+        let mut cursor = trace.cursor();
         let mut gen = TraceGen::new(app, 17);
         let mut buf = Vec::new();
         for e in 0..6 {
             gen.epoch_counts_into(&mut buf);
-            assert_eq!(trace.epoch(e), &buf[..], "epoch {e}");
+            assert_eq!(cursor.epoch(e), &buf[..], "epoch {e}");
             gen.drift();
         }
+    }
+
+    #[test]
+    fn delta_matches_dense_for_all_apps_and_drifts() {
+        // The representation is a pure storage decision: whatever
+        // `generate` picks, every epoch must be bit-identical to the
+        // unconditional dense layout — in replay order and under
+        // random access (backward seeks rebuild from the base).
+        for app in all_apps() {
+            for drift in [0.0, 0.05, 0.5] {
+                let mut app = small(app.clone(), 1_200);
+                app.drift = drift;
+                let auto = EpochTrace::generate(&app, 6, 9);
+                let dense = EpochTrace::generate_dense(&app, 6, 9);
+                assert_eq!(auto.bytes() <= dense.bytes(), true, "{} d={drift}", app.name);
+                let mut c = auto.cursor();
+                let mut d = dense.cursor();
+                for e in 0..6 {
+                    assert_eq!(c.epoch(e), d.epoch(e), "{} d={drift} e={e}", app.name);
+                }
+                for e in [3usize, 1, 4, 0, 5, 2] {
+                    assert_eq!(c.epoch(e), d.epoch(e), "{} d={drift} seek e={e}", app.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn delta_encoding_shrinks_low_drift_traces() {
+        // PageRank has drift 0: every boundary patch list is empty, so
+        // the delta form is ~1/epochs of dense (the ISSUE memory-math
+        // case scaled down). The ≥8× floor here mirrors the 16M bench
+        // target.
+        let app = small(pagerank(), 50_000);
+        let tr = EpochTrace::generate(&app, 10, 7);
+        assert!(tr.is_delta());
+        let dense = EpochTrace::generate_dense(&app, 10, 7);
+        assert!(!dense.is_delta());
+        assert!(
+            tr.bytes() * 8 <= dense.bytes(),
+            "delta {} vs dense {}",
+            tr.bytes(),
+            dense.bytes()
+        );
+        // High-drift scattered traces may not shrink; generate must
+        // then hand back the dense layout rather than a larger delta.
+        let mut hot = small(graph500(), 1_000);
+        hot.drift = 1.0;
+        let t = EpochTrace::generate(&hot, 6, 3);
+        assert!(t.bytes() <= EpochTrace::generate_dense(&hot, 6, 3).bytes());
     }
 
     #[test]
@@ -378,7 +631,52 @@ mod tests {
         // …and a re-request regenerates it.
         let a2 = store.get(&app, 2, 1);
         assert!(!Arc::ptr_eq(&a, &a2));
-        assert_eq!(a.epoch(1), a2.epoch(1), "regeneration is deterministic");
+        assert_eq!(
+            a.materialize(1),
+            a2.materialize(1),
+            "regeneration is deterministic"
+        );
+    }
+
+    #[test]
+    fn oversized_trace_bypasses_retention() {
+        // A trace bigger than the whole budget used to be inserted and
+        // then retained forever by the `len() > 1` eviction guard,
+        // permanently blowing the byte budget. It must now be returned
+        // without being cached.
+        let app = small(pagerank(), 1_000);
+        let store = TraceStore::with_budget(64); // smaller than any trace
+        let a = store.get(&app, 2, 1);
+        assert!(a.bytes() > 64);
+        let s = store.stats();
+        assert_eq!((s.generated, s.oversized), (1, 1));
+        assert_eq!((s.entries, s.bytes, s.evicted), (0, 0, 0));
+        // Repeat requests regenerate (documented cost of not caching)…
+        let a2 = store.get(&app, 2, 1);
+        assert!(!Arc::ptr_eq(&a, &a2));
+        assert_eq!(a.materialize(1), a2.materialize(1));
+        assert_eq!(store.stats().oversized, 2);
+        // …and trim/clear still behave with an empty map.
+        store.trim();
+        assert_eq!(store.stats().entries, 0);
+    }
+
+    #[test]
+    fn delta_encoding_fits_budget_dense_cannot() {
+        // The ISSUE scale case, shrunk 16×: a 1M-page × 10-epoch
+        // PageRank trace is 40 MB dense — over a 32 MB store budget —
+        // but ~4 MB delta-encoded, so the store can retain it.
+        let app = small(pagerank(), 1 << 20);
+        let dense_bytes = 10 * (1usize << 20) * 4;
+        let budget = 32 << 20;
+        assert!(dense_bytes > budget);
+        let store = TraceStore::with_budget(budget);
+        let t = store.get(&app, 10, 7);
+        assert!(t.is_delta());
+        assert!(t.bytes() <= budget, "delta bytes {}", t.bytes());
+        let s = store.stats();
+        assert_eq!((s.entries, s.oversized), (1, 0));
+        assert!(Arc::ptr_eq(&t, &store.get(&app, 10, 7)));
     }
 
     #[test]
@@ -406,8 +704,12 @@ mod tests {
         assert_eq!(t.pages(), 5);
         assert_eq!(t.epochs(), 10);
         assert_eq!(t.bytes(), 5 * 4);
-        assert_eq!(t.epoch(0), t.epoch(9));
-        assert!(std::ptr::eq(t.epoch(0).as_ptr(), t.epoch(9).as_ptr()));
+        assert!(!t.is_delta());
+        let mut c = t.cursor();
+        let p0 = c.epoch(0).as_ptr();
+        assert_eq!(c.epoch(9), &[3, 1, 4, 1, 5]);
+        let p9 = c.epoch(9).as_ptr();
+        assert!(std::ptr::eq(p0, p9), "stride-0 epochs share storage");
     }
 
     #[test]

@@ -1,0 +1,143 @@
+//! Million-page scale suite (tiering hot path at production page counts).
+//!
+//! Pins the scale acceptance criteria through the public API:
+//! - full `simulate_trace` runs are bit-identical between the chunked
+//!   intra-epoch passes (`--jobs > 1`) and the sequential path, for all
+//!   four policies;
+//! - `promote_batch` chunked victim selection matches the sequential
+//!   scan at the million-page point of the jobs × pages grid (the unit
+//!   tests in `tiering` cover the smaller points);
+//! - delta-encoded trace replay is bit-identical to a dense trace for
+//!   all four apps across drift rates.
+
+use cxlmem::memsim::{topology, MemKind, NodeId, Pattern, System};
+use cxlmem::perf;
+use cxlmem::tiering::{self, initial_state, policies, with_par_min_pages, SimConfig, TieringRun};
+use cxlmem::workloads::tiering_apps::{all_apps, AppModel};
+use cxlmem::workloads::trace::EpochTrace;
+
+/// One fig16-style cell: first-touch placement on system A, policy by
+/// paper-order index, replaying `trace`. Returns the run plus the final
+/// placement column so callers can assert bit-identical end states.
+fn run_cell(
+    sys: &System,
+    app: &AppModel,
+    trace: &EpochTrace,
+    epochs: usize,
+    seed: u64,
+    policy_index: usize,
+) -> (TieringRun, usize, Vec<NodeId>) {
+    let socket = 0;
+    let ld = sys.node_of(socket, MemKind::Ldram).unwrap();
+    let cxl = sys.node_of(socket, MemKind::Cxl).unwrap();
+    let fast_cap = app.pages * 2 / 5;
+    let mut state = initial_state(app.pages, ld, cxl, fast_cap, false);
+    let mut policy = policies::all_policies().remove(policy_index);
+    let cfg = SimConfig {
+        socket,
+        threads: 8,
+        compute_ns_per_byte: app.compute_ns_per_access / 64.0,
+        epochs,
+        seed,
+    };
+    let run = tiering::simulate_trace(sys, &cfg, &mut state, policy.as_mut(), trace, |_| {
+        (Pattern::Random, 0.55)
+    });
+    let placement: Vec<NodeId> = (0..app.pages).map(|p| state.node_of(p)).collect();
+    (run, state.fast_used(), placement)
+}
+
+fn assert_runs_identical(label: &str, a: &(TieringRun, usize, Vec<NodeId>), b: &(TieringRun, usize, Vec<NodeId>)) {
+    assert_eq!(a.0.stats, b.0.stats, "{label}: VmStats diverged");
+    assert_eq!(
+        a.0.app_s.to_bits(),
+        b.0.app_s.to_bits(),
+        "{label}: app seconds diverged"
+    );
+    assert_eq!(
+        a.0.overhead_s.to_bits(),
+        b.0.overhead_s.to_bits(),
+        "{label}: overhead seconds diverged"
+    );
+    assert_eq!(a.1, b.1, "{label}: fast_used diverged");
+    assert_eq!(a.2, b.2, "{label}: final placement diverged");
+}
+
+/// Chunked intra-epoch passes must be bit-identical to the sequential
+/// path for every policy — full runs, not just the individual kernels.
+#[test]
+fn full_runs_chunked_vs_sequential_all_policies() {
+    let sys = topology::system_a();
+    let epochs = 4;
+    let seed = 17;
+    for (ai, mut app) in all_apps().into_iter().enumerate() {
+        app.pages = 3_000 + ai * 511; // odd sizes exercise uneven chunking
+        let trace = EpochTrace::generate(&app, epochs, seed);
+        for pi in 0..policies::all_policies().len() {
+            let seq = run_cell(&sys, &app, &trace, epochs, seed, pi);
+            for jobs in [2, 8] {
+                let par = with_par_min_pages(1, || {
+                    perf::with_jobs(jobs, || run_cell(&sys, &app, &trace, epochs, seed, pi))
+                });
+                assert_runs_identical(
+                    &format!("{} policy {pi} jobs {jobs}", app.name),
+                    &seq,
+                    &par,
+                );
+            }
+        }
+    }
+}
+
+/// The million-page point of the promotion-scan grid: chunked per-chunk
+/// top-k + rank merge selects exactly the pages the sequential scan
+/// would, and leaves an identical placement column behind.
+#[test]
+fn promote_batch_parity_at_one_million_pages() {
+    let pages: usize = 1 << 20;
+    let fast_cap = pages * 2 / 5;
+    let build = || {
+        let mut st = initial_state(pages, 0, 2, fast_cap, false);
+        for p in 0..pages {
+            st.last_counts[p] = ((p * 31) % 97) as u32;
+        }
+        st
+    };
+    let batch: Vec<usize> = (fast_cap..pages).step_by(24).collect();
+    let mut seq = build();
+    let seq_res = seq.promote_batch(&batch);
+    for jobs in [2, 8] {
+        let mut par = build();
+        let par_res = perf::with_jobs(jobs, || par.promote_batch(&batch));
+        assert_eq!(seq_res, par_res, "jobs {jobs}: promotion counts diverged");
+        assert_eq!(seq.fast_used(), par.fast_used(), "jobs {jobs}");
+        assert!(
+            (0..pages).all(|p| seq.node_of(p) == par.node_of(p)),
+            "jobs {jobs}: placement diverged"
+        );
+    }
+}
+
+/// Delta-encoded snapshots must replay bit-identically to dense traces
+/// for every app across drift rates (no drift, light drift, heavy
+/// drift — the last typically falls back to dense encoding, which must
+/// behave the same too).
+#[test]
+fn delta_replay_matches_dense_all_apps_and_drifts() {
+    let sys = topology::system_a();
+    let epochs = 5;
+    let seed = 23;
+    let tpp_index = policies::all_policies().len() - 1;
+    for mut app in all_apps() {
+        app.pages = 2_500;
+        for drift in [0.0, 0.05, 0.5] {
+            app.drift = drift;
+            let delta = EpochTrace::generate(&app, epochs, seed);
+            let dense = EpochTrace::generate_dense(&app, epochs, seed);
+            assert!(!dense.is_delta());
+            let a = run_cell(&sys, &app, &delta, epochs, seed, tpp_index);
+            let b = run_cell(&sys, &app, &dense, epochs, seed, tpp_index);
+            assert_runs_identical(&format!("{} drift {drift}", app.name), &a, &b);
+        }
+    }
+}
