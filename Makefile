@@ -2,14 +2,15 @@
 #
 # `make ci` is the PR gate: release build, tests (including the
 # golden-parity suite), a quick hot-path benchmark pass with schema
-# validation of BENCH_hotpath.json, the scenario engine checks, the
-# result-cache smoke, the two-process shard smoke, the shared
-# epoch-trace store smoke, the million-page scale smoke, and a
-# formatting check. Mirrors .github/workflows/ci.yml.
+# validation of BENCH_hotpath.json + BENCH_metrics.json, the scenario
+# engine checks, the result-cache smoke, the two-process shard smoke,
+# the metrics-registry smoke, the shared epoch-trace store smoke, the
+# million-page scale smoke, and a formatting check. Mirrors
+# .github/workflows/ci.yml.
 
-.PHONY: ci build test bench-smoke bench bench-check fmt-check exp-all scenario-check cache-smoke shard-smoke trace-smoke scale-smoke
+.PHONY: ci build test bench-smoke bench bench-check fmt-check exp-all scenario-check cache-smoke shard-smoke metrics-smoke trace-smoke scale-smoke
 
-ci: build test bench-check scenario-check cache-smoke shard-smoke trace-smoke scale-smoke fmt-check
+ci: build test bench-check scenario-check cache-smoke shard-smoke metrics-smoke trace-smoke scale-smoke fmt-check
 
 build:
 	cargo build --release
@@ -27,10 +28,12 @@ bench:
 	cargo bench --bench hotpath
 
 # Benchmark gate: quick suite run through the CLI (writes
-# BENCH_hotpath.json), then schema validation (cxlmem-bench-v1).
+# BENCH_hotpath.json plus a BENCH_metrics.json registry sidecar), then
+# schema validation of both (cxlmem-bench-v1, cxlmem-metrics-v1).
 bench-check: build
-	./target/release/cxlmem bench --quick --out BENCH_hotpath.json
+	./target/release/cxlmem bench --quick --out BENCH_hotpath.json --metrics BENCH_metrics.json
 	./target/release/cxlmem bench --validate BENCH_hotpath.json
+	./target/release/cxlmem stats --validate BENCH_metrics.json
 
 fmt-check:
 	cargo fmt --check
@@ -73,6 +76,25 @@ shard-smoke: build
 	./target/release/cxlmem scenario report /tmp/cxlmem-shard-smoke/coord.jsonl | grep -q "best policy per device profile"
 	./target/release/cxlmem scenario report /tmp/cxlmem-shard-smoke/cache | grep -q "best policy per device profile"
 	rm -rf /tmp/cxlmem-shard-smoke
+
+# Metrics gate: the in-process consistency check (cold/warm fleet run
+# against one cache store; registry deltas must agree with the cache
+# handle's own counters), then the CLI path — a fleet run writes a
+# sidecar that `cxlmem stats` validates and renders, `--metrics -`
+# lands the snapshot on stderr, the warm re-run's JSONL is
+# byte-identical, and `scenario report --metrics` folds the sidecar
+# into the fleet summary.
+metrics-smoke: build
+	./target/release/cxlmem metrics-smoke
+	rm -rf /tmp/cxlmem-metrics-smoke && mkdir -p /tmp/cxlmem-metrics-smoke
+	./target/release/cxlmem scenario expand examples/scenarios/fleet.json --count 4 --seed 5 --out /tmp/cxlmem-metrics-smoke/fleet.jsonl
+	./target/release/cxlmem scenario run /tmp/cxlmem-metrics-smoke/fleet.jsonl --jobs 2 --cache-dir /tmp/cxlmem-metrics-smoke/cache --metrics /tmp/cxlmem-metrics-smoke/m1.json --out /tmp/cxlmem-metrics-smoke/r1.jsonl
+	./target/release/cxlmem stats --validate /tmp/cxlmem-metrics-smoke/m1.json
+	./target/release/cxlmem stats /tmp/cxlmem-metrics-smoke/m1.json | grep -q "runtime metrics"
+	./target/release/cxlmem scenario run /tmp/cxlmem-metrics-smoke/fleet.jsonl --jobs 2 --cache-dir /tmp/cxlmem-metrics-smoke/cache --metrics - --out /tmp/cxlmem-metrics-smoke/r2.jsonl 2>&1 | grep -q "cxlmem-metrics-v1"
+	cmp /tmp/cxlmem-metrics-smoke/r1.jsonl /tmp/cxlmem-metrics-smoke/r2.jsonl
+	./target/release/cxlmem scenario report /tmp/cxlmem-metrics-smoke/r1.jsonl --metrics /tmp/cxlmem-metrics-smoke/m1.json | grep -q "runtime metrics"
+	rm -rf /tmp/cxlmem-metrics-smoke
 
 # Shared epoch-trace store gate: fig16 twice in one process must emit
 # byte-identical reports from a single trace generation per app

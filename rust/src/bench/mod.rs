@@ -14,7 +14,8 @@
 //!   "smoke": false,
 //!   "hotpaths": [
 //!     {"name": "memsim/solve_traffic(2 streams)", "mode": "reference",
-//!      "median_ns": 0.0, "mean_ns": 0.0, "p95_ns": 0.0, "iters": 0}
+//!      "median_ns": 0.0, "mean_ns": 0.0, "p50_ns": 0.0, "p90_ns": 0.0,
+//!      "p95_ns": 0.0, "iters": 0}
 //!   ],
 //!   "wall": {"exp_all_reference_s": 0.0, "exp_all_optimized_s": 0.0},
 //!   "speedup": {"exp/all": 0.0, "tiering/epoch(PageRank, t08, 65k pages)": 0.0}
@@ -611,6 +612,8 @@ fn sampled_result(label: String, ns: &[f64]) -> BenchResult {
         iters: ns.len() as u64,
         mean_ns: stats::mean(ns),
         median_ns: stats::median(ns),
+        p50_ns: crate::util::timer::bucketed_percentile(ns, 50.0),
+        p90_ns: crate::util::timer::bucketed_percentile(ns, 90.0),
         p95_ns: stats::percentile(ns, 95.0),
         stddev_ns: stats::stddev(ns),
     }
@@ -635,6 +638,10 @@ impl BenchReport {
                 ("mode", h.mode.into()),
                 ("median_ns", h.result.median_ns.into()),
                 ("mean_ns", h.result.mean_ns.into()),
+                // Bucketed through util::metrics edges — comparable
+                // 1:1 with metrics-sidecar histogram quantiles.
+                ("p50_ns", h.result.p50_ns.into()),
+                ("p90_ns", h.result.p90_ns.into()),
                 ("p95_ns", h.result.p95_ns.into()),
                 ("iters", h.result.iters.into()),
             ])
@@ -774,6 +781,8 @@ mod tests {
                     iters: 10,
                     mean_ns: 2.0,
                     median_ns: 1.5,
+                    p50_ns: 1.5,
+                    p90_ns: 2.5,
                     p95_ns: 3.0,
                     stddev_ns: 0.1,
                 },
@@ -791,6 +800,8 @@ mod tests {
         let hp = j.get("hotpaths").unwrap().as_arr().unwrap();
         assert_eq!(hp[0].get("name").unwrap().as_str(), Some(SOLVER_NAME));
         assert_eq!(hp[0].get("mode").unwrap().as_str(), Some("optimized"));
+        assert_eq!(hp[0].get("p50_ns").unwrap().as_f64(), Some(1.5));
+        assert_eq!(hp[0].get("p90_ns").unwrap().as_f64(), Some(2.5));
         let wall = j.get("wall").unwrap();
         assert_eq!(wall.get("exp_all_reference_s").unwrap().as_f64(), Some(4.0));
         assert_eq!(
@@ -813,6 +824,8 @@ mod tests {
                     iters: 4,
                     mean_ns: 2.0,
                     median_ns: 1.5,
+                    p50_ns: 1.5,
+                    p90_ns: 2.5,
                     p95_ns: 3.0,
                     stddev_ns: 0.1,
                 },

@@ -8,8 +8,12 @@
 //!                    [--shard K/N] [--no-cache] [--cache-dir DIR]  (result cache on by default)
 //! cxlmem scenario bench [--count N] [--jobs N] [--cache]      fleet throughput probe
 //! cxlmem scenario report <results.jsonl|cache dir>            fleet summaries from result JSONL
+//!                    [--metrics FILE]                         (fold in metrics sidecars)
 //! cxlmem bench [--smoke|--quick] [--jobs N] [--out FILE]      hot-path benchmarks → BENCH_hotpath.json
 //! cxlmem bench --validate FILE                                schema-check a BENCH_hotpath.json
+//! cxlmem stats [FILE|-] [--json]                              render a cxlmem-metrics-v1 snapshot
+//! cxlmem stats --validate FILE                                schema-check a metrics sidecar
+//! cxlmem metrics-smoke [--count N] [--jobs N]                 metrics/cache consistency gate (make metrics-smoke)
 //! cxlmem trace-smoke                                          shared epoch-trace store gate (make trace-smoke)
 //! cxlmem scale-smoke [--pages N] [--epochs N] [--jobs N]      million-page parity + peak-RSS gate (make scale-smoke)
 //!                    [--rss-mb MB]
@@ -17,6 +21,10 @@
 //! cxlmem serve [--requests N]                                 FlexGen-style serving demo
 //! cxlmem info                                                 platform + artifact status
 //! ```
+//!
+//! `exp`, `scenario run|bench`, `bench` and the smokes all accept
+//! `--metrics FILE` (`-` for stderr) to write a `cxlmem-metrics-v1`
+//! registry snapshot when the command finishes — see README "Metrics".
 
 use anyhow::Result;
 
@@ -31,7 +39,9 @@ fn main() -> Result<()> {
         "exp" => cmd_exp(&args),
         "scenario" => cmd_scenario(&args),
         "bench" => cmd_bench(&args),
-        "trace-smoke" => cmd_trace_smoke(),
+        "stats" => cmd_stats(&args),
+        "metrics-smoke" => cmd_metrics_smoke(&args),
+        "trace-smoke" => cmd_trace_smoke(&args),
         "scale-smoke" => cmd_scale_smoke(&args),
         "train" => cxlmem::exp::drivers::train(&args),
         "serve" => cxlmem::exp::drivers::serve(&args),
@@ -43,7 +53,34 @@ fn main() -> Result<()> {
     }
 }
 
+/// `--metrics FILE` handling shared by every long-running verb: resolve
+/// the requested sidecar destination up front (so a malformed flag
+/// fails before the run, not after), then write a registry snapshot
+/// when the command finishes. `-` sends the snapshot to stderr so it
+/// never mixes with JSONL on stdout.
+fn metrics_out(args: &Args) -> Result<Option<String>> {
+    // A bare `--metrics` (FILE forgotten, or eaten by a following flag)
+    // must error, not silently drop the sidecar.
+    if args.flag("metrics") {
+        anyhow::bail!("--metrics requires a FILE argument ('-' for stderr)");
+    }
+    Ok(args.get("metrics").map(String::from))
+}
+
+fn emit_metrics(dest: Option<&String>) -> Result<()> {
+    let Some(path) = dest else { return Ok(()) };
+    let snap = cxlmem::util::metrics::snapshot();
+    if path == "-" {
+        eprintln!("{snap}");
+    } else {
+        std::fs::write(path, format!("{snap}\n"))?;
+        eprintln!("wrote metrics sidecar {path}");
+    }
+    Ok(())
+}
+
 fn cmd_exp(args: &Args) -> Result<()> {
+    let metrics = metrics_out(args)?;
     let id = args
         .positional
         .get(1)
@@ -80,7 +117,7 @@ fn cmd_exp(args: &Args) -> Result<()> {
                 report.print(fmt);
             }
         }
-        return Ok(());
+        return emit_metrics(metrics.as_ref());
     }
     let jobs = args.get_usize("jobs", 1);
     cxlmem::perf::set_jobs(jobs);
@@ -91,7 +128,7 @@ fn cmd_exp(args: &Args) -> Result<()> {
     } else {
         report.print(fmt);
     }
-    Ok(())
+    emit_metrics(metrics.as_ref())
 }
 
 fn cmd_scenario(args: &Args) -> Result<()> {
@@ -159,9 +196,10 @@ fn cmd_scenario(args: &Args) -> Result<()> {
             if files.is_empty() {
                 bail!(
                     "usage: cxlmem scenario run <files...|-> [--jobs N] [--out FILE] \
-                     [--shard K/N] [--no-cache] [--cache-dir DIR]"
+                     [--shard K/N] [--no-cache] [--cache-dir DIR] [--metrics FILE]"
                 );
             }
+            let metrics = metrics_out(args)?;
             let mut specs = Vec::new();
             for file in files {
                 let text = if file == "-" {
@@ -189,10 +227,12 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                 None => eprintln!("ran {} scenario(s) on {jobs} job(s)", results.len()),
             }
             let out = to_jsonl(results.into_iter().map(|r| r.doc));
-            write_or_print(args, &out)
+            write_or_print(args, &out)?;
+            emit_metrics(metrics.as_ref())
         }
         "bench" => {
             // Throughput probe: expand a default fleet and time the batch.
+            let metrics = metrics_out(args)?;
             let count = args.get_usize("count", 64);
             let seed = args.get_u64("seed", 42);
             let jobs = args.get_usize("jobs", cxlmem::perf::default_jobs());
@@ -225,16 +265,16 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                 let out = to_jsonl(results.into_iter().map(|r| r.doc));
                 write_or_print(args, &out)?;
             }
-            Ok(())
+            emit_metrics(metrics.as_ref())
         }
         "report" => {
             let file = files.first().ok_or_else(|| {
                 anyhow!(
                     "usage: cxlmem scenario report <results.jsonl|cache dir|-> \
-                     [--csv|--json] [--out FILE]"
+                     [--csv|--json] [--out FILE] [--metrics FILE]"
                 )
             })?;
-            let text = if file == "-" {
+            let mut text = if file == "-" {
                 let mut buf = String::new();
                 std::io::Read::read_to_string(&mut std::io::stdin(), &mut buf)?;
                 buf
@@ -248,6 +288,20 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                 std::fs::read_to_string(&path)
                     .with_context(|| format!("reading {}", path.display()))?
             };
+            // `--metrics FILE` folds a run's metrics sidecar into the
+            // summary: collect_docs routes lines by schema, so the
+            // sidecar text simply concatenates onto the result JSONL.
+            if args.flag("metrics") {
+                bail!("--metrics requires a FILE argument (a metrics sidecar)");
+            }
+            if let Some(side) = args.get("metrics") {
+                let extra = std::fs::read_to_string(side)
+                    .with_context(|| format!("reading metrics sidecar {side}"))?;
+                if !text.ends_with('\n') && !text.is_empty() {
+                    text.push('\n');
+                }
+                text.push_str(&extra);
+            }
             let report = scenario::summarize_text(&text).map_err(|e| anyhow!("{file}: {e}"))?;
             let fmt = if args.flag("json") {
                 Format::Json
@@ -272,10 +326,11 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                  \x20 cxlmem scenario validate <files...>\n\
                  \x20 cxlmem scenario expand <file> [--seed S] [--count N] [--out FILE]\n\
                  \x20 cxlmem scenario run <files...|-> [--jobs N] [--out FILE]\n\
-                 \x20\x20\x20\x20 [--shard K/N] [--no-cache] [--cache-dir DIR]\n\
+                 \x20\x20\x20\x20 [--shard K/N] [--no-cache] [--cache-dir DIR] [--metrics FILE]\n\
                  \x20 cxlmem scenario bench [--count N] [--seed S] [--jobs N] [--out FILE] [--cache]\n\
-                 \x20\x20\x20\x20 [--shard K/N]\n\
+                 \x20\x20\x20\x20 [--shard K/N] [--metrics FILE]\n\
                  \x20 cxlmem scenario report <results.jsonl|cache dir|-> [--csv|--json] [--out FILE]\n\
+                 \x20\x20\x20\x20 [--metrics FILE]\n\
                  \n\
                  `run` serves repeated specs from the content-addressed result cache\n\
                  (default {}; key = canonical spec hash — see README 'Result cache').\n\
@@ -285,6 +340,9 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                  shared store; re-running the full list is then pure cache hits.\n\
                  `report` aggregates result JSONL (or a cache dir) into fleet summaries:\n\
                  best policy per device profile, win matrix, quantiles, OLI gains.\n\
+                 `run`/`bench` accept `--metrics FILE` ('-' for stderr) to capture a\n\
+                 cxlmem-metrics-v1 registry snapshot; `report --metrics FILE` folds\n\
+                 sidecars into the summary (hit rates, queue depth, eval quantiles).\n\
                  \n\
                  Bundled scenarios: examples/scenarios/*.json (one per experiment id,\n\
                  plus fleet.json). See README 'Scenario files' for the schema.",
@@ -375,6 +433,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         println!("{path}: ok (schema cxlmem-bench-v1)");
         return Ok(());
     }
+    let metrics = metrics_out(args)?;
     let opts = cxlmem::bench::BenchOpts {
         // --quick is an alias for --smoke (the `make bench-check` spelling).
         smoke: args.flag("smoke") || args.flag("quick"),
@@ -385,14 +444,171 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let out = args.get_or("out", "BENCH_hotpath.json");
     report.save(std::path::Path::new(out))?;
     println!("wrote {out}");
+    emit_metrics(metrics.as_ref())
+}
+
+/// `cxlmem stats` — the metrics surface. With no FILE, snapshot this
+/// process's registry (useful under `--json` for scripting; most
+/// counters are zero in a fresh process — the `--metrics` sidecar flags
+/// on the long-running verbs are the real capture points). With FILE
+/// (or `-` for stdin), validate and render a written sidecar. With
+/// `--validate FILE`, schema-check only (the `make metrics-smoke`
+/// spelling).
+fn cmd_stats(args: &Args) -> Result<()> {
+    use anyhow::{anyhow, bail, Context};
+    use cxlmem::util::metrics;
+
+    // A bare `--validate` (file forgotten, or eaten by a following
+    // flag) must error, not silently fall through to a live snapshot.
+    if args.flag("validate") {
+        bail!("--validate requires a FILE argument (a written metrics sidecar)");
+    }
+    let read_docs = |path: &str| -> Result<Vec<Json>> {
+        let text = if path == "-" {
+            let mut buf = String::new();
+            std::io::Read::read_to_string(&mut std::io::stdin(), &mut buf)?;
+            buf
+        } else {
+            std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?
+        };
+        // A sidecar holds one snapshot per line (shard runs append).
+        let docs = cxlmem::util::json::parse_jsonl(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+        if docs.is_empty() {
+            bail!("{path}: no metrics snapshots found");
+        }
+        for doc in &docs {
+            metrics::validate_metrics_doc(doc).map_err(|e| anyhow!("{path}: {e}"))?;
+        }
+        Ok(docs)
+    };
+    if let Some(path) = args.get("validate") {
+        let docs = read_docs(path)?;
+        println!(
+            "{path}: ok ({} snapshot(s), schema {})",
+            docs.len(),
+            metrics::METRICS_SCHEMA
+        );
+        return Ok(());
+    }
+    match args.positional.get(1).map(|s| s.as_str()) {
+        None => {
+            // Live snapshot of this process's registry.
+            println!("{}", metrics::snapshot());
+        }
+        Some(path) => {
+            let docs = read_docs(path)?;
+            if args.flag("json") {
+                for doc in &docs {
+                    println!("{doc}");
+                }
+            } else {
+                // Render through the same fold `scenario report` uses,
+                // so N sharded sidecars aggregate identically here.
+                let report = cxlmem::scenario::summarize_docs(&[], &docs, 0);
+                report.print(Format::Text);
+            }
+        }
+    }
     Ok(())
+}
+
+/// The `make metrics-smoke` gate: a small fleet run twice against one
+/// cache store must (a) emit byte-identical result JSONL, (b) serve the
+/// warm run purely from cache, and (c) keep the metrics registry
+/// consistent with the per-instance cache counters — the registry's
+/// `scenario.cache.hits` delta across the warm run must equal the
+/// cache handle's own hit count, and `scenario.batch.evaluated` must
+/// not move when everything hits.
+fn cmd_metrics_smoke(args: &Args) -> Result<()> {
+    use anyhow::{anyhow, bail};
+    use cxlmem::scenario;
+    use cxlmem::util::json::to_jsonl;
+    use cxlmem::util::metrics;
+
+    if !metrics::global().enabled() {
+        bail!("metrics-smoke needs the registry enabled (unset CXLMEM_METRICS)");
+    }
+    let metrics_dest = metrics_out(args)?;
+    let count = args.get_usize("count", 6);
+    let jobs = args.get_usize("jobs", 2);
+    let doc = Json::parse(&format!(
+        r#"{{"name": "metrics-fleet", "fleet": {{"count": {count}, "seed": 11}}}}"#
+    ))
+    .map_err(|e| anyhow!("internal fleet template: {e}"))?;
+    let expanded = scenario::expand(&doc, None, None)?;
+    let specs: Vec<_> = expanded
+        .iter()
+        .map(scenario::ScenarioSpec::parse)
+        .collect::<Result<_>>()?;
+
+    let dir = std::env::temp_dir().join(format!("cxlmem-metrics-smoke-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // Cold run: everything misses and evaluates.
+    let mut cold = scenario::ResultCache::open(&dir)?;
+    let r1 = scenario::run_batch_cached(&specs, jobs, Some(&mut cold))?;
+    let snap_cold = metrics::snapshot();
+    metrics::validate_metrics_doc(&snap_cold).map_err(|e| anyhow!("cold snapshot invalid: {e}"))?;
+    if cold.misses() == 0 {
+        bail!("cold run reported no cache misses — the store was not fresh");
+    }
+    let hits_cold = metrics::counter("scenario.cache.hits").get();
+    let evaluated_cold = metrics::counter("scenario.batch.evaluated").get();
+
+    // Warm run: a fresh handle on the same store must be pure hits.
+    let mut warm = scenario::ResultCache::open(&dir)?;
+    let r2 = scenario::run_batch_cached(&specs, jobs, Some(&mut warm))?;
+    let snap_warm = metrics::snapshot();
+    metrics::validate_metrics_doc(&snap_warm).map_err(|e| anyhow!("warm snapshot invalid: {e}"))?;
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let a = to_jsonl(r1.into_iter().map(|r| r.doc));
+    let b = to_jsonl(r2.into_iter().map(|r| r.doc));
+    if a != b {
+        bail!("warm re-run JSONL differs from the cold run");
+    }
+    if warm.misses() != 0 || warm.hits() == 0 {
+        bail!(
+            "warm run was not pure cache hits ({} hit(s), {} miss(es))",
+            warm.hits(),
+            warm.misses()
+        );
+    }
+    let hit_delta = metrics::counter("scenario.cache.hits").get() - hits_cold;
+    if hit_delta != warm.hits() {
+        bail!(
+            "registry cache-hit delta {hit_delta} != warm cache handle's {} hit(s)",
+            warm.hits()
+        );
+    }
+    if metrics::counter("scenario.batch.evaluated").get() != evaluated_cold {
+        bail!("warm run evaluated scenarios despite a fully warm cache");
+    }
+    let n_policy = snap_warm
+        .get("histograms")
+        .and_then(|h| h.as_obj())
+        .map(|m| m.keys().filter(|k| k.starts_with("eval.policy.")).count())
+        .unwrap_or(0);
+    if n_policy == 0 {
+        bail!("no per-policy eval-time histograms were recorded");
+    }
+    println!(
+        "metrics-smoke: ok — {} scenario(s); warm re-run byte-identical, {} cache hit(s) \
+         (registry delta agrees), {} per-policy eval histogram(s); snapshots validate ({})",
+        specs.len(),
+        warm.hits(),
+        n_policy,
+        metrics::METRICS_SCHEMA
+    );
+    emit_metrics(metrics_dest.as_ref())
 }
 
 /// The `make trace-smoke` gate: fig16 twice in one process must emit
 /// byte-identical reports while the shared epoch-trace store generates
 /// each app's trace exactly once (the second run is pure `Arc` replays).
-fn cmd_trace_smoke() -> Result<()> {
+fn cmd_trace_smoke(args: &Args) -> Result<()> {
     use anyhow::bail;
+    let metrics = metrics_out(args)?;
     let store = cxlmem::workloads::trace::global();
     store.clear();
     cxlmem::perf::set_jobs(cxlmem::perf::default_jobs());
@@ -432,7 +648,7 @@ fn cmd_trace_smoke() -> Result<()> {
         stats.bytes,
         stats.entries
     );
-    Ok(())
+    emit_metrics(metrics.as_ref())
 }
 
 /// The `make scale-smoke` gate: one million-page fig16-style cell must
@@ -448,6 +664,7 @@ fn cmd_scale_smoke(args: &Args) -> Result<()> {
     use cxlmem::workloads::tiering_apps::pagerank;
     use cxlmem::workloads::trace::EpochTrace;
 
+    let metrics = metrics_out(args)?;
     let pages = args.get_usize("pages", 1 << 20);
     let epochs = args.get_usize("epochs", 5);
     let rss_mb = args.get_usize("rss-mb", 1024);
@@ -527,7 +744,7 @@ fn cmd_scale_smoke(args: &Args) -> Result<()> {
         Some(mb) => println!("scale-smoke: peak RSS {mb} MB (bound {rss_mb} MB)"),
         None => println!("scale-smoke: VmHWM unreadable on this platform; skipping the RSS gate"),
     }
-    Ok(())
+    emit_metrics(metrics.as_ref())
 }
 
 /// Peak resident set size in MB from `/proc/self/status` (Linux only).
@@ -555,6 +772,19 @@ fn cmd_info() -> Result<()> {
         Err(e) => println!("artifacts not built ({e}); run `make artifacts`"),
     }
     println!("systems: A, B, C (see `cxlmem exp table1`)");
+    println!(
+        "verbs: exp, scenario (validate|expand|run|bench|report), bench, stats, \
+         metrics-smoke, trace-smoke, scale-smoke, train, serve, info"
+    );
+    println!(
+        "metrics: registry {} (schema {}; `cxlmem stats`, `--metrics FILE` sidecars)",
+        if cxlmem::util::metrics::global().enabled() {
+            "enabled"
+        } else {
+            "disabled via CXLMEM_METRICS"
+        },
+        cxlmem::util::metrics::METRICS_SCHEMA
+    );
     Ok(())
 }
 
@@ -563,14 +793,19 @@ fn print_help() {
         "cxlmem — 'Exploring and Evaluating Real-world CXL' reproduction\n\
          \n\
          USAGE:\n\
-         \x20 cxlmem exp <id|all> [--csv|--json] [--out FILE] [--jobs N]\n\
-         \x20 cxlmem scenario validate|expand|run|bench ... (see `cxlmem scenario help`)\n\
+         \x20 cxlmem exp <id|all> [--csv|--json] [--out FILE] [--jobs N] [--metrics FILE]\n\
+         \x20 cxlmem scenario validate|expand|run|bench|report ... (see `cxlmem scenario help`)\n\
          \x20 cxlmem bench [--smoke|--quick] [--jobs N] [--out FILE] [--validate FILE]\n\
-         \x20 cxlmem trace-smoke\n\
+         \x20 cxlmem stats [FILE|-] [--json] [--validate FILE]\n\
+         \x20 cxlmem metrics-smoke [--count N] [--jobs N]\n\
+         \x20 cxlmem trace-smoke [--metrics FILE]\n\
          \x20 cxlmem scale-smoke [--pages N] [--epochs N] [--jobs N] [--rss-mb MB]\n\
          \x20 cxlmem train [--steps N] [--seed S] [--log-every K]\n\
          \x20 cxlmem serve [--requests N]\n\
          \x20 cxlmem info\n\
+         \n\
+         `exp`, `scenario run|bench`, `bench` and the smokes accept --metrics FILE\n\
+         ('-' for stderr) to write a cxlmem-metrics-v1 snapshot (see README 'Metrics').\n\
          \n\
          experiment ids: {}",
         cxlmem::exp::ALL.join(", ")

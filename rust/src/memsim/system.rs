@@ -24,6 +24,9 @@
 
 use std::cell::RefCell;
 use std::collections::HashMap;
+use std::sync::OnceLock;
+
+use crate::util::metrics;
 
 use super::device::{MemDevice, MemKind, Pattern, LINE, RHO_MAX};
 use super::link::{Link, Path};
@@ -206,6 +209,24 @@ thread_local! {
     static MEMO: RefCell<HashMap<MemoKey, TrafficSolution>> = RefCell::new(HashMap::new());
 }
 
+/// Registry handles for the memo-cache counters, resolved once per
+/// process. Only the memoized path (never the reference or
+/// memo-disabled branches of [`System::solve_traffic`]) touches these.
+struct MemoMetrics {
+    hits: &'static metrics::Counter,
+    misses: &'static metrics::Counter,
+    admissions: &'static metrics::Counter,
+}
+
+fn memo_metrics() -> &'static MemoMetrics {
+    static M: OnceLock<MemoMetrics> = OnceLock::new();
+    M.get_or_init(|| MemoMetrics {
+        hits: metrics::counter("solver.memo.hits"),
+        misses: metrics::counter("solver.memo.misses"),
+        admissions: metrics::counter("solver.memo.admissions"),
+    })
+}
+
 #[inline]
 fn fnv1a(h: &mut u64, x: u64) {
     for b in x.to_le_bytes() {
@@ -313,10 +334,13 @@ impl System {
         if !crate::perf::memo_enabled() {
             return SCRATCH.with(|s| self.solve_adaptive(streams, &mut s.borrow_mut()));
         }
+        let m = memo_metrics();
         let key = self.memo_key(streams);
         if let Some(hit) = MEMO.with(|c| c.borrow().get(&key).cloned()) {
+            m.hits.inc();
             return hit;
         }
+        m.misses.inc();
         // Solve the bucket *representative*, not the exact input: any
         // member of a quantized bucket then computes (and caches) the
         // identical solution, independent of solve order or sharding.
@@ -329,6 +353,7 @@ impl System {
             }
             cache.insert(key, sol.clone());
         });
+        m.admissions.inc();
         sol
     }
 

@@ -28,7 +28,29 @@ use super::eval::evaluate;
 use super::spec::ScenarioSpec;
 use crate::report::Report;
 use crate::util::json::Json;
+use crate::util::metrics;
 use crate::util::par::par_map;
+
+/// Registry handles for the batch runner (`scenario.batch.*` plus the
+/// whole-scenario eval-time histogram `scenario.eval_ns`).
+struct BatchMetrics {
+    specs: &'static metrics::Counter,
+    dedup_collapsed: &'static metrics::Counter,
+    evaluated: &'static metrics::Counter,
+    jobs_in_flight: &'static metrics::Gauge,
+    eval_ns: &'static metrics::Histogram,
+}
+
+fn batch_metrics() -> &'static BatchMetrics {
+    static M: std::sync::OnceLock<BatchMetrics> = std::sync::OnceLock::new();
+    M.get_or_init(|| BatchMetrics {
+        specs: metrics::counter("scenario.batch.specs"),
+        dedup_collapsed: metrics::counter("scenario.batch.dedup_collapsed"),
+        evaluated: metrics::counter("scenario.batch.evaluated"),
+        jobs_in_flight: metrics::gauge("scenario.batch.jobs_in_flight"),
+        eval_ns: metrics::histogram("scenario.eval_ns"),
+    })
+}
 
 /// One evaluated scenario, ready for JSONL emission.
 #[derive(Clone, Debug)]
@@ -120,6 +142,10 @@ pub fn run_batch_cached(
             None => miss_idx.push(i),
         }
     }
+    let m = batch_metrics();
+    m.specs.add(specs.len() as u64);
+    m.dedup_collapsed.add((specs.len() - first_seen.len()) as u64);
+    m.evaluated.add(miss_idx.len() as u64);
 
     let evaluated: Vec<Result<ScenarioResult>> = if miss_idx.len() == 1 {
         // Single distinct miss: run inline with the whole jobs budget
@@ -183,9 +209,13 @@ pub fn run_batch_cached(
 }
 
 fn eval_one(spec: &ScenarioSpec) -> Result<ScenarioResult> {
-    evaluate(spec)
-        .map(|report| result_doc(spec, &report))
-        .map_err(|e| anyhow!("scenario '{}' failed: {e}", spec.name))
+    let m = batch_metrics();
+    let _in_flight = metrics::GaugeGuard::enter(m.jobs_in_flight);
+    m.eval_ns.time(|| {
+        evaluate(spec)
+            .map(|report| result_doc(spec, &report))
+            .map_err(|e| anyhow!("scenario '{}' failed: {e}", spec.name))
+    })
 }
 
 /// Parse a text blob into raw documents: either one JSON document or

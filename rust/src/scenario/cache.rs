@@ -43,6 +43,30 @@ use anyhow::{Context, Result};
 use super::batch::ScenarioResult;
 use crate::util::json::Json;
 use crate::util::lock::FileLock;
+use crate::util::metrics;
+
+/// Registry handles for the result-cache counters (`scenario.cache.*`
+/// in `cxlmem stats` snapshots). Per-instance `hits`/`misses` fields
+/// stay the CLI/test probes; these aggregate across every handle in the
+/// process.
+struct CacheMetrics {
+    hits: &'static metrics::Counter,
+    misses: &'static metrics::Counter,
+    reloads: &'static metrics::Counter,
+    flush_appends: &'static metrics::Counter,
+    flush_lock_wait_ns: &'static metrics::Histogram,
+}
+
+fn cache_metrics() -> &'static CacheMetrics {
+    static M: std::sync::OnceLock<CacheMetrics> = std::sync::OnceLock::new();
+    M.get_or_init(|| CacheMetrics {
+        hits: metrics::counter("scenario.cache.hits"),
+        misses: metrics::counter("scenario.cache.misses"),
+        reloads: metrics::counter("scenario.cache.reloads"),
+        flush_appends: metrics::counter("scenario.cache.flush_appends"),
+        flush_lock_wait_ns: metrics::histogram("scenario.cache.flush_lock_wait_ns"),
+    })
+}
 
 /// Cache line schema identifier.
 pub const CACHE_SCHEMA: &str = "cxlmem-result-cache-v1";
@@ -175,6 +199,7 @@ impl ResultCache {
         if !self.path.exists() {
             return Ok(0);
         }
+        cache_metrics().reloads.inc();
         let _lock = lock_store(&self.path);
         Ok(load_into(&self.path, &mut self.entries))
     }
@@ -187,10 +212,12 @@ impl ResultCache {
         match self.entries.get(key) {
             Some(e) if e.spec == canonical_spec => {
                 self.hits += 1;
+                cache_metrics().hits.inc();
                 Some(&e.doc)
             }
             _ => {
                 self.misses += 1;
+                cache_metrics().misses.inc();
                 None
             }
         }
@@ -227,7 +254,10 @@ impl ResultCache {
             fs::create_dir_all(dir)
                 .with_context(|| format!("creating cache dir {}", dir.display()))?;
         }
-        let _lock = lock_store(&self.path);
+        let m = cache_metrics();
+        // The lock is the shard rendezvous point: time waiting for it is
+        // the contention signal the serve-fleet roadmap item watches.
+        let _lock = m.flush_lock_wait_ns.time(|| lock_store(&self.path));
         let mut on_disk = BTreeMap::new();
         if self.path.exists() {
             load_into(&self.path, &mut on_disk);
@@ -256,6 +286,7 @@ impl ResultCache {
             text.push('\n');
             f.write_all(text.as_bytes())
                 .with_context(|| format!("appending to cache store {}", self.path.display()))?;
+            m.flush_appends.inc();
         }
         self.pending.clear();
         Ok(())

@@ -230,7 +230,10 @@ fn eval_objects(name: &str, sys: &System, o: &ObjectsSpec) -> Result<Report> {
     let mut results: Vec<(String, RunResult)> = Vec::new();
     for pname in &o.policies {
         let policy = named_policy(sys, o.socket, pname)?;
-        let r = run_objects(sys, o, &specs, &|_| policy.clone())?;
+        // Per-policy eval-time histograms: `scenario report` merges
+        // these across metrics sidecars into its quantile columns.
+        let r = crate::util::metrics::histogram(&format!("eval.policy.{pname}.ns"))
+            .time(|| run_objects(sys, o, &specs, &|_| policy.clone()))?;
         results.push((pname.clone(), r));
     }
 
@@ -240,6 +243,8 @@ fn eval_objects(name: &str, sys: &System, o: &ObjectsSpec) -> Result<Report> {
     // object order, strict improvement threshold.
     let mut oli_assignment: Option<Vec<bool>> = None;
     if o.oli_search {
+        let oli_ns = crate::util::metrics::histogram("eval.policy.OLI(search).ns");
+        let t0 = std::time::Instant::now();
         let ld = sys
             .node_of(o.socket, MemKind::Ldram)
             .ok_or_else(|| anyhow!("system {} has no LDRAM node", sys.name))?;
@@ -285,6 +290,7 @@ fn eval_objects(name: &str, sys: &System, o: &ObjectsSpec) -> Result<Report> {
         }
         results.push((super::report::OLI_ROW.to_string(), best));
         oli_assignment = Some(sel);
+        oli_ns.record(t0.elapsed().as_nanos().min(u64::MAX as u128) as u64);
     }
 
     let best_total = results

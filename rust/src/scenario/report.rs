@@ -27,6 +27,7 @@ use super::cache::CACHE_SCHEMA;
 use super::spec::POLICY_NAMES;
 use crate::report::Report;
 use crate::util::json::Json;
+use crate::util::metrics::{self, METRICS_SCHEMA};
 use crate::util::stats::{median, percentile};
 use crate::util::table::{f3, Table};
 
@@ -52,10 +53,13 @@ struct Grid {
 }
 
 /// Extract result documents from a text blob: result JSONL as written
-/// by `scenario run --out`, or a result-cache store (each line's
-/// `result` field). Returns `(documents, skipped_lines)`.
-pub fn collect_docs(text: &str) -> (Vec<Json>, usize) {
+/// by `scenario run --out`, a result-cache store (each line's `result`
+/// field), or `cxlmem-metrics-v1` sidecar snapshots (routed into their
+/// own list — `--metrics` sidecars can be concatenated straight onto
+/// the results). Returns `(documents, metrics_docs, skipped_lines)`.
+pub fn collect_docs(text: &str) -> (Vec<Json>, Vec<Json>, usize) {
     let mut docs = Vec::new();
+    let mut metrics_docs = Vec::new();
     let mut skipped = 0;
     for line in text.lines() {
         if line.trim().is_empty() {
@@ -68,16 +72,16 @@ pub fn collect_docs(text: &str) -> (Vec<Json>, usize) {
                 continue;
             }
         };
-        if doc.get("schema").and_then(Json::as_str) == Some(CACHE_SCHEMA) {
-            match doc.get("result") {
+        match doc.get("schema").and_then(Json::as_str) {
+            Some(s) if s == CACHE_SCHEMA => match doc.get("result") {
                 Some(r) => docs.push(r.clone()),
                 None => skipped += 1,
-            }
-        } else {
-            docs.push(doc);
+            },
+            Some(s) if s == METRICS_SCHEMA => metrics_docs.push(doc),
+            _ => docs.push(doc),
         }
     }
-    (docs, skipped)
+    (docs, metrics_docs, skipped)
 }
 
 /// Human label for a result document's device profile, from the
@@ -190,9 +194,12 @@ fn policy_order(all: &BTreeSet<String>) -> Vec<String> {
     out
 }
 
-/// Summarize result documents into a fleet report. `skipped` is the
-/// damaged-line count from [`collect_docs`], surfaced in the overview.
-pub fn summarize_docs(docs: &[Json], skipped: usize) -> Report {
+/// Summarize result documents into a fleet report. `metrics_docs` are
+/// `cxlmem-metrics-v1` sidecar snapshots (counters summed, gauge
+/// high-water marks maxed, histograms bucket-merged across sidecars);
+/// `skipped` is the damaged-line count from [`collect_docs`], surfaced
+/// in the overview.
+pub fn summarize_docs(docs: &[Json], metrics_docs: &[Json], skipped: usize) -> Report {
     let grids: Vec<Grid> = docs.iter().filter_map(grid_of).collect();
 
     let mut policies = BTreeSet::new();
@@ -231,6 +238,7 @@ pub fn summarize_docs(docs: &[Json], skipped: usize) -> Report {
     overview.row(vec!["policies observed".into(), policies.len().to_string()]);
     report.add(overview);
     if grids.is_empty() {
+        add_metrics_tables(&mut report, metrics_docs);
         return report;
     }
 
@@ -309,18 +317,142 @@ pub fn summarize_docs(docs: &[Json], skipped: usize) -> Report {
         }
         report.add(oli_t);
     }
+    add_metrics_tables(&mut report, metrics_docs);
     report
+}
+
+/// Fold `cxlmem-metrics-v1` sidecars into fleet tables: counters sum
+/// across sidecars (each shard counted its own work), gauge high-water
+/// marks max (peak queue depth anywhere in the fleet), and histograms
+/// merge by sparse bucket — exact, because every sidecar shares the
+/// fixed `util::metrics` bucket edges.
+fn add_metrics_tables(report: &mut Report, metrics_docs: &[Json]) {
+    if metrics_docs.is_empty() {
+        return;
+    }
+    let mut counters: BTreeMap<String, f64> = BTreeMap::new();
+    let mut hwms: BTreeMap<String, f64> = BTreeMap::new();
+    // name -> (merged sparse buckets, max observed value)
+    let mut hists: BTreeMap<String, (BTreeMap<usize, u64>, f64)> = BTreeMap::new();
+    for doc in metrics_docs {
+        if let Some(cs) = doc.get("counters").and_then(Json::as_obj) {
+            for (name, v) in cs {
+                if let Some(x) = v.as_f64() {
+                    *counters.entry(name.clone()).or_insert(0.0) += x;
+                }
+            }
+        }
+        if let Some(gs) = doc.get("gauges").and_then(Json::as_obj) {
+            for (name, g) in gs {
+                if let Some(x) = g.get("hwm").and_then(Json::as_f64) {
+                    let e = hwms.entry(name.clone()).or_insert(f64::NEG_INFINITY);
+                    if x > *e {
+                        *e = x;
+                    }
+                }
+            }
+        }
+        if let Some(hs) = doc.get("histograms").and_then(Json::as_obj) {
+            for (name, h) in hs {
+                let entry = hists.entry(name.clone()).or_default();
+                if let Some(buckets) = h.get("buckets").and_then(Json::as_arr) {
+                    for pair in buckets {
+                        if let Some(p) = pair.as_arr().filter(|p| p.len() == 2) {
+                            if let (Some(i), Some(c)) = (p[0].as_usize(), p[1].as_u64()) {
+                                *entry.0.entry(i).or_insert(0) += c;
+                            }
+                        }
+                    }
+                }
+                if let Some(mx) = h.get("max").and_then(Json::as_f64) {
+                    if mx > entry.1 {
+                        entry.1 = mx;
+                    }
+                }
+            }
+        }
+    }
+
+    let c = |name: &str| counters.get(name).copied().unwrap_or(0.0);
+    let rate = |h: f64, m: f64| {
+        if h + m > 0.0 {
+            format!("{:.1}%", 100.0 * h / (h + m))
+        } else {
+            "-".to_string()
+        }
+    };
+    let mut t = Table::new("Fleet summary — runtime metrics", &["metric", "value"]);
+    t.row(vec!["metrics sidecars".into(), metrics_docs.len().to_string()]);
+    let (ch, cm) = (c("scenario.cache.hits"), c("scenario.cache.misses"));
+    t.row(vec!["result-cache hits".into(), (ch as u64).to_string()]);
+    t.row(vec!["result-cache misses".into(), (cm as u64).to_string()]);
+    t.row(vec!["result-cache hit rate".into(), rate(ch, cm)]);
+    t.row(vec![
+        "batch specs submitted".into(),
+        (c("scenario.batch.specs") as u64).to_string(),
+    ]);
+    t.row(vec![
+        "in-batch dedupe collapses".into(),
+        (c("scenario.batch.dedup_collapsed") as u64).to_string(),
+    ]);
+    t.row(vec![
+        "scenarios evaluated".into(),
+        (c("scenario.batch.evaluated") as u64).to_string(),
+    ]);
+    let peak = hwms.get("scenario.batch.jobs_in_flight").copied().unwrap_or(0.0);
+    t.row(vec!["peak jobs in flight".into(), (peak.max(0.0) as u64).to_string()]);
+    t.row(vec![
+        "trace generations".into(),
+        (c("trace.generated") as u64).to_string(),
+    ]);
+    t.row(vec![
+        "trace requests".into(),
+        (c("trace.requests") as u64).to_string(),
+    ]);
+    let (sh, sm) = (c("solver.memo.hits"), c("solver.memo.misses"));
+    t.row(vec!["solver memo hit rate".into(), rate(sh, sm)]);
+    report.add(t);
+
+    let mut quant = Table::new(
+        "Fleet summary — eval-time quantiles per policy (ms)",
+        &["policy", "n", "p50", "p90", "max"],
+    );
+    let ms = |ns: f64| format!("{:.3}", ns / 1e6);
+    let mut any = false;
+    for (name, (buckets, max_ns)) in &hists {
+        let Some(policy) = name
+            .strip_prefix("eval.policy.")
+            .and_then(|s| s.strip_suffix(".ns"))
+        else {
+            continue;
+        };
+        let n: u64 = buckets.values().sum();
+        if n == 0 {
+            continue;
+        }
+        any = true;
+        quant.row(vec![
+            policy.to_string(),
+            n.to_string(),
+            ms(metrics::quantile_of_sparse(buckets, 50.0)),
+            ms(metrics::quantile_of_sparse(buckets, 90.0)),
+            ms(*max_ns),
+        ]);
+    }
+    if any {
+        report.add(quant);
+    }
 }
 
 /// Summarize a results blob (see [`collect_docs`] for accepted forms)
 /// into a fleet report. Errors when nothing parses at all — a wrong
 /// file is a user error, not an empty fleet.
 pub fn summarize_text(text: &str) -> Result<Report> {
-    let (docs, skipped) = collect_docs(text);
-    if docs.is_empty() {
+    let (docs, metrics_docs, skipped) = collect_docs(text);
+    if docs.is_empty() && metrics_docs.is_empty() {
         bail!(
-            "no result documents found (want `scenario run` JSONL or a \
-             result-cache store){}",
+            "no result documents found (want `scenario run` JSONL, a \
+             result-cache store, or metrics sidecars){}",
             if skipped > 0 {
                 format!(" — {skipped} unparseable line(s)")
             } else {
@@ -328,7 +460,7 @@ pub fn summarize_text(text: &str) -> Result<Report> {
             }
         );
     }
-    Ok(summarize_docs(&docs, skipped))
+    Ok(summarize_docs(&docs, &metrics_docs, skipped))
 }
 
 #[cfg(test)]
@@ -375,14 +507,18 @@ mod tests {
     }
 
     #[test]
-    fn collect_docs_reads_results_and_cache_lines() {
+    fn collect_docs_reads_results_cache_and_metrics_lines() {
         let result = r#"{"scenario": "s", "systems": ["A"], "tables": []}"#;
         let cached = format!(
             r#"{{"schema": "{CACHE_SCHEMA}", "key": "k", "scenario": "s", "spec": "x", "result": {result}}}"#
         );
-        let text = format!("{result}\n{cached}\n\nnot json\n");
-        let (docs, skipped) = collect_docs(&text);
+        let sidecar = format!(
+            r#"{{"schema": "{METRICS_SCHEMA}", "counters": {{"scenario.cache.hits": 3}}, "gauges": {{}}, "histograms": {{}}, "rates": {{}}}}"#
+        );
+        let text = format!("{result}\n{cached}\n{sidecar}\n\nnot json\n");
+        let (docs, metrics_docs, skipped) = collect_docs(&text);
         assert_eq!(docs.len(), 2);
+        assert_eq!(metrics_docs.len(), 1, "metrics sidecar routed separately");
         assert_eq!(skipped, 1);
         assert_eq!(docs[0], docs[1], "cache line must unwrap to the result");
     }
@@ -415,7 +551,7 @@ mod tests {
             // A non-grid document must be counted but not aggregated.
             Json::obj(vec![("scenario", "other".into()), ("tables", Json::arr([]))]),
         ];
-        let report = summarize_docs(&docs, 0);
+        let report = summarize_docs(&docs, &[], 0);
         let best = report
             .tables
             .iter()
@@ -454,7 +590,7 @@ mod tests {
                 (OLI_ROW, 1.5, true),
             ],
         )];
-        let report = summarize_docs(&docs, 0);
+        let report = summarize_docs(&docs, &[], 0);
         let oli = report
             .tables
             .iter()
@@ -477,5 +613,45 @@ mod tests {
     fn summarize_text_rejects_garbage() {
         assert!(summarize_text("").is_err());
         assert!(summarize_text("not json at all\n").is_err());
+    }
+
+    #[test]
+    fn metrics_sidecars_fold_into_fleet_tables() {
+        // Two "shard" sidecars, built from real registry snapshots:
+        // counters sum, gauge high-water marks max, and the per-policy
+        // histograms bucket-merge into the quantile table.
+        let reg = metrics::Registry::new(true);
+        reg.counter("scenario.cache.hits").add(3);
+        reg.counter("scenario.cache.misses").add(1);
+        reg.gauge("scenario.batch.jobs_in_flight").set(4);
+        let h = reg.histogram("eval.policy.ldram-preferred.ns");
+        for v in [1_000u64, 2_000, 4_000] {
+            h.record(v);
+        }
+        let snap1 = reg.snapshot_at(1_000);
+        let reg2 = metrics::Registry::new(true);
+        reg2.counter("scenario.cache.hits").add(1);
+        reg2.gauge("scenario.batch.jobs_in_flight").set(2);
+        reg2.histogram("eval.policy.ldram-preferred.ns").record(8_000);
+        let snap2 = reg2.snapshot_at(1_000);
+
+        let report = summarize_docs(&[], &[snap1, snap2], 0);
+        let t = report
+            .tables
+            .iter()
+            .find(|t| t.title.contains("runtime metrics"))
+            .expect("runtime metrics table");
+        assert!(t.rows.iter().any(|r| r[0] == "result-cache hits" && r[1] == "4"));
+        assert!(t.rows.iter().any(|r| r[0] == "result-cache misses" && r[1] == "1"));
+        assert!(t.rows.iter().any(|r| r[0] == "result-cache hit rate" && r[1] == "80.0%"));
+        assert!(t.rows.iter().any(|r| r[0] == "peak jobs in flight" && r[1] == "4"));
+        let q = report
+            .tables
+            .iter()
+            .find(|t| t.title.contains("eval-time quantiles per policy"))
+            .expect("eval-time quantile table");
+        assert_eq!(q.rows.len(), 1);
+        assert_eq!(q.rows[0][0], "ldram-preferred");
+        assert_eq!(q.rows[0][1], "4", "bucket merge must see all four samples");
     }
 }

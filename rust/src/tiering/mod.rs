@@ -71,6 +71,7 @@ pub mod stats;
 
 use crate::engine::{self, ObjectTraffic, RunConfig};
 use crate::memsim::{NodeId, Pattern, System};
+use crate::util::metrics;
 use crate::util::par::{chunk_ranges, par_map};
 use crate::util::rng::Rng;
 use crate::workloads::trace::EpochTrace;
@@ -129,10 +130,33 @@ pub fn with_par_min_pages<R>(min: usize, f: impl FnOnce() -> R) -> R {
 fn par_chunks(pages: usize) -> Option<usize> {
     let jobs = crate::perf::current_jobs();
     if jobs > 1 && !crate::perf::reference_enabled() && pages >= PAR_MIN.with(|c| c.get()) {
+        tiering_metrics().par_dispatches.inc();
         Some(jobs)
     } else {
         None
     }
+}
+
+/// Registry handles for tiering instrumentation, resolved once per
+/// process. Recorded only off the reference path — the seed-semantics
+/// baseline stays untouched (see the parity test in `tests/metrics.rs`).
+struct TieringMetrics {
+    epochs: &'static metrics::Counter,
+    hint_faults: &'static metrics::Counter,
+    migrated_regions: &'static metrics::Counter,
+    par_dispatches: &'static metrics::Counter,
+    epoch_ns: &'static metrics::Histogram,
+}
+
+fn tiering_metrics() -> &'static TieringMetrics {
+    static M: std::sync::OnceLock<TieringMetrics> = std::sync::OnceLock::new();
+    M.get_or_init(|| TieringMetrics {
+        epochs: metrics::counter("tiering.epochs"),
+        hint_faults: metrics::counter("tiering.hint_faults"),
+        migrated_regions: metrics::counter("tiering.migrated_regions"),
+        par_dispatches: metrics::counter("tiering.par_dispatches"),
+        epoch_ns: metrics::histogram("tiering.epoch_ns"),
+    })
 }
 
 /// Per-epoch ingested access histogram + per-(object, node) aggregates,
@@ -761,6 +785,13 @@ fn epoch_step(
     app_s: &mut f64,
     overhead_s: &mut f64,
 ) {
+    // Instrumentation stays off the parity-pinned reference path: no
+    // clock read, no counter writes when the seed baseline runs.
+    let t0 = if crate::perf::reference_enabled() {
+        None
+    } else {
+        Some(std::time::Instant::now())
+    };
     // 1. policy observes + migrates
     let scan = policy.scan_request(state, stats);
     sample_hint_faults_into(state, counts, scan.frac, scan.slow_tier_only, rng, faults);
@@ -782,6 +813,14 @@ fn epoch_step(
     *app_s += epoch_app_time(sys, cfg, state, &wl);
     // 4. recency state for next epoch
     state.last_counts.copy_from_slice(counts);
+    if let Some(t0) = t0 {
+        let m = tiering_metrics();
+        m.epochs.inc();
+        m.hint_faults.add(faults.len() as u64);
+        m.migrated_regions.add(moved_regions);
+        m.epoch_ns
+            .record(t0.elapsed().as_nanos().min(u64::MAX as u128) as u64);
+    }
 }
 
 /// Run the full tiering simulation: `epochs` epochs of (trace → faults →

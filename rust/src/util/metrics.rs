@@ -1,0 +1,809 @@
+//! Process-global metrics registry — the always-on observability layer
+//! the future `scenario serve` daemon's `stats` verb is built on.
+//!
+//! Idiom (the dataplane `stats`/`metricks` shape): instrumentation
+//! sites register a metric **once** by name and keep the returned
+//! `&'static` handle, so the hot path is a single relaxed atomic op —
+//! no locks, no map lookups, no formatting. The registry lock is only
+//! taken at registration (first touch per site) and at
+//! [`Registry::snapshot`] time.
+//!
+//! Three metric kinds:
+//!
+//! - [`Counter`] — monotone `u64` (requests, hits, misses).
+//! - [`Gauge`] — signed level with a high-water mark (jobs in flight,
+//!   entries held). [`GaugeGuard`] gives RAII inc/dec for queue depths.
+//! - [`Histogram`] — fixed-bucket log-scale duration histogram:
+//!   [`BUCKETS`] buckets covering all of `u64` ns with ≤ 12.5% relative
+//!   width (8 sub-buckets per power of two). Quantile extraction
+//!   ([`Histogram::quantile`]) linearly interpolates ranks over the
+//!   multiset of bucket representatives — the same rank arithmetic as
+//!   [`crate::util::stats::percentile`], so on data that lands on
+//!   bucket representatives the two agree exactly (pinned by test).
+//!   `util::timer` builds its bench p50/p90 from the *same* bucket
+//!   code, so bench and runtime telemetry share bucket edges.
+//!
+//! [`Registry::snapshot`] renders everything to [`crate::util::json`]
+//! as schema [`METRICS_SCHEMA`] (`cxlmem-metrics-v1`): counters,
+//! gauges (value + high-water mark), histograms (count/sum/max,
+//! p10/p50/p90, and the sparse bucket list so sidecars from N shards
+//! can be merged exactly), and per-family rate windows — each snapshot
+//! records `(t, value)` per counter family (the name prefix before the
+//! first `.`), and consecutive snapshots yield events/second over a
+//! short window, the serve-daemon "requests per second" view.
+//!
+//! The global registry ([`global`]) is enabled unless the
+//! `CXLMEM_METRICS` environment variable is `0`/`off`/`false`. A
+//! disabled registry hands out shared null sinks and registers
+//! **nothing** — snapshots stay empty and hot paths stay one atomic op.
+//!
+//! Instrumentation must stay off the parity-pinned *reference* paths
+//! (`perf::with_reference`): the reference implementations are the
+//! seed-semantics baselines the golden suite compares against, and they
+//! stay byte-for-byte untouched. Counters never change results either
+//! way — the parity test in `rust/tests/metrics.rs` pins that.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::json::Json;
+
+/// Snapshot schema identifier.
+pub const METRICS_SCHEMA: &str = "cxlmem-metrics-v1";
+
+/// Number of histogram buckets: values 0..16 exact, then 8 sub-buckets
+/// per power of two up to `u64::MAX` (see [`bucket_index`]).
+pub const BUCKETS: usize = 496;
+
+/// Observations kept per rate window (one per snapshot call).
+const RATE_WINDOW: usize = 8;
+
+// ---------------------------------------------------------------------------
+// Bucket math — shared by Histogram and util::timer.
+// ---------------------------------------------------------------------------
+
+/// Bucket index of `v`: identity for `v < 16`, then log-scale with 8
+/// sub-buckets per octave (≤ 12.5% relative bucket width). Monotone and
+/// contiguous over all of `u64`.
+pub fn bucket_index(v: u64) -> usize {
+    if v < 16 {
+        v as usize
+    } else {
+        let msb = 63 - v.leading_zeros() as usize;
+        let shift = msb - 3;
+        shift * 8 + (v >> shift) as usize
+    }
+}
+
+/// Representative (lower edge) of bucket `i` — the value every member
+/// of the bucket reports as. `bucket_value(bucket_index(v)) <= v` for
+/// all `v`, with equality exactly on representatives.
+pub fn bucket_value(i: usize) -> u64 {
+    if i < 16 {
+        i as u64
+    } else {
+        let shift = (i >> 3) - 1;
+        (((i & 7) | 8) as u64) << shift
+    }
+}
+
+/// Quantile (`p` in [0, 100]) over a sparse `bucket index -> count`
+/// multiset of bucket representatives, by linear interpolation on ranks
+/// — the exact arithmetic of [`crate::util::stats::percentile`] applied
+/// to the expanded multiset, without expanding it.
+pub fn quantile_of_sparse(buckets: &BTreeMap<usize, u64>, p: f64) -> f64 {
+    let n: u64 = buckets.values().sum();
+    if n == 0 {
+        return 0.0;
+    }
+    let rank = (p.clamp(0.0, 100.0) / 100.0) * (n - 1) as f64;
+    let lo = rank.floor() as u64;
+    let hi = rank.ceil() as u64;
+    let mut seen = 0u64;
+    let (mut v_lo, mut v_hi) = (None, None);
+    for (&b, &c) in buckets {
+        if c == 0 {
+            continue;
+        }
+        seen += c;
+        if v_lo.is_none() && seen > lo {
+            v_lo = Some(bucket_value(b) as f64);
+        }
+        if seen > hi {
+            v_hi = Some(bucket_value(b) as f64);
+            break;
+        }
+    }
+    let v_lo = v_lo.unwrap_or(0.0);
+    let v_hi = v_hi.unwrap_or(v_lo);
+    v_lo + (rank - lo as f64) * (v_hi - v_lo)
+}
+
+// ---------------------------------------------------------------------------
+// Metric kinds.
+// ---------------------------------------------------------------------------
+
+/// Monotone counter (one relaxed atomic add on the hot path).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Signed level gauge with a high-water mark (queue depth, bytes held).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    value: AtomicI64,
+    hwm: AtomicI64,
+}
+
+impl Gauge {
+    pub const fn new() -> Gauge {
+        Gauge {
+            value: AtomicI64::new(0),
+            hwm: AtomicI64::new(0),
+        }
+    }
+
+    pub fn set(&self, v: i64) {
+        self.value.store(v, Ordering::Relaxed);
+        self.hwm.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Add `d` (may be negative) and return the new level; raises the
+    /// high-water mark when the new level exceeds it.
+    pub fn add(&self, d: i64) -> i64 {
+        let v = self.value.fetch_add(d, Ordering::Relaxed) + d;
+        self.hwm.fetch_max(v, Ordering::Relaxed);
+        v
+    }
+
+    pub fn get(&self) -> i64 {
+        self.value.load(Ordering::Relaxed)
+    }
+
+    /// Highest level ever set/reached since the last reset.
+    pub fn hwm(&self) -> i64 {
+        self.hwm.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.value.store(0, Ordering::Relaxed);
+        self.hwm.store(0, Ordering::Relaxed);
+    }
+}
+
+/// RAII in-flight marker: +1 on construction, −1 on drop (panic-safe),
+/// so "jobs in flight" gauges can never leak a decrement.
+pub struct GaugeGuard(&'static Gauge);
+
+impl GaugeGuard {
+    pub fn enter(g: &'static Gauge) -> GaugeGuard {
+        g.add(1);
+        GaugeGuard(g)
+    }
+}
+
+impl Drop for GaugeGuard {
+    fn drop(&mut self) {
+        self.0.add(-1);
+    }
+}
+
+/// Fixed-bucket log-scale histogram (durations in ns, but any `u64`
+/// works). Recording is one relaxed add per bucket plus the count/sum/
+/// max updates; quantiles are extracted at snapshot time.
+pub struct Histogram {
+    counts: Vec<AtomicU64>,
+    n: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        let mut counts = Vec::with_capacity(BUCKETS);
+        counts.resize_with(BUCKETS, AtomicU64::default);
+        Histogram {
+            counts,
+            n: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, v: u64) {
+        self.counts[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.n.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Time `f` and record the elapsed nanoseconds.
+    pub fn time<R>(&self, f: impl FnOnce() -> R) -> R {
+        let t0 = Instant::now();
+        let r = f();
+        self.record(t0.elapsed().as_nanos().min(u64::MAX as u128) as u64);
+        r
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Sparse `bucket index -> count` view (snapshot-consistent within
+    /// itself: quantiles derived from it use its own total).
+    pub fn sparse(&self) -> BTreeMap<usize, u64> {
+        let mut out = BTreeMap::new();
+        for (i, c) in self.counts.iter().enumerate() {
+            let c = c.load(Ordering::Relaxed);
+            if c > 0 {
+                out.insert(i, c);
+            }
+        }
+        out
+    }
+
+    /// Quantile over recorded values' bucket representatives; matches
+    /// [`crate::util::stats::percentile`] on representative-valued data.
+    pub fn quantile(&self, p: f64) -> f64 {
+        quantile_of_sparse(&self.sparse(), p)
+    }
+
+    pub fn reset(&self) {
+        for c in &self.counts {
+            c.store(0, Ordering::Relaxed);
+        }
+        self.n.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+        self.max.store(0, Ordering::Relaxed);
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Histogram")
+            .field("count", &self.count())
+            .field("max", &self.max())
+            .finish()
+    }
+}
+
+/// A detached (never registered) counter — for per-instance stats that
+/// should not appear in snapshots, e.g. private `TraceStore`s in tests.
+pub fn detached_counter() -> &'static Counter {
+    Box::leak(Box::new(Counter::new()))
+}
+
+/// A detached (never registered) gauge.
+pub fn detached_gauge() -> &'static Gauge {
+    Box::leak(Box::new(Gauge::new()))
+}
+
+// ---------------------------------------------------------------------------
+// Registry.
+// ---------------------------------------------------------------------------
+
+enum Metric {
+    Counter(&'static Counter),
+    Gauge(&'static Gauge),
+    Histogram(&'static Histogram),
+}
+
+#[derive(Default)]
+struct Windows {
+    /// Rate window per counter *family* (name prefix before the first
+    /// '.'): up to [`RATE_WINDOW`] `(now_ns, summed value)` observations,
+    /// one appended per snapshot.
+    obs: BTreeMap<String, VecDeque<(u64, u64)>>,
+}
+
+/// Named metric registry; see the module docs. All handles it returns
+/// are `&'static` — registered metrics live for the process.
+pub struct Registry {
+    enabled: bool,
+    metrics: Mutex<BTreeMap<String, Metric>>,
+    windows: Mutex<Windows>,
+    start: Instant,
+}
+
+fn family_of(name: &str) -> &str {
+    name.split('.').next().unwrap_or(name)
+}
+
+impl Registry {
+    pub fn new(enabled: bool) -> Registry {
+        Registry {
+            enabled,
+            metrics: Mutex::new(BTreeMap::new()),
+            windows: Mutex::new(Windows::default()),
+            start: Instant::now(),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, BTreeMap<String, Metric>> {
+        // Registration/snapshot only ever do map bookkeeping; recover
+        // from a panicked holder instead of poisoning the process.
+        self.metrics.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// The counter registered under `name` (first call registers it).
+    /// Panics if `name` is already registered as a different kind —
+    /// that is a programming error, not a runtime condition.
+    pub fn counter(&self, name: &str) -> &'static Counter {
+        if !self.enabled {
+            static NULL: Counter = Counter::new();
+            return &NULL;
+        }
+        let mut m = self.lock();
+        match m.get(name) {
+            Some(Metric::Counter(c)) => c,
+            Some(_) => panic!("metric '{name}' already registered as a different kind"),
+            None => {
+                let c: &'static Counter = Box::leak(Box::new(Counter::new()));
+                m.insert(name.to_string(), Metric::Counter(c));
+                c
+            }
+        }
+    }
+
+    /// The gauge registered under `name` (first call registers it).
+    pub fn gauge(&self, name: &str) -> &'static Gauge {
+        if !self.enabled {
+            static NULL: Gauge = Gauge::new();
+            return &NULL;
+        }
+        let mut m = self.lock();
+        match m.get(name) {
+            Some(Metric::Gauge(g)) => g,
+            Some(_) => panic!("metric '{name}' already registered as a different kind"),
+            None => {
+                let g: &'static Gauge = Box::leak(Box::new(Gauge::new()));
+                m.insert(name.to_string(), Metric::Gauge(g));
+                g
+            }
+        }
+    }
+
+    /// The histogram registered under `name` (first call registers it).
+    pub fn histogram(&self, name: &str) -> &'static Histogram {
+        if !self.enabled {
+            static NULL: OnceLock<&'static Histogram> = OnceLock::new();
+            return NULL.get_or_init(|| Box::leak(Box::new(Histogram::new())));
+        }
+        let mut m = self.lock();
+        match m.get(name) {
+            Some(Metric::Histogram(h)) => h,
+            Some(_) => panic!("metric '{name}' already registered as a different kind"),
+            None => {
+                let h: &'static Histogram = Box::leak(Box::new(Histogram::new()));
+                m.insert(name.to_string(), Metric::Histogram(h));
+                h
+            }
+        }
+    }
+
+    /// Registered metric names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.lock().keys().cloned().collect()
+    }
+
+    /// Zero every registered metric and drop the rate windows (between
+    /// runs in one process; sidecar emission does *not* reset).
+    pub fn reset(&self) {
+        for metric in self.lock().values() {
+            match metric {
+                Metric::Counter(c) => c.reset(),
+                Metric::Gauge(g) => g.reset(),
+                Metric::Histogram(h) => h.reset(),
+            }
+        }
+        self.windows.lock().unwrap_or_else(|p| p.into_inner()).obs.clear();
+    }
+
+    /// Render the registry as a `cxlmem-metrics-v1` document, stamping
+    /// this process's monotonic clock into the rate windows.
+    pub fn snapshot(&self) -> Json {
+        self.snapshot_at(self.start.elapsed().as_nanos().min(u64::MAX as u128) as u64)
+    }
+
+    /// [`Registry::snapshot`] with an explicit `now` (ns since some
+    /// fixed origin) — deterministic rate windows for tests.
+    pub fn snapshot_at(&self, now_ns: u64) -> Json {
+        let m = self.lock();
+        let mut counters = BTreeMap::new();
+        let mut gauges = BTreeMap::new();
+        let mut hists = BTreeMap::new();
+        let mut family_totals: BTreeMap<String, u64> = BTreeMap::new();
+        for (name, metric) in m.iter() {
+            match metric {
+                Metric::Counter(c) => {
+                    let v = c.get();
+                    *family_totals.entry(family_of(name).to_string()).or_insert(0) += v;
+                    counters.insert(name.clone(), Json::from(v));
+                }
+                Metric::Gauge(g) => {
+                    gauges.insert(
+                        name.clone(),
+                        Json::obj(vec![
+                            ("value", (g.get() as f64).into()),
+                            ("hwm", (g.hwm() as f64).into()),
+                        ]),
+                    );
+                }
+                Metric::Histogram(h) => {
+                    let sparse = h.sparse();
+                    let buckets = Json::arr(
+                        sparse
+                            .iter()
+                            .map(|(&b, &c)| Json::arr([Json::from(b), Json::from(c)])),
+                    );
+                    hists.insert(
+                        name.clone(),
+                        Json::obj(vec![
+                            ("count", h.count().into()),
+                            ("sum", h.sum().into()),
+                            ("max", h.max().into()),
+                            ("p10", quantile_of_sparse(&sparse, 10.0).into()),
+                            ("p50", quantile_of_sparse(&sparse, 50.0).into()),
+                            ("p90", quantile_of_sparse(&sparse, 90.0).into()),
+                            ("buckets", buckets),
+                        ]),
+                    );
+                }
+            }
+        }
+        drop(m);
+
+        // Per-family rate windows: events/second between the oldest
+        // retained observation and now.
+        let mut rates = BTreeMap::new();
+        let mut w = self.windows.lock().unwrap_or_else(|p| p.into_inner());
+        for (family, total) in &family_totals {
+            let win = w.obs.entry(family.clone()).or_default();
+            if let Some(&(t0, v0)) = win.front() {
+                if now_ns > t0 {
+                    let per_s = (total.saturating_sub(v0)) as f64 / ((now_ns - t0) as f64 / 1e9);
+                    rates.insert(format!("{family}.per_s"), Json::from(per_s));
+                }
+            }
+            win.push_back((now_ns, *total));
+            while win.len() > RATE_WINDOW {
+                win.pop_front();
+            }
+        }
+
+        Json::obj(vec![
+            ("schema", METRICS_SCHEMA.into()),
+            ("counters", Json::Obj(counters)),
+            ("gauges", Json::Obj(gauges)),
+            ("histograms", Json::Obj(hists)),
+            ("rates", Json::Obj(rates)),
+        ])
+    }
+}
+
+/// The process-global registry every instrumentation site uses. Enabled
+/// unless `CXLMEM_METRICS` is `0`/`off`/`false`.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(|| {
+        let off = matches!(
+            std::env::var("CXLMEM_METRICS").as_deref(),
+            Ok("0") | Ok("off") | Ok("false")
+        );
+        Registry::new(!off)
+    })
+}
+
+/// [`Registry::counter`] on the global registry.
+pub fn counter(name: &str) -> &'static Counter {
+    global().counter(name)
+}
+
+/// [`Registry::gauge`] on the global registry.
+pub fn gauge(name: &str) -> &'static Gauge {
+    global().gauge(name)
+}
+
+/// [`Registry::histogram`] on the global registry.
+pub fn histogram(name: &str) -> &'static Histogram {
+    global().histogram(name)
+}
+
+/// [`Registry::snapshot`] of the global registry.
+pub fn snapshot() -> Json {
+    global().snapshot()
+}
+
+// ---------------------------------------------------------------------------
+// Schema validation.
+// ---------------------------------------------------------------------------
+
+fn finite_nonneg(doc: &Json, what: &str) -> Result<f64> {
+    let v = doc
+        .as_f64()
+        .ok_or_else(|| anyhow!("{what}: not a number"))?;
+    if !v.is_finite() || v < 0.0 {
+        bail!("{what}: must be finite and >= 0 (got {v})");
+    }
+    Ok(v)
+}
+
+/// Validate a parsed metrics sidecar against schema `cxlmem-metrics-v1`
+/// — the gate behind `cxlmem stats --validate FILE` and
+/// `make metrics-smoke`.
+pub fn validate_metrics_doc(doc: &Json) -> Result<()> {
+    match doc.get("schema").and_then(Json::as_str) {
+        Some(s) if s == METRICS_SCHEMA => {}
+        Some(s) => bail!("schema is '{s}', want '{METRICS_SCHEMA}'"),
+        None => bail!("missing string field 'schema'"),
+    }
+    for section in ["counters", "gauges", "histograms", "rates"] {
+        if doc.get(section).and_then(Json::as_obj).is_none() {
+            bail!("missing object field '{section}'");
+        }
+    }
+    for (name, v) in doc.get("counters").unwrap().as_obj().unwrap() {
+        finite_nonneg(v, &format!("counters['{name}']"))?;
+    }
+    for (name, g) in doc.get("gauges").unwrap().as_obj().unwrap() {
+        for field in ["value", "hwm"] {
+            let f = g
+                .get(field)
+                .ok_or_else(|| anyhow!("gauges['{name}']: missing numeric '{field}'"))?;
+            if f.as_f64().map_or(true, |x| !x.is_finite()) {
+                bail!("gauges['{name}'].{field}: must be a finite number");
+            }
+        }
+    }
+    for (name, h) in doc.get("histograms").unwrap().as_obj().unwrap() {
+        for field in ["count", "sum", "max", "p10", "p50", "p90"] {
+            let f = h
+                .get(field)
+                .ok_or_else(|| anyhow!("histograms['{name}']: missing numeric '{field}'"))?;
+            finite_nonneg(f, &format!("histograms['{name}'].{field}"))?;
+        }
+        let buckets = h
+            .get("buckets")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("histograms['{name}']: missing array 'buckets'"))?;
+        let mut total = 0.0;
+        for (i, pair) in buckets.iter().enumerate() {
+            let pair = pair
+                .as_arr()
+                .filter(|p| p.len() == 2)
+                .ok_or_else(|| anyhow!("histograms['{name}'].buckets[{i}]: want [index, count]"))?;
+            let idx = finite_nonneg(&pair[0], &format!("histograms['{name}'].buckets[{i}][0]"))?;
+            if idx as usize >= BUCKETS {
+                bail!("histograms['{name}'].buckets[{i}]: index {idx} >= {BUCKETS}");
+            }
+            total += finite_nonneg(&pair[1], &format!("histograms['{name}'].buckets[{i}][1]"))?;
+        }
+        let count = h.get("count").unwrap().as_f64().unwrap();
+        if (total - count).abs() > 0.5 {
+            bail!("histograms['{name}']: bucket counts sum to {total}, 'count' is {count}");
+        }
+    }
+    for (name, v) in doc.get("rates").unwrap().as_obj().unwrap() {
+        finite_nonneg(v, &format!("rates['{name}']"))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::par::par_map;
+    use crate::util::stats;
+
+    #[test]
+    fn bucket_index_is_monotone_and_contiguous() {
+        let mut prev = bucket_index(0);
+        assert_eq!(prev, 0);
+        for v in 1..4096u64 {
+            let b = bucket_index(v);
+            assert!(b == prev || b == prev + 1, "gap at {v}: {prev} -> {b}");
+            prev = b;
+        }
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+        // Representatives round-trip and lower-bound their buckets.
+        for i in 0..BUCKETS {
+            let v = bucket_value(i);
+            assert_eq!(bucket_index(v), i, "representative of bucket {i}");
+        }
+        for v in [0u64, 1, 15, 16, 17, 1000, 1 << 20, u64::MAX] {
+            assert!(bucket_value(bucket_index(v)) <= v);
+        }
+    }
+
+    #[test]
+    fn histogram_quantiles_match_report_percentiles_on_known_data() {
+        // scenario::report quantiles go through util::stats::percentile
+        // (linear rank interpolation). On data made of exact bucket
+        // representatives the histogram must reproduce them bit-for-bit
+        // — same rank arithmetic, same values.
+        let h = Histogram::new();
+        let mut raw: Vec<f64> = Vec::new();
+        for i in [0usize, 1, 2, 3, 7, 12, 15, 16, 24, 100, 200, 300, 400] {
+            let v = bucket_value(i);
+            // Uneven repeats so ranks fall inside and between buckets.
+            for _ in 0..(i % 5 + 1) {
+                h.record(v);
+                raw.push(v as f64);
+            }
+        }
+        for p in [0.0, 10.0, 25.0, 50.0, 75.0, 90.0, 99.0, 100.0] {
+            let want = stats::percentile(&raw, p);
+            let got = h.quantile(p);
+            assert_eq!(got, want, "p{p}");
+        }
+        assert_eq!(h.max() as f64, stats::percentile(&raw, 100.0));
+        assert_eq!(h.count(), raw.len() as u64);
+    }
+
+    #[test]
+    fn concurrent_counter_increments_are_not_torn() {
+        let reg = Registry::new(true);
+        let c = reg.counter("t.concurrent.incs");
+        let g = reg.gauge("t.concurrent.level");
+        let h = reg.histogram("t.concurrent.ns");
+        let lanes: Vec<u64> = (0..8).collect();
+        par_map(&lanes, 4, |_| {
+            for i in 0..10_000u64 {
+                c.inc();
+                if i % 64 == 0 {
+                    let _guard = GaugeGuard::enter(g);
+                    h.record(i);
+                }
+            }
+        });
+        assert_eq!(c.get(), 8 * 10_000);
+        assert_eq!(h.count(), 8 * 157); // ceil(10000/64) = 157 recordings per lane
+        assert_eq!(g.get(), 0, "every guard decremented");
+        assert!(g.hwm() >= 1);
+        let snap = reg.snapshot_at(1_000);
+        let counted = snap
+            .get("counters")
+            .unwrap()
+            .get("t.concurrent.incs")
+            .unwrap()
+            .as_u64()
+            .unwrap();
+        assert_eq!(counted, 80_000, "snapshot must agree with the handles");
+    }
+
+    #[test]
+    fn disabled_registry_adds_no_entries() {
+        let reg = Registry::new(false);
+        reg.counter("x.hits").add(5);
+        reg.gauge("x.depth").set(3);
+        reg.histogram("x.ns").record(100);
+        assert!(reg.names().is_empty());
+        let snap = reg.snapshot_at(0);
+        for section in ["counters", "gauges", "histograms", "rates"] {
+            assert!(
+                snap.get(section).unwrap().as_obj().unwrap().is_empty(),
+                "{section} must stay empty when disabled"
+            );
+        }
+        // The null sinks still absorb writes without panicking, and the
+        // empty snapshot still validates.
+        validate_metrics_doc(&snap).unwrap();
+    }
+
+    #[test]
+    fn snapshot_validates_and_windows_report_rates() {
+        let reg = Registry::new(true);
+        let c = reg.counter("req.total");
+        c.add(100);
+        let s1 = reg.snapshot_at(1_000_000_000); // t = 1 s
+        validate_metrics_doc(&s1).unwrap();
+        assert!(s1.get("rates").unwrap().as_obj().unwrap().is_empty());
+        c.add(300);
+        let s2 = reg.snapshot_at(3_000_000_000); // t = 3 s: +300 in 2 s
+        validate_metrics_doc(&s2).unwrap();
+        let rate = s2
+            .get("rates")
+            .unwrap()
+            .get("req.per_s")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert!((rate - 150.0).abs() < 1e-9, "got {rate}");
+    }
+
+    #[test]
+    fn histogram_snapshot_buckets_merge_exactly() {
+        // Two "shards" record different halves; merging their sparse
+        // bucket lists must give the union histogram's quantiles.
+        let a = Histogram::new();
+        let b = Histogram::new();
+        let all = Histogram::new();
+        for v in 0..8u64 {
+            a.record(v);
+            all.record(v);
+        }
+        for v in 8..16u64 {
+            b.record(v);
+            all.record(v);
+        }
+        let mut merged = a.sparse();
+        for (k, v) in b.sparse() {
+            *merged.entry(k).or_insert(0) += v;
+        }
+        for p in [10.0, 50.0, 90.0] {
+            assert_eq!(quantile_of_sparse(&merged, p), all.quantile(p), "p{p}");
+        }
+    }
+
+    #[test]
+    fn validate_rejects_malformed_docs() {
+        assert!(validate_metrics_doc(&Json::parse("{}").unwrap()).is_err());
+        let wrong = Json::obj(vec![("schema", "cxlmem-bench-v1".into())]);
+        assert!(validate_metrics_doc(&wrong).is_err());
+        // A histogram whose bucket counts disagree with 'count'.
+        let bad = Json::parse(
+            r#"{"schema": "cxlmem-metrics-v1", "counters": {}, "gauges": {},
+                "histograms": {"h": {"count": 5, "sum": 1, "max": 1,
+                  "p10": 0, "p50": 0, "p90": 0, "buckets": [[1, 2]]}},
+                "rates": {}}"#,
+        )
+        .unwrap();
+        let err = validate_metrics_doc(&bad).unwrap_err().to_string();
+        assert!(err.contains("bucket counts"), "{err}");
+    }
+
+    #[test]
+    fn reset_zeroes_everything() {
+        let reg = Registry::new(true);
+        reg.counter("r.c").add(7);
+        reg.gauge("r.g").set(9);
+        reg.histogram("r.h").record(1234);
+        reg.reset();
+        assert_eq!(reg.counter("r.c").get(), 0);
+        assert_eq!((reg.gauge("r.g").get(), reg.gauge("r.g").hwm()), (0, 0));
+        assert_eq!(reg.histogram("r.h").count(), 0);
+    }
+}

@@ -6,6 +6,7 @@ pub mod cli;
 pub mod hash;
 pub mod json;
 pub mod lock;
+pub mod metrics;
 pub mod par;
 pub mod rng;
 pub mod stats;

@@ -3,6 +3,7 @@
 
 use std::time::{Duration, Instant};
 
+use super::metrics;
 use super::stats;
 
 /// Result of benchmarking one target.
@@ -12,8 +13,23 @@ pub struct BenchResult {
     pub iters: u64,
     pub mean_ns: f64,
     pub median_ns: f64,
+    pub p50_ns: f64,
+    pub p90_ns: f64,
     pub p95_ns: f64,
     pub stddev_ns: f64,
+}
+
+/// Quantile through the shared [`metrics`] histogram buckets: a
+/// `BenchResult` p50/p90 and a `cxlmem-metrics-v1` histogram quantile
+/// over the same samples agree exactly (same bucket edges, same rank
+/// interpolation) — the point is that BENCH_hotpath.json and a metrics
+/// sidecar are directly comparable.
+pub fn bucketed_percentile(samples_ns: &[f64], p: f64) -> f64 {
+    let mut buckets = std::collections::BTreeMap::new();
+    for &s in samples_ns {
+        *buckets.entry(metrics::bucket_index(s.max(0.0) as u64)).or_insert(0u64) += 1;
+    }
+    metrics::quantile_of_sparse(&buckets, p)
 }
 
 impl BenchResult {
@@ -109,6 +125,8 @@ impl Bencher {
             iters: total_iters,
             mean_ns: stats::mean(&samples_ns),
             median_ns: stats::median(&samples_ns),
+            p50_ns: bucketed_percentile(&samples_ns, 50.0),
+            p90_ns: bucketed_percentile(&samples_ns, 90.0),
             p95_ns: stats::percentile(&samples_ns, 95.0),
             stddev_ns: stats::stddev(&samples_ns),
         };
@@ -142,7 +160,19 @@ mod tests {
             .clone();
         assert!(r.mean_ns > 0.0);
         assert!(r.iters > 0);
+        assert!(r.p50_ns > 0.0 && r.p90_ns >= r.p50_ns);
         assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn bucketed_percentiles_match_plain_percentiles_on_representatives() {
+        // 0..16 are exact histogram buckets (identity region), so the
+        // bucketed quantile reproduces stats::percentile bit-for-bit —
+        // pins that timer and util::metrics share one bucket scheme.
+        let samples: Vec<f64> = (0..16).map(|i| i as f64).collect();
+        for p in [0.0, 50.0, 90.0, 100.0] {
+            assert_eq!(bucketed_percentile(&samples, p), stats::percentile(&samples, p));
+        }
     }
 
     #[test]

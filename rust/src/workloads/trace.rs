@@ -55,6 +55,7 @@ use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex, OnceLock};
 
 use super::tiering_apps::{AppModel, TraceGen};
+use crate::util::metrics;
 
 /// Default byte budget for the process-global store.
 pub const DEFAULT_BUDGET_BYTES: usize = 256 << 20;
@@ -336,13 +337,13 @@ struct Inner {
     map: BTreeMap<TraceKey, Entry>,
     bytes: usize,
     tick: u64,
-    requests: u64,
-    generated: u64,
-    evicted: u64,
-    oversized: u64,
 }
 
 /// Store counters (`cxlmem trace-smoke` gates on `generated`).
+///
+/// The counters live in `util::metrics` handles (the global store's
+/// appear in `cxlmem stats` snapshots as `trace.*`); this struct is the
+/// point-in-time view [`TraceStore::stats`] assembles from them.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct TraceStoreStats {
     /// Total `get` calls.
@@ -360,17 +361,68 @@ pub struct TraceStoreStats {
     pub bytes: usize,
 }
 
+/// Metric handles backing one store's counters. The global store wires
+/// these to the registry (`trace.*`); per-instance stores (tests) get
+/// detached handles so they never pollute process snapshots.
+struct StoreCounters {
+    requests: &'static metrics::Counter,
+    generated: &'static metrics::Counter,
+    evicted: &'static metrics::Counter,
+    oversized: &'static metrics::Counter,
+    entries: &'static metrics::Gauge,
+    bytes: &'static metrics::Gauge,
+}
+
+impl StoreCounters {
+    fn detached() -> StoreCounters {
+        StoreCounters {
+            requests: metrics::detached_counter(),
+            generated: metrics::detached_counter(),
+            evicted: metrics::detached_counter(),
+            oversized: metrics::detached_counter(),
+            entries: metrics::detached_gauge(),
+            bytes: metrics::detached_gauge(),
+        }
+    }
+
+    fn registered(reg: &metrics::Registry) -> StoreCounters {
+        StoreCounters {
+            requests: reg.counter("trace.requests"),
+            generated: reg.counter("trace.generated"),
+            evicted: reg.counter("trace.evicted"),
+            oversized: reg.counter("trace.oversized"),
+            entries: reg.gauge("trace.entries"),
+            bytes: reg.gauge("trace.bytes"),
+        }
+    }
+
+    fn reset(&self) {
+        self.requests.reset();
+        self.generated.reset();
+        self.evicted.reset();
+        self.oversized.reset();
+        self.entries.reset();
+        self.bytes.reset();
+    }
+}
+
 /// Keyed store of immutable trace snapshots; see the module docs for
 /// keying, lifetime, and the memory bound.
 pub struct TraceStore {
     budget: usize,
+    counters: StoreCounters,
     inner: Mutex<Inner>,
 }
 
 impl TraceStore {
     pub fn with_budget(budget: usize) -> TraceStore {
+        Self::with_counters(budget, StoreCounters::detached())
+    }
+
+    fn with_counters(budget: usize, counters: StoreCounters) -> TraceStore {
         TraceStore {
             budget,
+            counters,
             inner: Mutex::new(Inner::default()),
         }
     }
@@ -398,7 +450,7 @@ impl TraceStore {
     pub fn get(&self, model: &AppModel, epochs: usize, seed: u64) -> Arc<EpochTrace> {
         let key = TraceKey::of(model, epochs, seed);
         let mut inner = self.lock();
-        inner.requests += 1;
+        self.counters.requests.inc();
         inner.tick += 1;
         let tick = inner.tick;
         if let Some(e) = inner.map.get_mut(&key) {
@@ -406,9 +458,9 @@ impl TraceStore {
             return Arc::clone(&e.trace);
         }
         let trace = Arc::new(EpochTrace::generate(model, epochs, seed));
-        inner.generated += 1;
+        self.counters.generated.inc();
         if trace.bytes() > self.budget {
-            inner.oversized += 1;
+            self.counters.oversized.inc();
             return trace;
         }
         inner.bytes += trace.bytes();
@@ -417,7 +469,8 @@ impl TraceStore {
             last_use: tick,
         };
         inner.map.insert(key, entry);
-        Self::evict_over(&mut inner, self.budget);
+        self.evict_over(&mut inner);
+        self.sync_gauges(&inner);
         trace
     }
 
@@ -446,16 +499,17 @@ impl TraceStore {
             }
             if let Some(e) = inner.map.remove(&key) {
                 inner.bytes -= e.trace.bytes();
-                inner.evicted += 1;
+                self.counters.evicted.inc();
             }
         }
+        self.sync_gauges(&inner);
     }
 
-    fn evict_over(inner: &mut Inner, budget: usize) {
+    fn evict_over(&self, inner: &mut Inner) {
         // Oversized entries never enter the map (see `get`), so this
         // always terminates with `bytes <= budget`: the `len() > 1`
         // guard only stops it when the single remaining entry fits.
-        while inner.bytes > budget && inner.map.len() > 1 {
+        while inner.bytes > self.budget && inner.map.len() > 1 {
             let key = inner
                 .map
                 .iter()
@@ -464,24 +518,33 @@ impl TraceStore {
                 .expect("non-empty map");
             if let Some(e) = inner.map.remove(&key) {
                 inner.bytes -= e.trace.bytes();
-                inner.evicted += 1;
+                self.counters.evicted.inc();
             }
         }
+    }
+
+    /// Mirror the current retention level into the `entries`/`bytes`
+    /// gauges (called with the lock held, after any mutation).
+    fn sync_gauges(&self, inner: &Inner) {
+        self.counters.entries.set(inner.map.len() as i64);
+        self.counters.bytes.set(inner.bytes as i64);
     }
 
     /// Drop every entry and reset all counters (the trace-smoke gate
     /// starts from a clean store).
     pub fn clear(&self) {
-        *self.lock() = Inner::default();
+        let mut inner = self.lock();
+        *inner = Inner::default();
+        self.counters.reset();
     }
 
     pub fn stats(&self) -> TraceStoreStats {
         let inner = self.lock();
         TraceStoreStats {
-            requests: inner.requests,
-            generated: inner.generated,
-            evicted: inner.evicted,
-            oversized: inner.oversized,
+            requests: self.counters.requests.get(),
+            generated: self.counters.generated.get(),
+            evicted: self.counters.evicted.get(),
+            oversized: self.counters.oversized.get(),
             entries: inner.map.len(),
             bytes: inner.bytes,
         }
@@ -489,9 +552,16 @@ impl TraceStore {
 }
 
 /// The process-global store every grid cell and fleet member shares.
+/// Its counters are registered in the global metrics registry as
+/// `trace.*`, so they appear in every `cxlmem stats` snapshot.
 pub fn global() -> &'static TraceStore {
     static GLOBAL: OnceLock<TraceStore> = OnceLock::new();
-    GLOBAL.get_or_init(|| TraceStore::with_budget(DEFAULT_BUDGET_BYTES))
+    GLOBAL.get_or_init(|| {
+        TraceStore::with_counters(
+            DEFAULT_BUDGET_BYTES,
+            StoreCounters::registered(metrics::global()),
+        )
+    })
 }
 
 #[cfg(test)]
@@ -719,5 +789,46 @@ mod tests {
         store.get(&app, 2, 1);
         store.clear();
         assert_eq!(store.stats(), TraceStoreStats::default());
+    }
+
+    #[test]
+    fn registry_snapshot_agrees_with_stats() {
+        // The global store's counters are registry-backed; a private
+        // registry here keeps the test deterministic under the parallel
+        // test harness. Snapshot and stats() must tell the same story.
+        let reg = metrics::Registry::new(true);
+        let store =
+            TraceStore::with_counters(DEFAULT_BUDGET_BYTES, StoreCounters::registered(&reg));
+        let app = small(pagerank(), 600);
+        let a = store.get(&app, 2, 1);
+        let b = store.get(&app, 2, 1);
+        assert!(Arc::ptr_eq(&a, &b));
+        let snap = reg.snapshot_at(1_000);
+        let counter = |name: &str| {
+            snap.get("counters")
+                .unwrap()
+                .get(name)
+                .unwrap()
+                .as_u64()
+                .unwrap()
+        };
+        let s = store.stats();
+        assert_eq!((s.requests, s.generated, s.entries), (2, 1, 1));
+        assert_eq!(counter("trace.requests"), s.requests);
+        assert_eq!(counter("trace.generated"), s.generated);
+        assert_eq!(counter("trace.evicted"), s.evicted);
+        let entries = snap
+            .get("gauges")
+            .unwrap()
+            .get("trace.entries")
+            .unwrap()
+            .get("value")
+            .unwrap()
+            .as_u64()
+            .unwrap();
+        assert_eq!(entries as usize, s.entries);
+        store.clear();
+        assert_eq!(store.stats(), TraceStoreStats::default());
+        assert_eq!(reg.counter("trace.requests").get(), 0, "clear resets registry");
     }
 }

@@ -1,0 +1,211 @@
+//! Metrics-layer integration suite.
+//!
+//! Pins the ISSUE 7 acceptance criteria:
+//! - concurrent increments from `util::par` workers snapshot
+//!   consistently (no torn counts, gauges return to zero);
+//! - histogram quantile extraction matches the `scenario::report`
+//!   percentile semantics on known data;
+//! - a disabled registry registers nothing and its snapshot still
+//!   validates;
+//! - `scenario report` ingests a metrics sidecar and folds it into the
+//!   fleet summary tables;
+//! - instrumentation stays off the parity-pinned reference paths: an
+//!   instrumented tiering run and a `perf::with_reference` run produce
+//!   bit-identical results, and the registry only moves during the
+//!   instrumented one.
+
+use std::collections::BTreeMap;
+
+use cxlmem::memsim::{topology, MemKind, Pattern};
+use cxlmem::tiering::{initial_state, simulate, SimConfig, Tiering08};
+use cxlmem::util::metrics::{self, GaugeGuard, Registry};
+use cxlmem::util::par::par_map;
+use cxlmem::util::stats;
+use cxlmem::workloads::tiering_apps::{pagerank, TraceGen};
+
+#[test]
+fn concurrent_par_workers_snapshot_consistently() {
+    let reg = Box::leak(Box::new(Registry::new(true)));
+    let c = reg.counter("it.workers.incs");
+    let g = reg.gauge("it.workers.in_flight");
+    let h = reg.histogram("it.workers.ns");
+    let lanes: Vec<u64> = (0..16).collect();
+    par_map(&lanes, 8, |_| {
+        for i in 0..5_000u64 {
+            let _guard = GaugeGuard::enter(g);
+            c.inc();
+            if i % 100 == 0 {
+                h.record(i);
+            }
+        }
+    });
+    assert_eq!(c.get(), 16 * 5_000);
+    assert_eq!(g.get(), 0, "every GaugeGuard must have released");
+    assert!(g.hwm() >= 1);
+    assert_eq!(h.count(), 16 * 50);
+    // The rendered snapshot agrees with the handles and validates.
+    let snap = reg.snapshot();
+    metrics::validate_metrics_doc(&snap).unwrap();
+    let counters = snap.get("counters").unwrap();
+    assert_eq!(counters.get("it.workers.incs").unwrap().as_u64(), Some(80_000));
+}
+
+#[test]
+fn histogram_quantiles_match_report_percentile_semantics() {
+    // Feed exact bucket representatives so bucketing is lossless: the
+    // histogram quantile must then equal util::stats::percentile — the
+    // same function `scenario::report` uses for its quantile tables.
+    let reg = Registry::new(true);
+    let h = reg.histogram("it.quantiles.ns");
+    let values: Vec<u64> = (0..cxlmem::util::metrics::BUCKETS)
+        .step_by(7)
+        .map(metrics::bucket_value)
+        .collect();
+    for &v in &values {
+        h.record(v);
+    }
+    let as_f64: Vec<f64> = values.iter().map(|&v| v as f64).collect();
+    for p in [0.0, 10.0, 50.0, 90.0, 99.0, 100.0] {
+        assert_eq!(
+            h.quantile(p),
+            stats::percentile(&as_f64, p),
+            "p{p} diverged from scenario::report semantics"
+        );
+    }
+}
+
+#[test]
+fn disabled_registry_registers_nothing() {
+    let reg = Registry::new(false);
+    assert!(!reg.enabled());
+    let c = reg.counter("it.disabled.c");
+    let g = reg.gauge("it.disabled.g");
+    let h = reg.histogram("it.disabled.h");
+    c.add(100);
+    g.set(5);
+    h.record(42);
+    assert!(reg.names().is_empty(), "null sinks must not register");
+    let snap = reg.snapshot();
+    metrics::validate_metrics_doc(&snap).unwrap();
+    assert!(snap.get("counters").unwrap().as_obj().unwrap().is_empty());
+    assert!(snap.get("histograms").unwrap().as_obj().unwrap().is_empty());
+}
+
+#[test]
+fn scenario_report_folds_metrics_sidecar() {
+    let reg = Registry::new(true);
+    reg.counter("scenario.cache.hits").add(9);
+    reg.counter("scenario.cache.misses").add(1);
+    let h = reg.histogram("eval.policy.tpp.ns");
+    for v in [1_000_000u64, 2_000_000, 4_000_000] {
+        h.record(v);
+    }
+    let sidecar = format!("{}\n", reg.snapshot());
+    // A sidecar alone summarizes (fleet drivers concatenate it onto the
+    // result JSONL; `collect_docs` routes the lines by schema).
+    let report = cxlmem::scenario::summarize_text(&sidecar).unwrap();
+    let text = report.render(cxlmem::report::Format::Text);
+    assert!(text.contains("runtime metrics"), "missing metrics table:\n{text}");
+    assert!(text.contains("90.0%"), "hit rate not rendered:\n{text}");
+    assert!(text.contains("tpp"), "per-policy quantile row missing:\n{text}");
+}
+
+#[test]
+fn instrumented_and_reference_tiering_runs_are_bit_identical() {
+    // Mirror of `simulate_reference_parity_full_run`, pointed at the
+    // metrics layer: the instrumented production path must not perturb
+    // results, and the registry must stay silent under
+    // `perf::with_reference` (tiering.epochs only moves when the
+    // production path runs).
+    let sys = topology::system_a();
+    let ld = sys.node_of(0, MemKind::Ldram).unwrap();
+    let cxl = sys.node_of(0, MemKind::Cxl).unwrap();
+    let mut app = pagerank();
+    app.pages = 4000;
+    let run_once = |reference: bool| {
+        let mut state = initial_state(4000, ld, cxl, 1500, false);
+        let gen = TraceGen::new(app.clone(), 9);
+        let mut pol = Tiering08::default();
+        let cfg = SimConfig {
+            socket: 0,
+            threads: 64,
+            compute_ns_per_byte: 0.5,
+            epochs: 4,
+            seed: 9,
+        };
+        let body = || {
+            simulate(
+                &sys,
+                &cfg,
+                &mut state,
+                &mut pol,
+                |_, buf| gen.epoch_counts_into(buf),
+                |_| (Pattern::Random, 0.5),
+            )
+        };
+        if reference {
+            cxlmem::perf::with_reference(body)
+        } else {
+            body()
+        }
+    };
+    let epochs_counter = metrics::counter("tiering.epochs");
+    let before_ref = epochs_counter.get();
+    let reference = run_once(true);
+    assert_eq!(
+        epochs_counter.get(),
+        before_ref,
+        "reference path must not touch the registry"
+    );
+    let before_opt = epochs_counter.get();
+    let opt = run_once(false);
+    assert!(
+        epochs_counter.get() >= before_opt + 4,
+        "instrumented path should record its epochs"
+    );
+    assert_eq!(opt.stats, reference.stats);
+    assert_eq!(opt.overhead_s.to_bits(), reference.overhead_s.to_bits());
+    let rel = (opt.app_s - reference.app_s).abs() / reference.app_s;
+    assert!(rel < 1e-9, "app_s {} vs {}", opt.app_s, reference.app_s);
+}
+
+#[test]
+fn sidecar_snapshots_merge_exactly_across_shards() {
+    // Two shard processes writing sidecars must aggregate to the union:
+    // shared fixed bucket edges make the histogram merge exact, and
+    // counter sums / gauge hwm maxes are associative.
+    let shard = |seed: u64| {
+        let reg = Registry::new(true);
+        reg.counter("scenario.cache.hits").add(seed);
+        reg.gauge("scenario.batch.jobs_in_flight").set(seed as i64);
+        let h = reg.histogram("eval.policy.oli.ns");
+        for i in 0..10u64 {
+            h.record(metrics::bucket_value((seed as usize * 11 + i as usize * 13) % 400));
+        }
+        reg.snapshot()
+    };
+    let (a, b) = (shard(3), shard(5));
+    let merged: BTreeMap<usize, u64> = [&a, &b]
+        .iter()
+        .flat_map(|s| {
+            s.get("histograms")
+                .and_then(|h| h.get("eval.policy.oli.ns"))
+                .and_then(|h| h.get("buckets"))
+                .and_then(|b| b.as_arr())
+                .unwrap()
+                .iter()
+                .map(|pair| {
+                    let pair = pair.as_arr().unwrap();
+                    (pair[0].as_usize().unwrap(), pair[1].as_u64().unwrap())
+                })
+                .collect::<Vec<_>>()
+        })
+        .fold(BTreeMap::new(), |mut acc, (i, n)| {
+            *acc.entry(i).or_insert(0) += n;
+            acc
+        });
+    assert_eq!(merged.values().sum::<u64>(), 20);
+    // The merged quantile is computable without the raw samples.
+    let p50 = metrics::quantile_of_sparse(&merged, 50.0);
+    assert!(p50.is_finite() && p50 >= 0.0);
+}
