@@ -4,13 +4,13 @@
 # golden-parity suite), a quick hot-path benchmark pass with schema
 # validation of BENCH_hotpath.json + BENCH_metrics.json, the scenario
 # engine checks, the result-cache smoke, the two-process shard smoke,
-# the metrics-registry smoke, the shared epoch-trace store smoke, the
-# million-page scale smoke, and a formatting check. Mirrors
-# .github/workflows/ci.yml.
+# the metrics-registry smoke, the chaos/fault-isolation smoke, the
+# shared epoch-trace store smoke, the million-page scale smoke, and a
+# formatting check. Mirrors .github/workflows/ci.yml.
 
-.PHONY: ci build test bench-smoke bench bench-check fmt-check exp-all scenario-check cache-smoke shard-smoke metrics-smoke trace-smoke scale-smoke
+.PHONY: ci build test bench-smoke bench bench-check fmt-check exp-all scenario-check cache-smoke shard-smoke metrics-smoke chaos-smoke trace-smoke scale-smoke
 
-ci: build test bench-check scenario-check cache-smoke shard-smoke metrics-smoke trace-smoke scale-smoke fmt-check
+ci: build test bench-check scenario-check cache-smoke shard-smoke metrics-smoke chaos-smoke trace-smoke scale-smoke fmt-check
 
 build:
 	cargo build --release
@@ -95,6 +95,26 @@ metrics-smoke: build
 	cmp /tmp/cxlmem-metrics-smoke/r1.jsonl /tmp/cxlmem-metrics-smoke/r2.jsonl
 	./target/release/cxlmem scenario report /tmp/cxlmem-metrics-smoke/r1.jsonl --metrics /tmp/cxlmem-metrics-smoke/m1.json | grep -q "runtime metrics"
 	rm -rf /tmp/cxlmem-metrics-smoke
+
+# Chaos gate: the in-process check first — a fleet under a seeded fault
+# plan must isolate the injected panic into exactly the planned
+# cxlmem-result-error-v1 document, retry the transient IO faults to
+# success, and (error documents are never cached) heal on a re-run to
+# JSONL byte-identical to a never-faulted run. Then the CLI path: an
+# --inject-faults run exits 0 with the error document embedded,
+# `scenario report --expect` reconciles the coverage, and a clean
+# re-run over the same cache heals byte-identically.
+chaos-smoke: build
+	./target/release/cxlmem chaos-smoke
+	rm -rf /tmp/cxlmem-chaos-cli && mkdir -p /tmp/cxlmem-chaos-cli
+	./target/release/cxlmem scenario expand examples/scenarios/fleet.json --count 6 --seed 9 --out /tmp/cxlmem-chaos-cli/fleet.jsonl
+	./target/release/cxlmem scenario run /tmp/cxlmem-chaos-cli/fleet.jsonl --jobs 2 --cache-dir /tmp/cxlmem-chaos-cli/cache --inject-faults "scenario.eval/fleet-002=panic:1" --out /tmp/cxlmem-chaos-cli/faulted.jsonl
+	grep -q "cxlmem-result-error-v1" /tmp/cxlmem-chaos-cli/faulted.jsonl
+	./target/release/cxlmem scenario report /tmp/cxlmem-chaos-cli/faulted.jsonl --expect /tmp/cxlmem-chaos-cli/fleet.jsonl | grep -q "error documents by kind"
+	./target/release/cxlmem scenario run /tmp/cxlmem-chaos-cli/fleet.jsonl --jobs 2 --cache-dir /tmp/cxlmem-chaos-cli/cache --out /tmp/cxlmem-chaos-cli/healed.jsonl
+	./target/release/cxlmem scenario run /tmp/cxlmem-chaos-cli/fleet.jsonl --jobs 2 --no-cache --out /tmp/cxlmem-chaos-cli/clean.jsonl
+	cmp /tmp/cxlmem-chaos-cli/healed.jsonl /tmp/cxlmem-chaos-cli/clean.jsonl
+	rm -rf /tmp/cxlmem-chaos-cli
 
 # Shared epoch-trace store gate: fig16 twice in one process must emit
 # byte-identical reports from a single trace generation per app

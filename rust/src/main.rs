@@ -6,14 +6,17 @@
 //! cxlmem scenario expand <file> [--seed S] [--count N]        expand sweeps/fleets to spec JSONL
 //! cxlmem scenario run <files…|-> [--jobs N] [--out FILE]      batch-evaluate → result JSONL
 //!                    [--shard K/N] [--no-cache] [--cache-dir DIR]  (result cache on by default)
+//!                    [--fail-fast] [--retries N] [--deadline-secs S] [--inject-faults PLAN]
 //! cxlmem scenario bench [--count N] [--jobs N] [--cache]      fleet throughput probe
 //! cxlmem scenario report <results.jsonl|cache dir>            fleet summaries from result JSONL
 //!                    [--metrics FILE]                         (fold in metrics sidecars)
+//!                    [--expect FILE] [--shards N]             (reconcile shard coverage)
 //! cxlmem bench [--smoke|--quick] [--jobs N] [--out FILE]      hot-path benchmarks → BENCH_hotpath.json
 //! cxlmem bench --validate FILE                                schema-check a BENCH_hotpath.json
 //! cxlmem stats [FILE|-] [--json]                              render a cxlmem-metrics-v1 snapshot
 //! cxlmem stats --validate FILE                                schema-check a metrics sidecar
 //! cxlmem metrics-smoke [--count N] [--jobs N]                 metrics/cache consistency gate (make metrics-smoke)
+//! cxlmem chaos-smoke [--count N] [--jobs N]                   fault-isolation gate (make chaos-smoke)
 //! cxlmem trace-smoke                                          shared epoch-trace store gate (make trace-smoke)
 //! cxlmem scale-smoke [--pages N] [--epochs N] [--jobs N]      million-page parity + peak-RSS gate (make scale-smoke)
 //!                    [--rss-mb MB]
@@ -41,6 +44,7 @@ fn main() -> Result<()> {
         "bench" => cmd_bench(&args),
         "stats" => cmd_stats(&args),
         "metrics-smoke" => cmd_metrics_smoke(&args),
+        "chaos-smoke" => cmd_chaos_smoke(&args),
         "trace-smoke" => cmd_trace_smoke(&args),
         "scale-smoke" => cmd_scale_smoke(&args),
         "train" => cxlmem::exp::drivers::train(&args),
@@ -196,10 +200,13 @@ fn cmd_scenario(args: &Args) -> Result<()> {
             if files.is_empty() {
                 bail!(
                     "usage: cxlmem scenario run <files...|-> [--jobs N] [--out FILE] \
-                     [--shard K/N] [--no-cache] [--cache-dir DIR] [--metrics FILE]"
+                     [--shard K/N] [--no-cache] [--cache-dir DIR] [--metrics FILE] \
+                     [--fail-fast] [--retries N] [--deadline-secs S] [--inject-faults PLAN]"
                 );
             }
             let metrics = metrics_out(args)?;
+            let opts = supervise_opts(args)?;
+            install_faults(args)?;
             let mut specs = Vec::new();
             for file in files {
                 let text = if file == "-" {
@@ -214,7 +221,11 @@ fn cmd_scenario(args: &Args) -> Result<()> {
             let specs = apply_shard(args, specs)?;
             let jobs = args.get_usize("jobs", cxlmem::perf::default_jobs());
             let mut cache = open_scenario_cache(args, true)?;
-            let results = scenario::run_batch_cached(&specs, jobs, cache.as_mut())?;
+            let results = scenario::run_batch_supervised(&specs, jobs, cache.as_mut(), &opts)?;
+            let errors = results
+                .iter()
+                .filter(|r| scenario::supervise::is_error_doc(&r.doc))
+                .count();
             match &cache {
                 Some(c) => eprintln!(
                     "ran {} scenario(s) on {jobs} job(s) (cache: {} hit(s), {} miss(es), \
@@ -225,6 +236,13 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                     c.misses() == 0 && c.hits() > 0
                 ),
                 None => eprintln!("ran {} scenario(s) on {jobs} job(s)", results.len()),
+            }
+            if errors > 0 {
+                eprintln!(
+                    "{errors} scenario(s) failed — {} document(s) embedded in the output \
+                     JSONL (see `scenario report`)",
+                    scenario::ERROR_SCHEMA
+                );
             }
             let out = to_jsonl(results.into_iter().map(|r| r.doc));
             write_or_print(args, &out)?;
@@ -271,7 +289,7 @@ fn cmd_scenario(args: &Args) -> Result<()> {
             let file = files.first().ok_or_else(|| {
                 anyhow!(
                     "usage: cxlmem scenario report <results.jsonl|cache dir|-> \
-                     [--csv|--json] [--out FILE] [--metrics FILE]"
+                     [--csv|--json] [--out FILE] [--metrics FILE] [--expect FILE] [--shards N]"
                 )
             })?;
             let mut text = if file == "-" {
@@ -302,7 +320,33 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                 }
                 text.push_str(&extra);
             }
-            let report = scenario::summarize_text(&text).map_err(|e| anyhow!("{file}: {e}"))?;
+            // `--expect FILE [--shards N]` reconciles expected-vs-present
+            // coverage: the expanded spec list (or its template) names
+            // what every index-modulo shard owed; the report classifies
+            // each name as present, errored, or missing.
+            if args.flag("expect") {
+                bail!("--expect requires a FILE argument (expanded spec JSONL or a template)");
+            }
+            let expected = match args.get("expect") {
+                Some(f) => {
+                    if args.flag("shards") {
+                        bail!("--shards requires an N argument (how many --shard K/N processes)");
+                    }
+                    let etext = std::fs::read_to_string(f)
+                        .with_context(|| format!("reading expected specs {f}"))?;
+                    let shards = args.get_usize("shards", 1);
+                    Some(
+                        scenario::report::expectation_from_text(&etext, shards)
+                            .map_err(|e| anyhow!("{f}: {e}"))?,
+                    )
+                }
+                None if args.get("shards").is_some() || args.flag("shards") => {
+                    bail!("--shards only makes sense together with --expect FILE")
+                }
+                None => None,
+            };
+            let report = scenario::report::summarize_text_with(&text, expected.as_ref())
+                .map_err(|e| anyhow!("{file}: {e}"))?;
             let fmt = if args.flag("json") {
                 Format::Json
             } else if args.flag("csv") {
@@ -327,10 +371,11 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                  \x20 cxlmem scenario expand <file> [--seed S] [--count N] [--out FILE]\n\
                  \x20 cxlmem scenario run <files...|-> [--jobs N] [--out FILE]\n\
                  \x20\x20\x20\x20 [--shard K/N] [--no-cache] [--cache-dir DIR] [--metrics FILE]\n\
+                 \x20\x20\x20\x20 [--fail-fast] [--retries N] [--deadline-secs S] [--inject-faults PLAN]\n\
                  \x20 cxlmem scenario bench [--count N] [--seed S] [--jobs N] [--out FILE] [--cache]\n\
                  \x20\x20\x20\x20 [--shard K/N] [--metrics FILE]\n\
                  \x20 cxlmem scenario report <results.jsonl|cache dir|-> [--csv|--json] [--out FILE]\n\
-                 \x20\x20\x20\x20 [--metrics FILE]\n\
+                 \x20\x20\x20\x20 [--metrics FILE] [--expect FILE] [--shards N]\n\
                  \n\
                  `run` serves repeated specs from the content-addressed result cache\n\
                  (default {}; key = canonical spec hash — see README 'Result cache').\n\
@@ -338,8 +383,18 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                  `--shard K/N` runs the K-th of N index-modulo slices of the expanded\n\
                  list: point N processes at one --cache-dir and they rendezvous in the\n\
                  shared store; re-running the full list is then pure cache hits.\n\
+                 `run` is supervised by default: a panicking or erroring spec becomes a\n\
+                 cxlmem-result-error-v1 document in the output instead of aborting the\n\
+                 fleet, transient IO failures retry (--retries, default 2) with seeded\n\
+                 jittered backoff, --deadline-secs marks overruns timed out, and\n\
+                 --fail-fast restores the historical first-failure abort. Error\n\
+                 documents are never cached: re-running retries exactly the failed\n\
+                 slots. --inject-faults arms the deterministic chaos layer (see README\n\
+                 'Fault tolerance & chaos testing'; env spelling CXLMEM_FAULTS).\n\
                  `report` aggregates result JSONL (or a cache dir) into fleet summaries:\n\
-                 best policy per device profile, win matrix, quantiles, OLI gains.\n\
+                 best policy per device profile, win matrix, quantiles, OLI gains, and\n\
+                 error documents by kind and shard; `--expect FILE [--shards N]`\n\
+                 reconciles expected-vs-present coverage per shard.\n\
                  `run`/`bench` accept `--metrics FILE` ('-' for stderr) to capture a\n\
                  cxlmem-metrics-v1 registry snapshot; `report --metrics FILE` folds\n\
                  sidecars into the summary (hit rates, queue depth, eval quantiles).\n\
@@ -374,6 +429,57 @@ fn apply_shard(
     let kept = shard.filter(specs);
     eprintln!("shard {shard}: {} of {total} scenario(s)", kept.len());
     Ok(kept)
+}
+
+/// `--fail-fast` / `--retries N` / `--deadline-secs S` handling for
+/// `scenario run`: build the batch supervision policy (see
+/// `scenario::supervise`). The `--shard K/N` label, when present, is
+/// echoed into error documents so `scenario report` can count errors
+/// per shard.
+fn supervise_opts(args: &Args) -> Result<cxlmem::scenario::SuperviseOpts> {
+    use anyhow::{anyhow, bail};
+    let mut opts = if args.flag("fail-fast") {
+        cxlmem::scenario::SuperviseOpts::fail_fast()
+    } else {
+        cxlmem::scenario::SuperviseOpts::default()
+    };
+    // Bare `--retries` / `--deadline-secs` (value forgotten, or eaten
+    // by a following flag) must error, not silently keep the defaults.
+    if args.flag("retries") {
+        bail!("--retries requires a COUNT argument");
+    }
+    if let Some(r) = args.get("retries") {
+        opts.retries = r.parse().map_err(|_| anyhow!("--retries '{r}' is not an integer"))?;
+    }
+    if args.flag("deadline-secs") {
+        bail!("--deadline-secs requires a SECONDS argument");
+    }
+    if let Some(d) = args.get("deadline-secs") {
+        let secs: f64 = d
+            .parse()
+            .map_err(|_| anyhow!("--deadline-secs '{d}' is not a number"))?;
+        if !secs.is_finite() || secs <= 0.0 {
+            bail!("--deadline-secs wants a positive number of seconds (got '{d}')");
+        }
+        opts.deadline = Some(std::time::Duration::from_secs_f64(secs));
+    }
+    opts.shard = args.get("shard").map(String::from);
+    Ok(opts)
+}
+
+/// `--inject-faults PLAN`: arm the deterministic chaos layer for this
+/// process (see `util::fault` for the `point[/KEY]=KIND[:N];…` syntax;
+/// `CXLMEM_FAULTS` is the environment spelling of the same plan).
+fn install_faults(args: &Args) -> Result<()> {
+    use cxlmem::util::fault;
+    if args.flag("inject-faults") {
+        anyhow::bail!("--inject-faults requires a PLAN argument (point[/KEY]=KIND[:N];...)");
+    }
+    if let Some(plan) = args.get("inject-faults") {
+        fault::install(fault::FaultPlan::parse(plan)?);
+        eprintln!("fault injection armed: {plan}");
+    }
+    Ok(())
 }
 
 /// `--cache` / `--no-cache` / `--cache-dir DIR` handling shared by
@@ -428,9 +534,37 @@ fn cmd_bench(args: &Args) -> Result<()> {
     }
     if let Some(path) = args.get("validate") {
         let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
-        let doc = Json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
-        cxlmem::bench::validate_report_doc(&doc).map_err(|e| anyhow!("{path}: {e}"))?;
-        println!("{path}: ok (schema cxlmem-bench-v1)");
+        // A bench artifact is normally one JSON document; supervised
+        // pipelines may append cxlmem-result-error-v1 lines to the same
+        // file, so fall back to JSONL and schema-check every line
+        // against its own schema.
+        let docs = match Json::parse(&text) {
+            Ok(doc) => vec![doc],
+            Err(_) => {
+                cxlmem::util::json::parse_jsonl(&text).map_err(|e| anyhow!("{path}: {e}"))?
+            }
+        };
+        let (mut benches, mut errors) = (0usize, 0usize);
+        for doc in &docs {
+            if cxlmem::scenario::supervise::is_error_doc(doc) {
+                cxlmem::scenario::validate_error_doc(doc).map_err(|e| anyhow!("{path}: {e}"))?;
+                errors += 1;
+            } else {
+                cxlmem::bench::validate_report_doc(doc).map_err(|e| anyhow!("{path}: {e}"))?;
+                benches += 1;
+            }
+        }
+        if benches == 0 {
+            bail!("{path}: no bench report found (schema cxlmem-bench-v1)");
+        }
+        println!(
+            "{path}: ok (schema cxlmem-bench-v1{})",
+            if errors == 0 {
+                String::new()
+            } else {
+                format!(" + {errors} error document(s), schema {}", cxlmem::scenario::ERROR_SCHEMA)
+            }
+        );
         return Ok(());
     }
     let metrics = metrics_out(args)?;
@@ -463,7 +597,10 @@ fn cmd_stats(args: &Args) -> Result<()> {
     if args.flag("validate") {
         bail!("--validate requires a FILE argument (a written metrics sidecar)");
     }
-    let read_docs = |path: &str| -> Result<Vec<Json>> {
+    // Supervised runs may interleave cxlmem-result-error-v1 documents
+    // with the snapshots; route by schema and validate each line
+    // against its own schema. Returns `(metrics_docs, error_docs)`.
+    let read_docs = |path: &str| -> Result<(Vec<Json>, Vec<Json>)> {
         let text = if path == "-" {
             let mut buf = String::new();
             std::io::Read::read_to_string(&mut std::io::stdin(), &mut buf)?;
@@ -476,17 +613,33 @@ fn cmd_stats(args: &Args) -> Result<()> {
         if docs.is_empty() {
             bail!("{path}: no metrics snapshots found");
         }
-        for doc in &docs {
-            metrics::validate_metrics_doc(doc).map_err(|e| anyhow!("{path}: {e}"))?;
+        let (mut mdocs, mut edocs) = (Vec::new(), Vec::new());
+        for doc in docs {
+            if cxlmem::scenario::supervise::is_error_doc(&doc) {
+                cxlmem::scenario::validate_error_doc(&doc).map_err(|e| anyhow!("{path}: {e}"))?;
+                edocs.push(doc);
+            } else {
+                metrics::validate_metrics_doc(&doc).map_err(|e| anyhow!("{path}: {e}"))?;
+                mdocs.push(doc);
+            }
         }
-        Ok(docs)
+        Ok((mdocs, edocs))
     };
     if let Some(path) = args.get("validate") {
-        let docs = read_docs(path)?;
+        let (mdocs, edocs) = read_docs(path)?;
         println!(
-            "{path}: ok ({} snapshot(s), schema {})",
-            docs.len(),
-            metrics::METRICS_SCHEMA
+            "{path}: ok ({} snapshot(s), schema {}{})",
+            mdocs.len(),
+            metrics::METRICS_SCHEMA,
+            if edocs.is_empty() {
+                String::new()
+            } else {
+                format!(
+                    "; {} error document(s), schema {}",
+                    edocs.len(),
+                    cxlmem::scenario::ERROR_SCHEMA
+                )
+            }
         );
         return Ok(());
     }
@@ -496,15 +649,22 @@ fn cmd_stats(args: &Args) -> Result<()> {
             println!("{}", metrics::snapshot());
         }
         Some(path) => {
-            let docs = read_docs(path)?;
+            let (mdocs, edocs) = read_docs(path)?;
             if args.flag("json") {
-                for doc in &docs {
+                for doc in mdocs.iter().chain(&edocs) {
                     println!("{doc}");
                 }
             } else {
                 // Render through the same fold `scenario report` uses,
-                // so N sharded sidecars aggregate identically here.
-                let report = cxlmem::scenario::summarize_docs(&[], &docs, 0);
+                // so N sharded sidecars aggregate identically here and
+                // any embedded error documents get their tables.
+                let collected = cxlmem::scenario::report::Collected {
+                    results: Vec::new(),
+                    metrics: mdocs,
+                    errors: edocs,
+                    skipped: 0,
+                };
+                let report = cxlmem::scenario::report::summarize_collected(&collected, None);
                 report.print(Format::Text);
             }
         }
@@ -599,6 +759,138 @@ fn cmd_metrics_smoke(args: &Args) -> Result<()> {
         warm.hits(),
         n_policy,
         metrics::METRICS_SCHEMA
+    );
+    emit_metrics(metrics_dest.as_ref())
+}
+
+/// The `make chaos-smoke` gate: a small fleet under a seeded fault plan
+/// (one eval panic, transient eval-IO errors, a flush IO error, lock
+/// contention) must (a) exit 0 with the batch supervised — the panic
+/// isolated into exactly the error document the plan names while the
+/// transient faults retry to success — and (b) heal on a clean re-run:
+/// error documents are never cached, so re-running the same fleet over
+/// the same store evaluates just the failed slot and emits JSONL
+/// byte-identical to a never-faulted run in a fresh store.
+fn cmd_chaos_smoke(args: &Args) -> Result<()> {
+    use anyhow::{anyhow, bail};
+    use cxlmem::scenario::{self, SuperviseOpts};
+    use cxlmem::util::fault;
+    use cxlmem::util::json::to_jsonl;
+
+    let metrics_dest = metrics_out(args)?;
+    let count = args.get_usize("count", 8).max(3);
+    let jobs = args.get_usize("jobs", 2);
+    let doc = Json::parse(&format!(
+        r#"{{"name": "chaos-fleet", "fleet": {{"count": {count}, "seed": 23}}}}"#
+    ))
+    .map_err(|e| anyhow!("internal fleet template: {e}"))?;
+    let expanded = scenario::expand(&doc, None, None)?;
+    let specs: Vec<_> = expanded
+        .iter()
+        .map(scenario::ScenarioSpec::parse)
+        .collect::<Result<_>>()?;
+    // Fleet names are zero-padded, so a name is never a substring of a
+    // sibling's and the /KEY filters below hit exactly one spec each.
+    let panic_victim = specs[1].name.clone();
+    let io_victim = specs[count - 1].name.clone();
+
+    let base = std::env::temp_dir();
+    let dir_faulted = base.join(format!("cxlmem-chaos-smoke-{}", std::process::id()));
+    let dir_clean = base.join(format!("cxlmem-chaos-smoke-ref-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir_faulted);
+    let _ = std::fs::remove_dir_all(&dir_clean);
+
+    let opts = SuperviseOpts {
+        backoff_ms: 1,
+        shard: Some("1/1".to_string()),
+        ..SuperviseOpts::default()
+    };
+    // One panic (isolated), two transient eval-IO errors (retried to
+    // success under the default 2 retries), one flush IO error (the
+    // cache's own bounded retry), and 1 ms of lock contention.
+    let plan = format!(
+        "scenario.eval/{panic_victim}=panic:1;scenario.eval.io/{io_victim}=io:2;\
+         cache.flush.io=io:1;lock.acquire=delay:1"
+    );
+    fault::install(fault::FaultPlan::parse(&plan)?);
+    let mut cache = scenario::ResultCache::open(&dir_faulted)?;
+    let faulted = scenario::run_batch_supervised(&specs, jobs, Some(&mut cache), &opts)?;
+    let eval_panics = fault::fired("scenario.eval");
+    let eval_io = fault::fired("scenario.eval.io");
+    let flush_io = fault::fired("cache.flush.io");
+    fault::clear();
+
+    if faulted.len() != specs.len() {
+        bail!(
+            "supervised run returned {} slot(s) for {} spec(s)",
+            faulted.len(),
+            specs.len()
+        );
+    }
+    let error_docs: Vec<_> = faulted
+        .iter()
+        .filter(|r| scenario::supervise::is_error_doc(&r.doc))
+        .collect();
+    match error_docs.as_slice() {
+        [only] => {
+            scenario::validate_error_doc(&only.doc)?;
+            let name = only.doc.get("scenario").and_then(Json::as_str).unwrap_or("");
+            let kind = only.doc.get("error").and_then(Json::as_str).unwrap_or("");
+            if name != panic_victim || kind != "panic" {
+                bail!(
+                    "error document names '{name}' ({kind}); the plan faulted \
+                     '{panic_victim}' (panic)"
+                );
+            }
+            let msg = only.doc.get("message").and_then(Json::as_str).unwrap_or("");
+            if !msg.contains(fault::INJECTED) {
+                bail!("error document message lost the injected-fault marker: {msg}");
+            }
+        }
+        other => bail!(
+            "expected exactly 1 error document (the injected panic), found {}",
+            other.len()
+        ),
+    }
+    if eval_panics != 1 || eval_io != 2 || flush_io != 1 {
+        bail!(
+            "fault plan misfired: eval panics {eval_panics}, eval io {eval_io}, \
+             flush io {flush_io} (want 1/2/1)"
+        );
+    }
+
+    // Heal: the error document was never cached, so the same fleet over
+    // the same store re-evaluates only the panicked slot...
+    let mut healed_cache = scenario::ResultCache::open(&dir_faulted)?;
+    let healed = scenario::run_batch_supervised(&specs, jobs, Some(&mut healed_cache), &opts)?;
+    if healed_cache.misses() != 1 || healed_cache.hits() as usize != specs.len() - 1 {
+        bail!(
+            "healing run expected {} hit(s) + 1 miss, saw {} hit(s), {} miss(es)",
+            specs.len() - 1,
+            healed_cache.hits(),
+            healed_cache.misses()
+        );
+    }
+    // ...and must agree byte for byte with a never-faulted run in a
+    // fresh store.
+    let mut ref_cache = scenario::ResultCache::open(&dir_clean)?;
+    let reference = scenario::run_batch_supervised(&specs, jobs, Some(&mut ref_cache), &opts)?;
+    let healed_jsonl = to_jsonl(healed.into_iter().map(|r| r.doc));
+    let reference_jsonl = to_jsonl(reference.into_iter().map(|r| r.doc));
+    let _ = std::fs::remove_dir_all(&dir_faulted);
+    let _ = std::fs::remove_dir_all(&dir_clean);
+    if healed_jsonl != reference_jsonl {
+        bail!("healed re-run JSONL differs from the never-faulted run");
+    }
+    if healed_jsonl.contains(scenario::ERROR_SCHEMA) {
+        bail!("healed re-run still contains error documents");
+    }
+    println!(
+        "chaos-smoke: ok — {} scenario(s); 1 panic isolated into a {} document \
+         ({panic_victim}), {eval_io} transient eval-IO fault(s) and {flush_io} flush \
+         fault(s) retried; healed re-run byte-identical to the never-faulted run",
+        specs.len(),
+        scenario::ERROR_SCHEMA
     );
     emit_metrics(metrics_dest.as_ref())
 }
@@ -774,7 +1066,16 @@ fn cmd_info() -> Result<()> {
     println!("systems: A, B, C (see `cxlmem exp table1`)");
     println!(
         "verbs: exp, scenario (validate|expand|run|bench|report), bench, stats, \
-         metrics-smoke, trace-smoke, scale-smoke, train, serve, info"
+         metrics-smoke, chaos-smoke, trace-smoke, scale-smoke, train, serve, info"
+    );
+    println!(
+        "fault injection: {} (`--inject-faults PLAN` on scenario run; see README \
+         'Fault tolerance & chaos testing')",
+        if cxlmem::util::fault::active() {
+            "armed via CXLMEM_FAULTS"
+        } else {
+            "disarmed"
+        }
     );
     println!(
         "metrics: registry {} (schema {}; `cxlmem stats`, `--metrics FILE` sidecars)",
@@ -798,6 +1099,7 @@ fn print_help() {
          \x20 cxlmem bench [--smoke|--quick] [--jobs N] [--out FILE] [--validate FILE]\n\
          \x20 cxlmem stats [FILE|-] [--json] [--validate FILE]\n\
          \x20 cxlmem metrics-smoke [--count N] [--jobs N]\n\
+         \x20 cxlmem chaos-smoke [--count N] [--jobs N]\n\
          \x20 cxlmem trace-smoke [--metrics FILE]\n\
          \x20 cxlmem scale-smoke [--pages N] [--epochs N] [--jobs N] [--rss-mb MB]\n\
          \x20 cxlmem train [--steps N] [--seed S] [--log-every K]\n\

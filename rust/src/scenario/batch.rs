@@ -18,6 +18,15 @@
 //! canonical identity dedupes *within* a batch, cache or no cache:
 //! identical specs (overlapping sweeps, re-expanded fleets) evaluate
 //! once, and every duplicate slot is filled from the representative.
+//!
+//! [`run_batch_supervised`] is the full engine: each miss evaluates
+//! under the supervision policy of [`super::supervise`] — panics and
+//! errors are isolated per spec and rendered as
+//! `cxlmem-result-error-v1` documents in the output (never cached, so
+//! a re-run retries exactly the failed slots), transient IO failures
+//! get bounded retries, and a deadline marks overruns timed out. The
+//! plain `run_batch`/`run_batch_cached` entry points keep the
+//! historical fail-fast contract (first failure aborts the batch).
 
 use std::collections::BTreeMap;
 
@@ -26,7 +35,9 @@ use anyhow::{anyhow, Result};
 use super::cache::ResultCache;
 use super::eval::evaluate;
 use super::spec::ScenarioSpec;
+use super::supervise::{self, SuperviseOpts};
 use crate::report::Report;
+use crate::util::fault;
 use crate::util::json::Json;
 use crate::util::metrics;
 use crate::util::par::par_map;
@@ -94,6 +105,7 @@ pub fn run_batch(specs: &[ScenarioSpec], jobs: usize) -> Result<Vec<ScenarioResu
     run_batch_cached(specs, jobs, None)
 }
 
+
 /// [`run_batch`] with an optional content-addressed result cache: specs
 /// whose canonical hash is already stored are served without evaluation,
 /// only the misses are scheduled, and newly evaluated results are
@@ -111,7 +123,29 @@ pub fn run_batch(specs: &[ScenarioSpec], jobs: usize) -> Result<Vec<ScenarioResu
 pub fn run_batch_cached(
     specs: &[ScenarioSpec],
     jobs: usize,
+    cache: Option<&mut ResultCache>,
+) -> Result<Vec<ScenarioResult>> {
+    run_batch_supervised(specs, jobs, cache, &SuperviseOpts::fail_fast())
+}
+
+/// The full batch engine: [`run_batch_cached`] semantics plus the
+/// supervision policy of [`super::supervise`].
+///
+/// With `opts.fail_fast` (the `run_batch`/`run_batch_cached` contract)
+/// the first failing scenario aborts the batch with its name attached,
+/// and panics unwind through the executor. Otherwise each failing spec
+/// is isolated: its slot is filled with a `cxlmem-result-error-v1`
+/// document ([`supervise::error_doc`]) carrying the spec name, cache
+/// key, error kind and attempt count; transient IO failures retry with
+/// seeded jittered backoff; `opts.deadline` marks overruns timed out.
+/// Error documents are **never** inserted into the cache, so a re-run
+/// over the same store retries exactly the failed slots while serving
+/// every healthy sibling as a pure hit.
+pub fn run_batch_supervised(
+    specs: &[ScenarioSpec],
+    jobs: usize,
     mut cache: Option<&mut ResultCache>,
+    opts: &SuperviseOpts,
 ) -> Result<Vec<ScenarioResult>> {
     // One canonical serialization per slot: the cache key scheme doubles
     // as the in-batch dedupe key (identical canonical spec ⇒ identical
@@ -147,19 +181,29 @@ pub fn run_batch_cached(
     m.dedup_collapsed.add((specs.len() - first_seen.len()) as u64);
     m.evaluated.add(miss_idx.len() as u64);
 
-    let evaluated: Vec<Result<ScenarioResult>> = if miss_idx.len() == 1 {
+    let evaluated: Vec<Result<ScenarioResult, supervise::Failure>> = if miss_idx.len() == 1 {
         // Single distinct miss: run inline with the whole jobs budget
         // handed to the scenario's inner sweeps; the guard restores the
         // session's jobs even if evaluation panics.
-        vec![crate::perf::with_jobs(jobs, || eval_one(&specs[miss_idx[0]]))]
+        let i = miss_idx[0];
+        vec![crate::perf::with_jobs(jobs, || {
+            supervise::eval_supervised(&specs[i], &identities[i].0, opts)
+        })]
     } else {
-        let miss_specs: Vec<&ScenarioSpec> = miss_idx.iter().map(|&i| &specs[i]).collect();
-        par_map(&miss_specs, jobs, |spec| eval_one(spec))
+        let miss: Vec<(&ScenarioSpec, &str)> = miss_idx
+            .iter()
+            .map(|&i| (&specs[i], identities[i].0.as_str()))
+            .collect();
+        par_map(&miss, jobs, |&(spec, key)| {
+            supervise::eval_supervised(spec, key, opts)
+        })
     };
 
-    // Fill the slots, keeping the first failure (input order) but still
-    // flushing whatever completed before it — a failing fleet member
-    // doesn't throw away its siblings' work on the next run.
+    // Fill the slots. Fail-fast keeps the first failure (input order)
+    // but still flushes whatever completed before it — a failing fleet
+    // member doesn't throw away its siblings' work on the next run.
+    // Supervised mode fills failed slots with error documents instead,
+    // which are deliberately never inserted into the cache.
     let mut first_err = None;
     for (&i, r) in miss_idx.iter().zip(evaluated) {
         match r {
@@ -170,10 +214,27 @@ pub fn run_batch_cached(
                 }
                 slots[i] = Some(result);
             }
-            Err(e) => {
+            Err(f) if opts.fail_fast => {
                 if first_err.is_none() {
-                    first_err = Some(e);
+                    first_err = Some(anyhow!(
+                        "scenario '{}' failed: {}",
+                        specs[i].name,
+                        f.message
+                    ));
                 }
+            }
+            Err(f) => {
+                let doc = supervise::error_doc(
+                    &specs[i].name,
+                    &identities[i].0,
+                    &f,
+                    opts.shard.as_deref(),
+                );
+                slots[i] = Some(ScenarioResult {
+                    name: specs[i].name.clone(),
+                    experiment: specs[i].experiment.clone(),
+                    doc,
+                });
             }
         }
     }
@@ -208,13 +269,20 @@ pub fn run_batch_cached(
         .collect())
 }
 
-fn eval_one(spec: &ScenarioSpec) -> Result<ScenarioResult> {
+/// One raw evaluation with the batch instrumentation attached. Errors
+/// keep their cause chain intact (no stringification) so the
+/// supervision layer can classify transient IO failures; callers that
+/// surface the error attach the scenario name themselves. The two
+/// fault points are where the chaos harness injects per-spec failures:
+/// `scenario.eval` (panic/delay) and `scenario.eval.io` (synthetic IO
+/// errors), both keyed by the spec name.
+pub(crate) fn eval_raw(spec: &ScenarioSpec) -> Result<ScenarioResult> {
     let m = batch_metrics();
     let _in_flight = metrics::GaugeGuard::enter(m.jobs_in_flight);
     m.eval_ns.time(|| {
-        evaluate(spec)
-            .map(|report| result_doc(spec, &report))
-            .map_err(|e| anyhow!("scenario '{}' failed: {e}", spec.name))
+        fault::point("scenario.eval", &spec.name);
+        fault::io_point("scenario.eval.io", &spec.name)?;
+        evaluate(spec).map(|report| result_doc(spec, &report))
     })
 }
 
@@ -406,6 +474,87 @@ mod tests {
         let b = to_jsonl(plain.into_iter().map(|r| r.doc));
         assert_eq!(a, b, "dedupe must not change the output bytes");
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The tentpole behavior: under supervision a panicking spec fills
+    /// its slot with a validated `cxlmem-result-error-v1` document while
+    /// every sibling completes normally — and the error is never cached,
+    /// so a fault-free re-run over the same store retries exactly the
+    /// failed slot and comes back clean.
+    #[test]
+    fn supervised_batch_isolates_panics_into_error_docs() {
+        use crate::scenario::cache::ResultCache;
+        use crate::scenario::supervise::{validate_error_doc, ERROR_SCHEMA};
+        use crate::util::fault;
+
+        let s = specs(&[
+            r#"{"name": "bat-sup-healthy-a", "workload": {"kind": "hpc-table"}}"#,
+            r#"{"name": "bat-sup-victim", "workload": {"kind": "table1"}}"#,
+            r#"{"name": "bat-sup-healthy-b", "workload": {"kind": "hpc-table"}}"#,
+        ]);
+        let dir = std::env::temp_dir().join(format!("cxlmem-batch-sup-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+
+        let _g = fault::test_guard();
+        fault::install(fault::FaultPlan::parse("scenario.eval/bat-sup-victim=panic").unwrap());
+        let mut cold = ResultCache::open(&dir).unwrap();
+        let opts = crate::scenario::supervise::SuperviseOpts {
+            shard: Some("1/1".to_string()),
+            ..Default::default()
+        };
+        let r = run_batch_supervised(&s, 2, Some(&mut cold), &opts)
+            .expect("supervision must not abort the fleet");
+        fault::clear();
+
+        assert_eq!(r.len(), 3, "every slot filled, error or not");
+        assert_eq!(r[0].doc.get("scenario").unwrap().as_str(), Some("bat-sup-healthy-a"));
+        assert_eq!(r[2].doc.get("scenario").unwrap().as_str(), Some("bat-sup-healthy-b"));
+        let err = &r[1].doc;
+        assert_eq!(err.get("schema").unwrap().as_str(), Some(ERROR_SCHEMA));
+        validate_error_doc(err).unwrap();
+        assert_eq!(err.get("scenario").unwrap().as_str(), Some("bat-sup-victim"));
+        assert_eq!(err.get("error").unwrap().as_str(), Some("panic"));
+        assert_eq!(err.get("key").unwrap().as_str().map(str::len), Some(16));
+        assert_eq!(err.get("shard").unwrap().as_str(), Some("1/1"));
+        assert_eq!(cold.len(), 2, "the error document must never be cached");
+
+        // Fault-free re-run over the same store: the two healthy specs
+        // are pure hits, only the victim re-evaluates — and succeeds, so
+        // the output carries no error documents at all.
+        let mut warm = ResultCache::open(&dir).unwrap();
+        let r2 = run_batch_supervised(&s, 2, Some(&mut warm), &opts).unwrap();
+        assert_eq!((warm.hits(), warm.misses()), (2, 1));
+        assert!(
+            r2.iter().all(|x| x.doc.get("schema").is_none()),
+            "clean re-run must emit no error docs"
+        );
+        assert_eq!(r2[1].doc.get("scenario").unwrap().as_str(), Some("bat-sup-victim"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Transient IO faults burn retries, not the batch: a rule limited
+    /// to fewer fires than the retry budget ends in success with no
+    /// error document in the output.
+    #[test]
+    fn supervised_batch_retries_transient_io_to_success() {
+        use crate::util::fault;
+
+        let s = specs(&[
+            r#"{"name": "bat-flaky-io-spec", "workload": {"kind": "hpc-table"}}"#,
+            r#"{"name": "bat-flaky-io-peer", "workload": {"kind": "table1"}}"#,
+        ]);
+        let _g = fault::test_guard();
+        fault::install(fault::FaultPlan::parse("scenario.eval.io/bat-flaky-io-spec=io:2").unwrap());
+        let opts = crate::scenario::supervise::SuperviseOpts {
+            retries: 2,
+            backoff_ms: 1,
+            ..Default::default()
+        };
+        let r = run_batch_supervised(&s, 2, None, &opts).unwrap();
+        assert_eq!(fault::fired("scenario.eval.io"), 2, "both injected fires consumed");
+        fault::clear();
+        assert!(r.iter().all(|x| x.doc.get("schema").is_none()), "no error docs");
+        assert!(r.iter().all(|x| x.doc.get("tables").is_some()));
     }
 
     /// The single-distinct-miss inline fast path restores the session's

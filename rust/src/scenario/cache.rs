@@ -32,6 +32,24 @@
 //! already returned ever changes). A lock that cannot be taken degrades
 //! to the old unlocked behavior with a warning — the cache must never
 //! block a run.
+//!
+//! Crash safety: a shard that dies mid-append leaves a torn tail line
+//! (or, worse, interleaved garbage from a damaged filesystem). On load
+//! the store **self-heals**: damaged lines — unparseable JSON, or our
+//! schema missing required fields — are moved verbatim to the
+//! `<dir>/quarantine.jsonl` sidecar (counted in the
+//! `cache.quarantined_lines` metric) and the store is compacted to
+//! exactly the surviving lines, byte-identical to a store that never
+//! saw the damage. Valid foreign-schema lines are *kept* (they belong
+//! to another tool or a future format, not to the damage). The
+//! compaction writes a temp file and renames it into place, so a crash
+//! mid-heal can at worst leave the original store. [`ResultCache::flush`]
+//! additionally retries the whole locked append a bounded number of
+//! times on IO errors (each attempt re-reads the on-disk keys, so
+//! half-written attempts never duplicate lines) and starts appends on a
+//! fresh line if a crashed writer left the tail without a newline —
+//! the `cache.flush.io` fault point lets the chaos harness rehearse all
+//! of this deterministically.
 
 use std::collections::BTreeMap;
 use std::fs;
@@ -54,6 +72,8 @@ struct CacheMetrics {
     misses: &'static metrics::Counter,
     reloads: &'static metrics::Counter,
     flush_appends: &'static metrics::Counter,
+    flush_retries: &'static metrics::Counter,
+    quarantined_lines: &'static metrics::Counter,
     flush_lock_wait_ns: &'static metrics::Histogram,
 }
 
@@ -64,6 +84,8 @@ fn cache_metrics() -> &'static CacheMetrics {
         misses: metrics::counter("scenario.cache.misses"),
         reloads: metrics::counter("scenario.cache.reloads"),
         flush_appends: metrics::counter("scenario.cache.flush_appends"),
+        flush_retries: metrics::counter("scenario.cache.flush_retries"),
+        quarantined_lines: metrics::counter("cache.quarantined_lines"),
         flush_lock_wait_ns: metrics::histogram("scenario.cache.flush_lock_wait_ns"),
     })
 }
@@ -76,6 +98,10 @@ pub const DEFAULT_DIR: &str = ".cxlmem-cache";
 pub const STORE_FILE: &str = "results.jsonl";
 /// Advisory lock file name inside the cache directory.
 pub const LOCK_FILE: &str = "lock";
+/// Sidecar file damaged store lines are quarantined to on load.
+pub const QUARANTINE_FILE: &str = "quarantine.jsonl";
+/// Whole-flush attempts before an IO error is surfaced to the caller.
+const FLUSH_ATTEMPTS: u32 = 3;
 
 /// One stored result: the canonical spec it was computed from (verified
 /// on lookup) and the result document.
@@ -120,32 +146,137 @@ fn parse_line(line: &str) -> Option<(String, Entry)> {
     ))
 }
 
-/// Read the store at `path` into `entries`, keeping whatever is already
-/// there (first-insert-wins — both across duplicate lines in the file
-/// and against entries the caller holds in memory). An unreadable file
-/// degrades to "nothing new" with a warning: the cache must never block
-/// a run. Returns the number of keys added.
-fn load_into(path: &Path, entries: &mut BTreeMap<String, Entry>) -> usize {
-    let text = match fs::read_to_string(path) {
-        Ok(t) => t,
+/// Read the store text at `path`. An unreadable file degrades to `None`
+/// with a warning: the cache must never block a run.
+fn read_store(path: &Path) -> Option<String> {
+    match fs::read_to_string(path) {
+        Ok(t) => Some(t),
         Err(e) => {
             eprintln!(
                 "warning: unreadable scenario result cache {} ({e}); treating as empty",
                 path.display()
             );
-            return 0;
-        }
-    };
-    let mut added = 0;
-    for line in text.lines() {
-        if let Some((key, entry)) = parse_line(line) {
-            if !entries.contains_key(&key) {
-                entries.insert(key, entry);
-                added += 1;
-            }
+            None
         }
     }
+}
+
+/// How a store line is treated on load.
+enum LineClass {
+    /// A well-formed entry of our schema.
+    Entry(String, Entry),
+    /// Valid JSON of another schema: not ours to judge — kept verbatim.
+    Foreign,
+    /// Unparseable, or our schema missing required fields: quarantined.
+    Damaged,
+    /// Whitespace only (an artifact, never written by us): dropped.
+    Blank,
+}
+
+fn classify_line(line: &str) -> LineClass {
+    if line.trim().is_empty() {
+        return LineClass::Blank;
+    }
+    let Ok(doc) = Json::parse(line) else {
+        return LineClass::Damaged;
+    };
+    if doc.get("schema").and_then(Json::as_str) != Some(CACHE_SCHEMA) {
+        return LineClass::Foreign;
+    }
+    match parse_line(line) {
+        Some((key, entry)) => LineClass::Entry(key, entry),
+        None => LineClass::Damaged,
+    }
+}
+
+/// Read the store at `path` into `entries`, keeping whatever is already
+/// there (first-insert-wins — both across duplicate lines in the file
+/// and against entries the caller holds in memory), and **self-heal**
+/// any damage found: damaged lines are appended verbatim to the
+/// quarantine sidecar and the store is compacted to the surviving lines
+/// (original order, one trailing newline — byte-identical to a store
+/// that never saw the damage). The caller holds the store lock. Healing
+/// is best-effort: if the sidecar cannot be written the store is left
+/// untouched (the damage stays tolerated in memory, nothing is lost).
+/// Returns the number of keys added.
+fn load_into(path: &Path, entries: &mut BTreeMap<String, Entry>) -> usize {
+    let Some(text) = read_store(path) else {
+        return 0;
+    };
+    let mut added = 0;
+    let mut kept: Vec<&str> = Vec::new();
+    let mut damaged: Vec<&str> = Vec::new();
+    for line in text.lines() {
+        match classify_line(line) {
+            LineClass::Entry(key, entry) => {
+                kept.push(line);
+                if !entries.contains_key(&key) {
+                    entries.insert(key, entry);
+                    added += 1;
+                }
+            }
+            LineClass::Foreign => kept.push(line),
+            LineClass::Damaged => damaged.push(line),
+            LineClass::Blank => {}
+        }
+    }
+    let mut healed = String::with_capacity(text.len());
+    for line in &kept {
+        healed.push_str(line);
+        healed.push('\n');
+    }
+    if healed != text {
+        heal(path, &healed, &damaged);
+    }
     added
+}
+
+/// Quarantine `damaged` lines and rewrite the store as `healed` (a temp
+/// file renamed into place, so a crash mid-heal at worst leaves the
+/// original). Failures degrade with a warning — never to data loss: the
+/// store is only rewritten once the damaged lines are safely in the
+/// sidecar.
+fn heal(path: &Path, healed: &str, damaged: &[&str]) {
+    if !damaged.is_empty() {
+        let sidecar = match path.parent() {
+            Some(dir) => dir.join(QUARANTINE_FILE),
+            None => return,
+        };
+        let mut blob = String::new();
+        for line in damaged {
+            blob.push_str(line);
+            blob.push('\n');
+        }
+        let appended = fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&sidecar)
+            .and_then(|mut f| f.write_all(blob.as_bytes()));
+        if let Err(e) = appended {
+            eprintln!(
+                "warning: cannot quarantine {} damaged cache line(s) to {} ({e}); \
+                 store left as-is",
+                damaged.len(),
+                sidecar.display()
+            );
+            return;
+        }
+        cache_metrics().quarantined_lines.add(damaged.len() as u64);
+        eprintln!(
+            "warning: quarantined {} damaged cache line(s) to {}",
+            damaged.len(),
+            sidecar.display()
+        );
+    }
+    let tmp = path.with_extension("jsonl.tmp");
+    let compacted = fs::write(&tmp, healed).and_then(|()| fs::rename(&tmp, path));
+    if let Err(e) = compacted {
+        let _ = fs::remove_file(&tmp);
+        eprintln!(
+            "warning: cache store {} not compacted ({e}); damage stays tolerated on load",
+            path.display()
+        );
+    }
 }
 
 /// Take the store lock, degrading to unlocked access with a warning if
@@ -245,7 +376,13 @@ impl ResultCache {
     /// not appended again), then each surviving entry is written as one
     /// whole line per `write` call, so a concurrent reader never sees a
     /// torn line and a crash mid-flush loses at most the unwritten tail.
-    /// On failure, pending entries are retained for a retry.
+    ///
+    /// IO errors retry the whole locked section up to [`FLUSH_ATTEMPTS`]
+    /// times — the re-read makes retries idempotent: lines a failed
+    /// attempt did complete are seen on disk and skipped, and a torn
+    /// tail fragment is healed by the next load. Only after the last
+    /// attempt is the error surfaced, with pending entries retained so a
+    /// later flush can still try.
     pub fn flush(&mut self) -> Result<()> {
         if self.pending.is_empty() {
             return Ok(());
@@ -254,19 +391,60 @@ impl ResultCache {
             fs::create_dir_all(dir)
                 .with_context(|| format!("creating cache dir {}", dir.display()))?;
         }
+        let mut attempt = 0;
+        loop {
+            attempt += 1;
+            match self.flush_once() {
+                Ok(()) => {
+                    self.pending.clear();
+                    return Ok(());
+                }
+                Err(e) if attempt < FLUSH_ATTEMPTS => {
+                    cache_metrics().flush_retries.inc();
+                    eprintln!(
+                        "warning: cache flush attempt {attempt}/{FLUSH_ATTEMPTS} failed ({e}); \
+                         retrying"
+                    );
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// One locked flush attempt (see [`ResultCache::flush`]).
+    fn flush_once(&self) -> Result<()> {
         let m = cache_metrics();
         // The lock is the shard rendezvous point: time waiting for it is
         // the contention signal the serve-fleet roadmap item watches.
         let _lock = m.flush_lock_wait_ns.time(|| lock_store(&self.path));
+        // Chaos hook: an `io` rule here fails the attempt after the lock
+        // is held, exercising the retry loop end to end.
+        crate::util::fault::io_point("cache.flush.io", &self.path.to_string_lossy())
+            .with_context(|| format!("writing cache store {}", self.path.display()))?;
         let mut on_disk = BTreeMap::new();
+        let mut needs_newline = false;
         if self.path.exists() {
-            load_into(&self.path, &mut on_disk);
+            if let Some(text) = read_store(&self.path) {
+                needs_newline = !text.is_empty() && !text.ends_with('\n');
+                for line in text.lines() {
+                    if let Some((key, entry)) = parse_line(line) {
+                        on_disk.entry(key).or_insert(entry);
+                    }
+                }
+            }
         }
         let mut f = fs::OpenOptions::new()
             .create(true)
             .append(true)
             .open(&self.path)
             .with_context(|| format!("opening cache store {}", self.path.display()))?;
+        if needs_newline {
+            // A crashed writer left a torn tail: start on a fresh line so
+            // this append cannot concatenate into the fragment (the
+            // fragment itself is quarantined on the next load).
+            f.write_all(b"\n")
+                .with_context(|| format!("appending to cache store {}", self.path.display()))?;
+        }
         for (key, name) in &self.pending {
             if on_disk.contains_key(key) {
                 continue;
@@ -288,7 +466,6 @@ impl ResultCache {
                 .with_context(|| format!("appending to cache store {}", self.path.display()))?;
             m.flush_appends.inc();
         }
-        self.pending.clear();
         Ok(())
     }
 
@@ -469,6 +646,157 @@ mod tests {
         assert_eq!(c3.len(), 1);
         let doc = c3.lookup("k", "spec").unwrap();
         assert_eq!(doc.get("v").unwrap().as_u64(), Some(1));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    /// A torn mid-line tail (crashed writer) is quarantined on load and
+    /// the store compacts back to **byte-identical** with a store that
+    /// never saw the damage — and stays stable across further reopens.
+    #[test]
+    fn torn_tail_quarantines_and_compacts_byte_identical() {
+        let dir = tmp_dir("torn-tail");
+        let _ = fs::remove_dir_all(&dir);
+        {
+            let mut c = ResultCache::open(&dir).unwrap();
+            c.insert("k1".into(), "spec-1".into(), &result("one", 1));
+            c.insert("k2".into(), "spec-2".into(), &result("two", 2));
+            c.flush().unwrap();
+        }
+        let path = dir.join(STORE_FILE);
+        let pristine = fs::read_to_string(&path).unwrap();
+
+        let torn = "{\"schema\": \"cxlmem-result-cache-v1\", \"key\": \"t";
+        fs::write(&path, format!("{pristine}{torn}")).unwrap();
+        let mut c = ResultCache::open(&dir).unwrap();
+        assert_eq!(c.len(), 2);
+        assert!(c.lookup("k1", "spec-1").is_some());
+        assert_eq!(
+            fs::read_to_string(&path).unwrap(),
+            pristine,
+            "healed store must be byte-identical to a never-damaged one"
+        );
+        let quarantined = fs::read_to_string(dir.join(QUARANTINE_FILE)).unwrap();
+        assert_eq!(quarantined, format!("{torn}\n"), "fragment kept verbatim");
+
+        // Reopening a healed store is a no-op: nothing new quarantined,
+        // nothing rewritten.
+        let c2 = ResultCache::open(&dir).unwrap();
+        assert_eq!(c2.len(), 2);
+        assert_eq!(fs::read_to_string(&path).unwrap(), pristine);
+        assert_eq!(fs::read_to_string(dir.join(QUARANTINE_FILE)).unwrap(), quarantined);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    /// Garbage interleaved *between* valid lines: the valid lines (ours
+    /// and foreign-schema alike) survive in order, the garbage moves to
+    /// the sidecar in order.
+    #[test]
+    fn interleaved_garbage_is_quarantined_in_order() {
+        let dir = tmp_dir("interleaved-garbage");
+        let _ = fs::remove_dir_all(&dir);
+        {
+            let mut c = ResultCache::open(&dir).unwrap();
+            c.insert("k1".into(), "spec-1".into(), &result("one", 1));
+            c.insert("k2".into(), "spec-2".into(), &result("two", 2));
+            c.flush().unwrap();
+        }
+        let path = dir.join(STORE_FILE);
+        let pristine = fs::read_to_string(&path).unwrap();
+        let mut lines = pristine.lines();
+        let (line1, line2) = (lines.next().unwrap(), lines.next().unwrap());
+        let foreign = "{\"schema\": \"other-v9\", \"key\": \"f\"}";
+        let missing = "{\"schema\": \"cxlmem-result-cache-v1\", \"key\": \"m\"}";
+        let damaged_text =
+            format!("not json at all\n{line1}\n{missing}\n{foreign}\n\n{line2}garbage tail\n");
+        fs::write(&path, &damaged_text).unwrap();
+
+        let before = crate::util::metrics::counter("cache.quarantined_lines").get();
+        let mut c = ResultCache::open(&dir).unwrap();
+        // line2 was fused with "garbage tail" — unparseable, quarantined;
+        // line1 and the foreign line survive.
+        assert_eq!(c.len(), 1);
+        assert!(c.lookup("k1", "spec-1").is_some());
+        assert_eq!(
+            fs::read_to_string(&path).unwrap(),
+            format!("{line1}\n{foreign}\n")
+        );
+        let quarantined = fs::read_to_string(dir.join(QUARANTINE_FILE)).unwrap();
+        assert_eq!(
+            quarantined,
+            format!("not json at all\n{missing}\n{line2}garbage tail\n"),
+            "damaged lines keep file order, verbatim"
+        );
+        if crate::util::metrics::global().enabled() {
+            assert!(
+                crate::util::metrics::counter("cache.quarantined_lines").get() >= before + 3,
+                "quarantined lines must be counted"
+            );
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    /// A zero-byte store (created then never written, or truncated to
+    /// nothing) is an empty cache: no quarantine, no rewrite, and the
+    /// next flush appends normally.
+    #[test]
+    fn zero_byte_store_is_an_empty_cache() {
+        let dir = tmp_dir("zero-byte");
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(STORE_FILE);
+        fs::write(&path, "").unwrap();
+        let mut c = ResultCache::open(&dir).unwrap();
+        assert!(c.is_empty());
+        assert!(!dir.join(QUARANTINE_FILE).exists(), "nothing to quarantine");
+        assert_eq!(fs::read_to_string(&path).unwrap(), "");
+        c.insert("k".into(), "spec".into(), &result("a", 1));
+        c.flush().unwrap();
+        let c2 = ResultCache::open(&dir).unwrap();
+        assert_eq!(c2.len(), 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    /// Transient IO failures during flush burn retries, not results: an
+    /// injected fault that fires twice is absorbed by the three-attempt
+    /// loop and the store ends up complete.
+    #[test]
+    fn flush_retries_through_transient_io_faults() {
+        use crate::util::fault;
+
+        let dir = tmp_dir("flushfault");
+        let _ = fs::remove_dir_all(&dir);
+        let _g = fault::test_guard();
+        fault::install(fault::FaultPlan::parse("cache.flush.io/flushfault=io:2").unwrap());
+        let mut c = ResultCache::open(&dir).unwrap();
+        c.insert("k".into(), "spec".into(), &result("a", 1));
+        c.flush().expect("third attempt must succeed");
+        assert_eq!(fault::fired("cache.flush.io"), 2);
+        fault::clear();
+        let mut c2 = ResultCache::open(&dir).unwrap();
+        assert_eq!(c2.len(), 1);
+        assert!(c2.lookup("k", "spec").is_some());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    /// An append onto a torn (newline-less) tail starts on a fresh line,
+    /// so the new entry is never fused into the fragment; the next load
+    /// quarantines the fragment and keeps the entry.
+    #[test]
+    fn flush_onto_torn_tail_never_fuses_lines() {
+        let dir = tmp_dir("torn-append");
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(STORE_FILE);
+        fs::write(&path, "{\"schema\": \"cxlmem-result-cache-v1\", \"key\": \"t").unwrap();
+        // Open tolerates (and heals) the fragment; then damage it again
+        // to simulate a shard crashing *between* our open and flush.
+        let mut c = ResultCache::open(&dir).unwrap();
+        fs::write(&path, "{\"torn").unwrap();
+        c.insert("k".into(), "spec".into(), &result("a", 1));
+        c.flush().unwrap();
+        let mut c2 = ResultCache::open(&dir).unwrap();
+        assert_eq!(c2.len(), 1, "appended entry must survive the fragment");
+        assert!(c2.lookup("k", "spec").is_some());
         let _ = fs::remove_dir_all(&dir);
     }
 

@@ -18,6 +18,11 @@
 //! - [`batch`] — shard a scenario list over [`crate::util::par`] and
 //!   stream per-scenario results as JSON lines; duplicate specs within a
 //!   batch evaluate once (canonical-identity dedupe).
+//! - [`supervise`] — per-spec fault isolation for fleet runs: panics
+//!   and errors become `cxlmem-result-error-v1` documents instead of a
+//!   fleet abort, transient IO failures retry with seeded jittered
+//!   backoff, `--deadline-secs` marks overruns timed out, and
+//!   `--fail-fast` restores the first-failure abort.
 //! - [`cache`] — persistent, content-addressed result cache keyed on the
 //!   canonical spec hash ([`ScenarioSpec::cache_key`]); `scenario run`
 //!   consults it by default, so fleet re-runs and overlapping sweeps
@@ -54,11 +59,15 @@ pub mod expand;
 pub mod report;
 pub mod shard;
 pub mod spec;
+pub mod supervise;
 
-pub use batch::{docs_of, parse_docs, run_batch, run_batch_cached, ScenarioResult};
+pub use batch::{
+    docs_of, parse_docs, run_batch, run_batch_cached, run_batch_supervised, ScenarioResult,
+};
 pub use cache::ResultCache;
 pub use eval::evaluate;
 pub use expand::{expand, is_template};
 pub use report::{summarize_docs, summarize_text};
 pub use shard::Shard;
 pub use spec::{ScenarioSpec, SystemSpec, WorkloadSpec, SCHEMA};
+pub use supervise::{validate_error_doc, SuperviseOpts, ERROR_SCHEMA};

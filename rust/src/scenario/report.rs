@@ -18,6 +18,15 @@
 //! counted in the overview but excluded from the policy aggregation.
 //! All aggregation is over `BTreeMap`/`BTreeSet`, so the report is
 //! deterministic for a given input.
+//!
+//! Supervised runs interleave `cxlmem-result-error-v1` documents (see
+//! [`crate::scenario::supervise`]) with genuine results; those route
+//! into their own bucket and summarize as per-kind and per-shard error
+//! tables. With `--expect FILE [--shards N]` the report also
+//! *reconciles* coverage: every expected spec name is assigned to its
+//! index-modulo shard (the `--shard K/N` scheme) and classified as
+//! present, errored, or missing — the fleet-driver's answer to "which
+//! shard lost work?".
 
 use std::collections::{BTreeMap, BTreeSet};
 
@@ -25,6 +34,7 @@ use anyhow::{bail, Result};
 
 use super::cache::CACHE_SCHEMA;
 use super::spec::POLICY_NAMES;
+use super::supervise::ERROR_SCHEMA;
 use crate::report::Report;
 use crate::util::json::Json;
 use crate::util::metrics::{self, METRICS_SCHEMA};
@@ -52,15 +62,29 @@ struct Grid {
     oli: Option<f64>,
 }
 
-/// Extract result documents from a text blob: result JSONL as written
-/// by `scenario run --out`, a result-cache store (each line's `result`
-/// field), or `cxlmem-metrics-v1` sidecar snapshots (routed into their
-/// own list — `--metrics` sidecars can be concatenated straight onto
-/// the results). Returns `(documents, metrics_docs, skipped_lines)`.
-pub fn collect_docs(text: &str) -> (Vec<Json>, Vec<Json>, usize) {
-    let mut docs = Vec::new();
-    let mut metrics_docs = Vec::new();
-    let mut skipped = 0;
+/// Everything [`collect_docs`] pulled out of a results blob, routed by
+/// schema so error documents and metrics sidecars never masquerade as
+/// results.
+#[derive(Default)]
+pub struct Collected {
+    /// Genuine result documents (direct lines or unwrapped cache lines).
+    pub results: Vec<Json>,
+    /// `cxlmem-metrics-v1` sidecar snapshots.
+    pub metrics: Vec<Json>,
+    /// `cxlmem-result-error-v1` documents from supervised runs.
+    pub errors: Vec<Json>,
+    /// Unparseable (damaged) lines, counted and skipped.
+    pub skipped: usize,
+}
+
+/// Extract documents from a text blob: result JSONL as written by
+/// `scenario run --out`, a result-cache store (each line's `result`
+/// field), `cxlmem-metrics-v1` sidecar snapshots, and
+/// `cxlmem-result-error-v1` documents — each routed into its own
+/// [`Collected`] bucket, so `--metrics` sidecars and supervised-run
+/// error lines can be concatenated straight onto the results.
+pub fn collect_docs(text: &str) -> Collected {
+    let mut out = Collected::default();
     for line in text.lines() {
         if line.trim().is_empty() {
             continue;
@@ -68,20 +92,61 @@ pub fn collect_docs(text: &str) -> (Vec<Json>, Vec<Json>, usize) {
         let doc = match Json::parse(line) {
             Ok(d) => d,
             Err(_) => {
-                skipped += 1;
+                out.skipped += 1;
                 continue;
             }
         };
         match doc.get("schema").and_then(Json::as_str) {
             Some(s) if s == CACHE_SCHEMA => match doc.get("result") {
-                Some(r) => docs.push(r.clone()),
-                None => skipped += 1,
+                Some(r) => out.results.push(r.clone()),
+                None => out.skipped += 1,
             },
-            Some(s) if s == METRICS_SCHEMA => metrics_docs.push(doc),
-            _ => docs.push(doc),
+            Some(s) if s == METRICS_SCHEMA => out.metrics.push(doc),
+            Some(s) if s == ERROR_SCHEMA => out.errors.push(doc),
+            _ => out.results.push(doc),
         }
     }
-    (docs, metrics_docs, skipped)
+    out
+}
+
+/// What a fleet run was *supposed* to produce: the expanded spec names
+/// in input order, split over `shards` by the pinned index-modulo
+/// scheme (`scenario::shard`). Built from an expanded spec JSONL file
+/// via [`expectation_from_text`].
+pub struct Expectation {
+    /// Expected spec names, in expansion order.
+    pub names: Vec<String>,
+    /// How many `--shard K/N` processes the fleet was split over.
+    pub shards: usize,
+}
+
+/// Parse `--expect FILE` input into an [`Expectation`]: expanded spec
+/// JSONL (one `name`d document per line), or a sweep/fleet template,
+/// which is expanded with its embedded seed/count first — so the same
+/// file that fed `scenario expand | run --shard K/N` reconciles the
+/// run.
+pub fn expectation_from_text(text: &str, shards: usize) -> Result<Expectation> {
+    if shards == 0 {
+        bail!("--shards must be at least 1");
+    }
+    let mut names = Vec::new();
+    for doc in super::batch::docs_of(text)? {
+        let expanded = if super::expand::is_template(&doc) {
+            super::expand::expand(&doc, None, None)?
+        } else {
+            vec![doc]
+        };
+        for spec in &expanded {
+            match spec.get("name").and_then(Json::as_str) {
+                Some(n) => names.push(n.to_string()),
+                None => bail!("expected-spec document without a 'name' field"),
+            }
+        }
+    }
+    if names.is_empty() {
+        bail!("no expected spec documents found (want expanded spec JSONL or a template)");
+    }
+    Ok(Expectation { names, shards })
 }
 
 /// Human label for a result document's device profile, from the
@@ -198,8 +263,24 @@ fn policy_order(all: &BTreeSet<String>) -> Vec<String> {
 /// `cxlmem-metrics-v1` sidecar snapshots (counters summed, gauge
 /// high-water marks maxed, histograms bucket-merged across sidecars);
 /// `skipped` is the damaged-line count from [`collect_docs`], surfaced
-/// in the overview.
+/// in the overview. Convenience wrapper over [`summarize_collected`]
+/// for callers without error documents (`cxlmem stats`).
 pub fn summarize_docs(docs: &[Json], metrics_docs: &[Json], skipped: usize) -> Report {
+    let collected = Collected {
+        results: docs.to_vec(),
+        metrics: metrics_docs.to_vec(),
+        errors: Vec::new(),
+        skipped,
+    };
+    summarize_collected(&collected, None)
+}
+
+/// Summarize a routed [`Collected`] bundle into a fleet report,
+/// optionally reconciling against an [`Expectation`] (the `--expect`
+/// shard-coverage table).
+pub fn summarize_collected(collected: &Collected, expected: Option<&Expectation>) -> Report {
+    let docs = &collected.results;
+    let (metrics_docs, skipped) = (&collected.metrics, collected.skipped);
     let grids: Vec<Grid> = docs.iter().filter_map(grid_of).collect();
 
     let mut policies = BTreeSet::new();
@@ -233,10 +314,15 @@ pub fn summarize_docs(docs: &[Json], metrics_docs: &[Json], skipped: usize) -> R
     overview.row(vec!["objects policy grids".into(), grids.len().to_string()]);
     let other = docs.len() - grids.len();
     overview.row(vec!["other result documents".into(), other.to_string()]);
+    overview.row(vec!["error documents".into(), collected.errors.len().to_string()]);
     overview.row(vec!["unparseable lines skipped".into(), skipped.to_string()]);
     overview.row(vec!["device profiles".into(), profiles.len().to_string()]);
     overview.row(vec!["policies observed".into(), policies.len().to_string()]);
     report.add(overview);
+    if let Some(exp) = expected {
+        add_coverage_table(&mut report, exp, docs, &collected.errors);
+    }
+    add_error_tables(&mut report, &collected.errors);
     if grids.is_empty() {
         add_metrics_tables(&mut report, metrics_docs);
         return report;
@@ -319,6 +405,100 @@ pub fn summarize_docs(docs: &[Json], metrics_docs: &[Json], skipped: usize) -> R
     }
     add_metrics_tables(&mut report, metrics_docs);
     report
+}
+
+/// Reconcile expected-vs-present coverage per shard: every expected
+/// spec name is assigned to its index-modulo shard (the same scheme
+/// `--shard K/N` used to split the run) and classified as present (a
+/// result document carries its name), errored (an error document
+/// does), or missing (neither — the shard that lost it is the one to
+/// re-run). A trailing `all` row totals the fleet.
+fn add_coverage_table(report: &mut Report, exp: &Expectation, results: &[Json], errors: &[Json]) {
+    let scenario_names = |docs: &[Json]| -> BTreeSet<String> {
+        docs.iter()
+            .filter_map(|d| d.get("scenario").and_then(Json::as_str))
+            .map(str::to_string)
+            .collect()
+    };
+    let present = scenario_names(results);
+    let errored = scenario_names(errors);
+    let n = exp.shards.max(1);
+    let mut t = Table::new(
+        "Fleet summary — shard coverage (expected vs present)",
+        &["shard", "expected", "present", "errored", "missing", "missing names"],
+    );
+    let mut totals = [0usize; 4];
+    for k in 1..=n {
+        let mut counts = [0usize; 4];
+        let mut missing: Vec<&str> = Vec::new();
+        for (i, name) in exp.names.iter().enumerate() {
+            if i % n != k - 1 {
+                continue;
+            }
+            counts[0] += 1;
+            if present.contains(name) {
+                counts[1] += 1;
+            } else if errored.contains(name) {
+                counts[2] += 1;
+            } else {
+                counts[3] += 1;
+                missing.push(name);
+            }
+        }
+        for (tot, c) in totals.iter_mut().zip(counts) {
+            *tot += c;
+        }
+        let sample = if missing.len() > 3 {
+            format!("{}, … ({} total)", missing[..3].join(", "), missing.len())
+        } else {
+            missing.join(", ")
+        };
+        let mut row = vec![format!("{k}/{n}")];
+        row.extend(counts.iter().map(usize::to_string));
+        row.push(sample);
+        t.row(row);
+    }
+    if n > 1 {
+        let mut row = vec!["all".to_string()];
+        row.extend(totals.iter().map(usize::to_string));
+        row.push(String::new());
+        t.row(row);
+    }
+    report.add(t);
+}
+
+/// Summarize `cxlmem-result-error-v1` documents: counts and worst
+/// attempt depth per error kind, plus the per-shard error counts a
+/// fleet driver pages on. No tables when the run was clean.
+fn add_error_tables(report: &mut Report, errors: &[Json]) {
+    if errors.is_empty() {
+        return;
+    }
+    // kind -> (count, max attempts); shard -> count.
+    let mut by_kind: BTreeMap<String, (usize, u64)> = BTreeMap::new();
+    let mut by_shard: BTreeMap<String, usize> = BTreeMap::new();
+    for doc in errors {
+        let kind = doc.get("error").and_then(Json::as_str).unwrap_or("unknown");
+        let attempts = doc.get("attempts").and_then(Json::as_u64).unwrap_or(1);
+        let e = by_kind.entry(kind.to_string()).or_insert((0, 0));
+        e.0 += 1;
+        e.1 = e.1.max(attempts);
+        let shard = doc.get("shard").and_then(Json::as_str).unwrap_or("-");
+        *by_shard.entry(shard.to_string()).or_insert(0) += 1;
+    }
+    let mut kinds = Table::new(
+        "Fleet summary — error documents by kind",
+        &["error kind", "count", "max attempts"],
+    );
+    for (kind, (count, max_attempts)) in &by_kind {
+        kinds.row(vec![kind.clone(), count.to_string(), max_attempts.to_string()]);
+    }
+    report.add(kinds);
+    let mut shards = Table::new("Fleet summary — errors per shard", &["shard", "errors"]);
+    for (shard, count) in &by_shard {
+        shards.row(vec![shard.clone(), count.to_string()]);
+    }
+    report.add(shards);
 }
 
 /// Fold `cxlmem-metrics-v1` sidecars into fleet tables: counters sum
@@ -448,19 +628,26 @@ fn add_metrics_tables(report: &mut Report, metrics_docs: &[Json]) {
 /// into a fleet report. Errors when nothing parses at all — a wrong
 /// file is a user error, not an empty fleet.
 pub fn summarize_text(text: &str) -> Result<Report> {
-    let (docs, metrics_docs, skipped) = collect_docs(text);
-    if docs.is_empty() && metrics_docs.is_empty() {
+    summarize_text_with(text, None)
+}
+
+/// [`summarize_text`] with an optional [`Expectation`] to reconcile
+/// against (`scenario report --expect FILE [--shards N]`).
+pub fn summarize_text_with(text: &str, expected: Option<&Expectation>) -> Result<Report> {
+    let collected = collect_docs(text);
+    let c = &collected;
+    if c.results.is_empty() && c.metrics.is_empty() && c.errors.is_empty() {
         bail!(
             "no result documents found (want `scenario run` JSONL, a \
-             result-cache store, or metrics sidecars){}",
-            if skipped > 0 {
-                format!(" — {skipped} unparseable line(s)")
+             result-cache store, metrics sidecars, or error documents){}",
+            if collected.skipped > 0 {
+                format!(" — {} unparseable line(s)", collected.skipped)
             } else {
                 String::new()
             }
         );
     }
-    Ok(summarize_docs(&docs, &metrics_docs, skipped))
+    Ok(summarize_collected(&collected, expected))
 }
 
 #[cfg(test)]
@@ -515,12 +702,16 @@ mod tests {
         let sidecar = format!(
             r#"{{"schema": "{METRICS_SCHEMA}", "counters": {{"scenario.cache.hits": 3}}, "gauges": {{}}, "histograms": {{}}, "rates": {{}}}}"#
         );
-        let text = format!("{result}\n{cached}\n{sidecar}\n\nnot json\n");
-        let (docs, metrics_docs, skipped) = collect_docs(&text);
-        assert_eq!(docs.len(), 2);
-        assert_eq!(metrics_docs.len(), 1, "metrics sidecar routed separately");
-        assert_eq!(skipped, 1);
-        assert_eq!(docs[0], docs[1], "cache line must unwrap to the result");
+        let error = format!(
+            r#"{{"schema": "{ERROR_SCHEMA}", "scenario": "s9", "key": "k9", "error": "panic", "message": "boom", "attempts": 1}}"#
+        );
+        let text = format!("{result}\n{cached}\n{sidecar}\n{error}\n\nnot json\n");
+        let c = collect_docs(&text);
+        assert_eq!(c.results.len(), 2);
+        assert_eq!(c.metrics.len(), 1, "metrics sidecar routed separately");
+        assert_eq!(c.errors.len(), 1, "error document routed separately");
+        assert_eq!(c.skipped, 1);
+        assert_eq!(c.results[0], c.results[1], "cache line must unwrap to the result");
     }
 
     #[test]
@@ -653,5 +844,103 @@ mod tests {
         assert_eq!(q.rows.len(), 1);
         assert_eq!(q.rows[0][0], "ldram-preferred");
         assert_eq!(q.rows[0][1], "4", "bucket merge must see all four samples");
+    }
+
+    #[test]
+    fn error_docs_summarize_by_kind_and_shard() {
+        use super::super::supervise::{error_doc, ErrorKind, Failure};
+        let fail = |kind, attempts| Failure {
+            kind,
+            message: "injected fault at scenario.eval".into(),
+            attempts,
+        };
+        let errors = vec![
+            error_doc("f-0", "k0", &fail(ErrorKind::Panic, 1), Some("1/2")),
+            error_doc("f-1", "k1", &fail(ErrorKind::Io, 3), Some("2/2")),
+            error_doc("f-2", "k2", &fail(ErrorKind::Io, 3), Some("2/2")),
+        ];
+        let collected = Collected {
+            results: vec![grid_doc("s0", Json::from("A"), &[("cxl-preferred", 1.0, true)])],
+            metrics: vec![],
+            errors,
+            skipped: 0,
+        };
+        let report = summarize_collected(&collected, None);
+        let overview = &report.tables[0];
+        assert!(overview.rows.iter().any(|r| r[0] == "error documents" && r[1] == "3"));
+        let kinds = report
+            .tables
+            .iter()
+            .find(|t| t.title.contains("error documents by kind"))
+            .expect("kind table");
+        assert!(kinds.rows.iter().any(|r| r[0] == "io" && r[1] == "2" && r[2] == "3"));
+        assert!(kinds.rows.iter().any(|r| r[0] == "panic" && r[1] == "1" && r[2] == "1"));
+        let shards = report
+            .tables
+            .iter()
+            .find(|t| t.title.contains("errors per shard"))
+            .expect("shard table");
+        assert!(shards.rows.iter().any(|r| r[0] == "1/2" && r[1] == "1"));
+        assert!(shards.rows.iter().any(|r| r[0] == "2/2" && r[1] == "2"));
+    }
+
+    #[test]
+    fn shard_coverage_reconciles_expected_vs_present() {
+        use super::super::supervise::{error_doc, ErrorKind, Failure};
+        fn counts(r: &[String]) -> Vec<&str> {
+            r[1..5].iter().map(String::as_str).collect()
+        }
+        // Six expected specs over two shards (index modulo): shard 1/2
+        // owns indices 0, 2, 4 and shard 2/2 owns 1, 3, 5. f-2 errored;
+        // f-3 and f-5 never produced anything.
+        let exp = Expectation {
+            names: (0..6).map(|i| format!("f-{i}")).collect(),
+            shards: 2,
+        };
+        let results: Vec<Json> = ["f-0", "f-1", "f-4"]
+            .iter()
+            .map(|n| grid_doc(n, Json::from("A"), &[("cxl-preferred", 1.0, true)]))
+            .collect();
+        let failure = Failure {
+            kind: ErrorKind::Panic,
+            message: "boom".into(),
+            attempts: 1,
+        };
+        let errors = vec![error_doc("f-2", "k2", &failure, Some("1/2"))];
+        let collected = Collected {
+            results,
+            metrics: vec![],
+            errors,
+            skipped: 0,
+        };
+        let report = summarize_collected(&collected, Some(&exp));
+        let cov = report
+            .tables
+            .iter()
+            .find(|t| t.title.contains("shard coverage"))
+            .expect("coverage table");
+        let s1 = cov.rows.iter().find(|r| r[0] == "1/2").unwrap();
+        assert_eq!(counts(s1), ["3", "2", "1", "0"], "shard 1/2 fully accounted for");
+        let s2 = cov.rows.iter().find(|r| r[0] == "2/2").unwrap();
+        assert_eq!(counts(s2), ["3", "1", "0", "2"], "shard 2/2 lost two specs");
+        assert_eq!(s2[5], "f-3, f-5");
+        let all = cov.rows.iter().find(|r| r[0] == "all").unwrap();
+        assert_eq!(counts(all), ["6", "3", "1", "2"]);
+    }
+
+    #[test]
+    fn expectation_parses_jsonl_and_templates() {
+        let jsonl = "{\"name\": \"a\"}\n{\"name\": \"b\"}\n";
+        let e = expectation_from_text(jsonl, 2).unwrap();
+        assert_eq!(e.names, vec!["a", "b"]);
+        assert_eq!(e.shards, 2);
+        assert!(expectation_from_text(jsonl, 0).is_err(), "zero shards is nonsense");
+        assert!(expectation_from_text("", 1).is_err(), "empty expectation is a user error");
+        assert!(expectation_from_text("{\"no_name\": 1}", 1).is_err());
+        // A fleet template expands with its embedded count, so the same
+        // file that fed `scenario expand` reconciles the run.
+        let template = r#"{"name": "cov-fleet", "fleet": {"count": 3, "seed": 5}}"#;
+        let e = expectation_from_text(template, 1).unwrap();
+        assert_eq!(e.names.len(), 3);
     }
 }

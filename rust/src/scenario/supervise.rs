@@ -1,0 +1,514 @@
+//! Supervised per-spec evaluation: fault isolation, bounded retries,
+//! deadlines, and structured error documents.
+//!
+//! The batch runner ([`super::batch`]) historically aborted a whole
+//! fleet on the first failing spec. At fleet scale partial failure is
+//! the norm, not the exception, so [`eval_supervised`] turns each
+//! spec's evaluation into an isolated attempt loop:
+//!
+//! - **Isolation** — every attempt runs under `catch_unwind`, so one
+//!   panicking spec (a bug, an injected fault) becomes a per-spec
+//!   failure instead of tearing down its siblings mid-batch. The panic
+//!   payload is captured into the failure message.
+//! - **Retries** — *transient* failures (an [`std::io::Error`] anywhere
+//!   in the cause chain: a flaky store, a lock timeout, a failed thread
+//!   spawn) are retried up to `retries` times with jittered exponential
+//!   backoff. The jitter is seeded from the spec's cache key and the
+//!   attempt number, so a re-run backs off identically — determinism
+//!   survives supervision. Deterministic evaluation errors (a bad
+//!   socket index) and panics are terminal on the first attempt:
+//!   retrying them re-fails identically.
+//! - **Deadlines** — with a deadline set, the attempt runs on a
+//!   watchdog thread and is marked **timed out** when it overruns. The
+//!   runaway worker is detached (there is no portable cancellation);
+//!   it finishes into a dropped channel. Timeouts are terminal.
+//!
+//! A spec that exhausts its attempts yields a [`Failure`], which the
+//! batch runner renders as a schema [`ERROR_SCHEMA`]
+//! (`cxlmem-result-error-v1`) document in the output JSONL: scenario
+//! name, cache key, error kind (`panic`|`io`|`timeout`|`eval`),
+//! message, and attempt count. Error documents are **never cached** —
+//! a re-run retries exactly the failed slots. `--fail-fast` bypasses
+//! all of this and restores the historical first-failure abort.
+//!
+//! Metrics (PR-7 registry): `scenario.errors` (specs that exhausted
+//! supervision), `scenario.retries` (backoff round-trips),
+//! `scenario.timeouts` (deadline overruns).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::batch::{eval_raw, ScenarioResult};
+use super::spec::ScenarioSpec;
+use crate::util::json::Json;
+use crate::util::metrics;
+
+/// Error-document schema identifier.
+pub const ERROR_SCHEMA: &str = "cxlmem-result-error-v1";
+
+/// Longest single backoff sleep, whatever the attempt count.
+const BACKOFF_CAP_MS: u64 = 5_000;
+
+/// How a supervised evaluation failed — the `error` field of the
+/// emitted document.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// The evaluation panicked; the payload is in the message.
+    Panic,
+    /// An `std::io::Error` in the cause chain (store, lock, spawn).
+    /// The one *transient* kind: eligible for retry.
+    Io,
+    /// The evaluation overran the `--deadline-secs` watchdog.
+    Timeout,
+    /// A deterministic evaluation error (bad spec data at eval time).
+    Eval,
+}
+
+impl ErrorKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorKind::Panic => "panic",
+            ErrorKind::Io => "io",
+            ErrorKind::Timeout => "timeout",
+            ErrorKind::Eval => "eval",
+        }
+    }
+
+    /// Parse the `error` field of a document.
+    pub fn parse(s: &str) -> Option<ErrorKind> {
+        match s {
+            "panic" => Some(ErrorKind::Panic),
+            "io" => Some(ErrorKind::Io),
+            "timeout" => Some(ErrorKind::Timeout),
+            "eval" => Some(ErrorKind::Eval),
+            _ => None,
+        }
+    }
+}
+
+/// A supervised evaluation that exhausted its attempts.
+#[derive(Clone, Debug)]
+pub struct Failure {
+    pub kind: ErrorKind,
+    /// The raw failure text (panic payload, error chain, deadline note)
+    /// — *not* prefixed with the scenario name; callers add context.
+    pub message: String,
+    /// Attempts consumed, counting the failing one (≥ 1).
+    pub attempts: u32,
+}
+
+/// Supervision policy for one batch run.
+#[derive(Clone, Debug)]
+pub struct SuperviseOpts {
+    /// Abort the batch on the first failure (the historical behavior):
+    /// no `catch_unwind`, no retries, no deadline — panics unwind
+    /// through the executor and errors fail the batch.
+    pub fail_fast: bool,
+    /// Extra attempts granted to transient (IO) failures.
+    pub retries: u32,
+    /// Base backoff before the first retry; doubles per retry, with
+    /// seeded jitter in [0.5, 1.5), capped at [`BACKOFF_CAP_MS`].
+    pub backoff_ms: u64,
+    /// Per-attempt wall-clock budget; overruns are marked timed out.
+    pub deadline: Option<Duration>,
+    /// `"K/N"` shard label stamped into error documents, so a fleet
+    /// coordinator can attribute failures to the shard that ran them.
+    pub shard: Option<String>,
+}
+
+impl Default for SuperviseOpts {
+    /// The supervised defaults `scenario run` uses: isolate failures
+    /// into error documents, grant transient failures two retries.
+    fn default() -> Self {
+        SuperviseOpts {
+            fail_fast: false,
+            retries: 2,
+            backoff_ms: 25,
+            deadline: None,
+            shard: None,
+        }
+    }
+}
+
+impl SuperviseOpts {
+    /// The historical first-failure-aborts policy (`--fail-fast`, and
+    /// the library-level `run_batch`/`run_batch_cached` contract).
+    pub fn fail_fast() -> Self {
+        SuperviseOpts {
+            fail_fast: true,
+            retries: 0,
+            ..SuperviseOpts::default()
+        }
+    }
+}
+
+/// Classify an evaluation error: an `std::io::Error` at the root of the
+/// cause chain marks a transient environment failure (store IO, lock
+/// acquisition, thread spawn); everything else is a deterministic
+/// evaluation error.
+pub fn classify(err: &anyhow::Error) -> ErrorKind {
+    if err.root_cause().downcast_ref::<std::io::Error>().is_some() {
+        ErrorKind::Io
+    } else {
+        ErrorKind::Eval
+    }
+}
+
+/// Render a panic payload (`&str` and `String` payloads carry their
+/// message; anything else is opaque).
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    payload
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "opaque panic payload".to_string())
+}
+
+/// Deterministic jittered exponential backoff: `base * 2^(attempt-1)`,
+/// scaled by a jitter in [0.5, 1.5) seeded from the spec's cache key
+/// and the attempt number — re-runs sleep identically, and a fleet of
+/// specs retrying the same contended store spreads out instead of
+/// thundering back in lockstep.
+fn backoff(key: &str, attempt: u32, base_ms: u64) -> Duration {
+    let mut h = crate::util::hash::Fnv64::new();
+    h.write(key.as_bytes());
+    h.write(&attempt.to_le_bytes());
+    let mut rng = crate::util::rng::Rng::seeded(h.finish());
+    let exp = base_ms.saturating_mul(1u64 << (attempt.saturating_sub(1)).min(6));
+    let jittered = (exp as f64 * (0.5 + rng.f64())).round() as u64;
+    Duration::from_millis(jittered.min(BACKOFF_CAP_MS))
+}
+
+/// One isolated attempt on the calling thread.
+fn attempt_inline(spec: &ScenarioSpec) -> Result<ScenarioResult, (ErrorKind, String)> {
+    match catch_unwind(AssertUnwindSafe(|| eval_raw(spec))) {
+        Ok(Ok(r)) => Ok(r),
+        Ok(Err(e)) => Err((classify(&e), format!("{e}"))),
+        Err(payload) => Err((ErrorKind::Panic, panic_message(payload.as_ref()))),
+    }
+}
+
+/// One isolated attempt under a watchdog: the evaluation runs on its
+/// own thread (inheriting the caller's perf context) and is abandoned
+/// — detached, finishing into a dropped channel — when it overruns.
+fn attempt_with_deadline(
+    spec: &ScenarioSpec,
+    deadline: Duration,
+) -> Result<ScenarioResult, (ErrorKind, String)> {
+    let (tx, rx) = mpsc::channel();
+    let spec = spec.clone();
+    let ctx = crate::perf::snapshot();
+    let spawned = std::thread::Builder::new()
+        .name("cxlmem-eval".to_string())
+        .spawn(move || {
+            crate::perf::apply(ctx);
+            let _ = tx.send(attempt_inline(&spec));
+        });
+    if let Err(e) = spawned {
+        // Spawn failure is environmental (an io::Error): transient.
+        return Err((ErrorKind::Io, format!("spawning eval watchdog thread: {e}")));
+    }
+    match rx.recv_timeout(deadline) {
+        Ok(outcome) => outcome,
+        Err(_) => Err((
+            ErrorKind::Timeout,
+            format!("evaluation exceeded the {deadline:?} deadline (worker detached)"),
+        )),
+    }
+}
+
+/// Evaluate one spec under the supervision policy. `key` is the spec's
+/// cache key — it seeds the backoff jitter and lands in error docs.
+///
+/// With `opts.fail_fast` this is exactly the historical path: one
+/// uncaught attempt (panics unwind, errors return) wrapped in a
+/// single-attempt [`Failure`] for the caller to abort on.
+pub fn eval_supervised(
+    spec: &ScenarioSpec,
+    key: &str,
+    opts: &SuperviseOpts,
+) -> Result<ScenarioResult, Failure> {
+    if opts.fail_fast {
+        return eval_raw(spec).map_err(|e| Failure {
+            kind: classify(&e),
+            message: format!("{e}"),
+            attempts: 1,
+        });
+    }
+    let max_attempts = opts.retries.saturating_add(1);
+    let mut attempt = 0u32;
+    loop {
+        attempt += 1;
+        let outcome = match opts.deadline {
+            Some(d) => attempt_with_deadline(spec, d),
+            None => attempt_inline(spec),
+        };
+        let (kind, message) = match outcome {
+            Ok(r) => return Ok(r),
+            Err(f) => f,
+        };
+        if kind == ErrorKind::Io && attempt < max_attempts {
+            metrics::counter("scenario.retries").inc();
+            std::thread::sleep(backoff(key, attempt, opts.backoff_ms));
+            continue;
+        }
+        if kind == ErrorKind::Timeout {
+            metrics::counter("scenario.timeouts").inc();
+        }
+        metrics::counter("scenario.errors").inc();
+        return Err(Failure {
+            kind,
+            message,
+            attempts: attempt,
+        });
+    }
+}
+
+/// Build the `cxlmem-result-error-v1` document for a failed slot.
+pub fn error_doc(name: &str, key: &str, failure: &Failure, shard: Option<&str>) -> Json {
+    let mut doc = Json::obj(vec![
+        ("schema", ERROR_SCHEMA.into()),
+        ("scenario", name.into()),
+        ("key", key.into()),
+        ("error", failure.kind.as_str().into()),
+        ("message", failure.message.as_str().into()),
+        ("attempts", u64::from(failure.attempts).into()),
+    ]);
+    if let Some(s) = shard {
+        doc.set("shard", s.into());
+    }
+    doc
+}
+
+/// Whether a result-stream document is an error document (vs a result,
+/// cache line, or metrics snapshot).
+pub fn is_error_doc(doc: &Json) -> bool {
+    doc.get("schema").and_then(Json::as_str) == Some(ERROR_SCHEMA)
+}
+
+/// Validate a parsed `cxlmem-result-error-v1` document — the gate the
+/// `stats`/`bench` validators apply to error lines in mixed JSONL.
+pub fn validate_error_doc(doc: &Json) -> Result<()> {
+    match doc.get("schema").and_then(Json::as_str) {
+        Some(s) if s == ERROR_SCHEMA => {}
+        Some(s) => bail!("schema is '{s}', want '{ERROR_SCHEMA}'"),
+        None => bail!("missing string field 'schema'"),
+    }
+    for field in ["scenario", "key", "error", "message"] {
+        if doc.get(field).and_then(Json::as_str).is_none() {
+            bail!("missing string field '{field}'");
+        }
+    }
+    let kind = doc.get("error").and_then(Json::as_str).unwrap();
+    if ErrorKind::parse(kind).is_none() {
+        bail!("error kind '{kind}' is not one of panic|io|timeout|eval");
+    }
+    let attempts = doc
+        .get("attempts")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| anyhow!("missing integer field 'attempts'"))?;
+    if attempts < 1 {
+        bail!("'attempts' must be >= 1 (got {attempts})");
+    }
+    if let Some(shard) = doc.get("shard") {
+        if shard.as_str().is_none() {
+            bail!("'shard', when present, must be a string");
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::fault;
+
+    fn spec(text: &str) -> ScenarioSpec {
+        ScenarioSpec::parse(&Json::parse(text).unwrap()).unwrap()
+    }
+
+    fn failure(kind: ErrorKind) -> Failure {
+        Failure {
+            kind,
+            message: "boom".to_string(),
+            attempts: 2,
+        }
+    }
+
+    #[test]
+    fn error_doc_roundtrips_and_validates() {
+        let doc = error_doc("f-001", "00ab", &failure(ErrorKind::Panic), Some("2/4"));
+        validate_error_doc(&doc).unwrap();
+        assert!(is_error_doc(&doc));
+        assert_eq!(doc.get("scenario").unwrap().as_str(), Some("f-001"));
+        assert_eq!(doc.get("error").unwrap().as_str(), Some("panic"));
+        assert_eq!(doc.get("attempts").unwrap().as_u64(), Some(2));
+        assert_eq!(doc.get("shard").unwrap().as_str(), Some("2/4"));
+        // Without a shard label the field is simply absent.
+        let bare = error_doc("f", "k", &failure(ErrorKind::Io), None);
+        validate_error_doc(&bare).unwrap();
+        assert!(bare.get("shard").is_none());
+        // The document survives a JSONL round-trip.
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        validate_error_doc(&parsed).unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_malformed_docs() {
+        assert!(validate_error_doc(&Json::parse("{}").unwrap()).is_err());
+        let mut wrong = error_doc("f", "k", &failure(ErrorKind::Eval), None);
+        wrong.set("schema", "cxlmem-result-cache-v1".into());
+        assert!(validate_error_doc(&wrong).is_err());
+        let mut bad_kind = error_doc("f", "k", &failure(ErrorKind::Eval), None);
+        bad_kind.set("error", "explosion".into());
+        let err = validate_error_doc(&bad_kind).unwrap_err().to_string();
+        assert!(err.contains("panic|io|timeout|eval"), "{err}");
+        let mut no_attempts = error_doc("f", "k", &failure(ErrorKind::Eval), None);
+        no_attempts.set("attempts", 0u64.into());
+        assert!(validate_error_doc(&no_attempts).is_err());
+        for field in ["scenario", "key", "error", "message"] {
+            let text = error_doc("f", "k", &failure(ErrorKind::Io), None)
+                .to_string()
+                .replace(&format!("\"{field}\""), &format!("\"_{field}\""));
+            assert!(
+                validate_error_doc(&Json::parse(&text).unwrap()).is_err(),
+                "missing '{field}' must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn classify_splits_io_from_eval() {
+        let io_err = anyhow::Error::from(std::io::Error::new(
+            std::io::ErrorKind::TimedOut,
+            "lock marker held",
+        ));
+        assert_eq!(classify(&io_err), ErrorKind::Io);
+        use anyhow::Context as _;
+        let wrapped: anyhow::Error = Err::<(), _>(std::io::Error::new(
+            std::io::ErrorKind::Other,
+            "store unwritable",
+        ))
+        .context("flushing cache")
+        .unwrap_err();
+        assert_eq!(classify(&wrapped), ErrorKind::Io, "chain must be walked");
+        assert_eq!(classify(&anyhow!("socket 7 out of range")), ErrorKind::Eval);
+    }
+
+    #[test]
+    fn backoff_is_deterministic_and_bounded() {
+        let a = backoff("00ab", 1, 25);
+        assert_eq!(a, backoff("00ab", 1, 25), "same key+attempt, same sleep");
+        assert_ne!(backoff("00ab", 1, 25), backoff("00cd", 1, 25));
+        // Jitter stays within [0.5, 1.5) of the exponential schedule.
+        for attempt in 1..=10u32 {
+            let exp = 25u64 << (attempt - 1).min(6);
+            let d = backoff("k", attempt, 25).as_millis() as u64;
+            assert!(d >= exp / 2 && d <= exp + exp / 2 + 1, "attempt {attempt}: {d}ms");
+            assert!(d <= BACKOFF_CAP_MS);
+        }
+    }
+
+    #[test]
+    fn deterministic_eval_errors_are_terminal_not_retried() {
+        // 'socket 7' fails deterministically at eval time: one attempt,
+        // kind 'eval', message preserved for the error document.
+        let s = spec(
+            r#"{"name": "sup-eval-doomed", "workload": {"kind": "objects", "socket": 7,
+                "objects": [{"name": "a", "gb": 1}], "oli_search": false}}"#,
+        );
+        let f = eval_supervised(&s, "k", &SuperviseOpts::default()).unwrap_err();
+        assert_eq!(f.kind, ErrorKind::Eval);
+        assert_eq!(f.attempts, 1);
+        assert!(f.message.contains("socket 7"), "{}", f.message);
+    }
+
+    #[test]
+    fn injected_panics_are_captured_with_payload() {
+        let _g = fault::test_guard();
+        fault::install(
+            fault::FaultPlan::parse("scenario.eval/sup-panic-victim=panic").unwrap(),
+        );
+        let s = spec(r#"{"name": "sup-panic-victim", "workload": {"kind": "hpc-table"}}"#);
+        let f = eval_supervised(&s, "k", &SuperviseOpts::default()).unwrap_err();
+        fault::clear();
+        assert_eq!(f.kind, ErrorKind::Panic);
+        assert_eq!(f.attempts, 1, "panics are terminal");
+        assert!(f.message.contains(fault::INJECTED), "{}", f.message);
+    }
+
+    #[test]
+    fn transient_io_faults_retry_to_success() {
+        let _g = fault::test_guard();
+        fault::install(
+            fault::FaultPlan::parse("scenario.eval.io/sup-flaky-io=io:2").unwrap(),
+        );
+        let before = metrics::counter("scenario.retries").get();
+        let s = spec(r#"{"name": "sup-flaky-io", "workload": {"kind": "hpc-table"}}"#);
+        let opts = SuperviseOpts {
+            retries: 2,
+            backoff_ms: 1,
+            ..SuperviseOpts::default()
+        };
+        let r = eval_supervised(&s, "k", &opts).expect("third attempt must succeed");
+        fault::clear();
+        assert_eq!(r.name, "sup-flaky-io");
+        if metrics::global().enabled() {
+            assert_eq!(metrics::counter("scenario.retries").get() - before, 2);
+        }
+    }
+
+    #[test]
+    fn exhausted_io_retries_fail_with_attempt_count() {
+        let _g = fault::test_guard();
+        fault::install(fault::FaultPlan::parse("scenario.eval.io/sup-dead-io=io").unwrap());
+        let s = spec(r#"{"name": "sup-dead-io", "workload": {"kind": "hpc-table"}}"#);
+        let opts = SuperviseOpts {
+            retries: 2,
+            backoff_ms: 1,
+            ..SuperviseOpts::default()
+        };
+        let f = eval_supervised(&s, "k", &opts).unwrap_err();
+        fault::clear();
+        assert_eq!(f.kind, ErrorKind::Io);
+        assert_eq!(f.attempts, 3, "initial attempt + 2 retries");
+        assert!(f.message.contains(fault::INJECTED), "{}", f.message);
+    }
+
+    #[test]
+    fn deadline_marks_overruns_timed_out() {
+        let _g = fault::test_guard();
+        fault::install(
+            fault::FaultPlan::parse("scenario.eval/sup-slowpoke=delay:400").unwrap(),
+        );
+        let before = metrics::counter("scenario.timeouts").get();
+        let s = spec(r#"{"name": "sup-slowpoke", "workload": {"kind": "hpc-table"}}"#);
+        let opts = SuperviseOpts {
+            deadline: Some(Duration::from_millis(50)),
+            ..SuperviseOpts::default()
+        };
+        let f = eval_supervised(&s, "k", &opts).unwrap_err();
+        fault::clear();
+        assert_eq!(f.kind, ErrorKind::Timeout);
+        assert_eq!(f.attempts, 1, "timeouts are terminal");
+        assert!(f.message.contains("deadline"), "{}", f.message);
+        if metrics::global().enabled() {
+            assert!(metrics::counter("scenario.timeouts").get() > before);
+        }
+    }
+
+    #[test]
+    fn deadline_passes_fast_evaluations_through() {
+        let s = spec(r#"{"name": "sup-quick", "workload": {"kind": "hpc-table"}}"#);
+        let opts = SuperviseOpts {
+            deadline: Some(Duration::from_secs(60)),
+            ..SuperviseOpts::default()
+        };
+        let r = eval_supervised(&s, "k", &opts).unwrap();
+        assert_eq!(r.name, "sup-quick");
+        assert_eq!(r.doc.get("scenario").unwrap().as_str(), Some("sup-quick"));
+    }
+}

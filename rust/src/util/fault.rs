@@ -1,0 +1,398 @@
+//! Deterministic fault injection — the chaos layer under the supervised
+//! batch runner ([`crate::scenario::batch`]).
+//!
+//! Production code declares **named injection points** at the places
+//! failures really happen (`fault::point("scenario.eval", key)`,
+//! `fault::io_point("cache.flush.io", key)`); a **fault plan** — parsed
+//! from the `CXLMEM_FAULTS` environment variable or installed
+//! programmatically from `--inject-faults` — decides which points fire
+//! and how: a panic, a synthetic `io::Error`, or a delay. Everything is
+//! deterministic: rules match on the point name plus an optional
+//! *key* substring (the call site passes its natural identity — a spec
+//! name, a store path), and per-rule fire limits are consumed in hit
+//! order, so a seeded fleet run produces exactly the failures the plan
+//! names, run after run.
+//!
+//! Cost when disabled (the production configuration): one relaxed
+//! atomic load per point — no locks, no string work, no allocation.
+//! The state machine is `UNINIT -> {OFF, ON}`; the first point ever hit
+//! pays the env-var read, everyone after that sees a settled state.
+//!
+//! Plan syntax (also documented in README "Fault tolerance & chaos
+//! testing"): rules separated by `;`, each
+//!
+//! ```text
+//! point[/KEY]=KIND[:N]
+//! ```
+//!
+//! - `point` — injection-point name, matched exactly.
+//! - `/KEY` — optional filter: the rule only fires when the call site's
+//!   key *contains* `KEY` (substring match).
+//! - `KIND` — `panic`, `io`, or `delay`.
+//! - `:N` — for `panic`/`io`: fire for the first `N` matching hits,
+//!   then stand down (default: every hit). For `delay`: sleep `N`
+//!   milliseconds (default 5) on every matching hit.
+//!
+//! Example: `scenario.eval/fleet-002=panic;cache.flush.io=io:2` panics
+//! every evaluation of specs whose name contains `fleet-002` and fails
+//! the first two cache-flush writes with a synthetic IO error.
+
+use std::io;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::{bail, Result};
+
+/// Environment variable holding the process-wide fault plan.
+pub const ENV: &str = "CXLMEM_FAULTS";
+
+/// Prefix of every injected panic payload / synthetic error message —
+/// the marker tests and the chaos smoke grep for.
+pub const INJECTED: &str = "injected fault";
+
+/// What a matching rule does at its injection point.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Panic with a payload naming the point and key.
+    Panic,
+    /// Synthetic `io::Error` (only at [`io_point`] sites; ignored by
+    /// plain [`point`] sites, which have no error channel).
+    Io,
+    /// Sleep for the given number of milliseconds.
+    DelayMs(u64),
+}
+
+/// One parsed rule: `point[/KEY]=KIND[:N]`.
+#[derive(Debug)]
+struct Rule {
+    point: String,
+    key: Option<String>,
+    kind: FaultKind,
+    /// Fire at most this many times (`None` = unlimited).
+    limit: Option<u64>,
+    fired: AtomicU64,
+}
+
+impl Rule {
+    /// Whether this rule matches the hit — and if so, consume one fire
+    /// from the limit. Limits are consumed atomically, so concurrent
+    /// hits never over-fire a bounded rule.
+    fn try_fire(&self, point: &str, key: &str) -> bool {
+        if self.point != point {
+            return false;
+        }
+        if let Some(k) = &self.key {
+            if !key.contains(k.as_str()) {
+                return false;
+            }
+        }
+        match self.limit {
+            None => {
+                self.fired.fetch_add(1, Ordering::Relaxed);
+                true
+            }
+            Some(limit) => {
+                // Reserve a slot; back out when the budget is spent.
+                let n = self.fired.fetch_add(1, Ordering::Relaxed);
+                if n < limit {
+                    true
+                } else {
+                    self.fired.fetch_sub(1, Ordering::Relaxed);
+                    false
+                }
+            }
+        }
+    }
+}
+
+/// A parsed fault plan: an ordered rule list (first match fires).
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    rules: Vec<Rule>,
+}
+
+impl FaultPlan {
+    /// Parse the plan syntax described in the module docs. An empty
+    /// string is an empty (never-firing) plan.
+    pub fn parse(text: &str) -> Result<FaultPlan> {
+        let mut rules = Vec::new();
+        for part in text.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let Some((lhs, rhs)) = part.split_once('=') else {
+                bail!("fault rule '{part}' wants point[/KEY]=KIND[:N]");
+            };
+            let (point, key) = match lhs.split_once('/') {
+                Some((p, k)) => (p.trim(), Some(k.trim().to_string())),
+                None => (lhs.trim(), None),
+            };
+            if point.is_empty() {
+                bail!("fault rule '{part}' has an empty point name");
+            }
+            let (kind_s, n) = match rhs.split_once(':') {
+                Some((k, n)) => {
+                    let n: u64 = n
+                        .trim()
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("fault rule '{part}': N is not an integer"))?;
+                    (k.trim(), Some(n))
+                }
+                None => (rhs.trim(), None),
+            };
+            let (kind, limit) = match kind_s {
+                "panic" => (FaultKind::Panic, n),
+                "io" => (FaultKind::Io, n),
+                "delay" => (FaultKind::DelayMs(n.unwrap_or(5)), None),
+                other => bail!("fault rule '{part}': unknown kind '{other}' (panic|io|delay)"),
+            };
+            rules.push(Rule {
+                point: point.to_string(),
+                key,
+                kind,
+                limit,
+                fired: AtomicU64::new(0),
+            });
+        }
+        Ok(FaultPlan { rules })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty()
+    }
+
+    /// Total fires recorded for a point name (all matching rules).
+    fn fired(&self, point: &str) -> u64 {
+        self.rules
+            .iter()
+            .filter(|r| r.point == point)
+            .map(|r| r.fired.load(Ordering::Relaxed))
+            .sum()
+    }
+}
+
+// State machine for the disabled-path fast check.
+const UNINIT: u8 = 0;
+const OFF: u8 = 1;
+const ON: u8 = 2;
+
+static STATE: AtomicU8 = AtomicU8::new(UNINIT);
+
+fn plan_slot() -> &'static Mutex<Option<Arc<FaultPlan>>> {
+    static SLOT: OnceLock<Mutex<Option<Arc<FaultPlan>>>> = OnceLock::new();
+    SLOT.get_or_init(|| Mutex::new(None))
+}
+
+/// Whether any fault plan is armed. The production fast path: a single
+/// relaxed atomic load once the state has settled (the very first call
+/// in a process additionally reads [`ENV`]).
+#[inline]
+pub fn active() -> bool {
+    match STATE.load(Ordering::Relaxed) {
+        OFF => false,
+        ON => true,
+        _ => init_from_env_lazily(),
+    }
+}
+
+#[cold]
+fn init_from_env_lazily() -> bool {
+    match std::env::var(ENV) {
+        Ok(text) if !text.trim().is_empty() => match FaultPlan::parse(&text) {
+            Ok(plan) => {
+                install(plan);
+                true
+            }
+            Err(e) => {
+                eprintln!("warning: ignoring unparseable {ENV} plan: {e}");
+                STATE.store(OFF, Ordering::Relaxed);
+                false
+            }
+        },
+        _ => {
+            STATE.store(OFF, Ordering::Relaxed);
+            false
+        }
+    }
+}
+
+/// Arm a fault plan process-wide (replacing any armed plan). An empty
+/// plan disarms, exactly like [`clear`].
+pub fn install(plan: FaultPlan) {
+    let mut slot = plan_slot().lock().unwrap();
+    if plan.is_empty() {
+        *slot = None;
+        STATE.store(OFF, Ordering::Relaxed);
+    } else {
+        *slot = Some(Arc::new(plan));
+        STATE.store(ON, Ordering::Relaxed);
+    }
+}
+
+/// Disarm fault injection (points go back to the one-atomic-load path).
+pub fn clear() {
+    let mut slot = plan_slot().lock().unwrap();
+    *slot = None;
+    STATE.store(OFF, Ordering::Relaxed);
+}
+
+fn current_plan() -> Option<Arc<FaultPlan>> {
+    plan_slot().lock().unwrap().clone()
+}
+
+/// Total fires recorded so far for `point` under the armed plan (0 when
+/// disarmed) — the chaos smoke's assertion hook.
+pub fn fired(point: &str) -> u64 {
+    current_plan().map_or(0, |p| p.fired(point))
+}
+
+/// Find the first matching, still-armed rule and consume a fire.
+#[cold]
+fn hit(point: &str, key: &str) -> Option<FaultKind> {
+    let plan = current_plan()?;
+    plan.rules
+        .iter()
+        .find(|r| r.try_fire(point, key))
+        .map(|r| r.kind)
+}
+
+/// A plain injection point: may panic or delay (an `io` rule matching a
+/// plain point is ignored — there is no error channel to return it on).
+/// `key` is the call site's natural identity (spec name, path, …),
+/// matched by rule `/KEY` filters.
+#[inline]
+pub fn point(name: &str, key: &str) {
+    if !active() {
+        return;
+    }
+    match hit(name, key) {
+        Some(FaultKind::Panic) => panic!("{INJECTED} at {name} ({key})"),
+        Some(FaultKind::DelayMs(ms)) => std::thread::sleep(std::time::Duration::from_millis(ms)),
+        Some(FaultKind::Io) | None => {}
+    }
+}
+
+/// An IO injection point: like [`point`], and an `io` rule returns a
+/// synthetic [`io::Error`] the call site propagates like a real one.
+#[inline]
+pub fn io_point(name: &str, key: &str) -> io::Result<()> {
+    if !active() {
+        return Ok(());
+    }
+    match hit(name, key) {
+        Some(FaultKind::Panic) => panic!("{INJECTED} at {name} ({key})"),
+        Some(FaultKind::DelayMs(ms)) => {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+            Ok(())
+        }
+        Some(FaultKind::Io) => Err(io::Error::new(
+            io::ErrorKind::Other,
+            format!("{INJECTED} at {name} ({key})"),
+        )),
+        None => Ok(()),
+    }
+}
+
+#[cfg(test)]
+pub(crate) fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    // Fault plans are process-global; tests that arm one serialize here
+    // (and key their rules on test-unique names so concurrently running
+    // non-fault tests can never match them).
+    static GUARD: Mutex<()> = Mutex::new(());
+    GUARD.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_rules_and_rejects_garbage() {
+        let p = FaultPlan::parse("a.b/key=panic:2; c.d=io ;e=delay:7").unwrap();
+        assert_eq!(p.rules.len(), 3);
+        assert_eq!(p.rules[0].point, "a.b");
+        assert_eq!(p.rules[0].key.as_deref(), Some("key"));
+        assert_eq!(p.rules[0].kind, FaultKind::Panic);
+        assert_eq!(p.rules[0].limit, Some(2));
+        assert_eq!(p.rules[1].kind, FaultKind::Io);
+        assert_eq!(p.rules[1].limit, None);
+        assert_eq!(p.rules[2].kind, FaultKind::DelayMs(7));
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse(" ; ; ").unwrap().is_empty());
+        assert!(FaultPlan::parse("no-equals").is_err());
+        assert!(FaultPlan::parse("p=explode").is_err());
+        assert!(FaultPlan::parse("p=panic:x").is_err());
+        assert!(FaultPlan::parse("=panic").is_err());
+    }
+
+    #[test]
+    fn disabled_points_are_inert() {
+        let _g = test_guard();
+        clear();
+        point("fault.test.inert", "anything");
+        assert!(io_point("fault.test.inert", "anything").is_ok());
+        assert_eq!(fired("fault.test.inert"), 0);
+    }
+
+    #[test]
+    fn io_rule_fires_limited_and_keyed() {
+        let _g = test_guard();
+        install(FaultPlan::parse("fault.test.io/match-me=io:2").unwrap());
+        // Wrong key: never fires.
+        assert!(io_point("fault.test.io", "other").is_ok());
+        // Matching key: exactly two fires, then the rule stands down.
+        let e = io_point("fault.test.io", "x-match-me-y").unwrap_err();
+        assert!(e.to_string().contains(INJECTED), "{e}");
+        assert!(io_point("fault.test.io", "match-me").is_err());
+        assert!(io_point("fault.test.io", "match-me").is_ok());
+        assert_eq!(fired("fault.test.io"), 2);
+        clear();
+        assert!(io_point("fault.test.io", "match-me").is_ok());
+    }
+
+    #[test]
+    fn panic_rule_panics_with_marker_payload() {
+        let _g = test_guard();
+        install(FaultPlan::parse("fault.test.panic/boom=panic:1").unwrap());
+        let r = std::panic::catch_unwind(|| point("fault.test.panic", "boom"));
+        let payload = r.unwrap_err();
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains(INJECTED), "{msg}");
+        assert!(msg.contains("fault.test.panic"), "{msg}");
+        // The limit was consumed by the panic fire.
+        point("fault.test.panic", "boom");
+        clear();
+    }
+
+    #[test]
+    fn io_rule_is_ignored_at_plain_points() {
+        let _g = test_guard();
+        install(FaultPlan::parse("fault.test.plain=io").unwrap());
+        point("fault.test.plain", "k"); // must not panic or error
+        clear();
+    }
+
+    #[test]
+    fn delay_rule_sleeps() {
+        let _g = test_guard();
+        install(FaultPlan::parse("fault.test.delay=delay:20").unwrap());
+        let t0 = std::time::Instant::now();
+        point("fault.test.delay", "k");
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(15));
+        clear();
+    }
+
+    #[test]
+    fn first_matching_rule_wins() {
+        let _g = test_guard();
+        install(FaultPlan::parse("fault.test.order=io:1;fault.test.order=delay:1").unwrap());
+        assert!(io_point("fault.test.order", "k").is_err());
+        // Limit spent: falls through to the delay rule (no error).
+        assert!(io_point("fault.test.order", "k").is_ok());
+        clear();
+    }
+}

@@ -7,17 +7,30 @@
 //! links), so the lock is shared correctly between processes *and*
 //! between threads of one process — each acquire opens its own file
 //! description. Crashed holders cost nothing: the kernel drops the lock
-//! with the file descriptor. On non-Unix platforms a best-effort
-//! create-new spinlock on `<path>.held` stands in (a crashed holder
-//! leaves the marker behind; delete it by hand).
+//! with the file descriptor.
+//!
+//! On non-Unix platforms the [`marker`] fallback stands in: exclusive
+//! creation of a `<path>.held` marker file. Unlike `flock(2)`, a
+//! crashed holder leaves the marker behind, so acquisition is
+//! **bounded** and **self-healing**: waiters back off exponentially
+//! (capped), break markers older than a staleness threshold (counted in
+//! the `lock.stale_broken` metric — a broken marker means a holder
+//! died), and return a clear [`io::ErrorKind::TimedOut`] error instead
+//! of hanging a shard forever. The marker module is compiled on every
+//! platform so its semantics are pinned by tests wherever the suite
+//! runs; only non-Unix builds route `FileLock` through it.
 //!
 //! Used by the scenario-result cache ([`crate::scenario::cache`]) so N
 //! sharded processes pointed at one `--cache-dir` can append to the
-//! shared store without tearing lines.
+//! shared store without tearing lines. `FileLock::acquire` is also a
+//! fault-injection point (`lock.acquire`, keyed by the lock path) so
+//! the chaos harness can manufacture lock contention deterministically.
 
 use std::fs::{File, OpenOptions};
 use std::io;
 use std::path::Path;
+
+use super::fault;
 
 /// An exclusive advisory lock, held until drop.
 #[derive(Debug)]
@@ -30,6 +43,9 @@ impl FileLock {
     /// lock file is created if missing and intentionally left in place
     /// afterwards — deleting it would race other acquirers.
     pub fn acquire(path: &Path) -> io::Result<FileLock> {
+        // Chaos hook: a `delay` rule here simulates a slow/contended
+        // holder; an `io` rule simulates an unlockable store.
+        fault::io_point("lock.acquire", &path.to_string_lossy())?;
         Ok(FileLock {
             _held: imp::acquire(path)?,
         })
@@ -83,26 +99,88 @@ mod imp {
 #[cfg(not(unix))]
 mod imp {
     use std::io;
-    use std::path::{Path, PathBuf};
+    use std::path::Path;
 
-    /// Best-effort fallback: exclusive creation of a `.held` marker next
-    /// to the lock file, removed on drop. Unlike `flock(2)`, a crashed
-    /// holder leaves the marker behind, so acquisition is *bounded*:
-    /// after ~5 s of contention it errors out naming the marker, and
-    /// callers degrade (the scenario cache proceeds unlocked with a
-    /// warning) instead of hanging forever.
+    pub type Held = super::marker::Held;
+
+    pub fn acquire(path: &Path) -> io::Result<Held> {
+        super::marker::acquire(path, &super::marker::MarkerOpts::default())
+    }
+}
+
+/// Create-new marker fallback lock (see the module docs). Compiled on
+/// every platform so its bounded-wait and stale-break semantics stay
+/// tested; non-Unix `FileLock` builds on it.
+pub mod marker {
+    use std::io;
+    use std::path::{Path, PathBuf};
+    use std::time::{Duration, Instant, SystemTime};
+
+    use crate::util::metrics;
+
+    /// Tuning for [`acquire`]. The defaults suit the scenario cache:
+    /// flushes hold the lock for milliseconds, so a marker that is tens
+    /// of seconds old can only be a crashed holder's leftovers.
+    #[derive(Clone, Copy, Debug)]
+    pub struct MarkerOpts {
+        /// Give up (with [`io::ErrorKind::TimedOut`]) after this long.
+        pub timeout: Duration,
+        /// Break (delete) markers older than this and retry.
+        pub stale_after: Duration,
+        /// First backoff sleep; doubles per retry up to [`Self::poll_max`].
+        pub poll_start: Duration,
+        /// Backoff cap.
+        pub poll_max: Duration,
+    }
+
+    impl Default for MarkerOpts {
+        fn default() -> Self {
+            MarkerOpts {
+                timeout: Duration::from_secs(10),
+                stale_after: Duration::from_secs(30),
+                poll_start: Duration::from_millis(1),
+                poll_max: Duration::from_millis(50),
+            }
+        }
+    }
+
+    /// A held marker lock: the `.held` file is removed on drop.
     #[derive(Debug)]
     pub struct Held {
         marker: PathBuf,
     }
 
-    pub fn acquire(path: &Path) -> io::Result<Held> {
-        // Keep the lock file itself existing for path parity with Unix.
-        let _ = super::open_lock_file(path)?;
+    impl Drop for Held {
+        fn drop(&mut self) {
+            let _ = std::fs::remove_file(&self.marker);
+        }
+    }
+
+    fn marker_path(path: &Path) -> PathBuf {
         let mut name = path.as_os_str().to_os_string();
         name.push(".held");
-        let marker = PathBuf::from(name);
-        for _ in 0..2500 {
+        PathBuf::from(name)
+    }
+
+    /// Age of the marker file, `None` if it vanished or the filesystem
+    /// reports no usable mtime (then it is never considered stale —
+    /// breaking a live holder's marker is the one unacceptable outcome).
+    fn marker_age(marker: &Path) -> Option<Duration> {
+        let modified = std::fs::metadata(marker).ok()?.modified().ok()?;
+        SystemTime::now().duration_since(modified).ok()
+    }
+
+    /// Acquire the marker lock on `<path>.held` with bounded waiting:
+    /// exponential backoff between attempts, stale markers (older than
+    /// `opts.stale_after`) broken and counted, and a clear timeout error
+    /// naming the marker after `opts.timeout` of contention.
+    pub fn acquire(path: &Path, opts: &MarkerOpts) -> io::Result<Held> {
+        // Keep the lock file itself existing for path parity with flock.
+        let _ = super::open_lock_file(path)?;
+        let marker = marker_path(path);
+        let start = Instant::now();
+        let mut sleep = opts.poll_start;
+        loop {
             match std::fs::OpenOptions::new()
                 .write(true)
                 .create_new(true)
@@ -110,23 +188,35 @@ mod imp {
             {
                 Ok(_) => return Ok(Held { marker }),
                 Err(e) if e.kind() == io::ErrorKind::AlreadyExists => {
-                    std::thread::sleep(std::time::Duration::from_millis(2));
+                    if let Some(age) = marker_age(&marker) {
+                        if age > opts.stale_after {
+                            // A holder that died mid-critical-section.
+                            // Best effort: a concurrent breaker racing
+                            // us just means the remove fails or the
+                            // next create_new succeeds for one of us.
+                            if std::fs::remove_file(&marker).is_ok() {
+                                metrics::counter("lock.stale_broken").inc();
+                            }
+                            continue;
+                        }
+                    }
                 }
                 Err(e) => return Err(e),
             }
-        }
-        Err(io::Error::new(
-            io::ErrorKind::TimedOut,
-            format!(
-                "lock marker {} held too long (stale from a crash? delete it by hand)",
-                marker.display()
-            ),
-        ))
-    }
-
-    impl Drop for Held {
-        fn drop(&mut self) {
-            let _ = std::fs::remove_file(&self.marker);
+            if start.elapsed() >= opts.timeout {
+                return Err(io::Error::new(
+                    io::ErrorKind::TimedOut,
+                    format!(
+                        "lock marker {} still held after {:?} (live contention, or a \
+                         crashed holder younger than the {:?} staleness bound)",
+                        marker.display(),
+                        opts.timeout,
+                        opts.stale_after
+                    ),
+                ));
+            }
+            std::thread::sleep(sleep.min(opts.timeout.saturating_sub(start.elapsed())));
+            sleep = (sleep * 2).min(opts.poll_max);
         }
     }
 }
@@ -135,6 +225,7 @@ mod imp {
 mod tests {
     use super::*;
     use std::path::PathBuf;
+    use std::time::Duration;
 
     fn tmp(tag: &str) -> PathBuf {
         std::env::temp_dir().join(format!("cxlmem-lock-{tag}-{}", std::process::id()))
@@ -189,5 +280,120 @@ mod tests {
         assert_eq!(n as usize, THREADS * ITERS, "lost updates under the lock");
         let _ = std::fs::remove_file(&lock_path);
         let _ = std::fs::remove_file(&data_path);
+    }
+
+    fn quick_opts() -> marker::MarkerOpts {
+        marker::MarkerOpts {
+            timeout: Duration::from_millis(200),
+            stale_after: Duration::from_secs(30),
+            poll_start: Duration::from_millis(1),
+            poll_max: Duration::from_millis(10),
+        }
+    }
+
+    #[test]
+    fn marker_excludes_and_releases() {
+        let path = tmp("marker-basic");
+        let _ = std::fs::remove_file(&path);
+        let opts = quick_opts();
+        let held = marker::acquire(&path, &opts).unwrap();
+        // Second acquirer times out with a clear error while held…
+        let err = marker::acquire(&path, &opts).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::TimedOut);
+        assert!(err.to_string().contains(".held"), "{err}");
+        drop(held);
+        // …and succeeds immediately after release.
+        let _again = marker::acquire(&path, &opts).unwrap();
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// Mutual exclusion for the marker fallback itself: the same
+    /// read-modify-write pin as the flock path, run through `marker::`
+    /// directly so the fallback is tested on every platform.
+    #[test]
+    fn marker_rmw_loses_no_update() {
+        let lock_path = tmp("marker-rmw");
+        let data_path = tmp("marker-rmw-data");
+        let _ = std::fs::remove_file(&lock_path);
+        let _ = std::fs::remove_file(&marker_held_path(&lock_path));
+        std::fs::write(&data_path, "0").unwrap();
+        let opts = marker::MarkerOpts {
+            timeout: Duration::from_secs(20),
+            ..quick_opts()
+        };
+
+        const THREADS: usize = 4;
+        const ITERS: usize = 10;
+        std::thread::scope(|s| {
+            for _ in 0..THREADS {
+                s.spawn(|| {
+                    for _ in 0..ITERS {
+                        let _l = marker::acquire(&lock_path, &opts).unwrap();
+                        let n: u64 = std::fs::read_to_string(&data_path)
+                            .unwrap()
+                            .trim()
+                            .parse()
+                            .unwrap();
+                        std::fs::write(&data_path, format!("{}", n + 1)).unwrap();
+                    }
+                });
+            }
+        });
+        let n: u64 = std::fs::read_to_string(&data_path)
+            .unwrap()
+            .trim()
+            .parse()
+            .unwrap();
+        assert_eq!(n as usize, THREADS * ITERS, "lost updates under the marker lock");
+        let _ = std::fs::remove_file(&lock_path);
+        let _ = std::fs::remove_file(&data_path);
+    }
+
+    fn marker_held_path(path: &PathBuf) -> PathBuf {
+        let mut name = path.as_os_str().to_os_string();
+        name.push(".held");
+        PathBuf::from(name)
+    }
+
+    /// A crashed holder's marker (old mtime) is broken instead of
+    /// hanging every later shard forever; the break is counted.
+    #[test]
+    fn marker_breaks_stale_locks_by_age() {
+        let path = tmp("marker-stale");
+        let _ = std::fs::remove_file(&path);
+        let held_path = marker_held_path(&path);
+        // Fake a crashed holder: a marker nobody will ever release.
+        std::fs::write(&held_path, "dead holder").unwrap();
+        let opts = marker::MarkerOpts {
+            timeout: Duration::from_secs(5),
+            stale_after: Duration::from_millis(50),
+            ..quick_opts()
+        };
+        std::thread::sleep(Duration::from_millis(80));
+        let before = crate::util::metrics::counter("lock.stale_broken").get();
+        let held = marker::acquire(&path, &opts).unwrap();
+        let after = crate::util::metrics::counter("lock.stale_broken").get();
+        if crate::util::metrics::global().enabled() {
+            assert!(after > before, "stale break must be counted");
+        }
+        drop(held);
+        assert!(!held_path.exists(), "marker must be released");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// A *fresh* marker (younger than the staleness bound) is honored:
+    /// the waiter times out rather than stealing a live holder's lock.
+    #[test]
+    fn marker_never_breaks_fresh_locks() {
+        let path = tmp("marker-fresh");
+        let _ = std::fs::remove_file(&path);
+        let held_path = marker_held_path(&path);
+        std::fs::write(&held_path, "live holder").unwrap();
+        let opts = quick_opts(); // stale_after 30 s >> timeout 200 ms
+        let err = marker::acquire(&path, &opts).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::TimedOut);
+        assert!(held_path.exists(), "a fresh marker must not be broken");
+        let _ = std::fs::remove_file(&held_path);
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -1,8 +1,9 @@
 //! Hand-rolled utility substrates (no external crates available offline):
 //! PRNG, statistics, table rendering, JSON, CLI parsing, content hashing,
-//! advisory file locking, and a bench timer.
+//! advisory file locking, fault injection, and a bench timer.
 
 pub mod cli;
+pub mod fault;
 pub mod hash;
 pub mod json;
 pub mod lock;

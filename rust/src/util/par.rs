@@ -13,7 +13,11 @@ use crate::perf;
 
 /// Map `f` over `items` using up to `jobs` OS threads, preserving input
 /// order in the output. `jobs <= 1` (or a single item) runs inline on the
-/// calling thread; a worker panic propagates to the caller.
+/// calling thread; a worker panic propagates to the caller — with its
+/// original payload, and only after **every** worker has been joined, so
+/// a panicking chunk never aborts the process or leaves detached workers
+/// racing the caller's next step (the supervised batch runner relies on
+/// this to turn per-spec panics into structured error documents).
 pub fn par_map<T, R, F>(items: &[T], jobs: usize, f: F) -> Vec<R>
 where
     T: Sync,
@@ -47,10 +51,25 @@ where
                 })
             })
             .collect();
-        handles
-            .into_iter()
-            .flat_map(|h| h.join().expect("par_map worker panicked"))
-            .collect()
+        // Join ALL workers before deciding the outcome: the surviving
+        // workers keep draining the shared index counter, and their
+        // completed results are simply discarded if anyone panicked.
+        let mut results = Vec::new();
+        let mut first_panic: Option<Box<dyn std::any::Any + Send>> = None;
+        for h in handles {
+            match h.join() {
+                Ok(part) => results.extend(part),
+                Err(payload) => {
+                    if first_panic.is_none() {
+                        first_panic = Some(payload);
+                    }
+                }
+            }
+        }
+        if let Some(payload) = first_panic {
+            std::panic::resume_unwind(payload);
+        }
+        results
     });
     indexed.sort_unstable_by_key(|&(i, _)| i);
     indexed.into_iter().map(|(_, r)| r).collect()
@@ -147,5 +166,40 @@ mod tests {
         let xs: Vec<u32> = (0..8).collect();
         let inner = par_map(&xs, 4, |_| crate::perf::current_jobs());
         assert!(inner.iter().all(|&j| j == 1));
+    }
+
+    /// One panicking chunk of many: the panic must reach the caller as an
+    /// unwind carrying the *original* payload (not an `.expect` abort of
+    /// a secondary panic), and only after every worker was joined — all
+    /// other items keep getting processed off the shared counter.
+    #[test]
+    fn panicking_chunk_unwinds_with_payload_after_joining_all() {
+        use std::sync::atomic::AtomicUsize;
+
+        let xs: Vec<u32> = (0..64).collect();
+        let done = AtomicUsize::new(0);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            par_map(&xs, 4, |&x| {
+                if x == 13 {
+                    panic!("chunk 13 exploded");
+                }
+                done.fetch_add(1, Ordering::SeqCst);
+                x
+            })
+        }));
+        let payload = result.expect_err("the panic must propagate");
+        let msg = payload
+            .downcast_ref::<&str>()
+            .copied()
+            .map(str::to_string)
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_default();
+        assert!(msg.contains("chunk 13 exploded"), "payload lost: {msg:?}");
+        // Every worker was joined, and the survivors drained the counter:
+        // all items except the panicking one completed.
+        assert_eq!(done.load(Ordering::SeqCst), xs.len() - 1);
+        // The executor stays usable after a panicked batch.
+        let out = par_map(&xs, 4, |&x| x + 1);
+        assert_eq!(out.len(), xs.len());
     }
 }
