@@ -4,13 +4,14 @@
 # golden-parity suite), a quick hot-path benchmark pass with schema
 # validation of BENCH_hotpath.json + BENCH_metrics.json, the scenario
 # engine checks, the result-cache smoke, the two-process shard smoke,
-# the metrics-registry smoke, the chaos/fault-isolation smoke, the
-# shared epoch-trace store smoke, the million-page scale smoke, and a
-# formatting check. Mirrors .github/workflows/ci.yml.
+# the layered-store seal/compact smoke, the metrics-registry smoke, the
+# chaos/fault-isolation smoke, the shared epoch-trace store smoke, the
+# million-page scale smoke, and a formatting check. Mirrors
+# .github/workflows/ci.yml.
 
-.PHONY: ci build test bench-smoke bench bench-check fmt-check exp-all scenario-check cache-smoke shard-smoke metrics-smoke chaos-smoke trace-smoke scale-smoke
+.PHONY: ci build test bench-smoke bench bench-check fmt-check exp-all scenario-check cache-smoke shard-smoke store-smoke metrics-smoke chaos-smoke trace-smoke scale-smoke
 
-ci: build test bench-check scenario-check cache-smoke shard-smoke metrics-smoke chaos-smoke trace-smoke scale-smoke fmt-check
+ci: build test bench-check scenario-check cache-smoke shard-smoke store-smoke metrics-smoke chaos-smoke trace-smoke scale-smoke fmt-check
 
 build:
 	cargo build --release
@@ -76,6 +77,30 @@ shard-smoke: build
 	./target/release/cxlmem scenario report /tmp/cxlmem-shard-smoke/coord.jsonl | grep -q "best policy per device profile"
 	./target/release/cxlmem scenario report /tmp/cxlmem-shard-smoke/cache | grep -q "best policy per device profile"
 	rm -rf /tmp/cxlmem-shard-smoke
+
+# Layered-store gate: two concurrent seal-only (`--compact-every 0`)
+# shard runs share one cache dir without ever taking the store lock on
+# the write path — they must leave sealed seg-*.jsonl segments and no
+# results.jsonl; `scenario report` summarizes the merged segment view
+# directly; one `scenario compact` pass then folds everything into
+# results.jsonl, after which the coordinator re-run is pure cache hits
+# with JSONL byte-identical to an uncached run.
+store-smoke: build
+	rm -rf /tmp/cxlmem-store-smoke && mkdir -p /tmp/cxlmem-store-smoke
+	./target/release/cxlmem scenario expand examples/scenarios/fleet.json --count 6 --seed 11 --out /tmp/cxlmem-store-smoke/fleet.jsonl
+	./target/release/cxlmem scenario run /tmp/cxlmem-store-smoke/fleet.jsonl --shard 1/2 --jobs 2 --compact-every 0 --cache-dir /tmp/cxlmem-store-smoke/cache --out /tmp/cxlmem-store-smoke/s1.jsonl & pid=$$!; \
+	./target/release/cxlmem scenario run /tmp/cxlmem-store-smoke/fleet.jsonl --shard 2/2 --jobs 2 --compact-every 0 --cache-dir /tmp/cxlmem-store-smoke/cache --out /tmp/cxlmem-store-smoke/s2.jsonl || exit 1; \
+	wait $$pid
+	ls /tmp/cxlmem-store-smoke/cache/seg-*.jsonl > /dev/null
+	test ! -f /tmp/cxlmem-store-smoke/cache/results.jsonl
+	./target/release/cxlmem scenario report /tmp/cxlmem-store-smoke/cache | grep -q "best policy per device profile"
+	./target/release/cxlmem scenario compact /tmp/cxlmem-store-smoke/cache | grep -q "compacted"
+	! ls /tmp/cxlmem-store-smoke/cache/seg-*.jsonl 2> /dev/null
+	test -f /tmp/cxlmem-store-smoke/cache/results.jsonl
+	./target/release/cxlmem scenario run /tmp/cxlmem-store-smoke/fleet.jsonl --cache-dir /tmp/cxlmem-store-smoke/cache --out /tmp/cxlmem-store-smoke/coord.jsonl 2>&1 | grep -q "cached: true"
+	./target/release/cxlmem scenario run /tmp/cxlmem-store-smoke/fleet.jsonl --no-cache --jobs 2 --out /tmp/cxlmem-store-smoke/single.jsonl
+	cmp /tmp/cxlmem-store-smoke/coord.jsonl /tmp/cxlmem-store-smoke/single.jsonl
+	rm -rf /tmp/cxlmem-store-smoke
 
 # Metrics gate: the in-process consistency check (cold/warm fleet run
 # against one cache store; registry deltas must agree with the cache

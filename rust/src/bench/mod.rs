@@ -32,9 +32,13 @@
 //! per-cell seed-style trace regeneration vs one shared immutable
 //! snapshot per app replayed by every cell on the SoA page state),
 //! `exp/fig16(policy x placement grid)` (the optimized grid at jobs=1
-//! vs `--jobs`), and `scenario/cache(fleet re-run)` (one seeded fleet
+//! vs `--jobs`), `scenario/cache(fleet re-run)` (one seeded fleet
 //! evaluated cold vs served warm from the persistent result cache,
-//! measured against the same on-disk store).
+//! measured against the same on-disk store), and
+//! `scenario/cache(contended flush)` (8 writers × 1k entries flushing
+//! into one store: the flock-era append path, kept as
+//! [`crate::scenario::store::legacy`], vs layered seal-only writes plus
+//! one final compaction — the store refactor's headline ratio).
 //! `tiering/epoch_counts(Graph500)` times per-epoch histogram
 //! *production* — seed-style full regeneration vs the incremental copy —
 //! with the (mode-shared) hot-set drift untimed between epochs.
@@ -130,6 +134,7 @@ const FLEXGEN_NAME: &str = "flexgen/search+throughput";
 const SHARED_TRACE_NAME: &str = "exp/fig16(shared trace)";
 const GRID_NAME: &str = "exp/fig16(policy x placement grid)";
 const SCENARIO_CACHE_NAME: &str = "scenario/cache(fleet re-run)";
+const CACHE_FLUSH_NAME: &str = "scenario/cache(contended flush)";
 const EXP_ALL_NAME: &str = "exp/all";
 
 /// Run the full suite. Prints one line per measurement as it completes.
@@ -562,6 +567,97 @@ pub fn run_suite(opts: &BenchOpts) -> BenchReport {
             opts.jobs
         );
         speedups.push((SCENARIO_CACHE_NAME.to_string(), cold_s / warm_s.max(1e-12)));
+    }
+
+    // --- scenario result cache: contended flush, legacy flock vs layered ---
+    // 8 writers hammer one store with disjoint key ranges, flushing
+    // every 64 inserts. The legacy path (each flush: store-wide flock +
+    // full re-read + append) serializes on the lock; the layered path
+    // seals lock-free segments and pays the lock once, in the single
+    // final compaction — both timed end-to-end and asserted to leave
+    // identical key counts. This is the store refactor's headline ratio.
+    {
+        use crate::scenario::store::legacy::LegacyCache;
+        let writers = 8usize;
+        let per = if opts.smoke { 128usize } else { 1000 };
+        let flush_every = 64usize;
+        let entry_doc = |w: usize, i: usize| {
+            Json::obj(vec![("w", (w as u64).into()), ("i", (i as u64).into())])
+        };
+
+        let dir_legacy =
+            std::env::temp_dir().join(format!("cxlmem-bench-flush-legacy-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir_legacy);
+        std::fs::create_dir_all(&dir_legacy).expect("bench dir");
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for w in 0..writers {
+                let dir = &dir_legacy;
+                s.spawn(move || {
+                    let mut cache = LegacyCache::open(dir).expect("legacy open");
+                    for i in 0..per {
+                        cache.insert(
+                            format!("w{w}-{i:05}"),
+                            format!("bench-w{w}-{i}"),
+                            format!("spec-w{w}-{i}"),
+                            entry_doc(w, i),
+                        );
+                        if (i + 1) % flush_every == 0 {
+                            cache.flush().expect("legacy flush");
+                        }
+                    }
+                    cache.flush().expect("legacy flush");
+                });
+            }
+        });
+        let legacy_s = t0.elapsed().as_secs_f64();
+
+        let dir_layered =
+            std::env::temp_dir().join(format!("cxlmem-bench-flush-layered-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir_layered);
+        let mut cache = crate::scenario::ResultCache::open(&dir_layered).expect("cache open");
+        cache.set_compact_every(0);
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for w in 0..writers {
+                let handle = cache.handle();
+                s.spawn(move || {
+                    for i in 0..per {
+                        let result = crate::scenario::ScenarioResult {
+                            name: format!("bench-w{w}-{i}"),
+                            experiment: None,
+                            doc: entry_doc(w, i),
+                        };
+                        handle.insert(&format!("w{w}-{i:05}"), format!("spec-w{w}-{i}"), &result);
+                        if (i + 1) % flush_every == 0 {
+                            handle.seal().expect("seal");
+                        }
+                    }
+                    handle.seal().expect("seal");
+                });
+            }
+        });
+        // The one lock-taking pass the layered path owes the directory.
+        cache.compact().expect("final compaction");
+        let layered_s = t0.elapsed().as_secs_f64();
+
+        let want = writers * per;
+        for dir in [&dir_legacy, &dir_layered] {
+            let text = crate::scenario::cache::merged_store_text(dir).expect("store text");
+            assert_eq!(
+                text.lines().count(),
+                want,
+                "{} must hold every key exactly once",
+                dir.display()
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir_legacy);
+        let _ = std::fs::remove_dir_all(&dir_layered);
+        println!(
+            "{CACHE_FLUSH_NAME} [legacy flock]: {legacy_s:.3} s, [layered]: {layered_s:.3} s \
+             ({writers} writers x {per} entries, flush every {flush_every})"
+        );
+        speedups.push((CACHE_FLUSH_NAME.to_string(), legacy_s / layered_s.max(1e-12)));
     }
 
     // --- exp all wall clock: sequential reference vs parallel optimized ---

@@ -6,11 +6,13 @@
 //! cxlmem scenario expand <file> [--seed S] [--count N]        expand sweeps/fleets to spec JSONL
 //! cxlmem scenario run <files…|-> [--jobs N] [--out FILE]      batch-evaluate → result JSONL
 //!                    [--shard K/N] [--no-cache] [--cache-dir DIR]  (result cache on by default)
+//!                    [--compact-every N]                      (store compaction cadence; 0 = seal only)
 //!                    [--fail-fast] [--retries N] [--deadline-secs S] [--inject-faults PLAN]
 //! cxlmem scenario bench [--count N] [--jobs N] [--cache]      fleet throughput probe
 //! cxlmem scenario report <results.jsonl|cache dir>            fleet summaries from result JSONL
 //!                    [--metrics FILE]                         (fold in metrics sidecars)
 //!                    [--expect FILE] [--shards N]             (reconcile shard coverage)
+//! cxlmem scenario compact <cache dir>                         fold sealed segments into results.jsonl
 //! cxlmem bench [--smoke|--quick] [--jobs N] [--out FILE]      hot-path benchmarks → BENCH_hotpath.json
 //! cxlmem bench --validate FILE                                schema-check a BENCH_hotpath.json
 //! cxlmem stats [FILE|-] [--json]                              render a cxlmem-metrics-v1 snapshot
@@ -297,14 +299,18 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                 std::io::Read::read_to_string(&mut std::io::stdin(), &mut buf)?;
                 buf
             } else {
-                // A cache directory is accepted directly: summarize its
-                // store file (what N --shard processes rendezvoused in).
-                let mut path = std::path::PathBuf::from(file);
+                // A cache directory is accepted directly: summarize the
+                // merged view of its layered store (base file plus any
+                // sealed segments not yet compacted), so seal-only
+                // shards report completely without a compaction pass.
+                let path = std::path::PathBuf::from(file);
                 if path.is_dir() {
-                    path = path.join(cxlmem::scenario::cache::STORE_FILE);
+                    cxlmem::scenario::cache::merged_store_text(&path)
+                        .map_err(|e| anyhow!("{file}: {e}"))?
+                } else {
+                    std::fs::read_to_string(&path)
+                        .with_context(|| format!("reading {}", path.display()))?
                 }
-                std::fs::read_to_string(&path)
-                    .with_context(|| format!("reading {}", path.display()))?
             };
             // `--metrics FILE` folds a run's metrics sidecar into the
             // summary: collect_docs routes lines by schema, so the
@@ -362,6 +368,31 @@ fn cmd_scenario(args: &Args) -> Result<()> {
             }
             Ok(())
         }
+        "compact" => {
+            // Fold every sealed `seg-*.jsonl` segment into the durable
+            // store file. Routine maintenance for seal-only shards
+            // (`--compact-every 0`): N processes seal concurrently
+            // without ever contending on the store lock, then one
+            // `compact` pass consolidates the directory.
+            let file = files.first().ok_or_else(|| {
+                anyhow!("usage: cxlmem scenario compact <cache dir> [--metrics FILE]")
+            })?;
+            let metrics = metrics_out(args)?;
+            let dir = std::path::Path::new(file);
+            if !dir.is_dir() {
+                bail!("{file}: not a cache directory");
+            }
+            let mut cache = scenario::ResultCache::open(dir)?;
+            let stats = cache.compact().map_err(|e| anyhow!("{file}: {e}"))?;
+            println!(
+                "compacted {file}: {} segment(s) folded, {} key(s) in {}{}",
+                stats.segments,
+                stats.keys,
+                cxlmem::scenario::cache::STORE_FILE,
+                if stats.rewrote { "" } else { " (store already consolidated)" }
+            );
+            emit_metrics(metrics.as_ref())
+        }
         _ => {
             println!(
                 "cxlmem scenario — declarative scenario engine\n\
@@ -370,12 +401,14 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                  \x20 cxlmem scenario validate <files...>\n\
                  \x20 cxlmem scenario expand <file> [--seed S] [--count N] [--out FILE]\n\
                  \x20 cxlmem scenario run <files...|-> [--jobs N] [--out FILE]\n\
-                 \x20\x20\x20\x20 [--shard K/N] [--no-cache] [--cache-dir DIR] [--metrics FILE]\n\
-                 \x20\x20\x20\x20 [--fail-fast] [--retries N] [--deadline-secs S] [--inject-faults PLAN]\n\
+                 \x20\x20\x20\x20 [--shard K/N] [--no-cache] [--cache-dir DIR] [--compact-every N]\n\
+                 \x20\x20\x20\x20 [--metrics FILE] [--fail-fast] [--retries N] [--deadline-secs S]\n\
+                 \x20\x20\x20\x20 [--inject-faults PLAN]\n\
                  \x20 cxlmem scenario bench [--count N] [--seed S] [--jobs N] [--out FILE] [--cache]\n\
                  \x20\x20\x20\x20 [--shard K/N] [--metrics FILE]\n\
                  \x20 cxlmem scenario report <results.jsonl|cache dir|-> [--csv|--json] [--out FILE]\n\
                  \x20\x20\x20\x20 [--metrics FILE] [--expect FILE] [--shards N]\n\
+                 \x20 cxlmem scenario compact <cache dir> [--metrics FILE]\n\
                  \n\
                  `run` serves repeated specs from the content-addressed result cache\n\
                  (default {}; key = canonical spec hash — see README 'Result cache').\n\
@@ -383,6 +416,11 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                  `--shard K/N` runs the K-th of N index-modulo slices of the expanded\n\
                  list: point N processes at one --cache-dir and they rendezvous in the\n\
                  shared store; re-running the full list is then pure cache hits.\n\
+                 `--compact-every N` tunes the layered store's compaction cadence:\n\
+                 1 (default) folds sealed segments into results.jsonl after every\n\
+                 flush, 0 seals only (run `scenario compact` later), and N>1 folds in\n\
+                 the background every Nth flush. `compact` consolidates a seal-only\n\
+                 directory in one pass.\n\
                  `run` is supervised by default: a panicking or erroring spec becomes a\n\
                  cxlmem-result-error-v1 document in the output instead of aborting the\n\
                  fleet, transient IO failures retry (--retries, default 2) with seeded\n\
@@ -509,7 +547,17 @@ fn open_scenario_cache(
         return Ok(None);
     }
     let dir = std::path::Path::new(dir.unwrap_or(cxlmem::scenario::cache::DEFAULT_DIR));
-    Ok(Some(cxlmem::scenario::ResultCache::open(dir)?))
+    let mut cache = cxlmem::scenario::ResultCache::open(dir)?;
+    if args.flag("compact-every") {
+        bail!("--compact-every requires an N argument (0 = seal only, 1 = every flush)");
+    }
+    if let Some(n) = args.get("compact-every") {
+        let n: u64 = n
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--compact-every wants an integer, got '{n}'"))?;
+        cache.set_compact_every(n);
+    }
+    Ok(Some(cache))
 }
 
 /// Write to `--out FILE` when given, else print to stdout.
@@ -763,14 +811,18 @@ fn cmd_metrics_smoke(args: &Args) -> Result<()> {
     emit_metrics(metrics_dest.as_ref())
 }
 
-/// The `make chaos-smoke` gate: a small fleet under a seeded fault plan
-/// (one eval panic, transient eval-IO errors, a flush IO error, lock
-/// contention) must (a) exit 0 with the batch supervised — the panic
-/// isolated into exactly the error document the plan names while the
-/// transient faults retry to success — and (b) heal on a clean re-run:
-/// error documents are never cached, so re-running the same fleet over
-/// the same store evaluates just the failed slot and emits JSONL
-/// byte-identical to a never-faulted run in a fresh store.
+/// The `make chaos-smoke` gate. Stage 1 drills the storage layer: a
+/// trace generation killed mid-fill (`trace.generate` panic) must leave
+/// the trace store usable for the retry, and the traffic solver must
+/// absorb injected memo-path latency (`solver.memo` delay) without a
+/// degenerate answer. Stage 2 runs a small fleet under a seeded fault
+/// plan (one eval panic, transient eval-IO errors, a flush IO error,
+/// lock contention) which must (a) exit 0 with the batch supervised —
+/// the panic isolated into exactly the error document the plan names
+/// while the transient faults retry to success — and (b) heal on a
+/// clean re-run: error documents are never cached, so re-running the
+/// same fleet over the same store evaluates just the failed slot and
+/// emits JSONL byte-identical to a never-faulted run in a fresh store.
 fn cmd_chaos_smoke(args: &Args) -> Result<()> {
     use anyhow::{anyhow, bail};
     use cxlmem::scenario::{self, SuperviseOpts};
@@ -778,6 +830,62 @@ fn cmd_chaos_smoke(args: &Args) -> Result<()> {
     use cxlmem::util::json::to_jsonl;
 
     let metrics_dest = metrics_out(args)?;
+
+    // Stage 1 — storage-layer drills, before the fleet: a trace
+    // generation killed mid-fill must leave the store usable for the
+    // retry, and the solver's memoized path must absorb injected
+    // latency without changing results. These points are armed in a
+    // dedicated plan and cleared before stage 2 so the fleet's exact
+    // fired-counter assertions below stay untouched (a delay rule in
+    // particular fires on *every* hit).
+    {
+        use cxlmem::memsim::{topology, Pattern, Stream};
+        use cxlmem::workloads::tiering_apps::pagerank;
+        use cxlmem::workloads::trace::TraceStore;
+
+        let app = pagerank();
+        fault::install(fault::FaultPlan::parse(&format!(
+            "trace.generate/{}=panic:1;solver.memo=delay:1",
+            app.name
+        ))?);
+        // A private store keeps the drill out of the process-global one.
+        let store = TraceStore::with_budget(64 << 20);
+        let killed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            store.get(&app, 4, 99)
+        }));
+        if killed.is_ok() {
+            fault::clear();
+            bail!("trace.generate panic rule did not fire");
+        }
+        if fault::fired("trace.generate") != 1 {
+            fault::clear();
+            bail!("trace.generate fired {} time(s), want 1", fault::fired("trace.generate"));
+        }
+        // The poisoned-lock recovery in TraceStore makes the retry
+        // generate cleanly in the same store.
+        let trace = store.get(&app, 4, 99);
+        if trace.bytes() == 0 {
+            fault::clear();
+            bail!("post-crash trace generation returned an empty trace");
+        }
+        let sol = topology::system_a().solve_traffic(&[Stream {
+            socket: 0,
+            node_weights: vec![(0, 1.0)],
+            pattern: Pattern::Random,
+            threads: 8.0,
+            delay_ns: 0.0,
+        }]);
+        let delayed = fault::fired("solver.memo");
+        fault::clear();
+        if delayed == 0 {
+            bail!("solver.memo delay rule never fired");
+        }
+        if !sol.streams[0].bw_gbs.is_finite() || sol.streams[0].bw_gbs <= 0.0 {
+            bail!("solver under injected memo latency returned a degenerate solution");
+        }
+    }
+
+    // Stage 2 — the supervised fleet under the eval/flush/lock plan.
     let count = args.get_usize("count", 8).max(3);
     let jobs = args.get_usize("jobs", 2);
     let doc = Json::parse(&format!(
@@ -886,9 +994,10 @@ fn cmd_chaos_smoke(args: &Args) -> Result<()> {
         bail!("healed re-run still contains error documents");
     }
     println!(
-        "chaos-smoke: ok — {} scenario(s); 1 panic isolated into a {} document \
-         ({panic_victim}), {eval_io} transient eval-IO fault(s) and {flush_io} flush \
-         fault(s) retried; healed re-run byte-identical to the never-faulted run",
+        "chaos-smoke: ok — trace crash + solver delay drills survived; {} scenario(s); \
+         1 panic isolated into a {} document ({panic_victim}), {eval_io} transient \
+         eval-IO fault(s) and {flush_io} flush fault(s) retried; healed re-run \
+         byte-identical to the never-faulted run",
         specs.len(),
         scenario::ERROR_SCHEMA
     );
@@ -1095,7 +1204,7 @@ fn print_help() {
          \n\
          USAGE:\n\
          \x20 cxlmem exp <id|all> [--csv|--json] [--out FILE] [--jobs N] [--metrics FILE]\n\
-         \x20 cxlmem scenario validate|expand|run|bench|report ... (see `cxlmem scenario help`)\n\
+         \x20 cxlmem scenario validate|expand|run|bench|report|compact ... (see `cxlmem scenario help`)\n\
          \x20 cxlmem bench [--smoke|--quick] [--jobs N] [--out FILE] [--validate FILE]\n\
          \x20 cxlmem stats [FILE|-] [--json] [--validate FILE]\n\
          \x20 cxlmem metrics-smoke [--count N] [--jobs N]\n\

@@ -335,6 +335,10 @@ impl System {
             return SCRATCH.with(|s| self.solve_adaptive(streams, &mut s.borrow_mut()));
         }
         let m = memo_metrics();
+        // Chaos hook (`solver.memo`, fixed key): a `delay` rule
+        // simulates a slow memoized solve path end to end (probe, snap,
+        // adaptive solve, admission) without touching its results.
+        crate::util::fault::point("solver.memo", "solve_traffic");
         let key = self.memo_key(streams);
         if let Some(hit) = MEMO.with(|c| c.borrow().get(&key).cloned()) {
             m.hits.inc();

@@ -157,6 +157,10 @@ pub fn run_batch_supervised(
     let mut rep_of: Vec<usize> = (0..specs.len()).collect();
     let mut first_seen: BTreeMap<&str, usize> = BTreeMap::new();
     let mut miss_idx: Vec<usize> = Vec::new();
+    // Probe through a store handle: lookups walk the layered store's
+    // lock-free cascade (no store lock, no disk), sharing the facade's
+    // hit/miss accounting.
+    let handle = cache.as_ref().map(|c| c.handle());
     for (i, spec) in specs.iter().enumerate() {
         let (key, canon) = &identities[i];
         if let Some(&rep) = first_seen.get(canon.as_str()) {
@@ -164,11 +168,11 @@ pub fn run_batch_supervised(
             continue;
         }
         first_seen.insert(canon.as_str(), i);
-        let hit = cache.as_mut().and_then(|c| {
-            c.lookup(key, canon).map(|doc| ScenarioResult {
+        let hit = handle.as_ref().and_then(|h| {
+            h.lookup(key, canon).map(|doc| ScenarioResult {
                 name: spec.name.clone(),
                 experiment: spec.experiment.clone(),
-                doc: doc.clone(),
+                doc,
             })
         });
         match hit {

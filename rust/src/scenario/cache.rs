@@ -1,5 +1,6 @@
 //! Persistent scenario-result cache: content-addressed by the canonical
-//! spec hash, disk-backed as append-only JSONL.
+//! spec hash, disk-backed as append-only JSONL — now a thin facade over
+//! the layered store in [`crate::scenario::store`].
 //!
 //! Keying: [`crate::scenario::ScenarioSpec::cache_key`] — FNV-1a 64 over
 //! the canonical serialization — indexes the store, and every entry also
@@ -16,52 +17,46 @@
 //! `cxlmem-result-cache-v1`): one line per entry, `{"schema": …,
 //! "key": "<16-hex>", "scenario": "<name>", "spec": "<canonical JSON>",
 //! "result": {…}}`, where `result` is the exact result document
-//! `scenario run` would emit. Lines are only ever appended; unparseable
-//! or foreign lines (a truncated tail write, an older schema) are
-//! skipped on load, so a damaged cache degrades to re-evaluation rather
-//! than an error. Within one store the first line for a key wins.
+//! `scenario run` would emit. Unparseable or foreign lines (a truncated
+//! tail write, an older schema) never poison a load — damage is
+//! quarantined and self-healed exactly as before the layering (see the
+//! [`store`] docs). Within one store the first line for a key wins.
 //!
-//! Concurrency: the store is the rendezvous point for `--shard`ed fleet
-//! processes, so all disk access is serialized under an advisory
-//! exclusive lock on `<dir>/lock` ([`crate::util::lock::FileLock`] —
-//! `flock(2)` on Unix). [`ResultCache::flush`] appends one line per
-//! `write` call under the lock and re-reads the store's keys first, so
-//! two shards that evaluated the same spec never tear a line *and* never
-//! duplicate one; [`ResultCache::reload`] picks up entries other
-//! processes flushed since open (first-insert-wins, so nothing a lookup
-//! already returned ever changes). A lock that cannot be taken degrades
-//! to the old unlocked behavior with a warning — the cache must never
-//! block a run.
+//! What changed under the facade: lookups are **lock-free** (one atomic
+//! snapshot load and a cascade walk — no `flock(2)`, no disk access),
+//! writers contend only on an in-process head shard, and
+//! [`ResultCache::flush`] *seals* pending entries into a uniquely-named
+//! immutable `seg-*.jsonl` segment instead of appending to the shared
+//! base under the store lock. The advisory `<dir>/lock` survives, scoped
+//! to the two true cross-process rendezvous: **compaction** (folding
+//! segments back into `results.jsonl`, temp-file + rename, crash-safe)
+//! and **adoption** ([`ResultCache::reload`], now segment discovery).
+//! By default every flush compacts inline (`compact_every == 1`), so a
+//! single-process run leaves exactly the flat store the flock-era cache
+//! wrote — byte-compatible, first-insert-wins; `--compact-every N`
+//! amortizes compaction over N flushes on a background thread, and
+//! `--compact-every 0` defers it entirely to `cxlmem scenario compact`.
 //!
-//! Crash safety: a shard that dies mid-append leaves a torn tail line
-//! (or, worse, interleaved garbage from a damaged filesystem). On load
-//! the store **self-heals**: damaged lines — unparseable JSON, or our
-//! schema missing required fields — are moved verbatim to the
-//! `<dir>/quarantine.jsonl` sidecar (counted in the
-//! `cache.quarantined_lines` metric) and the store is compacted to
-//! exactly the surviving lines, byte-identical to a store that never
-//! saw the damage. Valid foreign-schema lines are *kept* (they belong
-//! to another tool or a future format, not to the damage). The
-//! compaction writes a temp file and renames it into place, so a crash
-//! mid-heal can at worst leave the original store. [`ResultCache::flush`]
-//! additionally retries the whole locked append a bounded number of
-//! times on IO errors (each attempt re-reads the on-disk keys, so
-//! half-written attempts never duplicate lines) and starts appends on a
-//! fresh line if a crashed writer left the tail without a newline —
-//! the `cache.flush.io` fault point lets the chaos harness rehearse all
-//! of this deterministically.
+//! [`ResultCache::flush`] retries the whole seal-and-compact a bounded
+//! number of times on IO errors (idempotent: sealed entries leave
+//! pending, failed seals restore it) — the `cache.flush.io` fault point
+//! lets the chaos harness rehearse this deterministically, and
+//! `store.seal.io` / `store.compact.io` target the layered stages.
 
-use std::collections::BTreeMap;
 use std::fs;
-use std::io::Write;
-use std::path::{Path, PathBuf};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
 use super::batch::ScenarioResult;
+use super::store::{self, CompactStats, Entry, LayeredStore};
 use crate::util::json::Json;
-use crate::util::lock::FileLock;
 use crate::util::metrics;
+
+pub use super::store::{CACHE_SCHEMA, DEFAULT_DIR, LOCK_FILE, QUARANTINE_FILE, STORE_FILE};
+pub(crate) use super::store::layer::parse_line;
 
 /// Registry handles for the result-cache counters (`scenario.cache.*`
 /// in `cxlmem stats` snapshots). Per-instance `hits`/`misses` fields
@@ -71,10 +66,7 @@ struct CacheMetrics {
     hits: &'static metrics::Counter,
     misses: &'static metrics::Counter,
     reloads: &'static metrics::Counter,
-    flush_appends: &'static metrics::Counter,
     flush_retries: &'static metrics::Counter,
-    quarantined_lines: &'static metrics::Counter,
-    flush_lock_wait_ns: &'static metrics::Histogram,
 }
 
 fn cache_metrics() -> &'static CacheMetrics {
@@ -83,215 +75,96 @@ fn cache_metrics() -> &'static CacheMetrics {
         hits: metrics::counter("scenario.cache.hits"),
         misses: metrics::counter("scenario.cache.misses"),
         reloads: metrics::counter("scenario.cache.reloads"),
-        flush_appends: metrics::counter("scenario.cache.flush_appends"),
         flush_retries: metrics::counter("scenario.cache.flush_retries"),
-        quarantined_lines: metrics::counter("cache.quarantined_lines"),
-        flush_lock_wait_ns: metrics::histogram("scenario.cache.flush_lock_wait_ns"),
     })
 }
 
-/// Cache line schema identifier.
-pub const CACHE_SCHEMA: &str = "cxlmem-result-cache-v1";
-/// Default cache directory (relative to the working directory).
-pub const DEFAULT_DIR: &str = ".cxlmem-cache";
-/// Store file name inside the cache directory.
-pub const STORE_FILE: &str = "results.jsonl";
-/// Advisory lock file name inside the cache directory.
-pub const LOCK_FILE: &str = "lock";
-/// Sidecar file damaged store lines are quarantined to on load.
-pub const QUARANTINE_FILE: &str = "quarantine.jsonl";
 /// Whole-flush attempts before an IO error is surfaced to the caller.
 const FLUSH_ATTEMPTS: u32 = 3;
 
-/// One stored result: the canonical spec it was computed from (verified
-/// on lookup) and the result document.
-#[derive(Clone, Debug)]
-struct Entry {
-    spec: String,
-    doc: Json,
+/// State shared between a [`ResultCache`], its [`StoreHandle`]s, and the
+/// background compactor thread.
+struct Shared {
+    store: LayeredStore,
+    /// Per-facade probe counters (the layered store itself is blind to
+    /// spec verification, which is where hit/miss is decided).
+    hits: AtomicU64,
+    misses: AtomicU64,
 }
 
-/// A loaded cache: in-memory index over the JSONL store, with pending
-/// inserts buffered until [`ResultCache::flush`].
-#[derive(Debug)]
-pub struct ResultCache {
-    path: PathBuf,
-    entries: BTreeMap<String, Entry>,
-    /// Keys inserted this session, not yet appended to disk (the entry
-    /// bodies live in `entries`): `(key, scenario name)`.
-    pending: Vec<(String, String)>,
-    hits: u64,
-    misses: u64,
-}
-
-/// Parse one store line into `(key, entry)`; `None` for damage or
-/// foreign schemas (the caller skips those).
-fn parse_line(line: &str) -> Option<(String, Entry)> {
-    if line.trim().is_empty() {
-        return None;
-    }
-    let doc = Json::parse(line).ok()?;
-    if doc.get("schema").and_then(Json::as_str) != Some(CACHE_SCHEMA) {
-        return None;
-    }
-    let key = doc.get("key").and_then(Json::as_str)?;
-    let spec = doc.get("spec").and_then(Json::as_str)?;
-    let result = doc.get("result")?;
-    Some((
-        key.to_string(),
-        Entry {
-            spec: spec.to_string(),
-            doc: result.clone(),
-        },
-    ))
-}
-
-/// Read the store text at `path`. An unreadable file degrades to `None`
-/// with a warning: the cache must never block a run.
-fn read_store(path: &Path) -> Option<String> {
-    match fs::read_to_string(path) {
-        Ok(t) => Some(t),
-        Err(e) => {
-            eprintln!(
-                "warning: unreadable scenario result cache {} ({e}); treating as empty",
-                path.display()
-            );
-            None
-        }
-    }
-}
-
-/// How a store line is treated on load.
-enum LineClass {
-    /// A well-formed entry of our schema.
-    Entry(String, Entry),
-    /// Valid JSON of another schema: not ours to judge — kept verbatim.
-    Foreign,
-    /// Unparseable, or our schema missing required fields: quarantined.
-    Damaged,
-    /// Whitespace only (an artifact, never written by us): dropped.
-    Blank,
-}
-
-fn classify_line(line: &str) -> LineClass {
-    if line.trim().is_empty() {
-        return LineClass::Blank;
-    }
-    let Ok(doc) = Json::parse(line) else {
-        return LineClass::Damaged;
-    };
-    if doc.get("schema").and_then(Json::as_str) != Some(CACHE_SCHEMA) {
-        return LineClass::Foreign;
-    }
-    match parse_line(line) {
-        Some((key, entry)) => LineClass::Entry(key, entry),
-        None => LineClass::Damaged,
-    }
-}
-
-/// Read the store at `path` into `entries`, keeping whatever is already
-/// there (first-insert-wins — both across duplicate lines in the file
-/// and against entries the caller holds in memory), and **self-heal**
-/// any damage found: damaged lines are appended verbatim to the
-/// quarantine sidecar and the store is compacted to the surviving lines
-/// (original order, one trailing newline — byte-identical to a store
-/// that never saw the damage). The caller holds the store lock. Healing
-/// is best-effort: if the sidecar cannot be written the store is left
-/// untouched (the damage stays tolerated in memory, nothing is lost).
-/// Returns the number of keys added.
-fn load_into(path: &Path, entries: &mut BTreeMap<String, Entry>) -> usize {
-    let Some(text) = read_store(path) else {
-        return 0;
-    };
-    let mut added = 0;
-    let mut kept: Vec<&str> = Vec::new();
-    let mut damaged: Vec<&str> = Vec::new();
-    for line in text.lines() {
-        match classify_line(line) {
-            LineClass::Entry(key, entry) => {
-                kept.push(line);
-                if !entries.contains_key(&key) {
-                    entries.insert(key, entry);
-                    added += 1;
-                }
+impl Shared {
+    /// Spec-verified probe shared by facade and handles: counts the
+    /// hit/miss on both the per-facade atomics and the process-wide
+    /// registry, together, so the two stay in lock-step.
+    fn probe(&self, key: &str, canonical_spec: &str) -> Option<Arc<Entry>> {
+        match self.store.get(key) {
+            Some(e) if e.spec == canonical_spec => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                cache_metrics().hits.inc();
+                Some(e)
             }
-            LineClass::Foreign => kept.push(line),
-            LineClass::Damaged => damaged.push(line),
-            LineClass::Blank => {}
+            _ => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                cache_metrics().misses.inc();
+                None
+            }
         }
-    }
-    let mut healed = String::with_capacity(text.len());
-    for line in &kept {
-        healed.push_str(line);
-        healed.push('\n');
-    }
-    if healed != text {
-        heal(path, &healed, &damaged);
-    }
-    added
-}
-
-/// Quarantine `damaged` lines and rewrite the store as `healed` (a temp
-/// file renamed into place, so a crash mid-heal at worst leaves the
-/// original). Failures degrade with a warning — never to data loss: the
-/// store is only rewritten once the damaged lines are safely in the
-/// sidecar.
-fn heal(path: &Path, healed: &str, damaged: &[&str]) {
-    if !damaged.is_empty() {
-        let sidecar = match path.parent() {
-            Some(dir) => dir.join(QUARANTINE_FILE),
-            None => return,
-        };
-        let mut blob = String::new();
-        for line in damaged {
-            blob.push_str(line);
-            blob.push('\n');
-        }
-        let appended = fs::OpenOptions::new()
-            .create(true)
-            .append(true)
-            .open(&sidecar)
-            .and_then(|mut f| f.write_all(blob.as_bytes()));
-        if let Err(e) = appended {
-            eprintln!(
-                "warning: cannot quarantine {} damaged cache line(s) to {} ({e}); \
-                 store left as-is",
-                damaged.len(),
-                sidecar.display()
-            );
-            return;
-        }
-        cache_metrics().quarantined_lines.add(damaged.len() as u64);
-        eprintln!(
-            "warning: quarantined {} damaged cache line(s) to {}",
-            damaged.len(),
-            sidecar.display()
-        );
-    }
-    let tmp = path.with_extension("jsonl.tmp");
-    let compacted = fs::write(&tmp, healed).and_then(|()| fs::rename(&tmp, path));
-    if let Err(e) = compacted {
-        let _ = fs::remove_file(&tmp);
-        eprintln!(
-            "warning: cache store {} not compacted ({e}); damage stays tolerated on load",
-            path.display()
-        );
     }
 }
 
-/// Take the store lock, degrading to unlocked access with a warning if
-/// the lock file cannot be created/locked (read-only store, exotic FS).
-fn lock_store(path: &Path) -> Option<FileLock> {
-    let lock_path = path.parent()?.join(LOCK_FILE);
-    match FileLock::acquire(&lock_path) {
-        Ok(l) => Some(l),
-        Err(e) => {
-            eprintln!(
-                "warning: cache lock {} unavailable ({e}); proceeding unlocked",
-                lock_path.display()
-            );
-            None
-        }
+/// A loaded cache handle (see the module docs). Owns the flush/compact
+/// policy; cheap read-side clones come from [`ResultCache::handle`].
+pub struct ResultCache {
+    shared: Arc<Shared>,
+    /// Seals per compaction: 1 = compact inline after every flush (the
+    /// flock-era disk layout, the default), 0 = never (segments
+    /// accumulate for `scenario compact`), N > 1 = background-compact
+    /// every Nth flush.
+    compact_every: u64,
+    seals_since_compact: u64,
+    compactor: Option<std::thread::JoinHandle<()>>,
+    /// Keeps the most recent hit alive so `lookup` can hand out a plain
+    /// `&Json` borrow from the lock-free store.
+    last_hit: Option<Arc<Entry>>,
+}
+
+impl std::fmt::Debug for ResultCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ResultCache")
+            .field("path", &self.shared.store.store_path())
+            .field("len", &self.shared.store.len())
+            .field("compact_every", &self.compact_every)
+            .finish()
+    }
+}
+
+/// A cloneable, shareable read/write handle onto one cache session:
+/// lock-free lookups and head inserts from any thread, sharing the
+/// facade's hit/miss accounting. Sealing and compaction stay with the
+/// owning [`ResultCache`] (or an explicit [`StoreHandle::seal`]).
+#[derive(Clone)]
+pub struct StoreHandle {
+    shared: Arc<Shared>,
+}
+
+impl StoreHandle {
+    /// Spec-verified lookup (see [`ResultCache::lookup`]); returns an
+    /// owned document so the handle can be probed concurrently.
+    pub fn lookup(&self, key: &str, canonical_spec: &str) -> Option<Json> {
+        self.shared.probe(key, canonical_spec).map(|e| e.doc.clone())
+    }
+
+    /// First-insert-wins record (see [`ResultCache::insert`]).
+    pub fn insert(&self, key: &str, canonical_spec: String, result: &ScenarioResult) {
+        self.shared
+            .store
+            .insert(key, &result.name, canonical_spec, result.doc.clone());
+    }
+
+    /// Seal pending inserts into a segment (no compaction — the owning
+    /// facade's policy decides when to fold). Returns lines sealed.
+    pub fn seal(&self) -> Result<usize> {
+        self.shared.store.seal()
     }
 }
 
@@ -302,18 +175,16 @@ impl ResultCache {
     /// degrade to re-evaluation, never block a run. Nothing is written
     /// until the first [`ResultCache::flush`] with pending entries.
     pub fn open(dir: &Path) -> Result<Self> {
-        let path = dir.join(STORE_FILE);
-        let mut entries = BTreeMap::new();
-        if path.exists() {
-            let _lock = lock_store(&path);
-            load_into(&path, &mut entries);
-        }
         Ok(Self {
-            path,
-            entries,
-            pending: Vec::new(),
-            hits: 0,
-            misses: 0,
+            shared: Arc::new(Shared {
+                store: LayeredStore::open(dir)?,
+                hits: AtomicU64::new(0),
+                misses: AtomicU64::new(0),
+            }),
+            compact_every: 1,
+            seals_since_compact: 0,
+            compactor: None,
+            last_hit: None,
         })
     }
 
@@ -322,17 +193,30 @@ impl ResultCache {
         Self::open(Path::new(DEFAULT_DIR))
     }
 
-    /// Pick up entries other processes appended since open (or the last
-    /// reload). Existing in-memory entries — loaded *or* inserted — are
-    /// kept, so nothing a lookup already returned ever changes; pending
-    /// inserts stay pending. Returns the number of new keys.
+    /// Set the seals-per-compaction policy (the `--compact-every` flag);
+    /// see the field docs on `compact_every`.
+    pub fn set_compact_every(&mut self, n: u64) {
+        self.compact_every = n;
+    }
+
+    /// A cloneable lock-free read/insert handle sharing this session.
+    pub fn handle(&self) -> StoreHandle {
+        StoreHandle {
+            shared: Arc::clone(&self.shared),
+        }
+    }
+
+    /// Pick up entries other processes published since open (or the last
+    /// reload) — segments they sealed and base lines they compacted.
+    /// Existing in-memory entries — loaded *or* inserted — are kept, so
+    /// nothing a lookup already returned ever changes; pending inserts
+    /// stay pending. Returns the number of new keys.
     pub fn reload(&mut self) -> Result<usize> {
-        if !self.path.exists() {
+        if !self.shared.store.has_disk() {
             return Ok(0);
         }
         cache_metrics().reloads.inc();
-        let _lock = lock_store(&self.path);
-        Ok(load_into(&self.path, &mut self.entries))
+        self.shared.store.adopt()
     }
 
     /// Look a key up, verifying the entry was computed from the same
@@ -340,65 +224,37 @@ impl ResultCache {
     /// another spec's results. Counts the hit/miss (the probe the cache
     /// tests use to prove a warm batch never evaluated anything).
     pub fn lookup(&mut self, key: &str, canonical_spec: &str) -> Option<&Json> {
-        match self.entries.get(key) {
-            Some(e) if e.spec == canonical_spec => {
-                self.hits += 1;
-                cache_metrics().hits.inc();
-                Some(&e.doc)
-            }
-            _ => {
-                self.misses += 1;
-                cache_metrics().misses.inc();
-                None
-            }
-        }
+        self.last_hit = self.shared.probe(key, canonical_spec);
+        self.last_hit.as_ref().map(|e| &e.doc)
     }
 
     /// Record a freshly evaluated result under `key`. First insert wins
     /// (a colliding later spec stays uncached rather than overwriting);
     /// the entry reaches disk on the next [`ResultCache::flush`].
     pub fn insert(&mut self, key: String, canonical_spec: String, result: &ScenarioResult) {
-        if self.entries.contains_key(&key) {
-            return;
-        }
-        let entry = Entry {
-            spec: canonical_spec,
-            doc: result.doc.clone(),
-        };
-        self.entries.insert(key.clone(), entry);
-        self.pending.push((key, result.name.clone()));
+        self.shared
+            .store
+            .insert(&key, &result.name, canonical_spec, result.doc.clone());
     }
 
-    /// Append pending entries to the store, creating the directory/file
-    /// on first use. The whole append runs under the store's advisory
-    /// lock: the current on-disk keys are re-read first (a concurrent
-    /// shard may have flushed the same spec already — those lines are
-    /// not appended again), then each surviving entry is written as one
-    /// whole line per `write` call, so a concurrent reader never sees a
-    /// torn line and a crash mid-flush loses at most the unwritten tail.
-    ///
-    /// IO errors retry the whole locked section up to [`FLUSH_ATTEMPTS`]
-    /// times — the re-read makes retries idempotent: lines a failed
-    /// attempt did complete are seen on disk and skipped, and a torn
-    /// tail fragment is healed by the next load. Only after the last
-    /// attempt is the error surfaced, with pending entries retained so a
-    /// later flush can still try.
+    /// Persist pending entries: seal them into an immutable segment
+    /// (lock-free — unique file name, temp + rename), then fold per the
+    /// `compact_every` policy. IO errors retry the whole attempt up to
+    /// [`FLUSH_ATTEMPTS`] times — idempotent, because a failed seal
+    /// restores its batch to pending and a sealed batch leaves it. Only
+    /// after the last attempt is the error surfaced, with pending
+    /// entries retained so a later flush can still try.
     pub fn flush(&mut self) -> Result<()> {
-        if self.pending.is_empty() {
+        if !self.shared.store.has_pending() {
             return Ok(());
         }
-        if let Some(dir) = self.path.parent() {
-            fs::create_dir_all(dir)
-                .with_context(|| format!("creating cache dir {}", dir.display()))?;
-        }
+        fs::create_dir_all(self.dir())
+            .with_context(|| format!("creating cache dir {}", self.dir().display()))?;
         let mut attempt = 0;
         loop {
             attempt += 1;
             match self.flush_once() {
-                Ok(()) => {
-                    self.pending.clear();
-                    return Ok(());
-                }
+                Ok(()) => return Ok(()),
                 Err(e) if attempt < FLUSH_ATTEMPTS => {
                     cache_metrics().flush_retries.inc();
                     eprintln!(
@@ -411,92 +267,111 @@ impl ResultCache {
         }
     }
 
-    /// One locked flush attempt (see [`ResultCache::flush`]).
-    fn flush_once(&self) -> Result<()> {
-        let m = cache_metrics();
-        // The lock is the shard rendezvous point: time waiting for it is
-        // the contention signal the serve-fleet roadmap item watches.
-        let _lock = m.flush_lock_wait_ns.time(|| lock_store(&self.path));
-        // Chaos hook: an `io` rule here fails the attempt after the lock
-        // is held, exercising the retry loop end to end.
-        crate::util::fault::io_point("cache.flush.io", &self.path.to_string_lossy())
-            .with_context(|| format!("writing cache store {}", self.path.display()))?;
-        let mut on_disk = BTreeMap::new();
-        let mut needs_newline = false;
-        if self.path.exists() {
-            if let Some(text) = read_store(&self.path) {
-                needs_newline = !text.is_empty() && !text.ends_with('\n');
-                for line in text.lines() {
-                    if let Some((key, entry)) = parse_line(line) {
-                        on_disk.entry(key).or_insert(entry);
-                    }
+    /// One flush attempt (see [`ResultCache::flush`]).
+    fn flush_once(&mut self) -> Result<()> {
+        // Chaos hook: an `io` rule here fails the attempt before
+        // anything is sealed, exercising the retry loop end to end.
+        crate::util::fault::io_point("cache.flush.io", &self.path().to_string_lossy())
+            .with_context(|| format!("writing cache store {}", self.path().display()))?;
+        if self.shared.store.seal()? > 0 {
+            self.seals_since_compact += 1;
+        }
+        match self.compact_every {
+            0 => {}
+            1 => {
+                // Inline: every flush leaves the flat flock-era layout.
+                self.shared.store.compact(true)?;
+                self.seals_since_compact = 0;
+            }
+            n => {
+                if self.seals_since_compact >= n {
+                    self.spawn_compactor();
+                    self.seals_since_compact = 0;
                 }
             }
-        }
-        let mut f = fs::OpenOptions::new()
-            .create(true)
-            .append(true)
-            .open(&self.path)
-            .with_context(|| format!("opening cache store {}", self.path.display()))?;
-        if needs_newline {
-            // A crashed writer left a torn tail: start on a fresh line so
-            // this append cannot concatenate into the fragment (the
-            // fragment itself is quarantined on the next load).
-            f.write_all(b"\n")
-                .with_context(|| format!("appending to cache store {}", self.path.display()))?;
-        }
-        for (key, name) in &self.pending {
-            if on_disk.contains_key(key) {
-                continue;
-            }
-            let entry = match self.entries.get(key) {
-                Some(e) => e,
-                None => continue,
-            };
-            let line = Json::obj(vec![
-                ("schema", CACHE_SCHEMA.into()),
-                ("key", key.as_str().into()),
-                ("scenario", name.as_str().into()),
-                ("spec", entry.spec.as_str().into()),
-                ("result", entry.doc.clone()),
-            ]);
-            let mut text = line.to_string();
-            text.push('\n');
-            f.write_all(text.as_bytes())
-                .with_context(|| format!("appending to cache store {}", self.path.display()))?;
-            m.flush_appends.inc();
         }
         Ok(())
     }
 
-    /// Lookups served from the cache since open.
+    /// Fold all sealed segments into the base store now, blocking on the
+    /// store lock (the `scenario compact` verb, and the final fold of a
+    /// `--compact-every N` run).
+    pub fn compact(&mut self) -> Result<CompactStats> {
+        self.join_compactor();
+        self.seals_since_compact = 0;
+        self.shared.store.compact(true)
+    }
+
+    /// Hand the fold to a background thread (non-blocking lock attempt:
+    /// if a sibling process is compacting, theirs covers our segments).
+    /// At most one in flight; errors degrade to a warning — compaction
+    /// is maintenance, never correctness.
+    fn spawn_compactor(&mut self) {
+        self.join_compactor();
+        let shared = Arc::clone(&self.shared);
+        self.compactor = Some(std::thread::spawn(move || {
+            if let Err(e) = shared.store.compact(false) {
+                eprintln!("warning: background cache compaction failed ({e}); segments remain");
+            }
+        }));
+    }
+
+    fn join_compactor(&mut self) {
+        if let Some(h) = self.compactor.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Lookups served from the cache since open (all handles included).
     pub fn hits(&self) -> u64 {
-        self.hits
+        self.shared.hits.load(Ordering::Relaxed)
     }
 
     /// Lookups that fell through to evaluation since open.
     pub fn misses(&self) -> u64 {
-        self.misses
+        self.shared.misses.load(Ordering::Relaxed)
     }
 
     /// Number of distinct keys currently held (loaded + inserted).
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.shared.store.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.shared.store.is_empty()
     }
 
-    /// Path of the backing store file.
+    /// Path of the backing base store file.
     pub fn store_path(&self) -> &Path {
-        &self.path
+        self.shared.store.store_path()
     }
+
+    fn path(&self) -> &Path {
+        self.shared.store.store_path()
+    }
+
+    fn dir(&self) -> &Path {
+        self.shared.store.dir()
+    }
+}
+
+impl Drop for ResultCache {
+    fn drop(&mut self) {
+        self.join_compactor();
+    }
+}
+
+/// Read-only merged view of the store under `dir` (base + sealed
+/// segments, first-line-wins) for interchange-format consumers; see
+/// [`store::merged_store_text`].
+pub fn merged_store_text(dir: &Path) -> Result<String> {
+    store::merged_store_text(dir)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::path::PathBuf;
 
     fn tmp_dir(tag: &str) -> PathBuf {
         std::env::temp_dir().join(format!("cxlmem-cache-{tag}-{}", std::process::id()))
@@ -842,6 +717,65 @@ mod tests {
         let text = fs::read_to_string(dir.join(STORE_FILE)).unwrap();
         assert_eq!(text.lines().count(), WRITERS * PER_WRITER);
         assert!(text.lines().all(|l| parse_line(l).is_some()));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    /// Layered-mode behaviors new in this refactor: seal-only flushes
+    /// (`compact_every == 0`) leave segments the `scenario compact` verb
+    /// folds; handles probe and insert lock-free, sharing counters.
+    #[test]
+    fn seal_only_flushes_then_explicit_compact() {
+        let dir = tmp_dir("seal-only");
+        let _ = fs::remove_dir_all(&dir);
+        let mut c = ResultCache::open(&dir).unwrap();
+        c.set_compact_every(0);
+        c.insert("k1".into(), "spec-1".into(), &result("one", 1));
+        c.flush().unwrap();
+        c.insert("k2".into(), "spec-2".into(), &result("two", 2));
+        c.flush().unwrap();
+        assert!(!dir.join(STORE_FILE).exists(), "seal-only must not write the base");
+
+        // Handles share the session: lock-free probe, shared counters.
+        let h = c.handle();
+        assert!(h.lookup("k1", "spec-1").is_some());
+        assert!(h.lookup("k1", "wrong-spec").is_none(), "spec mismatch is a miss");
+        assert_eq!((c.hits(), c.misses()), (1, 1));
+        h.insert("k3", "spec-3".into(), &result("three", 3));
+        assert_eq!(c.len(), 3);
+
+        // A sibling open adopts the segments without any base file…
+        let c2 = ResultCache::open(&dir).unwrap();
+        assert_eq!(c2.len(), 2, "k3 is unsealed, invisible to siblings");
+
+        // …and an explicit compact folds everything into one flat base.
+        c.flush().unwrap();
+        let stats = c.compact().unwrap();
+        assert_eq!((stats.segments, stats.keys, stats.rewrote), (3, 3, true));
+        let text = fs::read_to_string(dir.join(STORE_FILE)).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        assert!(text.lines().all(|l| parse_line(l).is_some()));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    /// `compact_every == N`: the background compactor folds after every
+    /// Nth sealing flush, and the final state matches inline compaction.
+    #[test]
+    fn background_compaction_folds_every_nth_flush() {
+        let dir = tmp_dir("bg-compact");
+        let _ = fs::remove_dir_all(&dir);
+        let mut c = ResultCache::open(&dir).unwrap();
+        c.set_compact_every(2);
+        for i in 0..4u64 {
+            c.insert(format!("k{i}"), format!("spec-{i}"), &result("r", i));
+            c.flush().unwrap();
+        }
+        let stats = c.compact().unwrap(); // joins the background fold
+        assert_eq!(stats.keys, 4);
+        let text = fs::read_to_string(dir.join(STORE_FILE)).unwrap();
+        assert_eq!(text.lines().count(), 4);
+        assert!(super::super::store::layer::list_segments(&dir).is_empty());
+        let c2 = ResultCache::open(&dir).unwrap();
+        assert_eq!(c2.len(), 4);
         let _ = fs::remove_dir_all(&dir);
     }
 }

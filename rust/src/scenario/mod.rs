@@ -26,9 +26,12 @@
 //! - [`cache`] — persistent, content-addressed result cache keyed on the
 //!   canonical spec hash ([`ScenarioSpec::cache_key`]); `scenario run`
 //!   consults it by default, so fleet re-runs and overlapping sweeps
-//!   skip evaluation entirely while emitting byte-identical JSONL. Disk
-//!   access is serialized under an advisory lock, so concurrent
-//!   processes can share one store.
+//!   skip evaluation entirely while emitting byte-identical JSONL.
+//! - [`store`] — the layered store under the cache: lock-free cascade
+//!   lookups (mutable head → sealed immutable layers → compacted base),
+//!   flushes sealed as uniquely-named `seg-*.jsonl` segments, and a
+//!   compactor folding them back into `results.jsonl`; the advisory
+//!   lock survives only for compaction and cross-process adoption.
 //! - [`shard`] — deterministic cross-process splits (`--shard K/N`,
 //!   input-index modulo): N processes run disjoint slices of one
 //!   expanded fleet and rendezvous in a shared cache directory; a
@@ -59,6 +62,7 @@ pub mod expand;
 pub mod report;
 pub mod shard;
 pub mod spec;
+pub mod store;
 pub mod supervise;
 
 pub use batch::{

@@ -20,6 +20,15 @@
 //! process at the same `--cache-dir`; the shards rendezvous in the
 //! shared store, and a coordinator re-run of the full list is then pure
 //! cache hits, emitting the same bytes a single-process run would.
+//!
+//! Under the layered store ([`super::store`]) the rendezvous is
+//! **segment adoption**: each shard's flushes seal uniquely-named
+//! `seg-*.jsonl` segments (no store lock on the write path), the
+//! coordinator's open adopts base + segments under the advisory lock,
+//! and compaction folds everything into one `results.jsonl`. With
+//! `--compact-every 0` the shards never lock at all — run
+//! `cxlmem scenario compact <dir>` once afterwards (see `make
+//! store-smoke`).
 
 use std::fmt;
 

@@ -1,0 +1,162 @@
+//! Disk folding for the background compactor and the report reader.
+//!
+//! A compaction folds the base `results.jsonl` plus every sealed
+//! `seg-*.jsonl` segment into one merged store text: the base's
+//! surviving lines verbatim (byte-compatibility — a store that never
+//! sealed a segment compacts to itself), then each segment's entry
+//! lines in seal order, first-line-wins across the whole fold (a key
+//! the base or an earlier segment already carries is dropped, which is
+//! exactly how overlapping shards deduplicate). The caller owns
+//! locking, quarantine, the temp-file+rename rewrite and segment
+//! deletion — this module only reads and merges, so the same fold
+//! backs the read-only `scenario report` path.
+
+use std::collections::HashSet;
+use std::path::Path;
+use std::sync::Arc;
+
+use super::layer::{list_segments, load_file, segment_path, Entry};
+
+/// What one compaction did (the `scenario compact` verb prints this).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CompactStats {
+    /// Sealed segment files folded (and deleted) by this compaction.
+    pub segments: usize,
+    /// Distinct keys in the merged store.
+    pub keys: usize,
+    /// Whether the base store file was rewritten (false = nothing to
+    /// fold and no damage to heal: the store was already compact).
+    pub rewrote: bool,
+}
+
+/// One folded view of everything durable under `dir`.
+pub(crate) struct Fold {
+    /// The merged store text (base surviving lines + novel segment
+    /// entry lines, in order, one trailing newline per line).
+    pub text: String,
+    /// First-wins entries across the fold, in line order.
+    pub entries: Vec<(String, Arc<Entry>)>,
+    /// Damaged lines found anywhere in the fold, verbatim.
+    pub damaged: Vec<String>,
+    /// Raw text of the base file (`None` if missing/unreadable) — the
+    /// no-op test: a fold with no segments and `text == base_text`
+    /// changes nothing.
+    pub base_text: Option<String>,
+    /// Names of the segment files folded in, in seal order.
+    pub segments: Vec<String>,
+}
+
+impl Fold {
+    /// Whether rewriting the base with [`Fold::text`] would change
+    /// anything on disk.
+    pub fn is_noop(&self) -> bool {
+        self.segments.is_empty() && self.base_text.as_deref() == Some(self.text.as_str())
+            || self.segments.is_empty() && self.base_text.is_none() && self.text.is_empty()
+    }
+}
+
+/// Read and merge the base store + all sealed segments under `dir`
+/// (pure read — no disk writes, no locking; callers that intend to
+/// rewrite hold the store lock around the whole fold+rewrite).
+pub(crate) fn fold_disk(dir: &Path, base_path: &Path) -> Fold {
+    let mut text = String::new();
+    let mut entries: Vec<(String, Arc<Entry>)> = Vec::new();
+    let mut seen: HashSet<String> = HashSet::new();
+    let mut damaged: Vec<String> = Vec::new();
+
+    let base = if base_path.exists() {
+        load_file(base_path)
+    } else {
+        None
+    };
+    let base_text = base.as_ref().map(|b| b.text.clone());
+    if let Some(b) = base {
+        for line in &b.kept {
+            text.push_str(line);
+            text.push('\n');
+        }
+        for (key, entry, _) in b.entries {
+            if seen.insert(key.clone()) {
+                entries.push((key, entry));
+            }
+        }
+        damaged.extend(b.damaged);
+    }
+
+    let mut segments = Vec::new();
+    for name in list_segments(dir) {
+        let Some(loaded) = load_file(&segment_path(dir, &name)) else {
+            // Unreadable segment: leave the file alone for a later
+            // compaction (deleting what we could not fold would lose
+            // data); it simply does not participate in this fold.
+            continue;
+        };
+        for (key, entry, line) in loaded.entries {
+            if seen.insert(key.clone()) {
+                text.push_str(&line);
+                text.push('\n');
+                entries.push((key, entry));
+            }
+        }
+        damaged.extend(loaded.damaged);
+        segments.push(name);
+    }
+
+    Fold {
+        text,
+        entries,
+        damaged,
+        base_text,
+        segments,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+    use std::fs;
+
+    fn line(key: &str, v: u64) -> String {
+        super::super::layer::entry_line(
+            key,
+            &format!("s-{key}"),
+            &format!("spec-{key}"),
+            &Json::obj(vec![("v", v.into())]),
+        )
+    }
+
+    #[test]
+    fn fold_keeps_base_bytes_and_first_segment_wins() {
+        let dir = std::env::temp_dir().join(format!("cxlmem-fold-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        let base_path = dir.join("results.jsonl");
+        let base = format!("{}{}", line("a", 1), "{\"schema\": \"other-v9\"}\n");
+        fs::write(&base_path, &base).unwrap();
+        // Two segments: the earlier one wins key "b"; key "a" is
+        // shadowed by the base everywhere.
+        fs::write(dir.join("seg-00000000000000000001-0000000001.jsonl"), line("b", 2)).unwrap();
+        fs::write(
+            dir.join("seg-00000000000000000002-0000000001.jsonl"),
+            format!("{}{}", line("a", 9), line("b", 9)),
+        )
+        .unwrap();
+
+        let fold = fold_disk(&dir, &base_path);
+        assert_eq!(fold.segments.len(), 2);
+        assert!(!fold.is_noop());
+        assert_eq!(fold.text, format!("{base}{}", line("b", 2)));
+        let keys: Vec<&str> = fold.entries.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, vec!["a", "b"]);
+        assert_eq!(fold.entries[1].1.doc.get("v").unwrap().as_u64(), Some(2));
+
+        // Folding the rewritten text with no segments is a no-op.
+        fs::write(&base_path, &fold.text).unwrap();
+        for name in &fold.segments {
+            fs::remove_file(dir.join(name)).unwrap();
+        }
+        assert!(fold_disk(&dir, &base_path).is_noop());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

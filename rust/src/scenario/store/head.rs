@@ -1,0 +1,150 @@
+//! The mutable multi-writer **head** of the layered store: a sharded
+//! in-process concurrent map taking this session's inserts, plus the
+//! ordered pending log that seals drain.
+//!
+//! Writers contend only on one of [`SHARDS`] small mutexes (picked by
+//! the entry key's FNV hash), never on the store file or any global
+//! lock; readers take the same shard mutex for a single map probe —
+//! microseconds of critical section, no IO. Entries live here from
+//! `insert` until a seal moves them (already `Arc`'d, so anything a
+//! lookup returned stays valid) into a sealed immutable layer.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::util::hash::hash_str;
+
+use super::layer::Entry;
+
+/// Shard count: enough that 8–16 writer threads rarely collide, small
+/// enough that draining every shard stays trivial.
+const SHARDS: usize = 16;
+
+/// The mutable head (see the module docs).
+pub(crate) struct Head {
+    shards: Vec<Mutex<HashMap<String, Arc<Entry>>>>,
+    /// Insert-order log of keys awaiting a seal: `(key, scenario name)`.
+    /// The scenario name rides along because the store line carries it
+    /// but the entry body does not.
+    pending: Mutex<Vec<(String, String)>>,
+}
+
+impl Head {
+    pub fn new() -> Self {
+        Head {
+            shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            pending: Mutex::new(Vec::new()),
+        }
+    }
+
+    fn shard(&self, key: &str) -> &Mutex<HashMap<String, Arc<Entry>>> {
+        &self.shards[(hash_str(key) as usize) % SHARDS]
+    }
+
+    pub fn get(&self, key: &str) -> Option<Arc<Entry>> {
+        self.shard(key).lock().unwrap().get(key).cloned()
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.shard(key).lock().unwrap().contains_key(key)
+    }
+
+    /// Insert unless the key is already present (first insert wins —
+    /// double-checked under the shard lock, so concurrent inserters of
+    /// one key race to a single winner and a single pending record).
+    /// Returns whether this call won.
+    pub fn insert_if_absent(&self, key: &str, scenario: &str, entry: Arc<Entry>) -> bool {
+        {
+            let mut shard = self.shard(key).lock().unwrap();
+            if shard.contains_key(key) {
+                return false;
+            }
+            shard.insert(key.to_string(), entry);
+        }
+        self.pending
+            .lock()
+            .unwrap()
+            .push((key.to_string(), scenario.to_string()));
+        true
+    }
+
+    /// Drain the pending log (seal's input). Disjoint across concurrent
+    /// seals: each pending record is handed out exactly once.
+    pub fn take_pending(&self) -> Vec<(String, String)> {
+        std::mem::take(&mut *self.pending.lock().unwrap())
+    }
+
+    /// Put a drained batch back at the front (a seal that failed before
+    /// publishing durably must leave the entries pending for retry).
+    pub fn restore_pending(&self, mut batch: Vec<(String, String)>) {
+        let mut pending = self.pending.lock().unwrap();
+        batch.append(&mut pending);
+        *pending = batch;
+    }
+
+    pub fn has_pending(&self) -> bool {
+        !self.pending.lock().unwrap().is_empty()
+    }
+
+    /// Remove sealed keys (they are now served by a published layer).
+    pub fn remove_keys(&self, keys: &[String]) {
+        for key in keys {
+            self.shard(key).lock().unwrap().remove(key);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn entry(v: u64) -> Arc<Entry> {
+        Arc::new(Entry {
+            spec: format!("spec-{v}"),
+            doc: Json::obj(vec![("v", v.into())]),
+        })
+    }
+
+    #[test]
+    fn first_insert_wins_and_pending_tracks_order() {
+        let h = Head::new();
+        assert!(h.insert_if_absent("a", "one", entry(1)));
+        assert!(!h.insert_if_absent("a", "two", entry(2)), "second insert must lose");
+        assert!(h.insert_if_absent("b", "three", entry(3)));
+        assert_eq!(h.get("a").unwrap().spec, "spec-1");
+        assert_eq!(h.len(), 2);
+        let pending = h.take_pending();
+        assert_eq!(
+            pending,
+            vec![("a".to_string(), "one".to_string()), ("b".to_string(), "three".to_string())]
+        );
+        assert!(!h.has_pending());
+        // Restore prepends, preserving retry-before-new ordering.
+        assert!(h.insert_if_absent("c", "four", entry(4)));
+        h.restore_pending(pending);
+        let replay: Vec<String> = h.take_pending().into_iter().map(|(k, _)| k).collect();
+        assert_eq!(replay, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn concurrent_inserters_of_one_key_race_to_one_winner() {
+        let h = Head::new();
+        let h = &h;
+        let wins: usize = std::thread::scope(|s| {
+            (0..8u64)
+                .map(|v| s.spawn(move || h.insert_if_absent("hot", "x", entry(v)) as usize))
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|j| j.join().unwrap())
+                .sum()
+        });
+        assert_eq!(wins, 1, "exactly one insert may win");
+        assert_eq!(h.len(), 1);
+        assert_eq!(h.take_pending().len(), 1, "one winner, one pending record");
+    }
+}

@@ -1,0 +1,356 @@
+//! On-disk pieces of the layered store: the JSONL line format, the
+//! quarantine/self-heal loader, sealed immutable layers, and segment
+//! file naming/discovery.
+//!
+//! Every durable file the store touches — the compacted base
+//! `results.jsonl` and each sealed `seg-*.jsonl` segment — speaks the
+//! same one-line-per-entry `cxlmem-result-cache-v1` format, so any of
+//! them can be read (or concatenated) by older tooling, and the base
+//! store stays byte-compatible with the pre-layered flock-era cache.
+//!
+//! Loading is where crash tolerance lives: damaged lines (torn tail
+//! writes, interleaved garbage) are moved verbatim to the
+//! `quarantine.jsonl` sidecar and the file is compacted to exactly the
+//! surviving lines — byte-identical to a file that never saw the
+//! damage — while valid foreign-schema lines are kept (they belong to
+//! another tool, not to the damage).
+
+use std::collections::HashMap;
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::util::json::Json;
+use crate::util::metrics;
+
+use super::{CACHE_SCHEMA, QUARANTINE_FILE};
+
+/// Sealed segment files are `seg-<seq>-<pid>.jsonl`; fixed-width
+/// decimal fields make lexicographic name order the seal order.
+pub(crate) const SEGMENT_PREFIX: &str = "seg-";
+pub(crate) const SEGMENT_SUFFIX: &str = ".jsonl";
+
+/// One stored result: the canonical spec it was computed from (verified
+/// on lookup) and the result document.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Entry {
+    pub spec: String,
+    pub doc: Json,
+}
+
+/// Parse one store line into `(key, entry)`; `None` for damage or
+/// foreign schemas (the caller skips those).
+pub(crate) fn parse_line(line: &str) -> Option<(String, Entry)> {
+    if line.trim().is_empty() {
+        return None;
+    }
+    let doc = Json::parse(line).ok()?;
+    if doc.get("schema").and_then(Json::as_str) != Some(CACHE_SCHEMA) {
+        return None;
+    }
+    let key = doc.get("key").and_then(Json::as_str)?;
+    let spec = doc.get("spec").and_then(Json::as_str)?;
+    let result = doc.get("result")?;
+    Some((
+        key.to_string(),
+        Entry {
+            spec: spec.to_string(),
+            doc: result.clone(),
+        },
+    ))
+}
+
+/// Serialize one entry as a store line (with trailing newline) — the
+/// single writer-side counterpart of [`parse_line`], shared by seal and
+/// the legacy reference path so both emit byte-identical lines.
+pub(crate) fn entry_line(key: &str, scenario: &str, spec: &str, doc: &Json) -> String {
+    let line = Json::obj(vec![
+        ("schema", CACHE_SCHEMA.into()),
+        ("key", key.into()),
+        ("scenario", scenario.into()),
+        ("spec", spec.into()),
+        ("result", doc.clone()),
+    ]);
+    let mut text = line.to_string();
+    text.push('\n');
+    text
+}
+
+/// Read the store text at `path`. An unreadable file degrades to `None`
+/// with a warning: the cache must never block a run.
+pub(crate) fn read_store(path: &Path) -> Option<String> {
+    match fs::read_to_string(path) {
+        Ok(t) => Some(t),
+        Err(e) => {
+            eprintln!(
+                "warning: unreadable scenario result cache {} ({e}); treating as empty",
+                path.display()
+            );
+            None
+        }
+    }
+}
+
+/// How a store line is treated on load.
+enum LineClass {
+    /// A well-formed entry of our schema.
+    Entry(String, Entry),
+    /// Valid JSON of another schema: not ours to judge — kept verbatim.
+    Foreign,
+    /// Unparseable, or our schema missing required fields: quarantined.
+    Damaged,
+    /// Whitespace only (an artifact, never written by us): dropped.
+    Blank,
+}
+
+fn classify_line(line: &str) -> LineClass {
+    if line.trim().is_empty() {
+        return LineClass::Blank;
+    }
+    let Ok(doc) = Json::parse(line) else {
+        return LineClass::Damaged;
+    };
+    if doc.get("schema").and_then(Json::as_str) != Some(CACHE_SCHEMA) {
+        return LineClass::Foreign;
+    }
+    match parse_line(line) {
+        Some((key, entry)) => LineClass::Entry(key, entry),
+        None => LineClass::Damaged,
+    }
+}
+
+/// One loaded store file, classified line by line.
+pub(crate) struct LoadedFile {
+    /// The raw text as read (to decide whether healing must rewrite).
+    pub text: String,
+    /// Surviving lines, verbatim, in file order: our entries (duplicate
+    /// keys included — disk keeps them, memory first-wins) + foreign.
+    pub kept: Vec<String>,
+    /// First occurrence per key, in file order: `(key, entry, line)`.
+    pub entries: Vec<(String, Arc<Entry>, String)>,
+    /// Damaged lines, verbatim, in file order.
+    pub damaged: Vec<String>,
+}
+
+impl LoadedFile {
+    fn healed_text(&self) -> String {
+        let mut healed = String::with_capacity(self.text.len());
+        for line in &self.kept {
+            healed.push_str(line);
+            healed.push('\n');
+        }
+        healed
+    }
+}
+
+/// Load and classify the file at `path`. `None` if it is unreadable
+/// (the caller treats that as empty). No disk writes happen here; pair
+/// with [`heal_in_place`] to quarantine and compact the damage found.
+pub(crate) fn load_file(path: &Path) -> Option<LoadedFile> {
+    let text = read_store(path)?;
+    let mut kept = Vec::new();
+    let mut entries: Vec<(String, Arc<Entry>, String)> = Vec::new();
+    let mut seen: std::collections::HashSet<String> = std::collections::HashSet::new();
+    let mut damaged = Vec::new();
+    for line in text.lines() {
+        match classify_line(line) {
+            LineClass::Entry(key, entry) => {
+                kept.push(line.to_string());
+                if seen.insert(key.clone()) {
+                    entries.push((key, Arc::new(entry), line.to_string()));
+                }
+            }
+            LineClass::Foreign => kept.push(line.to_string()),
+            LineClass::Damaged => damaged.push(line.to_string()),
+            LineClass::Blank => {}
+        }
+    }
+    Some(LoadedFile {
+        text,
+        kept,
+        entries,
+        damaged,
+    })
+}
+
+/// Append `damaged` lines verbatim to the quarantine sidecar next to
+/// `path`, counting them in `cache.quarantined_lines`. Returns whether
+/// the sidecar write succeeded (callers must not discard damage that
+/// was never quarantined).
+pub(crate) fn quarantine(path: &Path, damaged: &[String]) -> bool {
+    if damaged.is_empty() {
+        return true;
+    }
+    let Some(dir) = path.parent() else {
+        return false;
+    };
+    let sidecar = dir.join(QUARANTINE_FILE);
+    let mut blob = String::new();
+    for line in damaged {
+        blob.push_str(line);
+        blob.push('\n');
+    }
+    let appended = fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(&sidecar)
+        .and_then(|mut f| f.write_all(blob.as_bytes()));
+    if let Err(e) = appended {
+        eprintln!(
+            "warning: cannot quarantine {} damaged cache line(s) to {} ({e}); \
+             store left as-is",
+            damaged.len(),
+            sidecar.display()
+        );
+        return false;
+    }
+    metrics::counter("cache.quarantined_lines").add(damaged.len() as u64);
+    eprintln!(
+        "warning: quarantined {} damaged cache line(s) to {}",
+        damaged.len(),
+        sidecar.display()
+    );
+    true
+}
+
+/// Self-heal the file at `path` from its classified load: quarantine
+/// the damaged lines, then compact the file to exactly the surviving
+/// lines (temp file + rename, so a crash mid-heal at worst leaves the
+/// original). A clean file is untouched — reopening a healed store is
+/// a byte-for-byte no-op. Failures degrade with a warning, never to
+/// data loss: the file is only rewritten once the damaged lines are
+/// safely in the sidecar.
+pub(crate) fn heal_in_place(path: &Path, loaded: &LoadedFile) {
+    let healed = loaded.healed_text();
+    if healed == loaded.text {
+        return;
+    }
+    if !quarantine(path, &loaded.damaged) {
+        return;
+    }
+    let tmp = path.with_extension("jsonl.tmp");
+    let compacted = fs::write(&tmp, &healed).and_then(|()| fs::rename(&tmp, path));
+    if let Err(e) = compacted {
+        let _ = fs::remove_file(&tmp);
+        eprintln!(
+            "warning: cache store {} not compacted ({e}); damage stays tolerated on load",
+            path.display()
+        );
+    }
+}
+
+/// One sealed, immutable layer of the cascade: an `Arc`'d read-only
+/// index over a flushed segment file (or over the compacted base store,
+/// for which `segment` is `None`). Never mutated after publication —
+/// lookups walk layers with no lock at all.
+pub struct SealedLayer {
+    /// Segment file name inside the store dir; `None` for layers whose
+    /// entries came from (or were folded into) the base store file.
+    pub(crate) segment: Option<String>,
+    pub(crate) entries: HashMap<String, Arc<Entry>>,
+}
+
+impl SealedLayer {
+    pub(crate) fn new(segment: Option<String>, entries: HashMap<String, Arc<Entry>>) -> Self {
+        SealedLayer { segment, entries }
+    }
+
+    pub(crate) fn get(&self, key: &str) -> Option<&Arc<Entry>> {
+        self.entries.get(key)
+    }
+
+    pub(crate) fn contains(&self, key: &str) -> bool {
+        self.entries.contains_key(key)
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.entries.len()
+    }
+}
+
+/// Per-process monotonic sequence base for segment names: wall-clock
+/// nanoseconds, bumped past any previously issued value so two seals in
+/// the same nanosecond (or a clock step backwards) still order.
+fn next_segment_seq() -> u64 {
+    static LAST: AtomicU64 = AtomicU64::new(0);
+    let now = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    LAST.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |prev| {
+        Some(now.max(prev + 1))
+    })
+    .map(|prev| now.max(prev + 1))
+    .unwrap_or(now)
+}
+
+/// A fresh, globally unique segment file name. Uniqueness needs no
+/// lock: the sequence is process-monotonic and the pid disambiguates
+/// concurrent processes.
+pub(crate) fn next_segment_name() -> String {
+    format!(
+        "{SEGMENT_PREFIX}{:020}-{:010}{SEGMENT_SUFFIX}",
+        next_segment_seq(),
+        std::process::id()
+    )
+}
+
+/// Sealed segment files currently in `dir`, in name (= seal) order.
+/// A missing or unreadable directory is an empty list — segment
+/// discovery must never block a run.
+pub(crate) fn list_segments(dir: &Path) -> Vec<String> {
+    let Ok(rd) = fs::read_dir(dir) else {
+        return Vec::new();
+    };
+    let mut names: Vec<String> = rd
+        .filter_map(|e| e.ok())
+        .filter_map(|e| e.file_name().into_string().ok())
+        .filter(|n| n.starts_with(SEGMENT_PREFIX) && n.ends_with(SEGMENT_SUFFIX))
+        .collect();
+    names.sort();
+    names
+}
+
+/// Path of segment `name` inside `dir`.
+pub(crate) fn segment_path(dir: &Path, name: &str) -> PathBuf {
+    dir.join(name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn segment_names_are_unique_and_ordered() {
+        let a = next_segment_name();
+        let b = next_segment_name();
+        let c = next_segment_name();
+        assert!(a < b && b < c, "{a} {b} {c}");
+        for n in [&a, &b, &c] {
+            assert!(n.starts_with(SEGMENT_PREFIX) && n.ends_with(SEGMENT_SUFFIX));
+        }
+    }
+
+    #[test]
+    fn load_file_classifies_and_first_key_wins() {
+        let dir = std::env::temp_dir().join(format!("cxlmem-layer-load-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("f.jsonl");
+        let l1 = entry_line("k1", "one", "spec-1", &Json::obj(vec![("v", 1u64.into())]));
+        let dup = entry_line("k1", "one-again", "spec-1b", &Json::obj(vec![("v", 9u64.into())]));
+        let foreign = "{\"schema\": \"other-v9\"}\n";
+        let torn = "{\"schema\": \"cxlmem-result-cache-v1\", \"key\": \"t";
+        fs::write(&path, format!("{l1}{dup}{foreign}{torn}")).unwrap();
+        let loaded = load_file(&path).unwrap();
+        // Disk keeps the duplicate + foreign lines; memory first-wins.
+        assert_eq!(loaded.kept.len(), 3);
+        assert_eq!(loaded.entries.len(), 1);
+        assert_eq!(loaded.entries[0].0, "k1");
+        assert_eq!(loaded.entries[0].1.spec, "spec-1");
+        assert_eq!(loaded.damaged, vec![torn.to_string()]);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

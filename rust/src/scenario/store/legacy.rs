@@ -1,0 +1,157 @@
+//! The pre-layered flock-era write path, kept as a **reference
+//! implementation** for the `scenario/cache(contended flush)` bench:
+//! every flush takes the single store-wide advisory lock, re-reads all
+//! on-disk keys, and appends one line per pending entry — correct, and
+//! exactly the serialization bottleneck the layered store removes (the
+//! paper's scale point: shared-resource serialization, not raw device
+//! latency, is what caps fleet throughput).
+//!
+//! Emits byte-identical lines to the layered seal path (both go through
+//! [`super::layer::entry_line`]), so a store written by either path
+//! loads in either implementation.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+use crate::util::lock::FileLock;
+
+use super::layer::{entry_line, parse_line, read_store};
+use super::{LOCK_FILE, STORE_FILE};
+
+/// A minimal legacy-path cache handle: in-memory key set plus pending
+/// appends, flushed under the store-wide lock. Bench-only surface — the
+/// production handle is [`crate::scenario::cache::ResultCache`].
+pub struct LegacyCache {
+    path: PathBuf,
+    keys: BTreeMap<String, ()>,
+    /// `(key, scenario, spec, doc)` awaiting flush.
+    pending: Vec<(String, String, String, Json)>,
+}
+
+impl LegacyCache {
+    pub fn open(dir: &Path) -> Result<Self> {
+        let path = dir.join(STORE_FILE);
+        let mut keys = BTreeMap::new();
+        if path.exists() {
+            if let Some(text) = read_store(&path) {
+                for line in text.lines() {
+                    if let Some((key, _)) = parse_line(line) {
+                        keys.insert(key, ());
+                    }
+                }
+            }
+        }
+        Ok(LegacyCache {
+            path,
+            keys,
+            pending: Vec::new(),
+        })
+    }
+
+    /// First insert wins, like the production handle.
+    pub fn insert(&mut self, key: String, scenario: String, spec: String, doc: Json) {
+        if self.keys.contains_key(&key) {
+            return;
+        }
+        self.keys.insert(key.clone(), ());
+        self.pending.push((key, scenario, spec, doc));
+    }
+
+    pub fn len(&self) -> usize {
+        self.keys.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+
+    /// The legacy flush: one store-wide `flock`, a full re-read of
+    /// on-disk keys (dedupe against concurrent flushers), then one
+    /// whole-line append per surviving entry.
+    pub fn flush(&mut self) -> Result<()> {
+        if self.pending.is_empty() {
+            return Ok(());
+        }
+        if let Some(dir) = self.path.parent() {
+            fs::create_dir_all(dir)
+                .with_context(|| format!("creating cache dir {}", dir.display()))?;
+        }
+        let lock_path = self.path.parent().expect("store path has a dir").join(LOCK_FILE);
+        let _lock = FileLock::acquire(&lock_path)
+            .with_context(|| format!("locking cache store {}", self.path.display()))?;
+        let mut on_disk = BTreeMap::new();
+        let mut needs_newline = false;
+        if self.path.exists() {
+            if let Some(text) = read_store(&self.path) {
+                needs_newline = !text.is_empty() && !text.ends_with('\n');
+                for line in text.lines() {
+                    if let Some((key, _)) = parse_line(line) {
+                        on_disk.insert(key, ());
+                    }
+                }
+            }
+        }
+        let mut f = fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.path)
+            .with_context(|| format!("opening cache store {}", self.path.display()))?;
+        if needs_newline {
+            f.write_all(b"\n")
+                .with_context(|| format!("appending to cache store {}", self.path.display()))?;
+        }
+        for (key, scenario, spec, doc) in self.pending.drain(..) {
+            if on_disk.contains_key(&key) {
+                continue;
+            }
+            let line = entry_line(&key, &scenario, &spec, &doc);
+            f.write_all(line.as_bytes())
+                .with_context(|| format!("appending to cache store {}", self.path.display()))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn legacy_lines_load_in_the_layered_store() {
+        let dir = std::env::temp_dir().join(format!("cxlmem-legacy-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        let mut c = LegacyCache::open(&dir).unwrap();
+        c.insert(
+            "k1".into(),
+            "one".into(),
+            "spec-1".into(),
+            Json::obj(vec![("v", 1u64.into())]),
+        );
+        c.insert(
+            "k1".into(),
+            "dup".into(),
+            "spec-dup".into(),
+            Json::obj(vec![("v", 9u64.into())]),
+        );
+        c.insert(
+            "k2".into(),
+            "two".into(),
+            "spec-2".into(),
+            Json::obj(vec![("v", 2u64.into())]),
+        );
+        c.flush().unwrap();
+        assert_eq!(c.len(), 2);
+
+        let store = super::super::LayeredStore::open(&dir).unwrap();
+        assert_eq!(store.len(), 2);
+        let e = store.get("k1").unwrap();
+        assert_eq!(e.spec, "spec-1");
+        assert_eq!(e.doc.get("v").unwrap().as_u64(), Some(1));
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

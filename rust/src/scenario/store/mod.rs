@@ -1,0 +1,592 @@
+//! Layered scenario-result store: a mutable multi-writer **head**, a
+//! stack of **sealed immutable layers**, and an **atomically-published
+//! tail**, with a compactor folding everything back into the durable
+//! `results.jsonl`.
+//!
+//! The flat flock-era cache serialized every flush under one advisory
+//! lock and re-read the on-disk keys per append — fine for a handful of
+//! shards, a bottleneck for a serve fleet (the paper's scale lesson:
+//! shared-resource serialization, not raw latency, caps throughput).
+//! This module restructures the store as a cascade:
+//!
+//! ```text
+//!   lookup ──▶ head (sharded in-process map, this session's inserts)
+//!                │ miss
+//!                ▼
+//!              tail  = atomically-published Vec<Arc<SealedLayer>>
+//!                │      base layer (results.jsonl) + sealed segments
+//!                ▼
+//!              miss ⇒ evaluate, insert into head
+//!
+//!   flush  ──▶ seal: drain pending → write seg-<seq>-<pid>.jsonl
+//!              (unique name — no lock) → publish as a sealed layer
+//!   compact ─▶ under the store lock: fold base + segments →
+//!              tmp + rename results.jsonl → delete folded segments
+//! ```
+//!
+//! The lookup fast path is one atomic load plus a cascade walk — no
+//! `flock(2)`, no disk re-read. Writers contend only on a head shard
+//! mutex. The store-wide advisory lock survives, scoped down to the
+//! two places that truly rendezvous across processes: compaction's
+//! read-fold-rename cycle and layer adoption ([`LayeredStore::adopt`]
+//! — the `--shard` rendezvous, which is now segment discovery instead
+//! of a whole-store reload under lock).
+//!
+//! Compatibility is the hard constraint, pinned by the pre-refactor
+//! test suites: `results.jsonl` stays the interchange format
+//! (schema [`CACHE_SCHEMA`], first-line-wins, byte-compatible with
+//! flock-era stores), damaged lines quarantine + self-heal exactly as
+//! before, first-insert-wins holds at every level (handle, head shard,
+//! store, cross-process), and compaction is crash-safe (segments are
+//! deleted only after the merged base is renamed into place, so a kill
+//! at any instant leaves a loadable store).
+//!
+//! Key disjointness invariant: a key is visible in **at most one**
+//! place — the head or exactly one sealed layer. Seal moves keys from
+//! head to a new layer; adopt and compact filter what they publish
+//! against everything already visible. `len` is therefore a plain sum
+//! and cascade order never changes which entry a key resolves to.
+//!
+//! Metrics: `store.layers` (published layer count),
+//! `store.cascade_depth` (layers walked per lookup; 0 = head hit),
+//! `store.compactions`, plus the flock-era families that keep their
+//! names (`scenario.cache.flush_appends` now counts sealed lines,
+//! `scenario.cache.flush_lock_wait_ns` times the compaction/adoption
+//! lock — the contention signal the serve-fleet roadmap item watches).
+
+use std::collections::{HashMap, HashSet};
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::util::fault;
+use crate::util::json::Json;
+use crate::util::lock::FileLock;
+use crate::util::metrics;
+
+pub mod compact;
+mod head;
+pub mod layer;
+pub mod legacy;
+mod tail;
+
+pub use compact::CompactStats;
+pub use layer::Entry;
+
+use head::Head;
+use layer::SealedLayer;
+use tail::Published;
+
+/// Cache line schema identifier.
+pub const CACHE_SCHEMA: &str = "cxlmem-result-cache-v1";
+/// Default cache directory (relative to the working directory).
+pub const DEFAULT_DIR: &str = ".cxlmem-cache";
+/// Base store file name inside the cache directory.
+pub const STORE_FILE: &str = "results.jsonl";
+/// Advisory lock file name inside the cache directory.
+pub const LOCK_FILE: &str = "lock";
+/// Sidecar file damaged store lines are quarantined to on load.
+pub const QUARANTINE_FILE: &str = "quarantine.jsonl";
+
+/// Registry handles for the layered-store metric families.
+struct StoreMetrics {
+    layers: &'static metrics::Gauge,
+    cascade_depth: &'static metrics::Histogram,
+    compactions: &'static metrics::Counter,
+    flush_appends: &'static metrics::Counter,
+    flush_lock_wait_ns: &'static metrics::Histogram,
+}
+
+fn store_metrics() -> &'static StoreMetrics {
+    static M: std::sync::OnceLock<StoreMetrics> = std::sync::OnceLock::new();
+    M.get_or_init(|| StoreMetrics {
+        layers: metrics::gauge("store.layers"),
+        cascade_depth: metrics::histogram("store.cascade_depth"),
+        compactions: metrics::counter("store.compactions"),
+        flush_appends: metrics::counter("scenario.cache.flush_appends"),
+        flush_lock_wait_ns: metrics::histogram("scenario.cache.flush_lock_wait_ns"),
+    })
+}
+
+/// Take the store lock, degrading to unlocked access with a warning if
+/// the lock file cannot be created/locked (read-only store, exotic FS).
+pub(crate) fn lock_store(path: &Path) -> Option<FileLock> {
+    let lock_path = path.parent()?.join(LOCK_FILE);
+    match FileLock::acquire(&lock_path) {
+        Ok(l) => Some(l),
+        Err(e) => {
+            eprintln!(
+                "warning: cache lock {} unavailable ({e}); proceeding unlocked",
+                lock_path.display()
+            );
+            None
+        }
+    }
+}
+
+/// Non-blocking store-lock attempt for the background compactor:
+/// `None` means another process holds it (their compaction covers us)
+/// or the lock is unusable — either way, skip, never wait.
+fn try_lock_store(path: &Path) -> Option<FileLock> {
+    let lock_path = path.parent()?.join(LOCK_FILE);
+    FileLock::try_acquire(&lock_path).ok().flatten()
+}
+
+/// The layered store (see the module docs). All methods take `&self`:
+/// one instance is shared by every handle of a cache session.
+pub struct LayeredStore {
+    dir: PathBuf,
+    path: PathBuf,
+    head: Head,
+    tail: Published<Vec<Arc<SealedLayer>>>,
+    /// Serializes publishes (seal/adopt/compact read-modify-write the
+    /// layer list); readers never touch it.
+    publish_mu: Mutex<()>,
+}
+
+impl LayeredStore {
+    /// Open the store under `dir`, adopting the base file and any
+    /// sealed segments present (healing damage as the flat cache did).
+    /// A missing or unreadable directory is an empty store; nothing is
+    /// written until the first seal.
+    pub fn open(dir: &Path) -> Result<Self> {
+        let dir = dir.to_path_buf();
+        let path = dir.join(STORE_FILE);
+        let store = LayeredStore {
+            dir,
+            path,
+            head: Head::new(),
+            tail: Published::new(Arc::new(Vec::new())),
+            publish_mu: Mutex::new(()),
+        };
+        if store.has_disk() {
+            let _lock = lock_store(&store.path);
+            let _ = store.adopt_locked();
+        }
+        Ok(store)
+    }
+
+    /// Whether anything durable exists for this store yet.
+    pub fn has_disk(&self) -> bool {
+        self.path.exists() || !layer::list_segments(&self.dir).is_empty()
+    }
+
+    /// Path of the base store file.
+    pub fn store_path(&self) -> &Path {
+        &self.path
+    }
+
+    /// The store directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Lock-free cascade lookup: head first (this session's inserts
+    /// win), then the published layers. One head-shard probe plus one
+    /// atomic snapshot load — no file lock, no disk access.
+    pub fn get(&self, key: &str) -> Option<Arc<Entry>> {
+        let m = store_metrics();
+        if let Some(e) = self.head.get(key) {
+            m.cascade_depth.record(0);
+            return Some(e);
+        }
+        let layers = self.tail.load();
+        for (i, l) in layers.iter().enumerate() {
+            if let Some(e) = l.get(key) {
+                m.cascade_depth.record(i as u64 + 1);
+                return Some(e.clone());
+            }
+        }
+        m.cascade_depth.record(layers.len() as u64 + 1);
+        None
+    }
+
+    /// Whether `key` is visible anywhere in the cascade.
+    pub fn contains(&self, key: &str) -> bool {
+        self.head.contains(key) || self.tail.load().iter().any(|l| l.contains(key))
+    }
+
+    /// Distinct keys visible (head + every layer; disjoint by the
+    /// module-level invariant, so a plain sum).
+    pub fn len(&self) -> usize {
+        self.head.len() + self.tail.load().iter().map(|l| l.len()).sum::<usize>()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Whether any inserts await a seal.
+    pub fn has_pending(&self) -> bool {
+        self.head.has_pending()
+    }
+
+    /// Record a result under `key` unless the key is already visible
+    /// (first insert wins at every level). Returns whether this insert
+    /// won. Lock cost: one head-shard mutex.
+    pub fn insert(&self, key: &str, scenario: &str, spec: String, doc: Json) -> bool {
+        if self.contains(key) {
+            return false;
+        }
+        self.head.insert_if_absent(key, scenario, Arc::new(Entry { spec, doc }))
+    }
+
+    /// Seal the pending head entries into a fresh immutable segment:
+    /// write `seg-<seq>-<pid>.jsonl` (unique name, temp+rename — **no
+    /// store lock**), publish it as a sealed layer, then drop the keys
+    /// from the head (they stay the same `Arc`s, so nothing a lookup
+    /// returned changes). Returns the number of lines sealed. On error
+    /// the drained batch is restored, so a later seal retries it.
+    pub fn seal(&self) -> Result<usize> {
+        let pending = self.head.take_pending();
+        if pending.is_empty() {
+            return Ok(0);
+        }
+        match self.seal_batch(&pending) {
+            Ok(n) => Ok(n),
+            Err(e) => {
+                self.head.restore_pending(pending);
+                Err(e)
+            }
+        }
+    }
+
+    fn seal_batch(&self, pending: &[(String, String)]) -> Result<usize> {
+        fs::create_dir_all(&self.dir)
+            .with_context(|| format!("creating cache dir {}", self.dir.display()))?;
+        // Chaos hook: an `io` rule fails the seal before anything is
+        // written; the batch goes back to pending for retry.
+        fault::io_point("store.seal.io", &self.dir.to_string_lossy())
+            .with_context(|| format!("sealing cache segment in {}", self.dir.display()))?;
+        let _mu = self.publish_mu.lock().unwrap();
+        let layers = self.tail.load();
+        let mut lines = String::new();
+        let mut sealed: HashMap<String, Arc<Entry>> = HashMap::new();
+        let mut drained: Vec<String> = Vec::new();
+        for (key, scenario) in pending {
+            if layers.iter().any(|l| l.contains(key)) {
+                // A sibling process's entry for this key was adopted
+                // after our insert: first-on-disk wins, ours is dropped
+                // (exactly what the flock path's append dedupe did).
+                drained.push(key.clone());
+                continue;
+            }
+            let Some(entry) = self.head.get(key) else {
+                continue;
+            };
+            lines.push_str(&layer::entry_line(key, scenario, &entry.spec, &entry.doc));
+            sealed.insert(key.clone(), entry);
+            drained.push(key.clone());
+        }
+        let appended = sealed.len();
+        if !sealed.is_empty() {
+            let name = layer::next_segment_name();
+            let seg = layer::segment_path(&self.dir, &name);
+            let tmp = seg.with_extension("jsonl.tmp");
+            let written = fs::write(&tmp, &lines).and_then(|()| fs::rename(&tmp, &seg));
+            if let Err(e) = written {
+                let _ = fs::remove_file(&tmp);
+                return Err(e)
+                    .with_context(|| format!("writing cache segment {}", seg.display()));
+            }
+            let mut new_layers = (*layers).clone();
+            new_layers.push(Arc::new(SealedLayer::new(Some(name), sealed)));
+            let m = store_metrics();
+            m.layers.set(new_layers.len() as i64);
+            m.flush_appends.add(appended as u64);
+            self.tail.store(Arc::new(new_layers));
+        }
+        self.head.remove_keys(&drained);
+        Ok(appended)
+    }
+
+    /// Adopt layers other processes published since open (the shard
+    /// rendezvous): re-read the base file (a sibling's compaction may
+    /// have folded new keys into it) and index segment files not seen
+    /// yet, publishing only keys not already visible — nothing a lookup
+    /// returned ever changes. Returns the number of new keys.
+    pub fn adopt(&self) -> Result<usize> {
+        if !self.has_disk() {
+            return Ok(0);
+        }
+        let _lock = store_metrics().flush_lock_wait_ns.time(|| lock_store(&self.path));
+        self.adopt_locked()
+    }
+
+    fn adopt_locked(&self) -> Result<usize> {
+        let _mu = self.publish_mu.lock().unwrap();
+        let layers = self.tail.load();
+        let mut new_layers = (*layers).clone();
+        let mut added = 0;
+        if self.path.exists() {
+            if let Some(loaded) = layer::load_file(&self.path) {
+                layer::heal_in_place(&self.path, &loaded);
+                added += Self::push_novel(&self.head, &mut new_layers, None, loaded.entries);
+            }
+        }
+        let known: HashSet<&str> = layers.iter().filter_map(|l| l.segment.as_deref()).collect();
+        for name in layer::list_segments(&self.dir) {
+            if known.contains(name.as_str()) {
+                continue;
+            }
+            let seg = layer::segment_path(&self.dir, &name);
+            if let Some(loaded) = layer::load_file(&seg) {
+                layer::heal_in_place(&seg, &loaded);
+                added += Self::push_novel(&self.head, &mut new_layers, Some(name), loaded.entries);
+            }
+        }
+        if new_layers.len() != layers.len() {
+            store_metrics().layers.set(new_layers.len() as i64);
+            self.tail.store(Arc::new(new_layers));
+        }
+        Ok(added)
+    }
+
+    /// Append a layer holding the subset of `entries` not already
+    /// visible in the head or `layers`. Base-origin layers (`segment ==
+    /// None`) are skipped when empty; segment layers are published even
+    /// empty so their file counts as adopted. Returns the novel count.
+    fn push_novel(
+        head: &Head,
+        layers: &mut Vec<Arc<SealedLayer>>,
+        segment: Option<String>,
+        entries: Vec<(String, Arc<Entry>, String)>,
+    ) -> usize {
+        let mut novel: HashMap<String, Arc<Entry>> = HashMap::new();
+        for (key, entry, _) in entries {
+            if head.contains(&key) || layers.iter().any(|l| l.contains(&key)) {
+                continue;
+            }
+            novel.insert(key, entry);
+        }
+        let n = novel.len();
+        if n > 0 || segment.is_some() {
+            layers.push(Arc::new(SealedLayer::new(segment, novel)));
+        }
+        n
+    }
+
+    /// Fold every sealed segment into the base store file, under the
+    /// store-wide advisory lock: quarantine any damage found, write the
+    /// merged text to a temp file, rename it over `results.jsonl`, and
+    /// only then delete the folded segments — a crash at any instant
+    /// leaves a loadable store (at worst with segments still pending a
+    /// later compaction, never with lost entries). Non-blocking mode
+    /// (`blocking == false`, the background compactor) skips instead of
+    /// waiting when another process holds the lock.
+    pub fn compact(&self, blocking: bool) -> Result<CompactStats> {
+        if !self.dir.exists() {
+            return Ok(CompactStats::default());
+        }
+        let m = store_metrics();
+        let _lock = if blocking {
+            m.flush_lock_wait_ns.time(|| lock_store(&self.path))
+        } else {
+            match try_lock_store(&self.path) {
+                Some(l) => Some(l),
+                None => return Ok(CompactStats::default()),
+            }
+        };
+        let fold = compact::fold_disk(&self.dir, &self.path);
+        if fold.is_noop() {
+            return Ok(CompactStats {
+                segments: 0,
+                keys: fold.entries.len(),
+                rewrote: false,
+            });
+        }
+        let mut text = fold.text.clone();
+        if !layer::quarantine(&self.path, &fold.damaged) {
+            // The sidecar could not be written: keep the damaged lines
+            // tolerated (appended verbatim — they re-classify as damage
+            // on the next load) rather than silently dropping them.
+            for line in &fold.damaged {
+                text.push_str(line);
+                text.push('\n');
+            }
+        }
+        let tmp = self.path.with_extension("jsonl.tmp");
+        fs::write(&tmp, &text)
+            .with_context(|| format!("writing compacted cache store {}", tmp.display()))?;
+        // Chaos hook: an `io` rule fails the compaction cleanly (temp
+        // file removed, nothing merged); a `panic` rule kills the
+        // process between temp write and rename — the
+        // crash-mid-compaction drill the store tests rehearse.
+        if let Err(e) = fault::io_point("store.compact.io", &self.dir.to_string_lossy()) {
+            let _ = fs::remove_file(&tmp);
+            return Err(e)
+                .with_context(|| format!("compacting cache store {}", self.path.display()));
+        }
+        if let Err(e) = fs::rename(&tmp, &self.path) {
+            let _ = fs::remove_file(&tmp);
+            return Err(e)
+                .with_context(|| format!("compacting cache store {}", self.path.display()));
+        }
+        for name in &fold.segments {
+            // Best-effort: a segment that survives deletion holds only
+            // keys the merged base now carries — the next fold drops
+            // its lines again, nothing duplicates in memory.
+            let _ = fs::remove_file(layer::segment_path(&self.dir, name));
+        }
+        m.compactions.inc();
+
+        // Publish the consolidated view: one base layer with every
+        // folded key (preferring already-published `Arc`s for pointer
+        // stability), plus any layer whose segment was sealed after our
+        // fold listed the directory.
+        let _mu = self.publish_mu.lock().unwrap();
+        let layers = self.tail.load();
+        let folded: HashSet<&str> = fold.segments.iter().map(|s| s.as_str()).collect();
+        let kept: Vec<Arc<SealedLayer>> = layers
+            .iter()
+            .filter(|l| l.segment.as_deref().is_some_and(|n| !folded.contains(n)))
+            .cloned()
+            .collect();
+        let mut base: HashMap<String, Arc<Entry>> = HashMap::new();
+        for (key, entry) in &fold.entries {
+            if self.head.contains(key) || kept.iter().any(|l| l.contains(key)) {
+                continue;
+            }
+            let existing = layers.iter().find_map(|l| l.get(key).cloned());
+            base.insert(key.clone(), existing.unwrap_or_else(|| entry.clone()));
+        }
+        let mut new_layers = vec![Arc::new(SealedLayer::new(None, base))];
+        new_layers.extend(kept);
+        m.layers.set(new_layers.len() as i64);
+        self.tail.store(Arc::new(new_layers));
+        Ok(CompactStats {
+            segments: fold.segments.len(),
+            keys: fold.entries.len(),
+            rewrote: true,
+        })
+    }
+}
+
+/// Read-only merged view of the store under `dir` — the base file plus
+/// any sealed segments, first-line-wins, exactly what a compaction
+/// would write — for consumers of the interchange format (`scenario
+/// report`). Taken under the store lock so a mid-compaction rename is
+/// never read half-done.
+pub fn merged_store_text(dir: &Path) -> Result<String> {
+    let path = dir.join(STORE_FILE);
+    if !path.exists() && layer::list_segments(dir).is_empty() {
+        return Err(anyhow::anyhow!(
+            "no result store under {} (expected {} or sealed segments)",
+            dir.display(),
+            STORE_FILE
+        ));
+    }
+    let _lock = lock_store(&path);
+    Ok(compact::fold_disk(dir, &path).text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("cxlmem-store-{tag}-{}", std::process::id()))
+    }
+
+    fn doc(v: u64) -> Json {
+        Json::obj(vec![("v", v.into())])
+    }
+
+    #[test]
+    fn seal_publishes_and_compact_folds() {
+        let dir = tmp_dir("seal-fold");
+        let _ = fs::remove_dir_all(&dir);
+        let s = LayeredStore::open(&dir).unwrap();
+        assert!(s.insert("k1", "one", "spec-1".into(), doc(1)));
+        assert!(!s.insert("k1", "dup", "spec-dup".into(), doc(9)), "first insert wins");
+        assert!(s.insert("k2", "two", "spec-2".into(), doc(2)));
+        let held = s.get("k1").unwrap();
+
+        assert_eq!(s.seal().unwrap(), 2);
+        assert!(!s.has_pending());
+        assert_eq!(s.len(), 2);
+        assert_eq!(layer::list_segments(&dir).len(), 1, "one sealed segment on disk");
+        // Sealing moved the entries, same Arcs: held lookups unchanged.
+        assert!(Arc::ptr_eq(&held, &s.get("k1").unwrap()));
+
+        let stats = s.compact(true).unwrap();
+        assert_eq!((stats.segments, stats.keys, stats.rewrote), (1, 2, true));
+        assert!(layer::list_segments(&dir).is_empty(), "folded segments deleted");
+        assert_eq!(s.len(), 2);
+        assert!(Arc::ptr_eq(&held, &s.get("k1").unwrap()), "compaction keeps published Arcs");
+
+        // A fresh open over the compacted base sees the same entries.
+        let s2 = LayeredStore::open(&dir).unwrap();
+        assert_eq!(s2.len(), 2);
+        assert_eq!(s2.get("k2").unwrap().doc.get("v").unwrap().as_u64(), Some(2));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn seal_only_stores_rendezvous_via_adopt() {
+        let dir = tmp_dir("adopt");
+        let _ = fs::remove_dir_all(&dir);
+        let a = LayeredStore::open(&dir).unwrap();
+        let b = LayeredStore::open(&dir).unwrap();
+        a.insert("ka", "a", "spec-a".into(), doc(1));
+        a.seal().unwrap();
+        b.insert("kb", "b", "spec-b".into(), doc(2));
+        b.seal().unwrap();
+
+        // Neither has compacted; rendezvous is pure segment adoption.
+        assert!(a.get("kb").is_none());
+        assert_eq!(a.adopt().unwrap(), 1);
+        assert_eq!(a.get("kb").unwrap().doc.get("v").unwrap().as_u64(), Some(2));
+        assert_eq!(a.adopt().unwrap(), 0, "second adopt finds nothing new");
+        assert_eq!(a.len(), 2);
+
+        // Compaction on either side folds both segments into the base.
+        let stats = b.compact(true).unwrap();
+        assert_eq!(stats.segments, 2);
+        assert_eq!(b.adopt().unwrap(), 1, "b adopts ka from the merged base");
+        let text = fs::read_to_string(dir.join(STORE_FILE)).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn seal_io_fault_keeps_batch_pending() {
+        use crate::util::fault;
+        let dir = tmp_dir("sealfault");
+        let _ = fs::remove_dir_all(&dir);
+        let _g = fault::test_guard();
+        fault::install(fault::FaultPlan::parse("store.seal.io/sealfault=io:1").unwrap());
+        let s = LayeredStore::open(&dir).unwrap();
+        s.insert("k", "one", "spec".into(), doc(1));
+        assert!(s.seal().is_err(), "injected seal fault must surface");
+        assert!(s.has_pending(), "failed seal restores the batch");
+        assert_eq!(s.seal().unwrap(), 1, "retry seals the restored batch");
+        fault::clear();
+        assert_eq!(LayeredStore::open(&dir).unwrap().len(), 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn merged_store_text_folds_base_and_segments() {
+        let dir = tmp_dir("merged-text");
+        let _ = fs::remove_dir_all(&dir);
+        assert!(merged_store_text(&dir).is_err(), "no store yet");
+        let s = LayeredStore::open(&dir).unwrap();
+        s.insert("k1", "one", "spec-1".into(), doc(1));
+        s.seal().unwrap();
+        s.compact(true).unwrap();
+        s.insert("k2", "two", "spec-2".into(), doc(2));
+        s.seal().unwrap();
+        // Base has k1, a live segment has k2: the merged view sees both
+        // without rewriting anything.
+        let text = merged_store_text(&dir).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        assert_eq!(layer::list_segments(&dir).len(), 1, "read path must not compact");
+        let base = fs::read_to_string(dir.join(STORE_FILE)).unwrap();
+        assert_eq!(base.lines().count(), 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

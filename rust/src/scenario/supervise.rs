@@ -13,7 +13,11 @@
 //! - **Retries** — *transient* failures (an [`std::io::Error`] anywhere
 //!   in the cause chain: a flaky store, a lock timeout, a failed thread
 //!   spawn) are retried up to `retries` times with jittered exponential
-//!   backoff. The jitter is seeded from the spec's cache key and the
+//!   backoff. Since the layered store ([`super::store`]) the cache's
+//!   own write path is lock-free (seals, not locked appends), so the
+//!   store IO this loop absorbs is a failed seal or compaction — both
+//!   idempotent: sealed entries stay pending until a segment file is
+//!   durably renamed into place. The jitter is seeded from the spec's cache key and the
 //!   attempt number, so a re-run backs off identically — determinism
 //!   survives supervision. Deterministic evaluation errors (a bad
 //!   socket index) and panics are terminal on the first attempt:

@@ -36,6 +36,21 @@
 //! Example: `scenario.eval/fleet-002=panic;cache.flush.io=io:2` panics
 //! every evaluation of specs whose name contains `fleet-002` and fails
 //! the first two cache-flush writes with a synthetic IO error.
+//!
+//! Shipped injection points (key in parentheses):
+//!
+//! - `scenario.eval` / `scenario.eval.io` (spec name) — around one
+//!   scenario evaluation in the supervised runner.
+//! - `cache.flush.io` (store path) — a whole result-cache flush.
+//! - `store.seal.io` (cache dir) — sealing pending entries into a
+//!   segment file, before the segment is written.
+//! - `store.compact.io` (cache dir) — between writing the compacted
+//!   tmp file and the rename, the crash-mid-compaction window.
+//! - `lock.acquire` (lock path) — taking the store's advisory lock.
+//! - `trace.generate` (app model name) — generating an epoch trace in
+//!   [`crate::workloads::trace::TraceStore`].
+//! - `solver.memo` (`"solve_traffic"`) — the traffic solver's memoized
+//!   fast path, ahead of the memo-key probe.
 
 use std::io;
 use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};

@@ -50,6 +50,15 @@ impl FileLock {
             _held: imp::acquire(path)?,
         })
     }
+
+    /// Try to take the lock without waiting: `Ok(None)` means another
+    /// holder has it right now. Used by background maintenance (the
+    /// store compactor) that should skip rather than queue — whoever
+    /// holds the lock is doing equivalent work.
+    pub fn try_acquire(path: &Path) -> io::Result<Option<FileLock>> {
+        fault::io_point("lock.acquire", &path.to_string_lossy())?;
+        Ok(imp::try_acquire(path)?.map(|held| FileLock { _held: held }))
+    }
 }
 
 /// Open (create if needed) the lock file itself.
@@ -69,6 +78,7 @@ mod imp {
     use std::path::Path;
 
     const LOCK_EX: i32 = 2;
+    const LOCK_NB: i32 = 4;
 
     extern "C" {
         fn flock(fd: i32, operation: i32) -> i32;
@@ -94,6 +104,22 @@ mod imp {
             }
         }
     }
+
+    pub fn try_acquire(path: &Path) -> io::Result<Option<Held>> {
+        let file = super::open_lock_file(path)?;
+        loop {
+            if unsafe { flock(file.as_raw_fd(), LOCK_EX | LOCK_NB) } == 0 {
+                return Ok(Some(Held { _file: file }));
+            }
+            let err = io::Error::last_os_error();
+            if err.kind() == io::ErrorKind::WouldBlock {
+                return Ok(None);
+            }
+            if err.kind() != io::ErrorKind::Interrupted {
+                return Err(err);
+            }
+        }
+    }
 }
 
 #[cfg(not(unix))]
@@ -105,6 +131,14 @@ mod imp {
 
     pub fn acquire(path: &Path) -> io::Result<Held> {
         super::marker::acquire(path, &super::marker::MarkerOpts::default())
+    }
+
+    pub fn try_acquire(path: &Path) -> io::Result<Option<Held>> {
+        match super::marker::try_acquire(path) {
+            Ok(held) => Ok(Some(held)),
+            Err(e) if e.kind() == io::ErrorKind::AlreadyExists => Ok(None),
+            Err(e) => Err(e),
+        }
     }
 }
 
@@ -168,6 +202,20 @@ pub mod marker {
     fn marker_age(marker: &Path) -> Option<Duration> {
         let modified = std::fs::metadata(marker).ok()?.modified().ok()?;
         SystemTime::now().duration_since(modified).ok()
+    }
+
+    /// One non-waiting attempt at the marker lock: a single exclusive
+    /// create of `<path>.held`. An existing marker surfaces as
+    /// [`io::ErrorKind::AlreadyExists`] — no staleness breaking, no
+    /// backoff (skip-if-busy callers should not steal even dead locks).
+    pub fn try_acquire(path: &Path) -> io::Result<Held> {
+        let _ = super::open_lock_file(path)?;
+        let marker = marker_path(path);
+        std::fs::OpenOptions::new()
+            .write(true)
+            .create_new(true)
+            .open(&marker)?;
+        Ok(Held { marker })
     }
 
     /// Acquire the marker lock on `<path>.held` with bounded waiting:
@@ -241,6 +289,39 @@ mod tests {
         }
         // Released on drop: a second acquire must not block.
         let _l2 = FileLock::acquire(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// `try_acquire` reports a held lock as `None` instead of waiting,
+    /// and takes the lock when it is free.
+    #[test]
+    fn try_acquire_skips_instead_of_waiting() {
+        let path = tmp("try");
+        let _ = std::fs::remove_file(&path);
+        let held = FileLock::acquire(&path).unwrap();
+        assert!(FileLock::try_acquire(&path).unwrap().is_none(), "held lock must skip");
+        drop(held);
+        let taken = FileLock::try_acquire(&path).unwrap();
+        assert!(taken.is_some(), "free lock must be taken");
+        drop(taken);
+        // And the non-blocking hold excludes a second try.
+        let _again = FileLock::try_acquire(&path).unwrap().unwrap();
+        assert!(FileLock::try_acquire(&path).unwrap().is_none());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// Marker-fallback flavor of the same semantics, pinned on every
+    /// platform: one create_new attempt, `AlreadyExists` when held.
+    #[test]
+    fn marker_try_acquire_single_attempt() {
+        let path = tmp("marker-try");
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(&marker_held_path(&path));
+        let held = marker::try_acquire(&path).unwrap();
+        let err = marker::try_acquire(&path).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::AlreadyExists);
+        drop(held);
+        let _again = marker::try_acquire(&path).unwrap();
         let _ = std::fs::remove_file(&path);
     }
 

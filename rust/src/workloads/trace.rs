@@ -457,6 +457,11 @@ impl TraceStore {
             e.last_use = tick;
             return Arc::clone(&e.trace);
         }
+        // Chaos hook (`trace.generate`, keyed by the app-model name):
+        // a `panic` rule simulates generation dying mid-fill — the lock
+        // recovery above keeps later cells usable; a `delay` rule
+        // simulates a slow cold fill serializing its waiters.
+        crate::util::fault::point("trace.generate", model.name);
         let trace = Arc::new(EpochTrace::generate(model, epochs, seed));
         self.counters.generated.inc();
         if trace.bytes() > self.budget {

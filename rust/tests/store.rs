@@ -1,0 +1,255 @@
+//! Layered result-store integration suite (ISSUE 9).
+//!
+//! Pins the store acceptance criteria from the outside — through the
+//! public `ResultCache` facade and real OS processes:
+//! - N in-process writer threads plus 2 separate OS processes inserting
+//!   overlapping key ranges leave, after compaction, exactly one line
+//!   per key (no duplicates), and the winning entries are stable across
+//!   reload + re-compaction (first-insert-wins is durable);
+//! - a process killed *mid-compaction* (between the temp-file write and
+//!   the rename, via the `store.compact.io` panic hook) leaves a store
+//!   the next process loads completely and compacts cleanly;
+//! - duplicate keys across two seal-only segments resolve to the
+//!   earlier segment's entry, matching the in-memory first-insert-wins
+//!   rule.
+//!
+//! Cross-process writers reuse this test binary: `child_writer_role` is
+//! a no-op under `cargo test`, and becomes a writer when spawned with
+//! `CXLMEM_STORE_CHILD=<dir>|<writer-id>` in the environment.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use cxlmem::scenario::cache::{merged_store_text, STORE_FILE};
+use cxlmem::scenario::{ResultCache, ScenarioResult};
+use cxlmem::util::fault;
+use cxlmem::util::json::Json;
+
+const CHILD_ENV: &str = "CXLMEM_STORE_CHILD";
+const KEYS: usize = 60;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("cxlmem-store-it-{tag}-{}", std::process::id()))
+}
+
+fn keys() -> Vec<String> {
+    (0..KEYS).map(|i| format!("k{i:03}")).collect()
+}
+
+/// Every writer uses the same canonical spec per key (so any writer's
+/// entry verifies on lookup) but a writer-specific result document (so
+/// duplicates would be visible as distinct lines).
+fn canon(key: &str) -> String {
+    format!("spec-{key}")
+}
+
+fn result_for(key: &str, writer: &str) -> ScenarioResult {
+    ScenarioResult {
+        name: format!("scenario-{key}"),
+        experiment: None,
+        doc: Json::obj(vec![("writer", writer.into()), ("key", key.into())]),
+    }
+}
+
+fn segment_names(dir: &Path) -> Vec<String> {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return Vec::new();
+    };
+    let mut out: Vec<String> = entries
+        .filter_map(|e| e.ok())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .filter(|n| n.starts_with("seg-") && n.ends_with(".jsonl"))
+        .collect();
+    out.sort();
+    out
+}
+
+/// Keys of a store text, asserting each appears exactly once.
+fn unique_keys(text: &str) -> BTreeSet<String> {
+    let mut seen = BTreeSet::new();
+    for line in text.lines() {
+        let doc = Json::parse(line).expect("store line parses");
+        let key = doc.get("key").and_then(Json::as_str).expect("line has a key").to_string();
+        assert!(seen.insert(key.clone()), "duplicate key {key} in store text");
+    }
+    seen
+}
+
+/// Writer role for the cross-process test: inserts every key in three
+/// flushed chunks when `CXLMEM_STORE_CHILD=<dir>|<id>` is set, no-op
+/// otherwise (the normal `cargo test` invocation).
+#[test]
+fn child_writer_role() {
+    let Ok(spec) = std::env::var(CHILD_ENV) else {
+        return;
+    };
+    let (dir, writer) = spec.split_once('|').expect("CXLMEM_STORE_CHILD wants <dir>|<id>");
+    let mut cache = ResultCache::open(Path::new(dir)).expect("child cache open");
+    for (i, key) in keys().iter().enumerate() {
+        cache.insert(key.clone(), canon(key), &result_for(key, writer));
+        if (i + 1) % 20 == 0 {
+            cache.flush().expect("child flush");
+        }
+    }
+    cache.flush().expect("child flush");
+}
+
+fn spawn_child(dir: &Path, id: usize) -> std::process::Child {
+    Command::new(std::env::current_exe().expect("test binary path"))
+        .args(["child_writer_role", "--exact", "--nocapture"])
+        .env(CHILD_ENV, format!("{}|child-{id}", dir.display()))
+        .spawn()
+        .expect("spawn child writer")
+}
+
+/// 3 threads + 2 OS processes, all inserting the same 60 keys: after
+/// the final compaction the store holds each key exactly once, lookups
+/// verify for every key, and the winning lines are stable across a
+/// reload and a second compaction.
+#[test]
+fn concurrent_threads_and_processes_one_line_per_key() {
+    let dir = tmp_dir("concurrent");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let children: Vec<_> = (0..2).map(|i| spawn_child(&dir, i)).collect();
+    let mut cache = ResultCache::open(&dir).expect("cache open");
+    std::thread::scope(|s| {
+        for t in 0..3 {
+            let handle = cache.handle();
+            s.spawn(move || {
+                for (i, key) in keys().iter().enumerate() {
+                    handle.insert(key, canon(key), &result_for(key, &format!("thread-{t}")));
+                    if (i + 1) % 20 == 0 {
+                        handle.seal().expect("seal");
+                    }
+                }
+                handle.seal().expect("seal");
+            });
+        }
+    });
+    for child in children {
+        let status = child.wait_with_output().expect("child writer exit");
+        assert!(status.status.success(), "child writer failed: {status:?}");
+    }
+
+    let stats = cache.compact().expect("final compaction");
+    assert_eq!(stats.keys, KEYS, "compaction must fold every key");
+    assert!(segment_names(&dir).is_empty(), "compaction must consume all segments");
+
+    let text = merged_store_text(&dir).expect("store text");
+    let expected: BTreeSet<String> = keys().into_iter().collect();
+    assert_eq!(unique_keys(&text), expected, "one line per key, no more");
+
+    // First-insert-wins is durable: a fresh process adopts the same
+    // winners (every lookup verifies) and re-compaction changes nothing.
+    let mut fresh = ResultCache::open(&dir).expect("reopen");
+    assert_eq!(fresh.len(), KEYS);
+    for key in keys() {
+        let hit = fresh.lookup(&key, &canon(&key));
+        assert!(hit.is_some(), "key {key} must verify after reload");
+    }
+    assert_eq!(fresh.hits(), KEYS as u64);
+    assert_eq!(fresh.misses(), 0);
+    fresh.compact().expect("idempotent compaction");
+    assert_eq!(
+        std::fs::read_to_string(dir.join(STORE_FILE)).unwrap(),
+        text,
+        "re-compaction must be byte-stable"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A compaction killed between the temp-file write and the rename (the
+/// `store.compact.io` panic window) must leave a store the next opener
+/// loads completely and compacts cleanly.
+#[test]
+fn crash_mid_compaction_leaves_a_loadable_store() {
+    let dir = tmp_dir("crash");
+    let _ = std::fs::remove_dir_all(&dir);
+    let leaf = dir.file_name().unwrap().to_string_lossy().into_owned();
+
+    let mut cache = ResultCache::open(&dir).expect("cache open");
+    cache.set_compact_every(0);
+    for key in ["c1", "c2"] {
+        cache.insert(key.to_string(), canon(key), &result_for(key, "pre-crash"));
+    }
+    cache.flush().expect("seal-only flush");
+    assert_eq!(segment_names(&dir).len(), 1, "seal-only flush leaves one segment");
+    assert!(!dir.join(STORE_FILE).exists(), "nothing compacted yet");
+
+    // The key filter is this test's unique directory name, so the rule
+    // can never fire for concurrently running tests in this binary.
+    fault::install(fault::FaultPlan::parse(&format!("store.compact.io/{leaf}=panic:1")).unwrap());
+    let crashed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| cache.compact()));
+    let fired = fault::fired("store.compact.io");
+    fault::clear();
+    assert!(crashed.is_err(), "the panic rule must kill the compaction");
+    assert_eq!(fired, 1);
+    drop(cache);
+
+    // The crash window: temp file written, rename never happened.
+    assert!(dir.join("results.jsonl.tmp").exists(), "crash left the temp file");
+    assert!(!dir.join(STORE_FILE).exists(), "rename must not have happened");
+    assert_eq!(segment_names(&dir).len(), 1, "the segment must survive the crash");
+
+    // Recovery: a fresh process sees every entry and compacts cleanly.
+    let mut fresh = ResultCache::open(&dir).expect("post-crash open");
+    assert_eq!(fresh.len(), 2);
+    for key in ["c1", "c2"] {
+        assert!(fresh.lookup(key, &canon(key)).is_some(), "{key} must survive the crash");
+    }
+    let stats = fresh.compact().expect("recovery compaction");
+    assert_eq!((stats.segments, stats.keys, stats.rewrote), (1, 2, true));
+    assert!(segment_names(&dir).is_empty());
+    assert!(!dir.join("results.jsonl.tmp").exists(), "recovery consumed the temp file");
+    let text = std::fs::read_to_string(dir.join(STORE_FILE)).unwrap();
+    assert_eq!(unique_keys(&text).len(), 2);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Two seal-only writers record the same key in different segments: the
+/// earlier segment (lexicographically smaller name = earlier seal) wins
+/// at compaction, mirroring the in-memory first-insert-wins rule.
+#[test]
+fn duplicate_keys_across_segments_resolve_to_the_earlier_seal() {
+    let dir = tmp_dir("dup-seal");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // Both handles open on an empty store, so neither knows about the
+    // other's entry for "shared" — exactly the cross-process race.
+    let mut a = ResultCache::open(&dir).expect("writer A open");
+    a.set_compact_every(0);
+    let mut b = ResultCache::open(&dir).expect("writer B open");
+    b.set_compact_every(0);
+
+    a.insert("shared".into(), canon("shared"), &result_for("shared", "writer-a"));
+    a.insert("only-a".into(), canon("only-a"), &result_for("only-a", "writer-a"));
+    a.flush().expect("A seal");
+    b.insert("shared".into(), canon("shared"), &result_for("shared", "writer-b"));
+    b.insert("only-b".into(), canon("only-b"), &result_for("only-b", "writer-b"));
+    b.flush().expect("B seal");
+    let segments = segment_names(&dir);
+    assert_eq!(segments.len(), 2, "each seal-only flush leaves its own segment");
+
+    let mut c = ResultCache::open(&dir).expect("compactor open");
+    let stats = c.compact().expect("compaction");
+    assert_eq!((stats.segments, stats.keys), (2, 3));
+    let text = std::fs::read_to_string(dir.join(STORE_FILE)).unwrap();
+    assert_eq!(
+        unique_keys(&text),
+        BTreeSet::from(["shared".to_string(), "only-a".to_string(), "only-b".to_string()])
+    );
+    let shared_line = text.lines().find(|l| l.contains("\"shared\"")).expect("shared key present");
+    let doc = Json::parse(shared_line).unwrap();
+    let winner = doc
+        .get("result")
+        .and_then(|r| r.get("writer"))
+        .and_then(Json::as_str)
+        .expect("result carries the writer tag");
+    assert_eq!(winner, "writer-a", "the earlier segment's entry must win");
+    // The adopted view agrees with the durable one.
+    let got = c.lookup("shared", &canon("shared")).expect("shared verifies");
+    assert_eq!(got.get("writer").and_then(Json::as_str), Some("writer-a"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
