@@ -6,12 +6,12 @@
 # engine checks, the result-cache smoke, the two-process shard smoke,
 # the layered-store seal/compact smoke, the metrics-registry smoke, the
 # chaos/fault-isolation smoke, the shared epoch-trace store smoke, the
-# million-page scale smoke, and a formatting check. Mirrors
-# .github/workflows/ci.yml.
+# million-page scale smoke, the serve-daemon smoke, and a formatting
+# check. Mirrors .github/workflows/ci.yml.
 
-.PHONY: ci build test bench-smoke bench bench-check fmt-check exp-all scenario-check cache-smoke shard-smoke store-smoke metrics-smoke chaos-smoke trace-smoke scale-smoke
+.PHONY: ci build test bench-smoke bench bench-check fmt-check exp-all scenario-check cache-smoke shard-smoke store-smoke metrics-smoke chaos-smoke trace-smoke scale-smoke serve-smoke
 
-ci: build test bench-check scenario-check cache-smoke shard-smoke store-smoke metrics-smoke chaos-smoke trace-smoke scale-smoke fmt-check
+ci: build test bench-check scenario-check cache-smoke shard-smoke store-smoke metrics-smoke chaos-smoke trace-smoke scale-smoke serve-smoke fmt-check
 
 build:
 	cargo build --release
@@ -128,7 +128,10 @@ metrics-smoke: build
 # JSONL byte-identical to a never-faulted run. Then the CLI path: an
 # --inject-faults run exits 0 with the error document embedded,
 # `scenario report --expect` reconciles the coverage, and a clean
-# re-run over the same cache heals byte-identically.
+# re-run over the same cache heals byte-identically. Finally the serve
+# stage: an injected admission panic in the daemon must answer exactly
+# that one request with an error document while the daemon keeps
+# serving, and a re-submit (the panic rule consumed) heals cleanly.
 chaos-smoke: build
 	./target/release/cxlmem chaos-smoke
 	rm -rf /tmp/cxlmem-chaos-cli && mkdir -p /tmp/cxlmem-chaos-cli
@@ -140,12 +143,43 @@ chaos-smoke: build
 	./target/release/cxlmem scenario run /tmp/cxlmem-chaos-cli/fleet.jsonl --jobs 2 --no-cache --out /tmp/cxlmem-chaos-cli/clean.jsonl
 	cmp /tmp/cxlmem-chaos-cli/healed.jsonl /tmp/cxlmem-chaos-cli/clean.jsonl
 	rm -rf /tmp/cxlmem-chaos-cli
+	rm -rf /tmp/cxlmem-chaos-serve && mkdir -p /tmp/cxlmem-chaos-serve
+	./target/release/cxlmem scenario expand examples/scenarios/fleet.json --count 4 --seed 9 --out /tmp/cxlmem-chaos-serve/fleet.jsonl
+	./target/release/cxlmem scenario serve /tmp/cxlmem-chaos-serve/cache --socket /tmp/cxlmem-chaos-serve/serve.sock --jobs 2 --inject-faults "serve.admit/fleet-002=panic:1" & pid=$$!; \
+	for i in $$(seq 1 100); do test -S /tmp/cxlmem-chaos-serve/serve.sock && break; sleep 0.1; done; \
+	./target/release/cxlmem scenario submit /tmp/cxlmem-chaos-serve/fleet.jsonl --socket /tmp/cxlmem-chaos-serve/serve.sock --out /tmp/cxlmem-chaos-serve/faulted.jsonl || exit 1; \
+	./target/release/cxlmem scenario submit /tmp/cxlmem-chaos-serve/fleet.jsonl --socket /tmp/cxlmem-chaos-serve/serve.sock --out /tmp/cxlmem-chaos-serve/healed.jsonl || exit 1; \
+	./target/release/cxlmem scenario submit --shutdown --socket /tmp/cxlmem-chaos-serve/serve.sock > /dev/null || exit 1; \
+	wait $$pid
+	grep -c "cxlmem-result-error-v1" /tmp/cxlmem-chaos-serve/faulted.jsonl | grep -qx 1
+	! grep -q "cxlmem-result-error-v1" /tmp/cxlmem-chaos-serve/healed.jsonl
+	rm -rf /tmp/cxlmem-chaos-serve
 
 # Shared epoch-trace store gate: fig16 twice in one process must emit
 # byte-identical reports from a single trace generation per app
 # (counter via TraceStore::stats; the second run is pure Arc replays).
 trace-smoke: build
 	./target/release/cxlmem trace-smoke
+
+# Serve-daemon gate: a fleet submitted to the long-lived daemon must
+# answer byte-identically to a batch `scenario run` of the same specs —
+# cold (the daemon evaluates) and warm (pure resident-store hits) —
+# the `stats` verb must report live counters over the same socket, and
+# `--shutdown` must drain cleanly (exit 0 via wait).
+serve-smoke: build
+	rm -rf /tmp/cxlmem-serve-smoke && mkdir -p /tmp/cxlmem-serve-smoke
+	./target/release/cxlmem scenario expand examples/scenarios/fleet.json --count 6 --seed 17 --out /tmp/cxlmem-serve-smoke/fleet.jsonl
+	./target/release/cxlmem scenario run /tmp/cxlmem-serve-smoke/fleet.jsonl --jobs 2 --no-cache --out /tmp/cxlmem-serve-smoke/batch.jsonl
+	./target/release/cxlmem scenario serve /tmp/cxlmem-serve-smoke/cache --socket /tmp/cxlmem-serve-smoke/serve.sock --jobs 2 & pid=$$!; \
+	for i in $$(seq 1 100); do test -S /tmp/cxlmem-serve-smoke/serve.sock && break; sleep 0.1; done; \
+	./target/release/cxlmem scenario submit /tmp/cxlmem-serve-smoke/fleet.jsonl --socket /tmp/cxlmem-serve-smoke/serve.sock --out /tmp/cxlmem-serve-smoke/cold.jsonl || exit 1; \
+	./target/release/cxlmem scenario submit /tmp/cxlmem-serve-smoke/fleet.jsonl --socket /tmp/cxlmem-serve-smoke/serve.sock --out /tmp/cxlmem-serve-smoke/warm.jsonl || exit 1; \
+	./target/release/cxlmem scenario submit --stats --socket /tmp/cxlmem-serve-smoke/serve.sock | grep -q "cxlmem-serve-stats-v1" || exit 1; \
+	./target/release/cxlmem scenario submit --shutdown --socket /tmp/cxlmem-serve-smoke/serve.sock > /dev/null || exit 1; \
+	wait $$pid
+	cmp /tmp/cxlmem-serve-smoke/cold.jsonl /tmp/cxlmem-serve-smoke/batch.jsonl
+	cmp /tmp/cxlmem-serve-smoke/warm.jsonl /tmp/cxlmem-serve-smoke/batch.jsonl
+	rm -rf /tmp/cxlmem-serve-smoke
 
 # Million-page scale gate: one 1M-page fig16 cell must be bit-identical
 # across chunked-vs-sequential epoch passes and delta-vs-dense trace

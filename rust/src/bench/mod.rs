@@ -38,7 +38,12 @@
 //! `scenario/cache(contended flush)` (8 writers × 1k entries flushing
 //! into one store: the flock-era append path, kept as
 //! [`crate::scenario::store::legacy`], vs layered seal-only writes plus
-//! one final compaction — the store refactor's headline ratio).
+//! one final compaction — the store refactor's headline ratio), and
+//! `scenario/serve(warm vs cold)` (one fleet submitted to a warm
+//! long-lived daemon over its Unix socket vs the same specs as cold
+//! one-shot `scenario run` processes — the serve daemon's headline
+//! ratio; needs the `cxlmem` binary, so it records only under
+//! `cxlmem bench`, not the cargo-bench harness).
 //! `tiering/epoch_counts(Graph500)` times per-epoch histogram
 //! *production* — seed-style full regeneration vs the incremental copy —
 //! with the (mode-shared) hot-set drift untimed between epochs.
@@ -135,6 +140,8 @@ const SHARED_TRACE_NAME: &str = "exp/fig16(shared trace)";
 const GRID_NAME: &str = "exp/fig16(policy x placement grid)";
 const SCENARIO_CACHE_NAME: &str = "scenario/cache(fleet re-run)";
 const CACHE_FLUSH_NAME: &str = "scenario/cache(contended flush)";
+#[cfg(unix)]
+const SERVE_NAME: &str = "scenario/serve(warm vs cold)";
 const EXP_ALL_NAME: &str = "exp/all";
 
 /// Run the full suite. Prints one line per measurement as it completes.
@@ -658,6 +665,119 @@ pub fn run_suite(opts: &BenchOpts) -> BenchReport {
              ({writers} writers x {per} entries, flush every {flush_every})"
         );
         speedups.push((CACHE_FLUSH_NAME.to_string(), legacy_s / layered_s.max(1e-12)));
+    }
+
+    // --- scenario serve: warm daemon vs cold one-shot processes ---
+    // The serve daemon's headline ratio: one fleet of N specs submitted
+    // over the daemon's Unix socket with caches warm (an untimed first
+    // pass populates the resident store) vs the same N specs as N
+    // concurrent cold `scenario run` processes, each paying process
+    // startup, a cold trace store, and a full evaluation. The cold side
+    // needs the real `cxlmem` binary, so the entry records only under
+    // `cxlmem bench` (the `make bench-check` path), not the cargo-bench
+    // harness.
+    #[cfg(unix)]
+    {
+        use crate::scenario::serve::{self, ServeOpts};
+        let count = if opts.smoke { 6 } else { 16 };
+        let template = Json::parse(&format!(
+            r#"{{"name": "bench-serve", "fleet": {{"count": {count}, "seed": 7}}}}"#
+        ))
+        .expect("internal fleet template");
+        let docs = crate::scenario::expand(&template, None, None).expect("fleet expansion");
+        let lines: Vec<String> = docs.iter().map(|d| d.to_string()).collect();
+        let exe = std::env::current_exe().ok().filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("cxlmem"))
+        });
+        match exe {
+            None => println!(
+                "{SERVE_NAME}: skipped — the cold side needs the cxlmem binary \
+                 (run `cxlmem bench`, e.g. via `make bench-check`)"
+            ),
+            Some(exe) => {
+                let dir =
+                    std::env::temp_dir().join(format!("cxlmem-bench-serve-{}", std::process::id()));
+                let _ = std::fs::remove_dir_all(&dir);
+                let cache = crate::scenario::ResultCache::open(&dir).expect("serve cache open");
+                let socket = dir.join("serve.sock");
+                let mut sopts = ServeOpts::new(&socket);
+                sopts.workers = opts.jobs.max(2);
+                sopts.queue_cap = 1024;
+                let daemon = std::thread::spawn(move || serve::run_serve(cache, &sopts));
+                serve::wait_ready(&socket, std::time::Duration::from_secs(10))
+                    .expect("serve daemon ready");
+                // Untimed warm-up: the cold evaluations that fill the
+                // resident store and the trace store.
+                let first = serve::request_lines(&socket, &lines).expect("serve warm-up pass");
+                let t0 = Instant::now();
+                let warm = serve::request_lines(&socket, &lines).expect("serve warm pass");
+                let warm_s = t0.elapsed().as_secs_f64();
+                assert_eq!(first, warm, "warm responses must match the evaluating pass");
+                serve::request_lines(&socket, &[r#"{"verb": "shutdown"}"#.to_string()])
+                    .expect("serve shutdown");
+                daemon
+                    .join()
+                    .expect("serve daemon thread")
+                    .expect("serve daemon exit");
+
+                // Cold side: one process per spec, all launched at once —
+                // the kernel gives the one-shots at least the daemon's
+                // parallelism, so the ratio isolates amortization, not
+                // scheduling.
+                let cold_dir = dir.join("cold");
+                std::fs::create_dir_all(&cold_dir).expect("cold dir");
+                let mut outs = Vec::with_capacity(lines.len());
+                let t0 = Instant::now();
+                let children: Vec<_> = lines
+                    .iter()
+                    .enumerate()
+                    .map(|(i, line)| {
+                        let spec = cold_dir.join(format!("spec-{i}.json"));
+                        let out = cold_dir.join(format!("out-{i}.jsonl"));
+                        std::fs::write(&spec, format!("{line}\n")).expect("cold spec write");
+                        let child = std::process::Command::new(&exe)
+                            .arg("scenario")
+                            .arg("run")
+                            .arg(&spec)
+                            .arg("--no-cache")
+                            .arg("--jobs")
+                            .arg("1")
+                            .arg("--out")
+                            .arg(&out)
+                            .stdout(std::process::Stdio::null())
+                            .stderr(std::process::Stdio::null())
+                            .spawn()
+                            .expect("cold scenario run spawn");
+                        outs.push(out);
+                        child
+                    })
+                    .collect();
+                for mut child in children {
+                    let status = child.wait().expect("cold scenario run wait");
+                    assert!(status.success(), "cold scenario run failed: {status}");
+                }
+                let cold_s = t0.elapsed().as_secs_f64();
+                let mut cold_cat = String::new();
+                for out in &outs {
+                    cold_cat.push_str(&std::fs::read_to_string(out).expect("cold output read"));
+                }
+                let mut warm_cat = warm.join("\n");
+                warm_cat.push('\n');
+                assert_eq!(
+                    cold_cat, warm_cat,
+                    "daemon responses must be byte-identical to cold one-shot runs"
+                );
+                let _ = std::fs::remove_dir_all(&dir);
+                println!(
+                    "{SERVE_NAME} [cold one-shots]: {cold_s:.3} s, [warm daemon]: {warm_s:.4} s \
+                     ({count} requests, {} worker(s))",
+                    opts.jobs.max(2)
+                );
+                speedups.push((SERVE_NAME.to_string(), cold_s / warm_s.max(1e-12)));
+            }
+        }
     }
 
     // --- exp all wall clock: sequential reference vs parallel optimized ---

@@ -13,6 +13,11 @@
 //!                    [--metrics FILE]                         (fold in metrics sidecars)
 //!                    [--expect FILE] [--shards N]             (reconcile shard coverage)
 //! cxlmem scenario compact <cache dir>                         fold sealed segments into results.jsonl
+//! cxlmem scenario serve <cache dir> [--socket PATH]           long-lived eval daemon on a Unix socket
+//!                    [--jobs N] [--queue N] [--compact-every N]  (JSONL requests; warm caches resident)
+//!                    [--retries N] [--deadline-secs S]
+//! cxlmem scenario submit <files…|-> --socket PATH             send specs to a running daemon
+//!                    [--stats] [--shutdown] [--out FILE]      (or query/stop it)
 //! cxlmem bench [--smoke|--quick] [--jobs N] [--out FILE]      hot-path benchmarks → BENCH_hotpath.json
 //! cxlmem bench --validate FILE                                schema-check a BENCH_hotpath.json
 //! cxlmem stats [FILE|-] [--json]                              render a cxlmem-metrics-v1 snapshot
@@ -393,6 +398,111 @@ fn cmd_scenario(args: &Args) -> Result<()> {
             );
             emit_metrics(metrics.as_ref())
         }
+        "serve" => {
+            // The long-lived daemon: open the cache once, keep the trace
+            // store resident, answer spec JSONL over a Unix socket. See
+            // scenario::serve for the architecture.
+            let file = files.first().ok_or_else(|| {
+                anyhow!(
+                    "usage: cxlmem scenario serve <cache dir> [--socket PATH] [--jobs N] \
+                     [--queue N] [--compact-every N] [--retries N] [--deadline-secs S] \
+                     [--metrics FILE] [--inject-faults PLAN]"
+                )
+            })?;
+            let metrics = metrics_out(args)?;
+            install_faults(args)?;
+            let dir = std::path::PathBuf::from(file);
+            let mut cache = scenario::ResultCache::open(&dir)?;
+            if args.flag("compact-every") {
+                bail!("--compact-every requires an N argument (0 = seal only, 1 = every flush)");
+            }
+            if let Some(n) = args.get("compact-every") {
+                let n: u64 = n
+                    .parse()
+                    .map_err(|_| anyhow!("--compact-every wants an integer, got '{n}'"))?;
+                cache.set_compact_every(n);
+            }
+            if args.flag("socket") {
+                bail!("--socket requires a PATH argument");
+            }
+            if args.flag("queue") {
+                bail!("--queue requires an N argument (admission bound)");
+            }
+            let socket = args
+                .get("socket")
+                .map(std::path::PathBuf::from)
+                .unwrap_or_else(|| dir.join("serve.sock"));
+            let mut opts = scenario::serve::ServeOpts::new(socket);
+            opts.workers = args.get_usize("jobs", cxlmem::perf::default_jobs());
+            opts.queue_cap = args.get_usize("queue", scenario::serve::DEFAULT_QUEUE_CAP);
+            opts.supervise = supervise_opts(args)?;
+            eprintln!(
+                "serving {} on {} ({} worker(s), queue {})",
+                dir.display(),
+                opts.socket.display(),
+                opts.workers,
+                opts.queue_cap
+            );
+            scenario::serve::run_serve(cache, &opts)?;
+            eprintln!("serve: drained and stopped");
+            emit_metrics(metrics.as_ref())
+        }
+        "submit" => {
+            // The line client: one connection, one response line per
+            // request line, in request order. `--stats`/`--shutdown`
+            // send the corresponding verb instead of spec documents.
+            if args.flag("socket") {
+                bail!("--socket requires a PATH argument");
+            }
+            let Some(socket) = args.get("socket") else {
+                bail!(
+                    "usage: cxlmem scenario submit <files...|-> --socket PATH \
+                     [--out FILE] [--stats] [--shutdown]"
+                );
+            };
+            let socket = std::path::PathBuf::from(socket);
+            let verb_line = if args.flag("stats") {
+                Some(r#"{"verb": "stats"}"#.to_string())
+            } else if args.flag("shutdown") {
+                Some(r#"{"verb": "shutdown"}"#.to_string())
+            } else {
+                None
+            };
+            let lines = match verb_line {
+                Some(line) => vec![line],
+                None => {
+                    if files.is_empty() {
+                        bail!(
+                            "usage: cxlmem scenario submit <files...|-> --socket PATH \
+                             [--out FILE] [--stats] [--shutdown]"
+                        );
+                    }
+                    let mut lines = Vec::new();
+                    for file in files {
+                        let text = if file == "-" {
+                            let mut buf = String::new();
+                            std::io::Read::read_to_string(&mut std::io::stdin(), &mut buf)?;
+                            buf
+                        } else {
+                            std::fs::read_to_string(file)
+                                .with_context(|| format!("reading {file}"))?
+                        };
+                        for doc in
+                            scenario::docs_of(&text).map_err(|e| anyhow!("{file}: {e}"))?
+                        {
+                            lines.push(doc.to_string());
+                        }
+                    }
+                    lines
+                }
+            };
+            let responses = scenario::serve::request_lines(&socket, &lines)?;
+            let mut out = responses.join("\n");
+            if !out.is_empty() {
+                out.push('\n');
+            }
+            write_or_print(args, &out)
+        }
         _ => {
             println!(
                 "cxlmem scenario — declarative scenario engine\n\
@@ -409,6 +519,11 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                  \x20 cxlmem scenario report <results.jsonl|cache dir|-> [--csv|--json] [--out FILE]\n\
                  \x20\x20\x20\x20 [--metrics FILE] [--expect FILE] [--shards N]\n\
                  \x20 cxlmem scenario compact <cache dir> [--metrics FILE]\n\
+                 \x20 cxlmem scenario serve <cache dir> [--socket PATH] [--jobs N] [--queue N]\n\
+                 \x20\x20\x20\x20 [--compact-every N] [--retries N] [--deadline-secs S]\n\
+                 \x20\x20\x20\x20 [--metrics FILE] [--inject-faults PLAN]\n\
+                 \x20 cxlmem scenario submit <files...|-> --socket PATH [--out FILE]\n\
+                 \x20\x20\x20\x20 [--stats] [--shutdown]\n\
                  \n\
                  `run` serves repeated specs from the content-addressed result cache\n\
                  (default {}; key = canonical spec hash — see README 'Result cache').\n\
@@ -433,6 +548,13 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                  best policy per device profile, win matrix, quantiles, OLI gains, and\n\
                  error documents by kind and shard; `--expect FILE [--shards N]`\n\
                  reconciles expected-vs-present coverage per shard.\n\
+                 `serve` keeps a fleet evaluator resident: specs go in as JSONL over a\n\
+                 Unix domain socket (default <cache dir>/serve.sock) and come back as\n\
+                 the same result/error documents `run` emits, byte-identical, with warm\n\
+                 caches and the trace store amortized across requests. A bounded\n\
+                 admission queue (--queue, default 256) answers overload with queue-full\n\
+                 error documents; a {{\"verb\": \"stats\"}} line returns live counters and\n\
+                 {{\"verb\": \"shutdown\"}} drains and stops. `submit` is the line client.\n\
                  `run`/`bench` accept `--metrics FILE` ('-' for stderr) to capture a\n\
                  cxlmem-metrics-v1 registry snapshot; `report --metrics FILE` folds\n\
                  sidecars into the summary (hit rates, queue depth, eval quantiles).\n\
@@ -1174,8 +1296,9 @@ fn cmd_info() -> Result<()> {
     }
     println!("systems: A, B, C (see `cxlmem exp table1`)");
     println!(
-        "verbs: exp, scenario (validate|expand|run|bench|report), bench, stats, \
-         metrics-smoke, chaos-smoke, trace-smoke, scale-smoke, train, serve, info"
+        "verbs: exp, scenario (validate|expand|run|bench|report|compact|serve|submit), \
+         bench, stats, metrics-smoke, chaos-smoke, trace-smoke, scale-smoke, train, \
+         serve, info"
     );
     println!(
         "fault injection: {} (`--inject-faults PLAN` on scenario run; see README \
@@ -1204,7 +1327,8 @@ fn print_help() {
          \n\
          USAGE:\n\
          \x20 cxlmem exp <id|all> [--csv|--json] [--out FILE] [--jobs N] [--metrics FILE]\n\
-         \x20 cxlmem scenario validate|expand|run|bench|report|compact ... (see `cxlmem scenario help`)\n\
+         \x20 cxlmem scenario validate|expand|run|bench|report|compact|serve|submit ...\n\
+         \x20\x20\x20\x20 (see `cxlmem scenario help`)\n\
          \x20 cxlmem bench [--smoke|--quick] [--jobs N] [--out FILE] [--validate FILE]\n\
          \x20 cxlmem stats [FILE|-] [--json] [--validate FILE]\n\
          \x20 cxlmem metrics-smoke [--count N] [--jobs N]\n\

@@ -32,6 +32,12 @@
 //!   flushes sealed as uniquely-named `seg-*.jsonl` segments, and a
 //!   compactor folding them back into `results.jsonl`; the advisory
 //!   lock survives only for compaction and cross-process adoption.
+//! - [`serve`] — the long-lived evaluation daemon (`scenario serve`):
+//!   scenario specs as JSONL over a Unix domain socket, a bounded
+//!   admission queue with queue-full backpressure, a worker pool over
+//!   `StoreHandle` clones (warm hits are one atomic load), in-flight
+//!   dedup, and live counters via a `stats` verb; `scenario submit` is
+//!   the line client. Responses are byte-identical to a batch run.
 //! - [`shard`] — deterministic cross-process splits (`--shard K/N`,
 //!   input-index modulo): N processes run disjoint slices of one
 //!   expanded fleet and rendezvous in a shared cache directory; a
@@ -49,6 +55,10 @@
 //!          [--shard K/N] [--no-cache] [--cache-dir D] default .cxlmem-cache/)
 //! scenario bench [--count N] [--jobs N] [--cache]     fleet throughput probe
 //! scenario report <results.jsonl|cache dir>           fleet summary tables
+//! scenario serve <cache-dir> [--socket P] [--jobs N]  long-lived eval daemon
+//!          [--queue N] [--retries N] [--deadline-secs S]
+//! scenario submit <files…|-> --socket P [--out F]     send specs to a daemon
+//!          [--stats] [--shutdown]
 //! ```
 //!
 //! The bundled files under `examples/scenarios/` re-express every
@@ -60,6 +70,7 @@ pub mod cache;
 pub mod eval;
 pub mod expand;
 pub mod report;
+pub mod serve;
 pub mod shard;
 pub mod spec;
 pub mod store;

@@ -1,0 +1,456 @@
+//! `cxlmem scenario serve` — a long-lived fleet-evaluation daemon.
+//!
+//! One-shot `scenario run` invocations pay process startup plus a cold
+//! [`crate::workloads::trace::TraceStore`] and
+//! [`crate::scenario::ResultCache`] on every request. The daemon
+//! amortizes all three across thousands of requests: it opens the cache
+//! directory once, keeps the trace store resident, and answers requests
+//! over a Unix domain socket ([`protocol`]: JSONL in, JSONL out — spec
+//! documents plus the `stats` and `shutdown` verbs).
+//!
+//! Architecture (one module per concern):
+//!
+//! - **listener** (this file): a non-blocking accept loop; each
+//!   connection gets a reader thread and an in-request-order delivery
+//!   sink. Chaos point `serve.accept` (key `conn-N`) drops exactly one
+//!   connection. Between accepts the loop flushes the cache (sealing
+//!   pending results into segments; compaction per `--compact-every`
+//!   runs on the store's background compactor) and trims the trace
+//!   store to its watermark.
+//! - **[`queue`]**: the bounded admission queue. A full queue answers
+//!   that request with a `cxlmem-result-error-v1` document (kind `io`,
+//!   "admission queue full") instead of stalling the socket; depth is
+//!   mirrored into the `serve.queue_depth` gauge. Chaos point
+//!   `serve.admit` (key = spec name) fails one admission the same way
+//!   (kind `panic`) while the daemon keeps serving.
+//! - **[`worker`]**: the evaluation pool over
+//!   [`crate::util::par::spawn_worker`]. Each worker owns a
+//!   [`crate::scenario::cache::StoreHandle`] clone (warm hits are one
+//!   atomic load plus a cascade walk, no flock), dedups in-flight
+//!   identical requests onto one evaluation, and evaluates under the
+//!   supervision envelope (`catch_unwind`, retries, cancellable
+//!   `--deadline-secs`).
+//! - **[`protocol`]**: request parsing, the `stats` document
+//!   ([`STATS_SCHEMA`]), and the shutdown ack.
+//!
+//! Responses are byte-identical to a batch run of the same specs
+//! (pinned by `make serve-smoke` and `rust/tests/serve.rs`): results
+//! and errors go through the same document builders, and the JSON
+//! renderer is canonical (sorted keys, stable float formatting).
+//!
+//! Only Unix targets have `AF_UNIX` sockets in std; elsewhere
+//! [`run_serve`] and the client helpers return an error.
+
+mod protocol;
+mod queue;
+mod worker;
+
+pub use protocol::{shutdown_ack, validate_stats_doc, STATS_SCHEMA};
+
+use std::path::PathBuf;
+
+use super::cache::ResultCache;
+use super::supervise::SuperviseOpts;
+
+/// Default admission-queue bound (`--queue`).
+pub const DEFAULT_QUEUE_CAP: usize = 256;
+
+/// Daemon configuration (`cxlmem scenario serve`).
+pub struct ServeOpts {
+    /// Unix-domain socket path to bind (`--socket`).
+    pub socket: PathBuf,
+    /// Evaluation pool size (`--jobs`).
+    pub workers: usize,
+    /// Admission-queue bound (`--queue`).
+    pub queue_cap: usize,
+    /// Supervision policy applied to every evaluation
+    /// (`--retries`/`--deadline-secs`; `fail_fast` is ignored — a
+    /// daemon always isolates failures into error documents).
+    pub supervise: SuperviseOpts,
+}
+
+impl ServeOpts {
+    /// Defaults for `socket`: machine-parallel workers, a
+    /// [`DEFAULT_QUEUE_CAP`] queue, default supervision.
+    pub fn new(socket: impl Into<PathBuf>) -> ServeOpts {
+        ServeOpts {
+            socket: socket.into(),
+            workers: crate::perf::default_jobs(),
+            queue_cap: DEFAULT_QUEUE_CAP,
+            supervise: SuperviseOpts::default(),
+        }
+    }
+}
+
+#[cfg(unix)]
+pub use unix::{request_lines, run_serve, wait_ready};
+
+#[cfg(not(unix))]
+mod stub {
+    use super::{ResultCache, ServeOpts};
+    use std::path::Path;
+
+    /// Unsupported off-Unix: std has no `AF_UNIX` sockets here.
+    pub fn run_serve(_cache: ResultCache, _opts: &ServeOpts) -> anyhow::Result<()> {
+        anyhow::bail!("scenario serve requires Unix domain sockets (unix targets only)")
+    }
+
+    /// Unsupported off-Unix; see [`run_serve`].
+    pub fn request_lines(_socket: &Path, _lines: &[String]) -> anyhow::Result<Vec<String>> {
+        anyhow::bail!("scenario submit requires Unix domain sockets (unix targets only)")
+    }
+
+    /// Unsupported off-Unix; see [`run_serve`].
+    pub fn wait_ready(_socket: &Path, _timeout: std::time::Duration) -> anyhow::Result<()> {
+        anyhow::bail!("scenario serve requires Unix domain sockets (unix targets only)")
+    }
+}
+
+#[cfg(not(unix))]
+pub use stub::{request_lines, run_serve, wait_ready};
+
+#[cfg(unix)]
+mod unix {
+    use std::collections::{BTreeMap, HashMap};
+    use std::io::{BufRead, BufReader, Write};
+    use std::os::unix::net::{UnixListener, UnixStream};
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::path::Path;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::{Arc, Mutex};
+    use std::time::{Duration, Instant};
+
+    use anyhow::{bail, Context, Result};
+
+    use super::worker::{bump, Job, Respond, Shared};
+    use super::{protocol, queue::AdmissionQueue, worker, ResultCache, ServeOpts};
+    use crate::scenario::spec::ScenarioSpec;
+    use crate::scenario::supervise::{error_doc, panic_message, ErrorKind, Failure, SuperviseOpts};
+    use crate::util::fault;
+    use crate::util::json::Json;
+
+    /// Accept-loop poll granularity when idle.
+    const POLL_INTERVAL: Duration = Duration::from_millis(2);
+    /// How often the idle loop seals pending results and trims traces.
+    const FLUSH_INTERVAL: Duration = Duration::from_secs(1);
+
+    /// Run the daemon until a `shutdown` request: bind `opts.socket`,
+    /// accept connections, evaluate admitted specs on the worker pool,
+    /// then drain the queue, seal the store head, and remove the
+    /// socket file. Blocks the calling thread for the daemon's
+    /// lifetime.
+    pub fn run_serve(mut cache: ResultCache, opts: &ServeOpts) -> Result<()> {
+        let shared = Arc::new(Shared {
+            queue: AdmissionQueue::new(opts.queue_cap),
+            inflight: Mutex::new(HashMap::new()),
+            store: cache.handle(),
+            opts: SuperviseOpts {
+                fail_fast: false,
+                ..opts.supervise.clone()
+            },
+            counters: worker::Counters::default(),
+            shutdown: AtomicBool::new(false),
+        });
+        let workers: Vec<_> = (0..opts.workers.max(1))
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                crate::util::par::spawn_worker(&format!("cxlmem-serve-{i}"), move || {
+                    worker::worker_loop(shared)
+                })
+            })
+            .collect::<std::io::Result<_>>()
+            .context("spawning the serve worker pool")?;
+
+        if opts.socket.exists() {
+            // A stale socket from a dead daemon; a live one would fail
+            // the bind below anyway.
+            std::fs::remove_file(&opts.socket)
+                .with_context(|| format!("removing stale socket {}", opts.socket.display()))?;
+        }
+        let listener = UnixListener::bind(&opts.socket)
+            .with_context(|| format!("binding serve socket {}", opts.socket.display()))?;
+        listener
+            .set_nonblocking(true)
+            .context("setting the listener non-blocking")?;
+
+        let mut conn_n: u64 = 0;
+        let mut last_flush = Instant::now();
+        let served = loop {
+            if shared.shutdown.load(Ordering::Acquire) {
+                break Ok(());
+            }
+            match listener.accept() {
+                Ok((stream, _addr)) => {
+                    conn_n += 1;
+                    let conn_key = format!("conn-{conn_n}");
+                    // Chaos point: an injected accept panic drops exactly
+                    // this connection (the client sees EOF); the daemon
+                    // keeps serving.
+                    if catch_unwind(AssertUnwindSafe(|| fault::point("serve.accept", &conn_key)))
+                        .is_err()
+                    {
+                        continue;
+                    }
+                    bump(&shared.counters.connections, "serve.connections");
+                    let _ = stream.set_nonblocking(false);
+                    let shared = Arc::clone(&shared);
+                    let spawned = std::thread::Builder::new()
+                        .name(format!("cxlmem-serve-{conn_key}"))
+                        .spawn(move || handle_conn(stream, &shared));
+                    if let Err(e) = spawned {
+                        eprintln!("warning: serve: dropping {conn_key}: spawn failed: {e}");
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if last_flush.elapsed() >= FLUSH_INTERVAL {
+                        if let Err(e) = cache.flush() {
+                            eprintln!("warning: serve: periodic flush failed: {e:#}");
+                        }
+                        crate::workloads::trace::global().trim();
+                        last_flush = Instant::now();
+                    }
+                    std::thread::sleep(POLL_INTERVAL);
+                }
+                Err(e) => {
+                    break Err(e).context("accepting on the serve socket");
+                }
+            }
+        };
+
+        // Drain: stop admitting, let the pool finish queued work (every
+        // admitted request still gets its response), then seal the head.
+        shared.queue.close();
+        for w in workers {
+            let _ = w.join();
+        }
+        let flushed = cache.flush().context("sealing the store at shutdown");
+        let _ = std::fs::remove_file(&opts.socket);
+        served.and(flushed)
+    }
+
+    /// Per-connection reader: parse request lines, answer verbs inline,
+    /// admit specs to the queue. Responses flow through [`Delivery`] so
+    /// they leave in request order whatever order workers finish in.
+    fn handle_conn(stream: UnixStream, shared: &Arc<Shared>) {
+        let reader = match stream.try_clone() {
+            Ok(read_half) => BufReader::new(read_half),
+            Err(_) => return,
+        };
+        let delivery = Arc::new(Delivery::new(stream));
+        let mut seq: u64 = 0;
+        for line in reader.lines() {
+            let Ok(line) = line else { break };
+            let text = line.trim();
+            if text.is_empty() {
+                continue;
+            }
+            let this = seq;
+            seq += 1;
+            match protocol::parse_request(text) {
+                Err(e) => {
+                    bump(&shared.counters.errors, "serve.errors");
+                    let failure = Failure {
+                        kind: ErrorKind::Eval,
+                        message: format!("{e:#}"),
+                        attempts: 1,
+                    };
+                    delivery.deliver(this, doc_line(&error_doc("<request>", "-", &failure, None)));
+                }
+                Ok(protocol::Request::Stats) => {
+                    delivery.deliver(this, doc_line(&worker::stats_doc(shared)));
+                }
+                Ok(protocol::Request::Shutdown) => {
+                    // The ack takes its place in the per-connection
+                    // order: it flushes to the client after every
+                    // earlier request on this connection has answered,
+                    // which the drain in `run_serve` guarantees happens.
+                    delivery.deliver(this, doc_line(&protocol::shutdown_ack()));
+                    shared.shutdown.store(true, Ordering::Release);
+                    break;
+                }
+                Ok(protocol::Request::Spec(doc)) => admit(shared, &delivery, this, &doc),
+            }
+        }
+    }
+
+    /// Admit one spec request: validate, then try the bounded queue.
+    /// Failure modes answer *this* request with an error document and
+    /// leave the daemon serving: an invalid spec (kind `eval`), a full
+    /// queue (kind `io`, the backpressure signal), an injected
+    /// `serve.admit` panic (kind `panic`).
+    fn admit(shared: &Arc<Shared>, delivery: &Arc<Delivery>, seq: u64, doc: &Json) {
+        bump(&shared.counters.requests, "serve.requests");
+        let reject = |kind: ErrorKind, name: &str, key: &str, message: String| {
+            let failure = Failure {
+                kind,
+                message,
+                attempts: 1,
+            };
+            delivery.deliver(seq, doc_line(&error_doc(name, key, &failure, None)));
+        };
+        if crate::scenario::expand::is_template(doc) {
+            bump(&shared.counters.errors, "serve.errors");
+            let name = doc.get("name").and_then(Json::as_str).unwrap_or("<template>");
+            reject(
+                ErrorKind::Eval,
+                name,
+                "-",
+                "document is a sweep/fleet template — expand it first \
+                 (`cxlmem scenario expand`)"
+                    .to_string(),
+            );
+            return;
+        }
+        let spec = match ScenarioSpec::parse(doc) {
+            Ok(spec) => spec,
+            Err(e) => {
+                bump(&shared.counters.errors, "serve.errors");
+                let name = doc.get("name").and_then(Json::as_str).unwrap_or("<invalid>");
+                reject(ErrorKind::Eval, name, "-", format!("{e:#}"));
+                return;
+            }
+        };
+        let (key, canon) = spec.cache_identity();
+        let name = spec.name.clone();
+        let job = Job {
+            seq,
+            spec,
+            key: key.clone(),
+            canon,
+            reply: Arc::clone(delivery) as Arc<dyn Respond>,
+        };
+        match catch_unwind(AssertUnwindSafe(|| {
+            fault::point("serve.admit", &name);
+            shared.queue.try_push(job)
+        })) {
+            Ok(Ok(())) => {}
+            Ok(Err(_rejected)) => {
+                bump(&shared.counters.rejected, "serve.rejected");
+                reject(
+                    ErrorKind::Io,
+                    &name,
+                    &key,
+                    format!(
+                        "admission queue full ({} pending) — retry later",
+                        shared.queue.capacity()
+                    ),
+                );
+            }
+            Err(payload) => {
+                bump(&shared.counters.errors, "serve.errors");
+                reject(ErrorKind::Panic, &name, &key, panic_message(payload.as_ref()));
+            }
+        }
+    }
+
+    fn doc_line(doc: &Json) -> String {
+        format!("{doc}\n")
+    }
+
+    /// In-request-order response sink for one connection: workers
+    /// deliver `(seq, line)` in completion order; lines buffer in a
+    /// reorder map and flush to the socket as the contiguous prefix
+    /// grows. This is what makes a connection's response stream
+    /// byte-identical to a batch run over the same request order.
+    struct Delivery {
+        state: Mutex<DeliveryState>,
+    }
+
+    struct DeliveryState {
+        out: UnixStream,
+        next: u64,
+        pending: BTreeMap<u64, String>,
+    }
+
+    impl Delivery {
+        fn new(out: UnixStream) -> Delivery {
+            Delivery {
+                state: Mutex::new(DeliveryState {
+                    out,
+                    next: 0,
+                    pending: BTreeMap::new(),
+                }),
+            }
+        }
+    }
+
+    impl Respond for Delivery {
+        fn deliver(&self, seq: u64, line: String) {
+            let mut guard = self.state.lock().unwrap_or_else(|p| p.into_inner());
+            let st = &mut *guard;
+            st.pending.insert(seq, line);
+            let mut wrote = false;
+            while let Some(ready) = st.pending.remove(&st.next) {
+                // A vanished client can't cancel its queued work; keep
+                // draining so the reorder buffer stays bounded.
+                let _ = st.out.write_all(ready.as_bytes());
+                st.next += 1;
+                wrote = true;
+            }
+            if wrote {
+                let _ = st.out.flush();
+            }
+        }
+    }
+
+    /// Client side: send `lines` as one connection's requests and
+    /// collect exactly one response line per request, in request order
+    /// (trailing newlines stripped). Writes happen on a side thread so
+    /// a batch larger than the socket buffer cannot deadlock against
+    /// unread responses.
+    pub fn request_lines(socket: &Path, lines: &[String]) -> Result<Vec<String>> {
+        let stream = UnixStream::connect(socket)
+            .with_context(|| format!("connecting to serve socket {}", socket.display()))?;
+        let mut writer = stream.try_clone().context("cloning the socket stream")?;
+        let reader = BufReader::new(stream);
+        let mut body = String::new();
+        for line in lines {
+            body.push_str(line);
+            body.push('\n');
+        }
+        let writer_thread = std::thread::spawn(move || -> std::io::Result<()> {
+            writer.write_all(body.as_bytes())?;
+            writer.flush()
+        });
+        let want = lines.len();
+        let mut out = Vec::with_capacity(want);
+        for line in reader.lines() {
+            out.push(line.context("reading a daemon response")?);
+            if out.len() == want {
+                break;
+            }
+        }
+        match writer_thread.join() {
+            Ok(sent) => sent.context("sending requests to the daemon")?,
+            Err(_) => bail!("request writer thread panicked"),
+        }
+        if out.len() < want {
+            bail!(
+                "daemon closed the connection after {} of {want} response(s)",
+                out.len()
+            );
+        }
+        Ok(out)
+    }
+
+    /// Block until the daemon's socket accepts connections, up to
+    /// `timeout`. Note the successful probe counts as one accepted
+    /// connection on the daemon side (`conn-1` when called first).
+    pub fn wait_ready(socket: &Path, timeout: Duration) -> Result<()> {
+        let t0 = Instant::now();
+        loop {
+            match UnixStream::connect(socket) {
+                Ok(_probe) => return Ok(()),
+                Err(_) if t0.elapsed() < timeout => std::thread::sleep(Duration::from_millis(5)),
+                Err(e) => {
+                    return Err(e).with_context(|| {
+                        format!(
+                            "serve socket {} not ready after {timeout:?}",
+                            socket.display()
+                        )
+                    })
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,155 @@
+//! Wire protocol for the serve daemon.
+//!
+//! Requests and responses are newline-delimited JSON over one Unix
+//! domain socket connection. A request line is one of:
+//!
+//! - a **scenario spec** document (schema [`crate::scenario::SCHEMA`])
+//!   — answered with the evaluated `cxlmem-scenario-v1` result document
+//!   or a `cxlmem-result-error-v1` error document, byte-identical to
+//!   what the batch runner would emit for the same spec;
+//! - `{"verb": "stats"}` — answered with a [`STATS_SCHEMA`] counters
+//!   snapshot;
+//! - `{"verb": "shutdown"}` — answered with [`shutdown_ack`], then the
+//!   daemon stops accepting, drains its queue, and exits.
+//!
+//! Responses are delivered **in request order** per connection, one
+//! line per request line, whatever order the worker pool finishes in.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::Json;
+
+/// Schema identifier of the `stats` verb's response document.
+pub const STATS_SCHEMA: &str = "cxlmem-serve-stats-v1";
+
+/// One parsed request line.
+pub enum Request {
+    /// A scenario spec document to evaluate.
+    Spec(Json),
+    /// Live-counters snapshot request.
+    Stats,
+    /// Graceful drain-and-exit request.
+    Shutdown,
+}
+
+/// Parse one request line. Anything that is valid JSON without a
+/// `verb` field is treated as a spec document (validated at admission).
+pub fn parse_request(line: &str) -> Result<Request> {
+    let doc = Json::parse(line).map_err(|e| anyhow!("unparseable request line: {e}"))?;
+    if let Some(verb) = doc.get("verb").and_then(Json::as_str) {
+        return match verb {
+            "stats" => Ok(Request::Stats),
+            "shutdown" => Ok(Request::Shutdown),
+            other => bail!("unknown verb '{other}' (want stats|shutdown)"),
+        };
+    }
+    Ok(Request::Spec(doc))
+}
+
+/// The response to a `shutdown` request, sent before the drain begins.
+pub fn shutdown_ack() -> Json {
+    Json::obj(vec![("ok", true.into()), ("verb", "shutdown".into())])
+}
+
+/// Validate a parsed [`STATS_SCHEMA`] document — the gate tests and
+/// scripted clients apply to `stats` responses.
+pub fn validate_stats_doc(doc: &Json) -> Result<()> {
+    match doc.get("schema").and_then(Json::as_str) {
+        Some(s) if s == STATS_SCHEMA => {}
+        Some(s) => bail!("schema is '{s}', want '{STATS_SCHEMA}'"),
+        None => bail!("missing string field 'schema'"),
+    }
+    for field in [
+        "requests",
+        "evaluated",
+        "hits",
+        "dedup_inflight",
+        "rejected",
+        "errors",
+        "connections",
+    ] {
+        if doc.get(field).and_then(Json::as_u64).is_none() {
+            bail!("missing integer field '{field}'");
+        }
+    }
+    let rate = doc
+        .get("hit_rate")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow!("missing numeric field 'hit_rate'"))?;
+    if !(0.0..=1.0).contains(&rate) {
+        bail!("'hit_rate' must be in [0, 1] (got {rate})");
+    }
+    let queue = doc
+        .get("queue")
+        .ok_or_else(|| anyhow!("missing object field 'queue'"))?;
+    for field in ["depth", "hwm", "capacity"] {
+        if queue.get(field).and_then(Json::as_u64).is_none() {
+            bail!("missing integer field 'queue.{field}'");
+        }
+    }
+    if doc
+        .get("eval_policy_ns")
+        .and_then(Json::as_obj)
+        .is_none()
+    {
+        bail!("missing object field 'eval_policy_ns'");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_three_request_shapes() {
+        assert!(matches!(
+            parse_request(r#"{"verb": "stats"}"#).unwrap(),
+            Request::Stats
+        ));
+        assert!(matches!(
+            parse_request(r#"{"verb": "shutdown"}"#).unwrap(),
+            Request::Shutdown
+        ));
+        match parse_request(r#"{"name": "f-000", "workload": {"kind": "hpc-table"}}"#).unwrap() {
+            Request::Spec(doc) => {
+                assert_eq!(doc.get("name").and_then(Json::as_str), Some("f-000"));
+            }
+            _ => panic!("spec documents must parse as Request::Spec"),
+        }
+    }
+
+    #[test]
+    fn rejects_garbage_and_unknown_verbs() {
+        assert!(parse_request("not json").is_err());
+        let err = parse_request(r#"{"verb": "explode"}"#).unwrap_err().to_string();
+        assert!(err.contains("unknown verb"), "{err}");
+    }
+
+    #[test]
+    fn shutdown_ack_is_stable() {
+        assert_eq!(shutdown_ack().to_string(), r#"{"ok":true,"verb":"shutdown"}"#);
+    }
+
+    #[test]
+    fn validate_stats_doc_checks_shape() {
+        let good = Json::parse(
+            r#"{"schema": "cxlmem-serve-stats-v1", "requests": 4, "evaluated": 2,
+                "hits": 1, "dedup_inflight": 1, "rejected": 0, "errors": 0,
+                "connections": 2, "hit_rate": 0.25,
+                "queue": {"depth": 0, "hwm": 2, "capacity": 64},
+                "eval_policy_ns": {}}"#,
+        )
+        .unwrap();
+        validate_stats_doc(&good).unwrap();
+        let mut wrong = good.clone();
+        wrong.set("schema", "cxlmem-metrics-v1".into());
+        assert!(validate_stats_doc(&wrong).is_err());
+        let mut bad_rate = good.clone();
+        bad_rate.set("hit_rate", 1.5.into());
+        assert!(validate_stats_doc(&bad_rate).is_err());
+        let mut no_queue = good.clone();
+        no_queue.set("queue", Json::obj(vec![("depth", 0u64.into())]));
+        assert!(validate_stats_doc(&no_queue).is_err());
+    }
+}

@@ -1,0 +1,158 @@
+//! Bounded admission queue: the daemon's backpressure point.
+//!
+//! Connection handlers admit work with a non-blocking [`AdmissionQueue::try_push`]
+//! — a full queue hands the item straight back so the handler can answer
+//! with a queue-full error document instead of stalling the socket.
+//! Pool workers block in [`AdmissionQueue::pop`] until work arrives or
+//! the queue is closed for shutdown (drain semantics: close stops
+//! *admission*; already-queued items are still handed out until empty).
+//!
+//! Depth is mirrored into the `serve.queue_depth` registry gauge on
+//! every transition; the queue also tracks its own high-water mark so
+//! the `stats` verb stays exact when the registry is disabled
+//! (`CXLMEM_METRICS=0` collapses registry handles into shared nulls).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+use crate::util::metrics;
+
+/// Bounded MPMC queue with close-to-drain shutdown.
+pub struct AdmissionQueue<T> {
+    inner: Mutex<Inner<T>>,
+    ready: Condvar,
+    cap: usize,
+    hwm: AtomicUsize,
+    depth_gauge: &'static metrics::Gauge,
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> AdmissionQueue<T> {
+    /// A queue admitting at most `cap` (≥ 1) items at a time.
+    pub fn new(cap: usize) -> AdmissionQueue<T> {
+        AdmissionQueue {
+            inner: Mutex::new(Inner {
+                items: VecDeque::new(),
+                closed: false,
+            }),
+            ready: Condvar::new(),
+            cap: cap.max(1),
+            hwm: AtomicUsize::new(0),
+            depth_gauge: metrics::gauge("serve.queue_depth"),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, Inner<T>> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Admit `item` without blocking. A full or closed queue returns the
+    /// item back (`Err`) so the caller can reject it explicitly.
+    pub fn try_push(&self, item: T) -> Result<(), T> {
+        let mut q = self.lock();
+        if q.closed || q.items.len() >= self.cap {
+            return Err(item);
+        }
+        q.items.push_back(item);
+        let depth = q.items.len();
+        drop(q);
+        self.hwm.fetch_max(depth, Ordering::Relaxed);
+        self.depth_gauge.set(depth as i64);
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Block until an item is available (`Some`) or the queue is closed
+    /// *and* drained (`None`) — a closed queue still hands out whatever
+    /// was admitted before the close.
+    pub fn pop(&self) -> Option<T> {
+        let mut q = self.lock();
+        loop {
+            if let Some(item) = q.items.pop_front() {
+                self.depth_gauge.set(q.items.len() as i64);
+                return Some(item);
+            }
+            if q.closed {
+                return None;
+            }
+            q = self.ready.wait(q).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    /// Stop admitting; wake every blocked `pop` so workers can drain
+    /// the remainder and exit.
+    pub fn close(&self) {
+        self.lock().closed = true;
+        self.ready.notify_all();
+    }
+
+    /// Items currently queued (admitted, not yet popped).
+    pub fn depth(&self) -> usize {
+        self.lock().items.len()
+    }
+
+    /// Deepest the queue has ever been.
+    pub fn high_water(&self) -> usize {
+        self.hwm.load(Ordering::Relaxed)
+    }
+
+    /// The admission bound this queue was built with.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounded_push_pop_fifo() {
+        let q: AdmissionQueue<u32> = AdmissionQueue::new(2);
+        assert_eq!(q.capacity(), 2);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert_eq!(q.try_push(3), Err(3), "full queue hands the item back");
+        assert_eq!(q.depth(), 2);
+        assert_eq!(q.high_water(), 2);
+        assert_eq!(q.pop(), Some(1));
+        q.try_push(3).unwrap();
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+        assert_eq!(q.depth(), 0);
+        assert_eq!(q.high_water(), 2, "high-water mark never shrinks");
+    }
+
+    #[test]
+    fn close_drains_then_releases_blocked_pops() {
+        use std::sync::Arc;
+        let q: Arc<AdmissionQueue<u32>> = Arc::new(AdmissionQueue::new(8));
+        q.try_push(7).unwrap();
+        q.close();
+        assert_eq!(q.try_push(9), Err(9), "closed queue admits nothing");
+        assert_eq!(q.pop(), Some(7), "close still drains queued items");
+        assert_eq!(q.pop(), None);
+        // A pop blocked *before* the close must wake and observe it.
+        let q2: Arc<AdmissionQueue<u32>> = Arc::new(AdmissionQueue::new(8));
+        let waiter = {
+            let q2 = Arc::clone(&q2);
+            std::thread::spawn(move || q2.pop())
+        };
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q2.close();
+        assert_eq!(waiter.join().unwrap(), None);
+    }
+
+    #[test]
+    fn zero_capacity_is_clamped_to_one() {
+        let q: AdmissionQueue<u32> = AdmissionQueue::new(0);
+        assert_eq!(q.capacity(), 1);
+        q.try_push(1).unwrap();
+        assert_eq!(q.try_push(2), Err(2));
+    }
+}

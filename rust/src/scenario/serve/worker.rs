@@ -1,0 +1,363 @@
+//! Worker pool: cache probe → in-flight dedup → supervised evaluation.
+//!
+//! Each pool worker owns a [`StoreHandle`] clone, so the warm path — a
+//! request whose spec is already in the layered store — is one atomic
+//! tail load plus a cascade walk, no flock, no mutable cache borrow.
+//! Cold requests are deduplicated *in flight*: the first worker to
+//! claim a canonical spec evaluates it under the supervision envelope
+//! ([`supervise::eval_supervised`]: `catch_unwind`, bounded retries,
+//! cancellable deadlines) while identical requests park on a waiter
+//! list and are answered from the same result — N clients probing the
+//! same fleet cost one evaluation, not N.
+//!
+//! The daemon keeps its own atomic [`Counters`] (mirrored into the
+//! metrics registry) so the `stats` verb stays exact even when
+//! `CXLMEM_METRICS=0` collapses registry handles into shared nulls.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::scenario::cache::StoreHandle;
+use crate::scenario::spec::ScenarioSpec;
+use crate::scenario::supervise::{self, SuperviseOpts};
+use crate::util::json::Json;
+use crate::util::metrics;
+
+use super::protocol::STATS_SCHEMA;
+use super::queue::AdmissionQueue;
+
+/// Delivers one response line back to the client that sent request
+/// `seq` on its connection (implementations re-order into request
+/// order; `line` includes the trailing newline).
+pub(crate) trait Respond: Send + Sync {
+    fn deliver(&self, seq: u64, line: String);
+}
+
+/// One admitted request: a spec plus where to send the answer.
+pub(crate) struct Job {
+    pub seq: u64,
+    pub spec: ScenarioSpec,
+    pub key: String,
+    pub canon: String,
+    pub reply: Arc<dyn Respond>,
+}
+
+/// The daemon's own live counters (registry-independent; see module doc).
+#[derive(Default)]
+pub(crate) struct Counters {
+    pub requests: AtomicU64,
+    pub evaluated: AtomicU64,
+    pub hits: AtomicU64,
+    pub dedup_inflight: AtomicU64,
+    pub rejected: AtomicU64,
+    pub errors: AtomicU64,
+    pub connections: AtomicU64,
+}
+
+/// Increment a daemon counter and its `serve.*` registry mirror.
+pub(crate) fn bump(field: &AtomicU64, mirror: &str) {
+    field.fetch_add(1, Ordering::Relaxed);
+    metrics::counter(mirror).inc();
+}
+
+/// State shared by the listener, connection handlers, and pool workers.
+pub(crate) struct Shared {
+    pub queue: AdmissionQueue<Job>,
+    /// canonical spec → waiters parked on the in-flight evaluation.
+    pub inflight: Mutex<HashMap<String, Vec<Job>>>,
+    pub store: StoreHandle,
+    pub opts: SuperviseOpts,
+    pub counters: Counters,
+    pub shutdown: AtomicBool,
+}
+
+fn lock<'a, T>(m: &'a Mutex<T>) -> MutexGuard<'a, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn line_of(doc: &Json) -> String {
+    format!("{doc}\n")
+}
+
+/// Pool worker body: drain the admission queue until it is closed and
+/// empty. Inner sweeps run sequentially (`jobs = 1`) — parallelism
+/// comes from the pool itself, like the batch runner's `par_map`
+/// workers.
+pub(crate) fn worker_loop(shared: Arc<Shared>) {
+    crate::perf::set_jobs(1);
+    let store = shared.store.clone();
+    while let Some(job) = shared.queue.pop() {
+        process(&shared, &store, job);
+    }
+}
+
+/// Serve one job: probe the store, dedup against in-flight identical
+/// requests, evaluate on miss, deliver to the owner and any waiters.
+pub(crate) fn process(shared: &Shared, store: &StoreHandle, job: Job) {
+    // Warm path: one lock-free layered-store lookup.
+    if let Some(doc) = store.lookup(&job.key, &job.canon) {
+        bump(&shared.counters.hits, "serve.hits");
+        job.reply.deliver(job.seq, line_of(&doc));
+        return;
+    }
+    // In-flight dedup: park on an identical evaluation if one is
+    // already running; otherwise claim the canonical spec.
+    {
+        let mut inflight = lock(&shared.inflight);
+        if let Some(waiters) = inflight.get_mut(&job.canon) {
+            bump(&shared.counters.dedup_inflight, "serve.dedup_inflight");
+            waiters.push(job);
+            return;
+        }
+        inflight.insert(job.canon.clone(), Vec::new());
+    }
+    bump(&shared.counters.evaluated, "serve.evaluated");
+    let doc = match supervise::eval_supervised(&job.spec, &job.key, &shared.opts) {
+        Ok(result) => {
+            // Publish before releasing the claim: a duplicate that
+            // misses the waiter list finds the store entry instead.
+            store.insert(&job.key, job.canon.clone(), &result);
+            result.doc
+        }
+        Err(failure) => {
+            bump(&shared.counters.errors, "serve.errors");
+            supervise::error_doc(
+                &job.spec.name,
+                &job.key,
+                &failure,
+                shared.opts.shard.as_deref(),
+            )
+        }
+    };
+    let waiters = lock(&shared.inflight).remove(&job.canon).unwrap_or_default();
+    let line = line_of(&doc);
+    for w in &waiters {
+        w.reply.deliver(w.seq, line.clone());
+    }
+    job.reply.deliver(job.seq, line);
+}
+
+/// Build the `stats` verb's response: daemon counters, queue state, and
+/// per-policy evaluation-latency quantiles from the metrics registry.
+pub(crate) fn stats_doc(shared: &Shared) -> Json {
+    let c = &shared.counters;
+    let requests = c.requests.load(Ordering::Relaxed);
+    let hits = c.hits.load(Ordering::Relaxed);
+    let mut eval = std::collections::BTreeMap::new();
+    let snap = metrics::snapshot();
+    if let Some(hists) = snap.get("histograms").and_then(Json::as_obj) {
+        for (name, h) in hists {
+            let Some(policy) = name
+                .strip_prefix("eval.policy.")
+                .and_then(|p| p.strip_suffix(".ns"))
+            else {
+                continue;
+            };
+            eval.insert(
+                policy.to_string(),
+                Json::obj(vec![
+                    ("count", h.get("count").cloned().unwrap_or_else(|| 0u64.into())),
+                    ("p50_ns", h.get("p50").cloned().unwrap_or_else(|| 0u64.into())),
+                    ("p90_ns", h.get("p90").cloned().unwrap_or_else(|| 0u64.into())),
+                ]),
+            );
+        }
+    }
+    Json::obj(vec![
+        ("schema", STATS_SCHEMA.into()),
+        ("requests", requests.into()),
+        ("evaluated", c.evaluated.load(Ordering::Relaxed).into()),
+        ("hits", hits.into()),
+        (
+            "dedup_inflight",
+            c.dedup_inflight.load(Ordering::Relaxed).into(),
+        ),
+        ("rejected", c.rejected.load(Ordering::Relaxed).into()),
+        ("errors", c.errors.load(Ordering::Relaxed).into()),
+        ("connections", c.connections.load(Ordering::Relaxed).into()),
+        ("hit_rate", (hits as f64 / requests.max(1) as f64).into()),
+        (
+            "queue",
+            Json::obj(vec![
+                ("depth", (shared.queue.depth() as u64).into()),
+                ("hwm", (shared.queue.high_water() as u64).into()),
+                ("capacity", (shared.queue.capacity() as u64).into()),
+            ]),
+        ),
+        ("eval_policy_ns", Json::Obj(eval)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::cache::ResultCache;
+
+    struct MockReply(Mutex<Vec<(u64, String)>>);
+
+    impl Respond for MockReply {
+        fn deliver(&self, seq: u64, line: String) {
+            lock(&self.0).push((seq, line));
+        }
+    }
+
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "cxlmem-serve-worker-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn shared_for(dir: &std::path::Path) -> (Shared, ResultCache) {
+        let cache = ResultCache::open(dir).unwrap();
+        let shared = Shared {
+            queue: AdmissionQueue::new(8),
+            inflight: Mutex::new(HashMap::new()),
+            store: cache.handle(),
+            opts: SuperviseOpts::default(),
+            counters: Counters::default(),
+            shutdown: AtomicBool::new(false),
+        };
+        (shared, cache)
+    }
+
+    fn job_for(spec_text: &str, seq: u64, reply: &Arc<MockReply>) -> Job {
+        let spec = ScenarioSpec::parse(&Json::parse(spec_text).unwrap()).unwrap();
+        let (key, canon) = spec.cache_identity();
+        Job {
+            seq,
+            spec,
+            key,
+            canon,
+            reply: Arc::clone(reply) as Arc<dyn Respond>,
+        }
+    }
+
+    #[test]
+    fn miss_evaluates_then_hit_serves_from_store() {
+        let dir = tmp_dir("hit");
+        let (shared, _cache) = shared_for(&dir);
+        let store = shared.store.clone();
+        let reply = Arc::new(MockReply(Mutex::new(Vec::new())));
+        let text = r#"{"name": "w-hit", "workload": {"kind": "hpc-table"}}"#;
+        process(&shared, &store, job_for(text, 0, &reply));
+        process(&shared, &store, job_for(text, 1, &reply));
+        let delivered = lock(&reply.0).clone();
+        assert_eq!(delivered.len(), 2);
+        assert_eq!(delivered[0].0, 0);
+        assert_eq!(delivered[1].0, 1);
+        assert_eq!(
+            delivered[0].1, delivered[1].1,
+            "hit must be byte-identical to the evaluated line"
+        );
+        assert_eq!(shared.counters.evaluated.load(Ordering::Relaxed), 1);
+        assert_eq!(shared.counters.hits.load(Ordering::Relaxed), 1);
+        assert!(lock(&shared.inflight).is_empty(), "claims must be released");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn duplicate_parks_on_the_inflight_claim() {
+        let dir = tmp_dir("dedup");
+        let (shared, _cache) = shared_for(&dir);
+        let store = shared.store.clone();
+        let reply = Arc::new(MockReply(Mutex::new(Vec::new())));
+        let text = r#"{"name": "w-dup", "workload": {"kind": "hpc-table"}}"#;
+        let dup = job_for(text, 1, &reply);
+        let canon = dup.canon.clone();
+        // Simulate an in-flight owner by claiming the canonical spec,
+        // then route a duplicate through the worker: it must park on the
+        // waiter list, unanswered and unevaluated.
+        lock(&shared.inflight).insert(canon.clone(), Vec::new());
+        process(&shared, &store, dup);
+        assert!(
+            lock(&reply.0).is_empty(),
+            "a parked duplicate must not be answered yet"
+        );
+        assert_eq!(shared.counters.dedup_inflight.load(Ordering::Relaxed), 1);
+        assert_eq!(shared.counters.evaluated.load(Ordering::Relaxed), 0);
+        let waiters = lock(&shared.inflight).remove(&canon).unwrap();
+        assert_eq!(waiters.len(), 1);
+        assert_eq!(waiters[0].seq, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn concurrent_identical_requests_cost_one_evaluation() {
+        // End-to-end dedup: two workers race on the same spec; the
+        // injected 300ms eval delay forces overlap. Exactly one
+        // evaluation runs and both clients get byte-identical lines
+        // (the second either parks in flight or hits the store).
+        use crate::util::fault;
+        let _g = fault::test_guard();
+        fault::install(fault::FaultPlan::parse("scenario.eval/w-race=delay:300").unwrap());
+        let dir = tmp_dir("race");
+        let (shared, _cache) = shared_for(&dir);
+        let store = shared.store.clone();
+        let reply = Arc::new(MockReply(Mutex::new(Vec::new())));
+        let text = r#"{"name": "w-race", "workload": {"kind": "hpc-table"}}"#;
+        let a = job_for(text, 0, &reply);
+        let b = job_for(text, 1, &reply);
+        std::thread::scope(|s| {
+            let shared = &shared;
+            let store_a = shared.store.clone();
+            s.spawn(move || process(shared, &store_a, a));
+            std::thread::sleep(std::time::Duration::from_millis(60));
+            process(shared, &store, b);
+        });
+        fault::clear();
+        let delivered = lock(&reply.0).clone();
+        assert_eq!(delivered.len(), 2, "both requests must be answered");
+        assert_eq!(delivered[0].1, delivered[1].1, "identical answers");
+        assert_eq!(shared.counters.evaluated.load(Ordering::Relaxed), 1);
+        assert!(lock(&shared.inflight).is_empty(), "claims must be released");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn failures_deliver_error_docs_and_are_not_cached() {
+        let dir = tmp_dir("err");
+        let (shared, _cache) = shared_for(&dir);
+        let store = shared.store.clone();
+        let reply = Arc::new(MockReply(Mutex::new(Vec::new())));
+        // socket 7 fails deterministically at eval time.
+        let text = r#"{"name": "w-doomed", "workload": {"kind": "objects", "socket": 7,
+                       "objects": [{"name": "a", "gb": 1}], "oli_search": false}}"#;
+        let job = job_for(text, 0, &reply);
+        let (key, canon) = (job.key.clone(), job.canon.clone());
+        process(&shared, &store, job);
+        let delivered = lock(&reply.0).clone();
+        assert_eq!(delivered.len(), 1);
+        let doc = Json::parse(delivered[0].1.trim()).unwrap();
+        supervise::validate_error_doc(&doc).unwrap();
+        assert_eq!(shared.counters.errors.load(Ordering::Relaxed), 1);
+        assert!(
+            store.lookup(&key, &canon).is_none(),
+            "error documents must never be cached"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stats_doc_validates_and_counts() {
+        let dir = tmp_dir("stats");
+        let (shared, _cache) = shared_for(&dir);
+        let store = shared.store.clone();
+        let reply = Arc::new(MockReply(Mutex::new(Vec::new())));
+        let text = r#"{"name": "w-stats", "workload": {"kind": "hpc-table"}}"#;
+        bump(&shared.counters.requests, "serve.requests");
+        bump(&shared.counters.requests, "serve.requests");
+        process(&shared, &store, job_for(text, 0, &reply));
+        process(&shared, &store, job_for(text, 1, &reply));
+        let doc = stats_doc(&shared);
+        super::super::protocol::validate_stats_doc(&doc).unwrap();
+        assert_eq!(doc.get("requests").and_then(Json::as_u64), Some(2));
+        assert_eq!(doc.get("evaluated").and_then(Json::as_u64), Some(1));
+        assert_eq!(doc.get("hits").and_then(Json::as_u64), Some(1));
+        assert_eq!(doc.get("hit_rate").and_then(Json::as_f64), Some(0.5));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

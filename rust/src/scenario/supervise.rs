@@ -23,9 +23,12 @@
 //!   socket index) and panics are terminal on the first attempt:
 //!   retrying them re-fails identically.
 //! - **Deadlines** — with a deadline set, the attempt runs on a
-//!   watchdog thread and is marked **timed out** when it overruns. The
-//!   runaway worker is detached (there is no portable cancellation);
-//!   it finishes into a dropped channel. Timeouts are terminal.
+//!   watchdog thread under a fresh [`crate::util::cancel`] token and is
+//!   marked **timed out** when it overruns. The watchdog fires the
+//!   token and **joins** the worker: the tiering epoch loops poll the
+//!   token at epoch boundaries and bail out cooperatively, so the
+//!   worker is reclaimed within one epoch instead of detached (its
+//!   partial run is discarded). Timeouts are terminal.
 //!
 //! A spec that exhausts its attempts yields a [`Failure`], which the
 //! batch runner renders as a schema [`ERROR_SCHEMA`]
@@ -47,6 +50,7 @@ use anyhow::{anyhow, bail, Result};
 
 use super::batch::{eval_raw, ScenarioResult};
 use super::spec::ScenarioSpec;
+use crate::util::cancel;
 use crate::util::json::Json;
 use crate::util::metrics;
 
@@ -196,31 +200,43 @@ fn attempt_inline(spec: &ScenarioSpec) -> Result<ScenarioResult, (ErrorKind, Str
 }
 
 /// One isolated attempt under a watchdog: the evaluation runs on its
-/// own thread (inheriting the caller's perf context) and is abandoned
-/// — detached, finishing into a dropped channel — when it overruns.
+/// own thread (inheriting the caller's perf context) under a fresh
+/// cancel token. On overrun the token is fired and the worker is
+/// **joined** — the epoch loops in `tiering::simulate`/`simulate_trace`
+/// observe the token at each epoch boundary and abandon the run, so the
+/// worker comes back within one epoch instead of being detached.
 fn attempt_with_deadline(
     spec: &ScenarioSpec,
     deadline: Duration,
 ) -> Result<ScenarioResult, (ErrorKind, String)> {
     let (tx, rx) = mpsc::channel();
     let spec = spec.clone();
-    let ctx = crate::perf::snapshot();
-    let spawned = std::thread::Builder::new()
-        .name("cxlmem-eval".to_string())
-        .spawn(move || {
-            crate::perf::apply(ctx);
+    let token = cancel::CancelToken::new();
+    let spawned = cancel::with_token(&token, || {
+        crate::util::par::spawn_worker("cxlmem-eval", move || {
             let _ = tx.send(attempt_inline(&spec));
-        });
-    if let Err(e) = spawned {
+        })
+    });
+    let worker = match spawned {
+        Ok(handle) => handle,
         // Spawn failure is environmental (an io::Error): transient.
-        return Err((ErrorKind::Io, format!("spawning eval watchdog thread: {e}")));
-    }
+        Err(e) => return Err((ErrorKind::Io, format!("spawning eval watchdog thread: {e}"))),
+    };
     match rx.recv_timeout(deadline) {
-        Ok(outcome) => outcome,
-        Err(_) => Err((
-            ErrorKind::Timeout,
-            format!("evaluation exceeded the {deadline:?} deadline (worker detached)"),
-        )),
+        Ok(outcome) => {
+            let _ = worker.join();
+            outcome
+        }
+        Err(_) => {
+            token.cancel();
+            // Reclaim the worker: it bails at its next cooperative
+            // checkpoint and its partial result is discarded.
+            let _ = worker.join();
+            Err((
+                ErrorKind::Timeout,
+                format!("evaluation exceeded the {deadline:?} deadline (worker cancelled and reclaimed)"),
+            ))
+        }
     }
 }
 
@@ -502,6 +518,34 @@ mod tests {
         if metrics::global().enabled() {
             assert!(metrics::counter("scenario.timeouts").get() > before);
         }
+    }
+
+    #[test]
+    fn deadline_joins_the_worker_instead_of_detaching() {
+        // The injected 200ms delay has no cooperative checkpoint, so the
+        // worker cannot bail early — the watchdog must still *join* it:
+        // eval_supervised returns only once the worker finished, well
+        // after the 50ms deadline. (The epoch-boundary early-exit is
+        // pinned in tiering::tests.)
+        let _g = fault::test_guard();
+        fault::install(
+            fault::FaultPlan::parse("scenario.eval/sup-reclaimed=delay:200").unwrap(),
+        );
+        let s = spec(r#"{"name": "sup-reclaimed", "workload": {"kind": "hpc-table"}}"#);
+        let opts = SuperviseOpts {
+            deadline: Some(Duration::from_millis(50)),
+            ..SuperviseOpts::default()
+        };
+        let t0 = std::time::Instant::now();
+        let f = eval_supervised(&s, "k", &opts).unwrap_err();
+        let elapsed = t0.elapsed();
+        fault::clear();
+        assert_eq!(f.kind, ErrorKind::Timeout);
+        assert!(f.message.contains("deadline"), "{}", f.message);
+        assert!(
+            elapsed >= Duration::from_millis(150),
+            "worker must be joined, not detached (returned after {elapsed:?})"
+        );
     }
 
     #[test]

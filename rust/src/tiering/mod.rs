@@ -850,6 +850,13 @@ pub fn simulate(
     let mut faults: Vec<usize> = Vec::new();
 
     for e in 0..cfg.epochs {
+        // Cooperative deadline checkpoint: a worker cancelled by the
+        // supervision watchdog abandons the run at the next epoch
+        // boundary (the partial result is discarded by the caller).
+        // Free when no token is installed — nothing shared is read.
+        if crate::util::cancel::cancelled() {
+            break;
+        }
         next_epoch(e, &mut counts);
         epoch_step(
             sys,
@@ -914,6 +921,10 @@ pub fn simulate_trace(
     let mut faults: Vec<usize> = Vec::new();
 
     for e in 0..cfg.epochs {
+        // Same cooperative checkpoint as `simulate` (see above).
+        if crate::util::cancel::cancelled() {
+            break;
+        }
         epoch_step(
             sys,
             cfg,
@@ -1278,6 +1289,81 @@ mod tests {
             via_producer.overhead_s.to_bits()
         );
         assert_eq!(state_t.page, state_p.page);
+    }
+
+    #[test]
+    fn cancelled_simulate_stops_at_the_next_epoch_boundary() {
+        // Satellite pin for cooperative deadlines: firing the cancel
+        // token mid-run must end the simulation at the next epoch
+        // boundary — the producer is called exactly once more (for the
+        // epoch already in flight), never for the remaining 97.
+        use crate::util::cancel;
+        use crate::workloads::tiering_apps::{pagerank, TraceGen};
+        let sys = system_a();
+        let ld = sys.node_of(0, MemKind::Ldram).unwrap();
+        let cxl = sys.node_of(0, MemKind::Cxl).unwrap();
+        let mut app = pagerank();
+        app.pages = 2000;
+        let gen = TraceGen::new(app, 5);
+        let mut pol = Tiering08::default();
+        let cfg = SimConfig {
+            socket: 0,
+            threads: 64,
+            compute_ns_per_byte: 0.5,
+            epochs: 100,
+            seed: 5,
+        };
+        let mut state = initial_state(2000, ld, cxl, 700, false);
+        let token = cancel::CancelToken::new();
+        let mut produced = 0usize;
+        let run = cancel::with_token(&token, || {
+            simulate(
+                &sys,
+                &cfg,
+                &mut state,
+                &mut pol,
+                |_, buf| {
+                    produced += 1;
+                    if produced == 3 {
+                        token.cancel();
+                    }
+                    gen.epoch_counts_into(buf);
+                },
+                |_| (Pattern::Random, 0.5),
+            )
+        });
+        assert_eq!(produced, 3, "must return within one epoch of the cancel");
+        assert!(run.total_s > 0.0, "the completed epochs still accumulate");
+    }
+
+    #[test]
+    fn pre_cancelled_simulate_trace_runs_no_epochs() {
+        use crate::util::cancel;
+        use crate::workloads::tiering_apps::graph500;
+        let sys = system_a();
+        let ld = sys.node_of(0, MemKind::Ldram).unwrap();
+        let cxl = sys.node_of(0, MemKind::Cxl).unwrap();
+        let mut app = graph500();
+        app.pages = 1500;
+        let trace = EpochTrace::generate(&app, 4, 3);
+        let mut state = initial_state(1500, ld, cxl, 500, false);
+        let mut pol = Tpp::default();
+        let cfg = SimConfig {
+            socket: 0,
+            threads: 64,
+            compute_ns_per_byte: 0.5,
+            epochs: 4,
+            seed: 3,
+        };
+        let token = cancel::CancelToken::new();
+        token.cancel();
+        let run = cancel::with_token(&token, || {
+            simulate_trace(&sys, &cfg, &mut state, &mut pol, &trace, |_| {
+                (Pattern::Random, 0.5)
+            })
+        });
+        assert_eq!(run.total_s, 0.0, "no epoch may run under a fired token");
+        assert_eq!(run.stats, VmStats::default());
     }
 
     #[test]

@@ -1,0 +1,127 @@
+//! Cooperative cancellation tokens for reclaiming runaway workers.
+//!
+//! A [`CancelToken`] is a cheap cloneable flag (one `Arc<AtomicBool>`).
+//! The supervision watchdog installs a fresh token on each deadline-bound
+//! evaluation thread; long loops (the tiering epoch loop, via
+//! [`cancelled`]) poll it at natural checkpoint boundaries and bail out
+//! early when it fires, so a timed-out worker can be **joined** instead of
+//! detached. Checking costs one thread-local read plus one relaxed atomic
+//! load — and nothing at all is shared when no token is installed, so the
+//! hot paths stay bit-identical and contention-free in the common case.
+//!
+//! The current token is thread-local. [`enter`] installs one for the
+//! lifetime of the returned guard (restoring the previous token on drop,
+//! panic included); [`current`] snapshots it for propagation into spawned
+//! workers, which [`crate::util::par::par_map`] and
+//! [`crate::util::par::spawn_worker`] do automatically — cancelling an
+//! outer evaluation reaches its inner parallel sweeps too.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Shared cancellation flag. Clones observe the same flag.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    /// A fresh, un-fired token.
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// Fire the flag. Idempotent; visible to every clone.
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Release);
+    }
+
+    /// Has [`CancelToken::cancel`] been called on any clone?
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Acquire)
+    }
+}
+
+thread_local! {
+    static CURRENT: RefCell<Option<CancelToken>> = RefCell::new(None);
+}
+
+/// Restores the previously-installed token when dropped.
+pub struct TokenGuard(Option<CancelToken>);
+
+impl Drop for TokenGuard {
+    fn drop(&mut self) {
+        let prev = self.0.take();
+        CURRENT.with(|c| *c.borrow_mut() = prev);
+    }
+}
+
+/// Install `token` as this thread's current token until the returned
+/// guard drops (the previous token, if any, is restored).
+pub fn enter(token: &CancelToken) -> TokenGuard {
+    let prev = CURRENT.with(|c| c.borrow_mut().replace(token.clone()));
+    TokenGuard(prev)
+}
+
+/// Run `f` with `token` installed as this thread's current token.
+pub fn with_token<R>(token: &CancelToken, f: impl FnOnce() -> R) -> R {
+    let _guard = enter(token);
+    f()
+}
+
+/// Snapshot the current token (for propagation into spawned workers).
+pub fn current() -> Option<CancelToken> {
+    CURRENT.with(|c| c.borrow().clone())
+}
+
+/// Has the current thread's token fired? `false` when no token is
+/// installed — the unsupervised fast path stays a pure thread-local read.
+pub fn cancelled() -> bool {
+    CURRENT.with(|c| c.borrow().as_ref().is_some_and(CancelToken::is_cancelled))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_token_means_not_cancelled() {
+        assert!(current().is_none());
+        assert!(!cancelled());
+    }
+
+    #[test]
+    fn with_token_scopes_installation_and_restores() {
+        let outer = CancelToken::new();
+        with_token(&outer, || {
+            assert!(!cancelled());
+            let inner = CancelToken::new();
+            inner.cancel();
+            with_token(&inner, || assert!(cancelled()));
+            // The outer (un-fired) token is restored after the scope.
+            assert!(!cancelled());
+            assert!(current().is_some());
+        });
+        assert!(current().is_none());
+    }
+
+    #[test]
+    fn clones_share_the_flag_across_threads() {
+        let token = CancelToken::new();
+        let remote = token.clone();
+        let h = std::thread::spawn(move || remote.cancel());
+        h.join().unwrap();
+        assert!(token.is_cancelled());
+        with_token(&token, || assert!(cancelled()));
+    }
+
+    #[test]
+    fn guard_restores_on_panic() {
+        let token = CancelToken::new();
+        token.cancel();
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            with_token(&token, || panic!("boom"))
+        }));
+        assert!(caught.is_err());
+        assert!(!cancelled(), "panic must not leak the installed token");
+    }
+}

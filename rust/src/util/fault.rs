@@ -51,6 +51,11 @@
 //!   [`crate::workloads::trace::TraceStore`].
 //! - `solver.memo` (`"solve_traffic"`) — the traffic solver's memoized
 //!   fast path, ahead of the memo-key probe.
+//! - `serve.accept` (`conn-N`) — accepting one client connection in the
+//!   serve daemon's listener loop; a panic drops just that connection.
+//! - `serve.admit` (spec name) — admitting one request into the serve
+//!   daemon's bounded queue; a panic becomes an error document answered
+//!   to that client while the daemon keeps serving.
 
 use std::io;
 use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};

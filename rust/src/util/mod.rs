@@ -1,7 +1,9 @@
 //! Hand-rolled utility substrates (no external crates available offline):
 //! PRNG, statistics, table rendering, JSON, CLI parsing, content hashing,
-//! advisory file locking, fault injection, and a bench timer.
+//! advisory file locking, fault injection, cooperative cancellation, and
+//! a bench timer.
 
+pub mod cancel;
 pub mod cli;
 pub mod fault;
 pub mod hash;

@@ -3,13 +3,16 @@
 //!
 //! Work is distributed by an atomic index counter (dynamic load balance —
 //! experiment costs vary by two orders of magnitude), results are
-//! reassembled in input order, and the caller's [`crate::perf`] context is
-//! propagated into each worker (with inner `jobs` pinned to 1 so nested
-//! sweeps don't oversubscribe the machine).
+//! reassembled in input order, and the caller's [`crate::perf`] context
+//! and [`crate::util::cancel`] token are propagated into each worker
+//! (with inner `jobs` pinned to 1 so nested sweeps don't oversubscribe
+//! the machine). [`spawn_worker`] gives long-lived threads — the serve
+//! daemon's pool, the supervision watchdog — the same propagation.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::perf;
+use crate::util::cancel;
 
 /// Map `f` over `items` using up to `jobs` OS threads, preserving input
 /// order in the output. `jobs <= 1` (or a single item) runs inline on the
@@ -31,14 +34,17 @@ where
 
     let next = AtomicUsize::new(0);
     let ctx = perf::snapshot();
+    let token = cancel::current();
     let f = &f;
     let mut indexed: Vec<(usize, R)> = std::thread::scope(|s| {
         let handles: Vec<_> = (0..jobs)
             .map(|_| {
                 let next = &next;
+                let token = &token;
                 s.spawn(move || {
                     perf::apply(ctx);
                     perf::set_jobs(1);
+                    let _cancel = token.as_ref().map(cancel::enter);
                     let mut out = Vec::new();
                     loop {
                         let i = next.fetch_add(1, Ordering::Relaxed);
@@ -73,6 +79,26 @@ where
     });
     indexed.sort_unstable_by_key(|&(i, _)| i);
     indexed.into_iter().map(|(_, r)| r).collect()
+}
+
+/// Spawn a named long-lived worker thread that inherits the caller's
+/// [`crate::perf`] context and [`crate::util::cancel`] token. The worker
+/// starts with the fresh-thread default of `jobs = 1` (like `par_map`
+/// workers); owners that want inner parallelism raise it themselves.
+/// Used by the supervision deadline watchdog and the serve daemon's
+/// worker pool.
+pub fn spawn_worker<F, R>(name: &str, f: F) -> std::io::Result<std::thread::JoinHandle<R>>
+where
+    F: FnOnce() -> R + Send + 'static,
+    R: Send + 'static,
+{
+    let ctx = perf::snapshot();
+    let token = cancel::current();
+    std::thread::Builder::new().name(name.to_string()).spawn(move || {
+        perf::apply(ctx);
+        let _cancel = token.as_ref().map(cancel::enter);
+        f()
+    })
 }
 
 /// Split `0..len` into at most `chunks` contiguous, near-equal ranges
@@ -166,6 +192,39 @@ mod tests {
         let xs: Vec<u32> = (0..8).collect();
         let inner = par_map(&xs, 4, |_| crate::perf::current_jobs());
         assert!(inner.iter().all(|&j| j == 1));
+    }
+
+    #[test]
+    fn propagates_cancel_token_into_workers() {
+        let xs: Vec<u32> = (0..16).collect();
+        let token = cancel::CancelToken::new();
+        token.cancel();
+        let seen = cancel::with_token(&token, || par_map(&xs, 4, |_| cancel::cancelled()));
+        assert!(seen.iter().all(|&c| c));
+        let seen = par_map(&xs, 4, |_| cancel::cancelled());
+        assert!(seen.iter().all(|&c| !c));
+    }
+
+    #[test]
+    fn spawn_worker_inherits_context_and_token() {
+        let token = cancel::CancelToken::new();
+        token.cancel();
+        let handle = crate::perf::with_reference(|| {
+            cancel::with_token(&token, || {
+                spawn_worker("cxlmem-test-worker", || {
+                    (
+                        crate::perf::reference_enabled(),
+                        crate::perf::current_jobs(),
+                        cancel::cancelled(),
+                    )
+                })
+                .expect("spawn")
+            })
+        });
+        let (reference, jobs, cancelled) = handle.join().expect("join");
+        assert!(reference, "perf context must be inherited");
+        assert_eq!(jobs, 1, "workers start with the fresh-thread default");
+        assert!(cancelled, "cancel token must be inherited");
     }
 
     /// One panicking chunk of many: the panic must reach the caller as an

@@ -1,0 +1,229 @@
+//! Serve-daemon integration suite (ISSUE 10).
+//!
+//! Pins the daemon acceptance criteria from the outside — the daemon
+//! runs as a real OS process (the built `cxlmem` binary), clients talk
+//! to it over its Unix socket through the library helpers:
+//! - three concurrent clients with overlapping fleet subsets get
+//!   responses byte-identical to `run_batch_cached` over the same
+//!   specs, while identical requests cost one evaluation total
+//!   (in-flight dedup plus the resident store);
+//! - a saturated admission queue (`--queue 1 --jobs 1` under injected
+//!   eval latency) answers overflow with queue-full error documents —
+//!   backpressure, not a stalled socket — and keeps serving afterwards;
+//! - an injected `serve.accept` panic drops exactly one connection
+//!   (that client sees EOF) while the next connection works;
+//! - `shutdown` acks, drains, seals the store head into a `seg-*.jsonl`
+//!   segment (`--compact-every 0`), and exits 0.
+
+#![cfg(unix)]
+
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+use cxlmem::scenario::serve::{request_lines, validate_stats_doc, wait_ready};
+use cxlmem::scenario::supervise::is_error_doc;
+use cxlmem::scenario::{self, ScenarioSpec};
+use cxlmem::util::json::Json;
+
+const BIN: &str = env!("CARGO_BIN_EXE_cxlmem");
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("cxlmem-serve-it-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Expand a seeded fleet into parsed specs plus their request lines.
+fn fleet(count: usize, seed: u64) -> (Vec<ScenarioSpec>, Vec<String>) {
+    let template = Json::parse(&format!(
+        r#"{{"name": "serve-it", "fleet": {{"count": {count}, "seed": {seed}}}}}"#
+    ))
+    .expect("fleet template");
+    let docs = scenario::expand(&template, None, None).expect("fleet expansion");
+    let specs = docs
+        .iter()
+        .map(|d| ScenarioSpec::parse(d).expect("fleet spec"))
+        .collect();
+    let lines = docs.iter().map(|d| d.to_string()).collect();
+    (specs, lines)
+}
+
+/// The daemon process; killed on drop so a failed assertion cannot
+/// leak a listener between tests.
+struct Daemon(Child);
+
+impl Daemon {
+    fn spawn(cache_dir: &Path, socket: &Path, extra: &[&str]) -> Daemon {
+        let child = Command::new(BIN)
+            .arg("scenario")
+            .arg("serve")
+            .arg(cache_dir)
+            .arg("--socket")
+            .arg(socket)
+            .args(extra)
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn serve daemon");
+        wait_ready(socket, Duration::from_secs(20)).expect("serve daemon ready");
+        Daemon(child)
+    }
+
+    fn shutdown(mut self, socket: &Path) {
+        let ack = request_lines(socket, &[r#"{"verb": "shutdown"}"#.to_string()])
+            .expect("shutdown request");
+        assert_eq!(ack, vec![r#"{"ok":true,"verb":"shutdown"}"#.to_string()]);
+        let status = self.0.wait().expect("daemon exit status");
+        assert!(status.success(), "daemon must drain and exit 0: {status}");
+    }
+}
+
+impl Drop for Daemon {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+fn segment_names(dir: &Path) -> Vec<String> {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return Vec::new();
+    };
+    entries
+        .filter_map(|e| e.ok())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .filter(|n| n.starts_with("seg-") && n.ends_with(".jsonl"))
+        .collect()
+}
+
+fn stats_of(socket: &Path) -> Json {
+    let resp = request_lines(socket, &[r#"{"verb": "stats"}"#.to_string()]).expect("stats request");
+    assert_eq!(resp.len(), 1);
+    let doc = Json::parse(&resp[0]).expect("stats response parses");
+    validate_stats_doc(&doc).expect("stats response validates");
+    doc
+}
+
+fn counter(doc: &Json, field: &str) -> u64 {
+    doc.get(field).and_then(Json::as_u64).unwrap_or_else(|| panic!("stats field {field}"))
+}
+
+/// Three concurrent clients with overlapping subsets of one fleet: every
+/// response byte-identical to the batch runner, one evaluation per
+/// unique spec (10 requests, 4 evaluations), clean shutdown sealing the
+/// head segment.
+#[test]
+fn daemon_parity_dedup_and_shutdown() {
+    let dir = tmp_dir("parity");
+    let socket = std::env::temp_dir().join(format!("cxlmem-serve-it-parity-{}.sock", std::process::id()));
+    let (specs, lines) = fleet(4, 13);
+    // The reference: the batch runner over the same specs, uncached.
+    let reference = scenario::run_batch_cached(&specs, 2, None).expect("batch reference");
+    let expected: Vec<String> = reference.iter().map(|r| r.doc.to_string()).collect();
+
+    let daemon = Daemon::spawn(&dir, &socket, &["--jobs", "2", "--queue", "32", "--compact-every", "0"]);
+
+    // Overlapping subsets, concurrently: A gets 0..3, B gets 1..4, C all.
+    std::thread::scope(|s| {
+        let subsets: [&[String]; 3] = [&lines[0..3], &lines[1..4], &lines[..]];
+        let wants: [&[String]; 3] = [&expected[0..3], &expected[1..4], &expected[..]];
+        for (sent, want) in subsets.into_iter().zip(wants) {
+            let socket = &socket;
+            s.spawn(move || {
+                let got = request_lines(socket, sent).expect("client responses");
+                assert_eq!(got, want, "daemon responses must match the batch runner byte-for-byte");
+            });
+        }
+    });
+
+    let stats = stats_of(&socket);
+    assert_eq!(counter(&stats, "requests"), 10, "3 + 3 + 4 spec requests");
+    assert_eq!(counter(&stats, "evaluated"), 4, "one evaluation per unique spec");
+    assert_eq!(
+        counter(&stats, "hits") + counter(&stats, "dedup_inflight"),
+        6,
+        "every duplicate request is a store hit or an in-flight waiter"
+    );
+    assert_eq!(counter(&stats, "errors"), 0);
+    assert_eq!(counter(&stats, "rejected"), 0);
+
+    daemon.shutdown(&socket);
+    assert!(
+        !segment_names(&dir).is_empty(),
+        "shutdown under --compact-every 0 must seal the head into a segment"
+    );
+    assert!(!socket.exists(), "shutdown must remove the socket file");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A saturated queue (`--queue 1 --jobs 1`, 150 ms injected eval
+/// latency) must answer overflow with queue-full error documents and
+/// keep the daemon serving.
+#[test]
+fn queue_full_backpressure() {
+    let dir = tmp_dir("backpressure");
+    let socket = std::env::temp_dir().join(format!("cxlmem-serve-it-bp-{}.sock", std::process::id()));
+    let (_specs, lines) = fleet(8, 29);
+    let daemon = Daemon::spawn(
+        &dir,
+        &socket,
+        &["--jobs", "1", "--queue", "1", "--inject-faults", "scenario.eval=delay:150"],
+    );
+
+    let responses = request_lines(&socket, &lines).expect("burst responses");
+    assert_eq!(responses.len(), lines.len(), "one response per request, rejected or not");
+    let (mut served, mut rejected) = (0usize, 0usize);
+    for line in &responses {
+        let doc = Json::parse(line).expect("response parses");
+        if is_error_doc(&doc) {
+            let msg = doc.get("message").and_then(Json::as_str).unwrap_or("");
+            assert!(
+                msg.contains("admission queue full"),
+                "the only failure mode here is backpressure: {msg}"
+            );
+            assert_eq!(doc.get("error").and_then(Json::as_str), Some("io"));
+            rejected += 1;
+        } else {
+            served += 1;
+        }
+    }
+    assert!(rejected >= 1, "a 1-deep queue under a burst of 8 must reject");
+    assert!(served >= 1, "admitted requests must still evaluate");
+
+    // Backpressure must not wedge the daemon: stats agrees and a
+    // clean shutdown still drains.
+    let stats = stats_of(&socket);
+    assert_eq!(counter(&stats, "rejected") as usize, rejected);
+    daemon.shutdown(&socket);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// An injected `serve.accept` panic drops exactly that one connection —
+/// the client sees EOF — while the next connection is served normally.
+#[test]
+fn accept_fault_drops_one_connection() {
+    let dir = tmp_dir("accept-fault");
+    let socket = std::env::temp_dir().join(format!("cxlmem-serve-it-af-{}.sock", std::process::id()));
+    // wait_ready's probe is conn-1, so the rule hits the next client.
+    let daemon = Daemon::spawn(
+        &dir,
+        &socket,
+        &["--jobs", "1", "--inject-faults", "serve.accept/conn-2=panic:1"],
+    );
+
+    let dropped = request_lines(&socket, &[r#"{"verb": "stats"}"#.to_string()]);
+    let err = format!("{:#}", dropped.expect_err("the faulted connection must fail"));
+    // Depending on who loses the race, the client sees EOF after zero
+    // responses or a failed send — never a response.
+    assert!(
+        err.contains("closed the connection") || err.contains("sending requests"),
+        "the dropped client must see a connection failure: {err}"
+    );
+
+    // The daemon survived: the next connection gets real answers.
+    let stats = stats_of(&socket);
+    assert!(counter(&stats, "connections") >= 1);
+    daemon.shutdown(&socket);
+    let _ = std::fs::remove_dir_all(&dir);
+}
